@@ -1,0 +1,51 @@
+"""Shared helpers for the paper-reproduction benchmarks."""
+from __future__ import annotations
+
+import csv
+import os
+import time
+
+import numpy as np
+
+RESULTS_DIR = os.environ.get("REPRO_RESULTS", "results/bench")
+
+
+def write_csv(name: str, header: list[str], rows: list[list]) -> str:
+    os.makedirs(RESULTS_DIR, exist_ok=True)
+    path = os.path.join(RESULTS_DIR, name)
+    with open(path, "w", newline="") as f:
+        w = csv.writer(f)
+        w.writerow(header)
+        w.writerows(rows)
+    return path
+
+
+def print_table(title: str, header: list[str], rows: list[list]) -> None:
+    print(f"\n== {title} ==")
+    widths = [max(len(str(h)), *(len(_fmt(r[i])) for r in rows)) if rows else len(str(h))
+              for i, h in enumerate(header)]
+    print("  ".join(str(h).ljust(w) for h, w in zip(header, widths)))
+    for r in rows:
+        print("  ".join(_fmt(c).ljust(w) for c, w in zip(r, widths)))
+
+
+def _fmt(x) -> str:
+    if isinstance(x, float):
+        if x == 0 or (1e-3 < abs(x) < 1e5):
+            return f"{x:.4g}"
+        return f"{x:.3e}"
+    return str(x)
+
+
+def mean_std(vals: list[float]) -> tuple[float, float]:
+    a = np.asarray(vals, np.float64)
+    return float(a.mean()), float(a.std())
+
+
+class Timer:
+    def __enter__(self):
+        self.t0 = time.time()
+        return self
+
+    def __exit__(self, *a):
+        self.seconds = time.time() - self.t0

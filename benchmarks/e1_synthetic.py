@@ -1,0 +1,93 @@
+"""E1 — Fig. 1 (left): synthetic linear regression, distance to w*.
+
+Paper setting: M=1000 clients, T=50 rounds, tau=20 local steps, d=500 (CDP) /
+d=100 (LDP), sigma = 5C/sqrt(M) (CDP), 0.7C (LDP Gaussian),
+eps0=eps1=eps2=2 (PrivUnit). Hyperparameters from the paper's grid search
+(Table 2). Metric: ||w - w*|| (mean +/- std over seeds).
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import mean_std, print_table, write_csv
+from repro.core.fedexp import make_algorithm
+from repro.data.synthetic import distance_to_opt, linreg_loss, make_synthetic_linreg
+from repro.fedsim.scaffold import DPScaffoldConfig, run_dp_scaffold
+from repro.fedsim.server import run_federated
+
+# (eta_l, C) per algorithm x DP type, selected by re-running the paper's
+# grid-search protocol (E.1) on OUR generation (unit-normalized features —
+# see EXPERIMENTS.md deviations; the paper's Table 2 values assume their
+# unstated feature scale). Grid: eta_l x C over {0.01..1} x {0.1..3}.
+HP = {
+    "ldp-gauss": {"fedexp": (0.3, 0.3), "fedavg": (0.3, 1.0), "scaffold": (0.3, 0.3)},
+    "ldp-privunit": {"fedexp": (0.1, 1.0), "fedavg": (0.3, 3.0), "scaffold": (0.3, 0.3)},
+    "cdp": {"fedexp": (0.1, 0.3), "fedavg": (0.3, 3.0), "scaffold": (0.3, 0.3)},
+}
+
+
+def _run_setting(setting: str, alg: str, data, w0, *, rounds, tau, seed):
+    m, d = data.x.shape
+    eta_l, c = HP[setting][alg]
+    key = jax.random.PRNGKey(1000 + seed)
+    eval_fn = distance_to_opt(data.w_star)
+    if alg == "scaffold":
+        central = setting == "cdp"
+        sigma = 5 * c / math.sqrt(m) if central else 0.7 * c
+        cfg = DPScaffoldConfig(clip_norm=c, sigma=sigma, central=central, num_clients=m)
+        r = run_dp_scaffold(cfg, linreg_loss, w0, data.client_batches(),
+                            rounds=rounds, tau=tau, eta_l=eta_l, key=key, eval_fn=eval_fn)
+        return r
+    if setting == "cdp":
+        name = "cdp-fedexp" if alg == "fedexp" else "dp-fedavg-cdp"
+        algorithm = make_algorithm(name, clip_norm=c, sigma=5 * c / math.sqrt(m),
+                                   num_clients=m)
+    elif setting == "ldp-gauss":
+        name = "ldp-fedexp-gauss" if alg == "fedexp" else "dp-fedavg-ldp-gauss"
+        algorithm = make_algorithm(name, clip_norm=c, sigma=0.7 * c)
+    else:  # ldp-privunit
+        name = "ldp-fedexp-privunit" if alg == "fedexp" else "dp-fedavg-privunit"
+        algorithm = make_algorithm(name, clip_norm=c, eps0=2.0, eps1=2.0, eps2=2.0, dim=d)
+    return run_federated(algorithm, linreg_loss, w0, data.client_batches(),
+                         rounds=rounds, tau=tau, eta_l=eta_l, key=key, eval_fn=eval_fn)
+
+
+def main(*, clients: int = 400, rounds: int = 30, tau: int = 20, seeds: int = 2):
+    """Defaults slightly reduced from the paper's M=1000/T=50/5 seeds to fit
+    the single-core CI budget; pass the paper's values explicitly to match."""
+    rows = []
+    curves = []
+    for setting, d in (("cdp", 500), ("ldp-gauss", 100), ("ldp-privunit", 100)):
+        data = make_synthetic_linreg(jax.random.PRNGKey(0), clients, d)
+        w0 = jnp.zeros(d)
+        for alg in ("fedavg", "fedexp", "scaffold"):
+            finals, final_dists = [], []
+            for s in range(seeds):
+                r = _run_setting(setting, alg, data, w0, rounds=rounds, tau=tau, seed=s)
+                hist = [float(x) for x in r.metric_history]
+                finals.append(hist)
+                final_dists.append(float(distance_to_opt(data.w_star)(r.final_w)))
+                if s == 0:
+                    for t, v in enumerate(hist):
+                        curves.append([setting, alg, t, v])
+            mu, sd = mean_std(final_dists)
+            rows.append([setting, alg, d, mu, sd])
+    write_csv("e1_synthetic_curves.csv", ["setting", "algorithm", "round", "dist"], curves)
+    write_csv("e1_synthetic_final.csv",
+              ["setting", "algorithm", "dim", "final_dist_mean", "final_dist_std"], rows)
+    print_table("E1 synthetic linreg: final ||w - w*|| (mean +/- std over seeds)",
+                ["setting", "algorithm", "d", "mean", "std"], rows)
+    # the paper's claim: FedEXP < FedAvg in every setting
+    for setting in ("cdp", "ldp-gauss", "ldp-privunit"):
+        exp = next(r[3] for r in rows if r[0] == setting and r[1] == "fedexp")
+        avg = next(r[3] for r in rows if r[0] == setting and r[1] == "fedavg")
+        tag = "OK " if exp < avg else "WARN"
+        print(f"{tag} {setting}: DP-FedEXP {exp:.4f} vs DP-FedAvg {avg:.4f}")
+    return rows
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,106 @@
+"""E2 — Fig. 1 (right) + Table 4: image classification with the paper's CNNs.
+
+Offline substitute for MNIST (generated 28x28 10-class set, DESIGN.md §7),
+Dirichlet(0.3) split over M clients (Hsu et al.), tau=10 local steps, T=50
+rounds. CDP uses the 2-conv+2-FC CNN (d=5046), LDP the small CNN (d=237).
+Metric: test accuracy averaged over the last 5 rounds (Table 4 protocol).
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import mean_std, print_table, write_csv
+from repro.core.fedexp import make_algorithm
+from repro.data.dirichlet import client_image_batches, dirichlet_partition
+from repro.data.images import make_image_dataset
+from repro.fedsim.scaffold import DPScaffoldConfig, run_dp_scaffold
+from repro.fedsim.server import run_federated
+from repro.models.cnn import accuracy_fn, make_cnn, masked_xent_loss
+
+# (eta_l, C): LDP rows follow the paper's Table 2; the CDP row is re-selected
+# on OUR generated dataset (micro-grid, see EXPERIMENTS.md) — the paper's
+# CDP pick (0.1, 0.3) under-clips here and loses ~25 points for both algs.
+HP = {
+    "ldp-gauss": {"fedexp": (0.03, 0.1), "fedavg": (0.03, 0.3), "scaffold": (0.1, 0.1)},
+    "ldp-privunit": {"fedexp": (0.03, 0.3), "fedavg": (0.03, 0.3), "scaffold": (0.03, 0.1)},
+    "cdp": {"fedexp": (0.1, 1.0), "fedavg": (0.1, 1.0), "scaffold": (0.1, 0.3)},
+}
+
+
+def _make_problem(setting: str, clients: int, seed: int):
+    dataset = make_image_dataset(jax.random.PRNGKey(7))
+    part = dirichlet_partition(seed, jax.device_get(dataset.train_y), clients, alpha=0.3)
+    batches = client_image_batches(dataset, part)
+    model = make_cnn(jax.random.PRNGKey(100 + seed), "cdp" if setting == "cdp" else "ldp")
+    loss = masked_xent_loss(model)
+    eval_fn = accuracy_fn(model, dataset.test_x, dataset.test_y)
+    return model, loss, eval_fn, batches
+
+
+def _run(setting, alg, model, loss, eval_fn, batches, *, clients, rounds, tau, seed):
+    eta_l, c = HP[setting][alg]
+    key = jax.random.PRNGKey(2000 + seed)
+    if alg == "scaffold":
+        central = setting == "cdp"
+        sigma = 5 * c / math.sqrt(clients) if central else 0.7 * c
+        cfg = DPScaffoldConfig(clip_norm=c, sigma=sigma, central=central, num_clients=clients)
+        return run_dp_scaffold(cfg, loss, model.init_flat, batches, rounds=rounds,
+                               tau=tau, eta_l=eta_l, key=key, eval_fn=eval_fn)
+    if setting == "cdp":
+        name = "cdp-fedexp" if alg == "fedexp" else "dp-fedavg-cdp"
+        algorithm = make_algorithm(name, clip_norm=c, sigma=5 * c / math.sqrt(clients),
+                                   num_clients=clients)
+    elif setting == "ldp-gauss":
+        name = "ldp-fedexp-gauss" if alg == "fedexp" else "dp-fedavg-ldp-gauss"
+        algorithm = make_algorithm(name, clip_norm=c, sigma=0.7 * c)
+    else:
+        name = "ldp-fedexp-privunit" if alg == "fedexp" else "dp-fedavg-privunit"
+        algorithm = make_algorithm(name, clip_norm=c, eps0=2.0, eps1=2.0, eps2=2.0,
+                                   dim=model.dim)
+    return run_federated(algorithm, loss, model.init_flat, batches, rounds=rounds,
+                         tau=tau, eta_l=eta_l, key=key, eval_fn=eval_fn)
+
+
+def main(*, clients: int = 150, rounds: int = 25, tau: int = 10, seeds: int = 1):
+    """Reduced from the paper's M=1000/T=50/5 seeds for the single-core CI
+    budget (noise scale keeps the paper's sigma = 5C/sqrt(M) formula)."""
+    rows, curves = [], []
+    for setting in ("cdp", "ldp-gauss", "ldp-privunit"):
+        for alg in ("fedavg", "fedexp", "scaffold"):
+            accs = []
+            for s in range(seeds):
+                model, loss, eval_fn, batches = _make_problem(setting, clients, s)
+                r = _run(setting, alg, model, loss, eval_fn, batches,
+                         clients=clients, rounds=rounds, tau=tau, seed=s)
+                hist = [float(x) for x in r.metric_history]
+                accs.append(100.0 * sum(hist[-5:]) / 5.0)  # Table 4 protocol
+                if s == 0:
+                    for t, v in enumerate(hist):
+                        curves.append([setting, alg, t, 100.0 * v])
+            mu, sd = mean_std(accs)
+            rows.append([setting, alg, mu, sd])
+    write_csv("e2_mnistlike_curves.csv", ["setting", "algorithm", "round", "acc"], curves)
+    write_csv("e2_mnistlike_table4.csv",
+              ["setting", "algorithm", "acc_mean", "acc_std"], rows)
+    print_table("E2 MNIST-like CNN: test acc %, mean of last 5 rounds (Table 4)",
+                ["setting", "algorithm", "acc", "std"], rows)
+    for setting in ("cdp", "ldp-gauss", "ldp-privunit"):
+        exp = next(r[2] for r in rows if r[0] == setting and r[1] == "fedexp")
+        avg = next(r[2] for r in rows if r[0] == setting and r[1] == "fedavg")
+        if max(exp, avg) < 15.0:
+            # LDP noise at reduced M swamps the tiny CNN: both algorithms sit
+            # at chance — inconclusive, not a win/loss (paper uses M=1000).
+            print(f"n/a {setting}: at-chance at reduced M "
+                  f"(FedEXP {exp:.2f}% / FedAvg {avg:.2f}%); rerun with "
+                  f"clients=1000 for the paper's regime")
+            continue
+        tag = "OK " if exp >= avg - 0.3 else "WARN"
+        print(f"{tag} {setting}: DP-FedEXP {exp:.2f}% vs DP-FedAvg {avg:.2f}%")
+    return rows
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,66 @@
+"""E6 (beyond-paper ablation) — hyperparameter sensitivity of DP-FedOpt
+vs the hyperparameter-free DP-FedEXP.
+
+The paper's practical argument: FedOpt-style servers (Reddi et al., 2021)
+need a global learning rate whose DP-safe tuning is expensive and leaks
+privacy (Papernot & Steinke: accounting the tuning can double/triple
+epsilon). This ablation quantifies it on the synthetic CDP task:
+
+  - DP-FedAdam across a server-lr grid -> best/worst spread,
+  - CDP-FedEXP with NO tuned server hyperparameter, one run,
+  - the privacy cost of the grid: K runs on sensitive data compose; even
+    with RDP-optimal selection the budget multiplies.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import print_table, write_csv
+from repro.core.fedexp import make_algorithm
+from repro.data.synthetic import distance_to_opt, linreg_loss, make_synthetic_linreg
+from repro.fedsim.server import run_federated
+
+M, D, ROUNDS, TAU, CLIP, ETA_L = 400, 200, 30, 20, 0.3, 0.1
+LR_GRID = (0.003, 0.01, 0.03, 0.1, 0.3)
+
+
+def main():
+    data = make_synthetic_linreg(jax.random.PRNGKey(0), M, D)
+    w0 = jnp.zeros(D)
+    ev = distance_to_opt(data.w_star)
+    sigma = 5 * CLIP / math.sqrt(M)
+
+    rows = []
+    for lr in LR_GRID:
+        alg = make_algorithm("dp-fedadam-cdp", clip_norm=CLIP, sigma=sigma,
+                             num_clients=M, server_lr=lr)
+        r = run_federated(alg, linreg_loss, w0, data.client_batches(),
+                          rounds=ROUNDS, tau=TAU, eta_l=ETA_L,
+                          key=jax.random.PRNGKey(9), eval_fn=ev)
+        rows.append([f"dp-fedadam lr={lr}", float(r.metric_history[-1])])
+
+    alg = make_algorithm("cdp-fedexp", clip_norm=CLIP, sigma=sigma, num_clients=M)
+    r = run_federated(alg, linreg_loss, w0, data.client_batches(),
+                      rounds=ROUNDS, tau=TAU, eta_l=ETA_L,
+                      key=jax.random.PRNGKey(9), eval_fn=ev)
+    rows.append(["cdp-fedexp (no server hp)", float(r.metric_history[-1])])
+
+    write_csv("e6_fedopt_ablation.csv", ["algorithm", "final_dist"], rows)
+    print_table("E6 FedOpt server-lr sensitivity vs hyperparameter-free DP-FedEXP",
+                ["algorithm", "final ||w-w*||"], rows)
+    adam_vals = [v for n, v in rows if n.startswith("dp-fedadam")]
+    fedexp_val = rows[-1][1]
+    print(f"OK  adam spread across lr grid: best {min(adam_vals):.3f} / "
+          f"worst {max(adam_vals):.3f} ({max(adam_vals)/min(adam_vals):.1f}x)")
+    print(f"OK  fedexp (zero tuned server hps): {fedexp_val:.3f} "
+          f"vs adam best {min(adam_vals):.3f}")
+    print(f"    and the adam grid costs {len(LR_GRID)}x the training runs on "
+          f"sensitive data — the privacy overhead the paper avoids.")
+    return rows
+
+
+if __name__ == "__main__":
+    main()

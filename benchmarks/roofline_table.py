@@ -1,0 +1,56 @@
+"""Roofline table — aggregates the dry-run JSONs into EXPERIMENTS.md §Roofline.
+
+Reads results/dryrun/<arch>__<shape>__<mesh>.json (produced by
+``python -m repro.launch.dryrun``) and prints/persists the three roofline
+terms, dominant bottleneck, MODEL_FLOPS ratio per (arch x shape) pair.
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from benchmarks.common import print_table, write_csv
+
+DRYRUN_DIR = os.environ.get("REPRO_DRYRUN", "results/dryrun")
+
+
+def load(mesh: str = "16x16", tag: str = "") -> list[dict]:
+    out = []
+    for path in sorted(glob.glob(os.path.join(DRYRUN_DIR, f"*__{mesh}{tag}.json"))):
+        with open(path) as f:
+            out.append(json.load(f))
+    return out
+
+
+def main(mesh: str = "16x16", label: str = "optimized"):
+    recs = load(mesh)
+    if not recs:
+        print(f"no dry-run records for mesh {mesh} in {DRYRUN_DIR}; "
+              f"run: PYTHONPATH=src python -m repro.launch.dryrun --arch all --shape all")
+        return []
+    rows = []
+    for r in recs:
+        t = r["roofline"]
+        total = t["compute_s"] + t["memory_s"] + t["collective_s"]
+        rows.append([
+            r["arch"], r["shape"],
+            t["compute_s"], t["memory_s"], t["collective_s"],
+            t["bottleneck"].replace("_s", ""),
+            r["useful_ratio"] if r["useful_ratio"] else float("nan"),
+            max(t["compute_s"] / total, t["memory_s"] / total,
+                t["collective_s"] / total),
+        ])
+    rows.sort(key=lambda x: (x[0], x[1]))
+    write_csv(f"roofline_{label}_{mesh}.csv",
+              ["arch", "shape", "compute_s", "memory_s", "collective_s",
+               "bottleneck", "useful_flops_ratio", "dominance"], rows)
+    print_table(f"Roofline terms per (arch x shape), mesh {mesh} [{label}] (per-chip seconds)",
+                ["arch", "shape", "compute", "memory", "collective", "bound",
+                 "useful", "dom%"], rows)
+    return rows
+
+
+if __name__ == "__main__":
+    import sys
+    main(sys.argv[1] if len(sys.argv) > 1 else "16x16")

@@ -1,0 +1,78 @@
+"""Benchmark driver: one benchmark per paper table/figure + the roofline table.
+
+    PYTHONPATH=src python -m benchmarks.run             # everything
+    PYTHONPATH=src python -m benchmarks.run --only e3 e4
+    PYTHONPATH=src python -m benchmarks.run --quick     # reduced sizes
+
+Benchmarks:
+    e1  Fig. 1 left   — synthetic linreg convergence (3 DP settings x 3 algs)
+    e2  Fig. 1 right / Table 4 — MNIST-like CNN test accuracy
+    e3  Fig. 2        — step-size bias correction vs M
+    e4  Table 1       — privacy budgets
+    e5  Fig. 3        — eta_g trajectories
+    e6  (beyond-paper) FedOpt server-lr sensitivity vs hyperparameter-free
+    roofline          — §Roofline tables (baseline + optimized) from dry-runs
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", nargs="*", default=None,
+                    help="subset of: e1 e2 e3 e4 e5 roofline")
+    ap.add_argument("--quick", action="store_true", help="reduced sizes (CI)")
+    args = ap.parse_args()
+    which = set(args.only) if args.only else {"e1", "e2", "e3", "e4", "e5", "e6", "roofline"}
+
+    t0 = time.time()
+    if "e4" in which:  # closed-form, instant
+        from benchmarks import e4_privacy
+        e4_privacy.main()
+    if "e3" in which:
+        from benchmarks import e3_stepsize
+        if args.quick:
+            e3_stepsize.main(ms=(50, 200, 1000), trials=4)
+        else:
+            e3_stepsize.main()
+    if "e1" in which:
+        from benchmarks import e1_synthetic
+        if args.quick:
+            e1_synthetic.main(clients=300, rounds=20, seeds=2)
+        else:
+            e1_synthetic.main()
+    if "e5" in which:
+        from benchmarks import e5_trajectories
+        if args.quick:
+            e5_trajectories.main(clients=300, rounds=20)
+        else:
+            e5_trajectories.main()
+    if "e2" in which:
+        from benchmarks import e2_mnist
+        if args.quick:
+            e2_mnist.main(clients=100, rounds=10, seeds=1)
+        else:
+            e2_mnist.main()
+    if "e6" in which:
+        from benchmarks import e6_fedopt_ablation
+        e6_fedopt_ablation.main()
+    if "roofline" in which:
+        import os as _os
+        from benchmarks import roofline_table
+        if _os.path.isdir("results/dryrun_baseline"):
+            _os.environ["REPRO_DRYRUN"] = "results/dryrun_baseline"
+            import importlib
+            importlib.reload(roofline_table)
+            roofline_table.main("16x16", label="paper-faithful-baseline")
+            roofline_table.main("2x16x16", label="paper-faithful-baseline")
+            _os.environ["REPRO_DRYRUN"] = "results/dryrun"
+            importlib.reload(roofline_table)
+        roofline_table.main("16x16", label="optimized")
+        roofline_table.main("2x16x16", label="optimized")
+    print(f"\nall benchmarks done in {time.time() - t0:.1f}s; CSVs in results/bench/")
+
+
+if __name__ == "__main__":
+    main()

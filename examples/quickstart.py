@@ -1,0 +1,41 @@
+"""Quickstart: DP-FedEXP vs DP-FedAvg on the paper's synthetic problem.
+
+    PYTHONPATH=src python examples/quickstart.py
+
+Runs the paper's CDP setting (M=1000 clients, tau=20 local steps, 50 rounds)
+and prints the distance to the shared optimum plus the adaptive step size.
+"""
+import math
+import sys
+
+sys.path.insert(0, "src")
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.fedexp import make_algorithm
+from repro.data.synthetic import distance_to_opt, linreg_loss, make_synthetic_linreg
+from repro.fedsim.server import run_federated
+
+M, D, ROUNDS, TAU = 1000, 500, 50, 20
+# grid-searched on this generation (EXPERIMENTS.md): (eta_l, C) per algorithm
+HPS = {"dp-fedavg-cdp": (0.3, 3.0), "cdp-fedexp": (0.1, 0.3)}
+
+data = make_synthetic_linreg(jax.random.PRNGKey(0), M, D)
+w0 = jnp.zeros(D)
+eval_fn = distance_to_opt(data.w_star)
+
+for name in ("dp-fedavg-cdp", "cdp-fedexp"):
+    eta_l, clip = HPS[name]
+    alg = make_algorithm(name, clip_norm=clip,
+                         sigma=5 * clip / math.sqrt(M), num_clients=M)
+    result = run_federated(alg, linreg_loss, w0, data.client_batches(),
+                           rounds=ROUNDS, tau=TAU, eta_l=eta_l,
+                           key=jax.random.PRNGKey(42), eval_fn=eval_fn)
+    dist = float(eval_fn(result.final_w))
+    etas = result.eta_history
+    print(f"{name:16s}  final ||w - w*|| = {dist:8.4f}   "
+          f"eta_g: first={float(etas[0]):.2f} last={float(etas[-1]):.2f}")
+
+print("\nDP-FedEXP reaches a closer iterate at the SAME privacy budget —")
+print("the global step size is derived from already-privatized statistics.")

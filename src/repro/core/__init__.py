@@ -1,0 +1,27 @@
+"""Core DP-FedEXP library — the paper's contribution as composable JAX modules."""
+
+from repro.core import accounting, aggregation, clipping, mechanisms, stepsize
+from repro.core.aggregation import RoundStats, aggregate_stats, fused_clip_aggregate
+from repro.core.clipping import clip_batch, clip_by_l2, clip_tree, global_l2_norm_tree
+from repro.core.fedexp import (
+    CDPFedEXP,
+    DPFedAvgCDP,
+    DPFedAvgLDPGaussian,
+    DPFedAvgPrivUnit,
+    FedAvg,
+    FedEXP,
+    LDPFedEXPGaussian,
+    LDPFedEXPPrivUnit,
+    RoundAux,
+    ServerAlgorithm,
+    make_algorithm,
+)
+
+__all__ = [
+    "accounting", "aggregation", "clipping", "mechanisms", "stepsize",
+    "RoundStats", "aggregate_stats", "fused_clip_aggregate",
+    "clip_batch", "clip_by_l2", "clip_tree", "global_l2_norm_tree",
+    "ServerAlgorithm", "RoundAux", "make_algorithm",
+    "FedAvg", "FedEXP", "DPFedAvgLDPGaussian", "LDPFedEXPGaussian",
+    "DPFedAvgPrivUnit", "LDPFedEXPPrivUnit", "DPFedAvgCDP", "CDPFedEXP",
+]

@@ -1,0 +1,80 @@
+"""Server-side aggregation of client updates + the FedEXP round statistics.
+
+The server consumes the (possibly randomized) client updates ``c_i`` and needs
+exactly three reductions per round (Algorithms 1 & 2):
+
+    cbar      = (1/M) sum_i c_i                  -- the pseudo-gradient
+    mean_sq   = (1/M) sum_i ||c_i||^2            -- FedEXP numerator statistic
+    agg_sq    = ||cbar||^2                       -- FedEXP denominator
+
+``aggregate_stats`` is the pure-jnp reference; ``fused_clip_aggregate``
+performs clip -> (optional noise) -> the three reductions in one pass and can
+be served by the Pallas TPU kernel ``repro.kernels.dp_aggregate`` (the naive
+composition makes three passes over the (M, d) update matrix; the fused kernel
+makes one — see DESIGN.md §5).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["RoundStats", "aggregate_stats", "fused_clip_aggregate"]
+
+_EPS = 1e-12
+
+
+@dataclasses.dataclass
+class RoundStats:
+    """Aggregate statistics of one federated round (all scalars but cbar)."""
+
+    cbar: jax.Array           # (d,) mean of released updates
+    mean_sq: jax.Array        # scalar, mean_i ||c_i||^2
+    agg_sq: jax.Array         # scalar, ||cbar||^2
+    mean_sq_clipped: jax.Array | None = None  # mean_i ||Delta_i||^2 (pre-noise; CDP only)
+
+
+def aggregate_stats(updates: jax.Array) -> RoundStats:
+    """Reference reductions over an ``(M, d)`` matrix of released updates."""
+    cbar = jnp.mean(updates, axis=0)
+    mean_sq = jnp.mean(jnp.sum(jnp.square(updates), axis=-1))
+    agg_sq = jnp.sum(jnp.square(cbar))
+    return RoundStats(cbar=cbar, mean_sq=mean_sq, agg_sq=agg_sq)
+
+
+def fused_clip_aggregate(
+    raw_updates: jax.Array,
+    clip_norm: float,
+    noise: jax.Array | None = None,
+    *,
+    use_kernel: bool = False,
+    interpret: bool = True,
+) -> RoundStats:
+    """Clip rows to L2 <= C, optionally add per-client noise, and reduce.
+
+    Args:
+      raw_updates: (M, d) raw client updates.
+      clip_norm: clipping threshold C.
+      noise: optional (M, d) noise matrix (LDP Gaussian); None for CDP (noise
+        is added to the *mean* by the caller, which needs ``mean_sq_clipped``).
+      use_kernel: route through the Pallas ``dp_aggregate`` kernel.
+      interpret: run the kernel in interpreter mode (CPU container).
+
+    Returns RoundStats where ``mean_sq`` is computed on the *released* c_i
+    (post-noise if noise given) and ``mean_sq_clipped`` on the clipped
+    deltas (pre-noise).
+    """
+    if use_kernel:
+        from repro.kernels.dp_aggregate import ops as _ops
+
+        return _ops.dp_aggregate(raw_updates, clip_norm, noise, interpret=interpret)
+
+    norms = jnp.linalg.norm(raw_updates, axis=-1)
+    scale = jnp.minimum(1.0, clip_norm / jnp.maximum(norms, _EPS))
+    clipped = raw_updates * scale[:, None]
+    mean_sq_clipped = jnp.mean(jnp.sum(jnp.square(clipped), axis=-1))
+    released = clipped if noise is None else clipped + noise
+    stats = aggregate_stats(released)
+    stats.mean_sq_clipped = mean_sq_clipped
+    return stats

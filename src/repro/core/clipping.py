@@ -1,0 +1,52 @@
+"""L2 clipping of client updates (DP-FedAvg / DP-FedEXP, Algorithms 1 & 2).
+
+Each client clips its local update before release:
+
+    Delta_i <- min{ C / ||Delta~_i||, 1 } * Delta~_i
+
+which bounds the l2-sensitivity of the round release by C (LDP) / 2C/M (CDP
+mean, substitution adjacency).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["l2_norm", "clip_by_l2", "clip_batch", "global_l2_norm_tree", "clip_tree"]
+
+_EPS = 1e-12
+
+
+def l2_norm(x: jax.Array) -> jax.Array:
+    """L2 norm of a flat vector (stable for zero vectors)."""
+    return jnp.sqrt(jnp.sum(jnp.square(x)))
+
+
+def clip_by_l2(x: jax.Array, clip_norm: float | jax.Array) -> jax.Array:
+    """``min(1, C/||x||) * x`` for a flat update vector."""
+    nrm = l2_norm(x)
+    scale = jnp.minimum(1.0, clip_norm / jnp.maximum(nrm, _EPS))
+    return x * scale
+
+
+def clip_batch(updates: jax.Array, clip_norm: float | jax.Array) -> jax.Array:
+    """Clip a batch of client updates of shape ``(M, d)`` row-wise."""
+    return jax.vmap(lambda u: clip_by_l2(u, clip_norm))(updates)
+
+
+def global_l2_norm_tree(tree) -> jax.Array:
+    """Global L2 norm across all leaves of a parameter pytree."""
+    leaves = jax.tree_util.tree_leaves(tree)
+    sq = sum(jnp.sum(jnp.square(l.astype(jnp.float32))) for l in leaves)
+    return jnp.sqrt(sq)
+
+
+def clip_tree(tree, clip_norm: float | jax.Array):
+    """Clip a pytree update by its *global* L2 norm (one scale for all leaves).
+
+    This is the form used in the datacenter path, where a client's update is a
+    sharded parameter pytree rather than a materialized flat vector.
+    """
+    nrm = global_l2_norm_tree(tree)
+    scale = jnp.minimum(1.0, clip_norm / jnp.maximum(nrm, _EPS))
+    return jax.tree_util.tree_map(lambda l: (l.astype(jnp.float32) * scale).astype(l.dtype), tree), nrm

@@ -1,0 +1,362 @@
+"""Federated server algorithms: DP-FedEXP and its baselines.
+
+Each algorithm is a stateless strategy object with
+
+    apply_round(key, w, raw_deltas) -> (w_next, RoundAux)
+
+where ``raw_deltas`` is the (M, d) matrix of *unclipped* local updates
+``w_i^{(t-1,tau)} - w^{(t-1)}`` produced by ``repro.fedsim`` (or, in the
+datacenter path, the per-client sharded pytrees flattened on the fly).
+Client-side randomization (clipping + LDP noise) is executed inside
+``apply_round`` with independent per-client keys — mathematically identical to
+clients randomizing locally, which is how the privacy guarantee is stated.
+
+Implemented algorithms (paper names):
+    FedAvg, FedEXP                       -- non-private references
+    DP-FedAvg (LDP-Gaussian / CDP)       -- McMahan et al. 2017b
+    LDP-FedEXP (Gaussian)                -- Algorithm 1 + Eq. (6)
+    LDP-FedEXP (PrivUnit)                -- Algorithm 1 + Eq. (7) / Algorithm 4
+    CDP-FedEXP                           -- Algorithm 2 + Eq. (8)
+    DP-FedAvg (PrivUnit)                 -- PrivUnit randomizer, eta_g = 1
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import mechanisms as mech
+from repro.core import stepsize
+from repro.core.aggregation import aggregate_stats, fused_clip_aggregate
+
+__all__ = [
+    "RoundAux",
+    "ServerAlgorithm",
+    "FedAvg",
+    "FedEXP",
+    "DPFedAvgLDPGaussian",
+    "LDPFedEXPGaussian",
+    "DPFedAvgPrivUnit",
+    "LDPFedEXPPrivUnit",
+    "DPFedAvgCDP",
+    "CDPFedEXP",
+    "make_algorithm",
+]
+
+
+@dataclasses.dataclass
+class RoundAux:
+    """Diagnostics for one round (logged by fedsim / benchmarks)."""
+
+    eta_g: jax.Array
+    eta_naive: jax.Array | None = None   # Eq. (3), for the Fig. 2 ablation
+    eta_target: jax.Array | None = None  # Eq. (5), oracle diagnostic
+    update_norm: jax.Array | None = None
+
+
+class ServerAlgorithm:
+    """Base class; subclasses set `name` and implement apply_round.
+
+    Stateless algorithms implement ``apply_round``; stateful servers (the
+    FedOpt family — server Adam/momentum over pseudo-gradients) override
+    ``init_state`` / ``apply_round_stateful``, which the training loop
+    threads through its carry. Default wrappers keep the two interchangeable.
+    """
+
+    name: str = "base"
+    is_private: bool = True
+
+    def apply_round(self, key: jax.Array, w: jax.Array, raw_deltas: jax.Array):
+        raise NotImplementedError
+
+    def init_state(self, w: jax.Array):
+        return ()
+
+    def apply_round_stateful(self, key, w, raw_deltas, state):
+        w_next, aux = self.apply_round(key, w, raw_deltas)
+        return w_next, aux, state
+
+
+# ---------------------------------------------------------------------------
+# Non-private references
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class FedAvg(ServerAlgorithm):
+    name: str = "fedavg"
+    is_private: bool = False
+
+    def apply_round(self, key, w, raw_deltas):
+        stats = aggregate_stats(raw_deltas)
+        w_next = w + stats.cbar
+        return w_next, RoundAux(eta_g=jnp.float32(1.0), update_norm=jnp.linalg.norm(stats.cbar))
+
+
+@dataclasses.dataclass
+class FedEXP(ServerAlgorithm):
+    name: str = "fedexp"
+    is_private: bool = False
+
+    def apply_round(self, key, w, raw_deltas):
+        stats = aggregate_stats(raw_deltas)
+        eta = stepsize.fedexp(stats.mean_sq, stats.agg_sq)
+        return w + eta * stats.cbar, RoundAux(eta_g=eta, update_norm=eta * jnp.linalg.norm(stats.cbar))
+
+
+# ---------------------------------------------------------------------------
+# LDP — Gaussian mechanism
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class DPFedAvgLDPGaussian(ServerAlgorithm):
+    clip_norm: float
+    sigma: float
+    name: str = "dp-fedavg-ldp-gauss"
+
+    def _release(self, key, raw_deltas):
+        m, d = raw_deltas.shape
+        noise = self.sigma * jax.random.normal(key, (m, d), raw_deltas.dtype)
+        return fused_clip_aggregate(raw_deltas, self.clip_norm, noise)
+
+    def apply_round(self, key, w, raw_deltas):
+        stats = self._release(key, raw_deltas)
+        return w + stats.cbar, RoundAux(eta_g=jnp.float32(1.0))
+
+
+@dataclasses.dataclass
+class LDPFedEXPGaussian(DPFedAvgLDPGaussian):
+    """Algorithm 1 with the bias-corrected step size, Eq. (6)."""
+
+    name: str = "ldp-fedexp-gauss"
+
+    def apply_round(self, key, w, raw_deltas):
+        d = raw_deltas.shape[-1]
+        stats = self._release(key, raw_deltas)
+        eta = stepsize.ldp_gaussian(stats.mean_sq, stats.agg_sq, d, self.sigma)
+        aux = RoundAux(
+            eta_g=eta,
+            eta_naive=stepsize.naive_noisy(stats.mean_sq, stats.agg_sq),
+            eta_target=stepsize.target(stats.mean_sq_clipped, stats.agg_sq),
+        )
+        return w + eta * stats.cbar, aux
+
+
+# ---------------------------------------------------------------------------
+# LDP — PrivUnit
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class DPFedAvgPrivUnit(ServerAlgorithm):
+    clip_norm: float
+    eps0: float
+    eps1: float
+    eps2: float
+    dim: int
+    name: str = "dp-fedavg-privunit"
+
+    def __post_init__(self):
+        self.pu = mech.make_privunit_params(self.dim, self.eps0, self.eps1)
+        self.sc = mech.make_scalardp_params(self.eps2, self.clip_norm)
+
+    def _release(self, key, raw_deltas):
+        m, _ = raw_deltas.shape
+        keys = jax.random.split(key, m)
+        norms = jnp.linalg.norm(raw_deltas, axis=-1)
+        scale = jnp.minimum(1.0, self.clip_norm / jnp.maximum(norms, 1e-12))
+        clipped = raw_deltas * scale[:, None]
+        released = jax.vmap(lambda k, dlt: mech.privunit_randomize(k, dlt, self.pu, self.sc))(keys, clipped)
+        stats = aggregate_stats(released)
+        stats.mean_sq_clipped = jnp.mean(jnp.sum(jnp.square(clipped), axis=-1))
+        return released, stats
+
+    def apply_round(self, key, w, raw_deltas):
+        _, stats = self._release(key, raw_deltas)
+        return w + stats.cbar, RoundAux(eta_g=jnp.float32(1.0))
+
+
+@dataclasses.dataclass
+class LDPFedEXPPrivUnit(DPFedAvgPrivUnit):
+    """Algorithm 1 with the PrivUnit norm-estimation step size, Eq. (7)."""
+
+    name: str = "ldp-fedexp-privunit"
+
+    def apply_round(self, key, w, raw_deltas):
+        released, stats = self._release(key, raw_deltas)
+        s_hat = jax.vmap(lambda c: mech.estimate_norm_sq(c, self.pu, self.sc))(released)
+        eta = stepsize.ldp_privunit(jnp.mean(s_hat), stats.agg_sq)
+        aux = RoundAux(
+            eta_g=eta,
+            eta_naive=stepsize.naive_noisy(stats.mean_sq, stats.agg_sq),
+            eta_target=stepsize.target(stats.mean_sq_clipped, stats.agg_sq),
+        )
+        return w + eta * stats.cbar, aux
+
+
+# ---------------------------------------------------------------------------
+# CDP
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class DPFedAvgCDP(ServerAlgorithm):
+    clip_norm: float
+    sigma: float           # paper's sigma; server noise std is sigma/sqrt(M)
+    num_clients: int
+    name: str = "dp-fedavg-cdp"
+
+    def _release(self, key, raw_deltas):
+        d = raw_deltas.shape[-1]
+        stats = fused_clip_aggregate(raw_deltas, self.clip_norm, noise=None)
+        server_noise = (self.sigma / jnp.sqrt(float(self.num_clients))) * jax.random.normal(key, (d,))
+        cbar = stats.cbar + server_noise
+        return stats, cbar
+
+    def apply_round(self, key, w, raw_deltas):
+        _, cbar = self._release(key, raw_deltas)
+        return w + cbar, RoundAux(eta_g=jnp.float32(1.0))
+
+
+@dataclasses.dataclass
+class CDPFedEXP(DPFedAvgCDP):
+    """Algorithm 2 with the privatized-numerator step size, Eq. (8).
+
+    sigma_xi defaults to the hyperparameter-free d * sigma^2 / M (§3.2).
+    """
+
+    sigma_xi: float | None = None
+    name: str = "cdp-fedexp"
+
+    def apply_round(self, key, w, raw_deltas):
+        d = raw_deltas.shape[-1]
+        k_noise, k_xi = jax.random.split(key)
+        stats, cbar = self._release(k_noise, raw_deltas)
+        sigma_xi = self.sigma_xi if self.sigma_xi is not None else d * self.sigma**2 / self.num_clients
+        xi = sigma_xi * jax.random.normal(k_xi, ())
+        agg_sq = jnp.sum(jnp.square(cbar))
+        eta = stepsize.cdp(stats.mean_sq_clipped, xi, agg_sq)
+        aux = RoundAux(
+            eta_g=eta,
+            eta_target=stepsize.target(stats.mean_sq_clipped, agg_sq),
+        )
+        return w + eta * cbar, aux
+
+
+# ---------------------------------------------------------------------------
+# Adaptive clipping (Andrew et al. 2021) x CDP-FedEXP — the combination the
+# paper mentions but leaves out "for simplicity"
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class CDPFedEXPAdaptiveClip(ServerAlgorithm):
+    """CDP-FedEXP with a quantile-tracked clipping threshold.
+
+    Per round: clip at the CURRENT C, release mean + FedEXP numerator with
+    noise std scaled as z * C (fixed noise MULTIPLIER z, so the privacy
+    guarantee is C-independent), update C from the privatized below-threshold
+    fraction. The step-size rule reads the same round's C through sigma_xi =
+    d * (zC)^2 / M — everything stays hyperparameter-free except gamma=0.5
+    (a universal constant in Andrew et al.).
+    """
+
+    z_mult: float               # noise multiplier; per-round std = z*C/sqrt(M)
+    num_clients: int
+    dim: int
+    c0: float = 1.0
+    gamma: float = 0.5
+    clip_lr: float = 0.2
+    sigma_b: float = 10.0
+    name: str = "cdp-fedexp-adaptive-clip"
+
+    def init_state(self, w):
+        from repro.core import adaptive_clip as ac
+        return ac.init_state(self.c0)
+
+    def apply_round_stateful(self, key, w, raw_deltas, state):
+        from repro.core import adaptive_clip as ac
+        m, d = raw_deltas.shape
+        k_noise, k_xi, k_bit = jax.random.split(key, 3)
+        c = state.clip
+        sigma = self.z_mult * c                     # paper's sigma, tracking C
+        stats = fused_clip_aggregate(raw_deltas, c, None)
+        server_noise = (sigma / jnp.sqrt(float(m))) * jax.random.normal(k_noise, (d,))
+        cbar = stats.cbar + server_noise
+        sigma_xi = d * sigma**2 / m
+        xi = sigma_xi * jax.random.normal(k_xi, ())
+        eta = stepsize.cdp(stats.mean_sq_clipped, xi, jnp.sum(jnp.square(cbar)))
+
+        norms = jnp.linalg.norm(raw_deltas, axis=-1)
+        cfg = ac.AdaptiveClipConfig(gamma=self.gamma, lr=self.clip_lr,
+                                    sigma_b=self.sigma_b)
+        state, _ = ac.update_clip(k_bit, state, norms, cfg)
+        aux = RoundAux(eta_g=eta, update_norm=c)   # report the clip used
+        return w + eta * cbar, aux, state
+
+    def apply_round(self, key, w, raw_deltas):
+        raise TypeError("stateful algorithm; use apply_round_stateful")
+
+
+# ---------------------------------------------------------------------------
+# FedOpt family (Reddi et al., 2021) — the servers the paper argues against
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class DPFedAdamCDP(DPFedAvgCDP):
+    """DP-FedAdam: server Adam over the privatized pseudo-gradient.
+
+    Identical privacy release to DP-FedAvg (CDP); the server applies Adam
+    with a GLOBAL learning rate ``server_lr`` — the extra hyperparameter
+    whose DP-safe tuning the paper identifies as the practical blocker
+    (Papernot & Steinke: accounting the tuning can double/triple epsilon).
+    Used by the E6 ablation to quantify that sensitivity vs the
+    hyperparameter-free CDP-FedEXP.
+    """
+
+    server_lr: float = 0.1
+    name: str = "dp-fedadam-cdp"
+
+    def __post_init__(self):
+        from repro import optim
+        self._opt = optim.adam(lr=self.server_lr)
+
+    def init_state(self, w):
+        return self._opt.init(w)
+
+    def apply_round_stateful(self, key, w, raw_deltas, state):
+        _, cbar = self._release(key, raw_deltas)
+        step, state = self._opt.update(cbar, state)
+        return w + step, RoundAux(eta_g=jnp.float32(self.server_lr)), state
+
+    def apply_round(self, key, w, raw_deltas):  # stateless misuse guard
+        raise TypeError("DPFedAdamCDP is stateful; use apply_round_stateful")
+
+
+# ---------------------------------------------------------------------------
+# Registry
+# ---------------------------------------------------------------------------
+
+_FACTORIES: dict[str, Callable[..., ServerAlgorithm]] = {
+    "fedavg": lambda **kw: FedAvg(),
+    "fedexp": lambda **kw: FedEXP(),
+    "dp-fedavg-ldp-gauss": lambda **kw: DPFedAvgLDPGaussian(kw["clip_norm"], kw["sigma"]),
+    "ldp-fedexp-gauss": lambda **kw: LDPFedEXPGaussian(kw["clip_norm"], kw["sigma"]),
+    "dp-fedavg-privunit": lambda **kw: DPFedAvgPrivUnit(
+        kw["clip_norm"], kw["eps0"], kw["eps1"], kw["eps2"], kw["dim"]),
+    "ldp-fedexp-privunit": lambda **kw: LDPFedEXPPrivUnit(
+        kw["clip_norm"], kw["eps0"], kw["eps1"], kw["eps2"], kw["dim"]),
+    "dp-fedavg-cdp": lambda **kw: DPFedAvgCDP(kw["clip_norm"], kw["sigma"], kw["num_clients"]),
+    "cdp-fedexp": lambda **kw: CDPFedEXP(kw["clip_norm"], kw["sigma"], kw["num_clients"],
+                                         sigma_xi=kw.get("sigma_xi")),
+    "dp-fedadam-cdp": lambda **kw: DPFedAdamCDP(kw["clip_norm"], kw["sigma"],
+                                                kw["num_clients"],
+                                                server_lr=kw.get("server_lr", 0.1)),
+    "cdp-fedexp-adaptive-clip": lambda **kw: CDPFedEXPAdaptiveClip(
+        z_mult=kw["z_mult"], num_clients=kw["num_clients"], dim=kw["dim"],
+        c0=kw.get("c0", 1.0)),
+}
+
+
+def make_algorithm(name: str, **kwargs) -> ServerAlgorithm:
+    if name not in _FACTORIES:
+        raise KeyError(f"unknown algorithm {name!r}; have {sorted(_FACTORIES)}")
+    return _FACTORIES[name](**kwargs)

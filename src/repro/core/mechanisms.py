@@ -1,0 +1,359 @@
+"""Privacy mechanisms for DP-FedEXP.
+
+Implements the three local/central randomizers used by the paper:
+
+- Gaussian mechanism (LDP: per-client; CDP: server-side on the mean),
+- PrivUnit (Bhowmick et al., 2018) — Algorithm 5 — privatizes the *direction*
+  of the update on the unit sphere with pure epsilon-DP,
+- ScalarDP — Algorithm 6 — privatizes the update *norm* with randomized
+  rounding + randomized response,
+- the norm-squared estimator of Algorithm 4 used by the LDP-FedEXP(PrivUnit)
+  step-size rule (Eq. 7).
+
+Design notes (TPU/JAX adaptation, see DESIGN.md §5)
+---------------------------------------------------
+Reference implementations of PrivUnit rejection-sample from spherical caps,
+which does not lower to XLA. We instead sample the cap *exactly* via the
+tangent-normal decomposition: for ``u`` the true direction, a uniform draw
+from the cap ``{v : <v,u> >= gamma}`` is ``v = t*u + sqrt(1-t^2)*w_hat`` with
+``w_hat`` uniform on the orthogonal sphere and ``(1+t)/2 ~ Beta(alpha, alpha)``
+truncated to ``[(1+gamma)/2, 1]``, ``alpha = (d-1)/2``.  The truncated Beta is
+inverted by bisection on the regularized incomplete beta function, which is
+jittable, vmappable and shardable.
+
+All *static* mechanism constants (gamma, the unbiasing scale m, ScalarDP's
+a/b/k and the variance-bound constants c1/c2/c3) are computed once at config
+time in float64 Python (see ``_betainc_f64``), so the traced sampling path is
+cheap and dtype-stable.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "GaussianLDPConfig",
+    "GaussianCDPConfig",
+    "gaussian_ldp_randomize",
+    "gaussian_cdp_noise",
+    "PrivUnitParams",
+    "ScalarDPParams",
+    "make_privunit_params",
+    "make_scalardp_params",
+    "privunit_direction",
+    "scalardp_magnitude",
+    "privunit_randomize",
+    "estimate_norm_sq",
+]
+
+
+# ---------------------------------------------------------------------------
+# float64 incomplete beta (config time only — scipy is not available offline).
+# Continued-fraction evaluation, Numerical Recipes §6.4.
+# ---------------------------------------------------------------------------
+
+def _betacf(a: float, b: float, x: float) -> float:
+    MAXIT, EPS, FPMIN = 300, 3e-14, 1e-300
+    qab, qap, qam = a + b, a + 1.0, a - 1.0
+    c = 1.0
+    d = 1.0 - qab * x / qap
+    if abs(d) < FPMIN:
+        d = FPMIN
+    d = 1.0 / d
+    h = d
+    for m in range(1, MAXIT + 1):
+        m2 = 2 * m
+        aa = m * (b - m) * x / ((qam + m2) * (a + m2))
+        d = 1.0 + aa * d
+        if abs(d) < FPMIN:
+            d = FPMIN
+        c = 1.0 + aa / c
+        if abs(c) < FPMIN:
+            c = FPMIN
+        d = 1.0 / d
+        h *= d * c
+        aa = -(a + m) * (qab + m) * x / ((a + m2) * (qap + m2))
+        d = 1.0 + aa * d
+        if abs(d) < FPMIN:
+            d = FPMIN
+        c = 1.0 + aa / c
+        if abs(c) < FPMIN:
+            c = FPMIN
+        d = 1.0 / d
+        de = d * c
+        h *= de
+        if abs(de - 1.0) < EPS:
+            break
+    return h
+
+
+def _betainc_f64(a: float, b: float, x: float) -> float:
+    """Regularized incomplete beta I_x(a, b) in float64."""
+    if x <= 0.0:
+        return 0.0
+    if x >= 1.0:
+        return 1.0
+    lbeta = math.lgamma(a) + math.lgamma(b) - math.lgamma(a + b)
+    front = math.exp(a * math.log(x) + b * math.log1p(-x) - lbeta)
+    if x < (a + 1.0) / (a + b + 2.0):
+        return front * _betacf(a, b, x) / a
+    return 1.0 - math.exp(b * math.log1p(-x) + a * math.log(x) - lbeta) * _betacf(b, a, 1.0 - x) / b
+
+
+def _log_beta(a: float, b: float) -> float:
+    return math.lgamma(a) + math.lgamma(b) - math.lgamma(a + b)
+
+
+# ---------------------------------------------------------------------------
+# Gaussian mechanisms
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class GaussianLDPConfig:
+    """Per-client Gaussian randomizer: ``c_i = Delta_i + N(0, sigma^2 I_d)``.
+
+    Paper setting for the LDP experiments: ``sigma = 0.7 * C``.
+    """
+
+    sigma: float
+    clip_norm: float
+
+
+@dataclasses.dataclass(frozen=True)
+class GaussianCDPConfig:
+    """Server-side Gaussian noise on the *mean* update.
+
+    The paper draws ``eps^(t) ~ N(0, sigma^2 / M)`` (coordinate variance), with
+    ``sigma = 5 * C / sqrt(M)`` in the experiments, and additionally privatizes
+    the FedEXP numerator with a scalar ``xi ~ N(0, sigma_xi^2)``,
+    ``sigma_xi = d * sigma^2 / M`` (the hyperparameter-free choice, §3.2).
+    """
+
+    sigma: float
+    clip_norm: float
+    num_clients: int
+
+    @property
+    def mean_noise_std(self) -> float:
+        return self.sigma / math.sqrt(self.num_clients)
+
+    def sigma_xi(self, dim: int) -> float:
+        return dim * self.sigma**2 / self.num_clients
+
+
+def gaussian_ldp_randomize(key: jax.Array, delta: jax.Array, sigma: float) -> jax.Array:
+    """LocalRandomizer for the Gaussian LDP setting (one client)."""
+    return delta + sigma * jax.random.normal(key, delta.shape, delta.dtype)
+
+
+def gaussian_cdp_noise(key: jax.Array, shape, std: float, dtype=jnp.float32) -> jax.Array:
+    """Server noise for the CDP setting (added once to the aggregated mean)."""
+    return std * jax.random.normal(key, shape, dtype)
+
+
+# ---------------------------------------------------------------------------
+# PrivUnit (Algorithm 5)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class PrivUnitParams:
+    """Static constants for PrivUnit(eps0, eps1) in dimension d."""
+
+    dim: int
+    eps0: float
+    eps1: float
+    p: float          # cap probability  e^{eps0} / (1 + e^{eps0})
+    gamma: float      # cap height
+    m: float          # unbiasing normalizer; ||z|| = 1/m
+    alpha: float      # (d-1)/2
+    tau: float        # (1+gamma)/2
+    i_tau: float      # I_tau(alpha, alpha)
+
+
+def _gamma_from_eps1(d: int, eps1: float) -> float:
+    """Select the largest cap height gamma permitted by Algorithm 5.
+
+    Two sufficient conditions from Bhowmick et al. (2018) — we take the max of
+    the two admissible gammas:
+      (A)  gamma <= (e^{eps1}-1)/(e^{eps1}+1) * sqrt(pi / (2(d-1)))
+      (B)  eps1 >= 0.5*log d + log 6 - (d-1)/2 * log(1-gamma^2) + log gamma,
+           with gamma >= sqrt(2/d).
+    """
+    gamma_a = (math.expm1(eps1) / (math.exp(eps1) + 1.0)) * math.sqrt(math.pi / (2.0 * (d - 1)))
+
+    def rhs(g: float) -> float:
+        return 0.5 * math.log(d) + math.log(6.0) - 0.5 * (d - 1) * math.log1p(-g * g) + math.log(g)
+
+    g_lo = math.sqrt(2.0 / d)
+    gamma_b = -1.0
+    if g_lo < 1.0 and rhs(g_lo) <= eps1:
+        lo, hi = g_lo, 1.0 - 1e-12
+        if rhs(hi) <= eps1:
+            gamma_b = hi
+        else:
+            for _ in range(200):
+                mid = 0.5 * (lo + hi)
+                if rhs(mid) <= eps1:
+                    lo = mid
+                else:
+                    hi = mid
+            gamma_b = lo
+    gamma = max(gamma_a, gamma_b)
+    return min(max(gamma, 1e-8), 1.0 - 1e-9)
+
+
+def make_privunit_params(dim: int, eps0: float, eps1: float) -> PrivUnitParams:
+    if dim < 2:
+        raise ValueError("PrivUnit requires d >= 2")
+    p = math.exp(eps0) / (1.0 + math.exp(eps0))
+    gamma = _gamma_from_eps1(dim, eps1)
+    alpha = 0.5 * (dim - 1)
+    tau = 0.5 * (1.0 + gamma)
+    i_tau = _betainc_f64(alpha, alpha, tau)
+    i_tau = min(max(i_tau, 1e-300), 1.0 - 1e-16)
+    # m = (1-gamma^2)^alpha / (2^{d-2} (d-1)) * [ p/(B - B_tau) - (1-p)/B_tau ]
+    # with B = B(alpha, alpha), B_tau = B(tau; alpha, alpha) = I_tau * B.
+    log_common = alpha * math.log1p(-gamma * gamma) - (dim - 2) * math.log(2.0) \
+        - math.log(dim - 1) - _log_beta(alpha, alpha)
+    term_cap = p * math.exp(log_common - math.log1p(-i_tau))
+    term_comp = (1.0 - p) * math.exp(log_common - math.log(i_tau))
+    m = term_cap - term_comp
+    if not (m > 0.0) or not math.isfinite(m):
+        raise ValueError(
+            f"PrivUnit normalizer m={m!r} is not positive/finite for d={dim}, "
+            f"eps0={eps0}, eps1={eps1}; increase eps0."
+        )
+    return PrivUnitParams(dim=dim, eps0=eps0, eps1=eps1, p=p, gamma=gamma, m=m,
+                          alpha=alpha, tau=tau, i_tau=i_tau)
+
+
+def _betainc_inv_bisect(alpha: float, y: jax.Array, iters: int = 60) -> jax.Array:
+    """Invert x -> I_x(alpha, alpha) by bisection (jittable)."""
+
+    def body(_, state):
+        lo, hi = state
+        mid = 0.5 * (lo + hi)
+        val = jax.scipy.special.betainc(alpha, alpha, mid)
+        lo = jnp.where(val < y, mid, lo)
+        hi = jnp.where(val < y, hi, mid)
+        return lo, hi
+
+    lo = jnp.zeros_like(y)
+    hi = jnp.ones_like(y)
+    lo, hi = jax.lax.fori_loop(0, iters, body, (lo, hi))
+    return 0.5 * (lo + hi)
+
+
+def privunit_direction(key: jax.Array, unit: jax.Array, params: PrivUnitParams) -> jax.Array:
+    """PrivUnit (Algorithm 5): eps0+eps1 pure-DP randomization of a unit vector.
+
+    Returns ``z`` with ``||z|| = 1/m`` and ``E[z] = unit``.
+    """
+    d = params.dim
+    k_cap, k_t, k_w = jax.random.split(key, 3)
+
+    in_cap = jax.random.uniform(k_cap) < params.p
+    u01 = jax.random.uniform(k_t)
+    # Truncated Beta(alpha, alpha): cap -> x in [tau, 1]; complement -> [0, tau).
+    y_cap = params.i_tau + u01 * (1.0 - params.i_tau)
+    y_comp = u01 * params.i_tau
+    y = jnp.where(in_cap, y_cap, y_comp)
+    x = _betainc_inv_bisect(params.alpha, y)
+    t = 2.0 * x - 1.0
+    t = jnp.clip(t, -1.0 + 1e-7, 1.0 - 1e-7)
+
+    g = jax.random.normal(k_w, unit.shape, unit.dtype)
+    g_perp = g - jnp.dot(g, unit) * unit
+    w_hat = g_perp / jnp.maximum(jnp.linalg.norm(g_perp), 1e-12)
+    v = t * unit + jnp.sqrt(jnp.maximum(1.0 - t * t, 0.0)) * w_hat
+    return v / params.m
+
+
+# ---------------------------------------------------------------------------
+# ScalarDP (Algorithm 6)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class ScalarDPParams:
+    """Static constants for ScalarDP(eps2) with magnitudes in [0, r_max]."""
+
+    eps2: float
+    r_max: float       # = clipping threshold C
+    k: int             # ceil(e^{eps2/3})
+    a: float           # debias scale
+    b: float           # debias offset
+    c1: float          # variance-bound constants of Algorithm 4
+    c2: float
+    c3: float
+
+
+def make_scalardp_params(eps2: float, r_max: float) -> ScalarDPParams:
+    k = int(math.ceil(math.exp(eps2 / 3.0)))
+    e = math.exp(eps2)
+    a = ((e + k) / (e - 1.0)) * (r_max / k)
+    b = k * (k + 1.0) / (2.0 * (e + k))
+    c1 = (k + 1.0) / (e - 1.0)
+    c2 = -c1 * r_max
+    c3 = (c1 + 1.0) * r_max**2 / (4.0 * k * k) + c1 * r_max**2 * (
+        (2.0 * k + 1.0) * (e + k) / (6.0 * k * (e - 1.0)) - (k + 1.0) / (4.0 * (e - 1.0))
+    )
+    return ScalarDPParams(eps2=eps2, r_max=r_max, k=k, a=a, b=b, c1=c1, c2=c2, c3=c3)
+
+
+def scalardp_magnitude(key: jax.Array, r: jax.Array, params: ScalarDPParams) -> jax.Array:
+    """ScalarDP (Algorithm 6): eps2 pure-DP unbiased estimate of ``r in [0, C]``."""
+    k = params.k
+    k_round, k_rr, k_unif = jax.random.split(key, 3)
+
+    scaled = jnp.clip(r / params.r_max, 0.0, 1.0) * k
+    j_floor = jnp.floor(scaled)
+    p_floor = jnp.ceil(scaled) - scaled  # w.p. ceil - x take floor
+    take_floor = jax.random.uniform(k_round) < p_floor
+    j = jnp.where(take_floor, j_floor, jnp.ceil(scaled)).astype(jnp.int32)
+    j = jnp.clip(j, 0, k)
+
+    keep = jax.random.uniform(k_rr) < math.exp(params.eps2) / (math.exp(params.eps2) + k)
+    # uniform over {0..k} \ {j}: draw in {0..k-1} and shift past j.
+    u = jax.random.randint(k_unif, (), 0, k)
+    u = jnp.where(u >= j, u + 1, u)
+    j_hat = jnp.where(keep, j, u)
+    return params.a * (j_hat.astype(jnp.float32) - params.b)
+
+
+# ---------------------------------------------------------------------------
+# Combined randomizer + norm estimation (Algorithm 4)
+# ---------------------------------------------------------------------------
+
+def privunit_randomize(key: jax.Array, delta: jax.Array,
+                       pu: PrivUnitParams, sc: ScalarDPParams) -> jax.Array:
+    """LocalRandomizer for LDP(PrivUnit): ``c = ScalarDP(||d||) * PrivUnit(d/||d||)``.
+
+    Unbiased: ``E[c] = delta`` (Lemma B.1); pure (eps0+eps1+eps2)-LDP.
+    """
+    k_dir, k_mag = jax.random.split(key)
+    nrm = jnp.linalg.norm(delta)
+    unit = delta / jnp.maximum(nrm, 1e-12)
+    z = privunit_direction(k_dir, unit, pu)
+    r_hat = scalardp_magnitude(k_mag, nrm, sc)
+    return r_hat * z
+
+
+def estimate_norm_sq(c: jax.Array, pu: PrivUnitParams, sc: ScalarDPParams) -> jax.Array:
+    """Algorithm 4: estimate ``||Delta||^2`` from the PrivUnit release ``c``.
+
+    Recovers the signed ScalarDP output from ``||c|| = |r_hat| / m`` using the
+    lattice structure of ScalarDP (r_hat/a + b is an integer iff the sign is
+    positive, under the paper's assumption k(k+1)/(e^{eps2}+k) not in Z), then
+    debiases through the variance upper bound:
+        s_hat = (r_hat^2 - c2 * r_hat - c3) / (1 + c1),   E[s_hat] <= ||Delta||^2.
+    """
+    r_tilde = pu.m * jnp.linalg.norm(c)
+    j_pos = r_tilde / sc.a + sc.b
+    j_neg = -r_tilde / sc.a + sc.b
+    dist_pos = jnp.abs(j_pos - jnp.round(j_pos))
+    dist_neg = jnp.abs(j_neg - jnp.round(j_neg))
+    r_hat = jnp.where(dist_pos <= dist_neg, r_tilde, -r_tilde)
+    return (r_hat**2 - sc.c2 * r_hat - sc.c3) / (1.0 + sc.c1)

@@ -1,0 +1,87 @@
+"""Adaptive global step-size rules — the paper's core contribution.
+
+All rules consume *aggregate statistics* of the round (means over the client
+axis), so the same functions serve the single-host simulation (`repro.fedsim`,
+where the stats are plain means over an (M, d) array) and the datacenter path
+(`repro.launch`, where the means are psums over the client mesh axes).
+
+Rules
+-----
+- ``fedexp``          Eq. (2)  — non-private FedEXP (Jhunjhunwala'23 / Li'24 form).
+- ``naive_noisy``     Eq. (3)  — the broken naive extension (for Fig. 2 only).
+- ``target``          Eq. (5)  — oracle eta_target (needs true Delta_i; diagnostics).
+- ``ldp_gaussian``    Eq. (6)  — bias-corrected numerator: mean ||c_i||^2 - d sigma^2.
+- ``ldp_privunit``    Eq. (7)  — mean of Algorithm-4 estimates s_hat_i.
+- ``cdp``             Eq. (8)  — true numerator + scalar Gaussian noise xi.
+- ``fedavg``                   — constant 1 (DP-FedAvg).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+__all__ = [
+    "fedavg",
+    "fedexp",
+    "naive_noisy",
+    "target",
+    "ldp_gaussian",
+    "ldp_privunit",
+    "cdp",
+]
+
+_EPS = 1e-12
+
+
+def _ratio(numerator, denom_sq):
+    return numerator / jnp.maximum(denom_sq, _EPS)
+
+
+def fedavg(*_args, **_kwargs):
+    """DP-FedAvg global step size: eta_g = 1."""
+    return jnp.float32(1.0)
+
+
+def fedexp(mean_sq_norm, agg_sq_norm):
+    """Eq. (2): eta = max{1, (1/M sum ||Delta_i||^2) / ||mean Delta||^2}.
+
+    We follow Li et al. (2024) and the paper in dropping FedEXP's 1/2 factor
+    and denominator epsilon; the max{1, .} keeps eta_g >= 1 so T1 shrinks.
+    """
+    return jnp.maximum(1.0, _ratio(mean_sq_norm, agg_sq_norm))
+
+
+def naive_noisy(mean_sq_noisy_norm, agg_sq_norm):
+    """Eq. (3): the naive noisy rule — biased upward by d*sigma^2 (Fig. 2).
+
+    Exposed only for the bias-correction ablation; never used for training.
+    """
+    return _ratio(mean_sq_noisy_norm, agg_sq_norm)
+
+
+def target(mean_sq_true_norm, agg_sq_noisy_norm):
+    """Eq. (5): eta_target — requires the true per-client norms (oracle)."""
+    return _ratio(mean_sq_true_norm, agg_sq_noisy_norm)
+
+
+def ldp_gaussian(mean_sq_noisy_norm, agg_sq_norm, dim, sigma):
+    """Eq. (6): LDP-FedEXP with Gaussian mechanism.
+
+    ``mean ||c_i||^2 - d sigma^2`` is an unbiased estimator of
+    ``mean ||Delta_i||^2``; max{1,.} guards the (rare, high-noise) negative case.
+    """
+    corrected = mean_sq_noisy_norm - dim * sigma**2
+    return jnp.maximum(1.0, _ratio(corrected, agg_sq_norm))
+
+
+def ldp_privunit(mean_s_hat, agg_sq_norm):
+    """Eq. (7): LDP-FedEXP with PrivUnit; numerator = mean of Alg.-4 estimates."""
+    return jnp.maximum(1.0, _ratio(mean_s_hat, agg_sq_norm))
+
+
+def cdp(mean_sq_true_norm, xi, agg_sq_norm):
+    """Eq. (8): CDP-FedEXP — true numerator privatized by scalar noise xi.
+
+    xi ~ N(0, sigma_xi^2) with the hyperparameter-free sigma_xi = d sigma^2 / M;
+    sensitivity of the numerator is C^2/M (Prop. 4.2).
+    """
+    return jnp.maximum(1.0, _ratio(mean_sq_true_norm + xi, agg_sq_norm))

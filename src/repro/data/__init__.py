@@ -1,0 +1,16 @@
+"""Data substrate: synthetic linreg, generated images, partitioners, LM tokens."""
+
+from repro.data.dirichlet import client_image_batches, dirichlet_partition
+from repro.data.images import ImageDataset, make_image_dataset
+from repro.data.synthetic import (
+    SyntheticLinReg,
+    distance_to_opt,
+    linreg_loss,
+    make_synthetic_linreg,
+)
+
+__all__ = [
+    "SyntheticLinReg", "make_synthetic_linreg", "linreg_loss", "distance_to_opt",
+    "ImageDataset", "make_image_dataset",
+    "dirichlet_partition", "client_image_batches",
+]

@@ -1,0 +1,11 @@
+"""Vectorized federated-learning simulation engine (paper experiments)."""
+
+from repro.fedsim.flat import flatten_model
+from repro.fedsim.local import cohort_updates, local_update
+from repro.fedsim.scaffold import DPScaffoldConfig, run_dp_scaffold
+from repro.fedsim.server import RunResult, run_federated
+
+__all__ = [
+    "flatten_model", "local_update", "cohort_updates",
+    "run_federated", "RunResult", "DPScaffoldConfig", "run_dp_scaffold",
+]

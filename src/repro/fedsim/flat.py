@@ -1,0 +1,21 @@
+"""Flat-parameter utilities for the federated simulation engine.
+
+DP-FedEXP operates on flattened update vectors (clipping, noise, norms are all
+over R^d).  The simulation keeps every model as a flat (d,) vector plus an
+unravel function, so the (M, d) client-update matrix is a first-class array
+that vmaps/shards/kernels cleanly.
+"""
+from __future__ import annotations
+
+from typing import Callable
+
+import jax
+from jax.flatten_util import ravel_pytree
+
+__all__ = ["flatten_model"]
+
+
+def flatten_model(params_tree) -> tuple[jax.Array, Callable]:
+    """Return (flat_params, unravel_fn) for a parameter pytree."""
+    flat, unravel = ravel_pytree(params_tree)
+    return flat, unravel

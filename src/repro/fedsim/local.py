@@ -1,0 +1,32 @@
+"""Client-side local training (Algorithm 3) — vectorized over the cohort.
+
+Each client runs ``tau`` full-batch gradient steps on its own local dataset
+starting from the broadcast global model and returns the raw local update
+``Delta~_i = w_i^{(t-1,tau)} - w^{(t-1)}``.  The whole cohort is a single
+``vmap`` so M=1000 clients execute as one batched XLA program.
+"""
+from __future__ import annotations
+
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["local_update", "cohort_updates"]
+
+
+def local_update(loss_fn: Callable, w0: jax.Array, client_batch, tau: int, eta_l: float) -> jax.Array:
+    """tau steps of (full-batch) GD on one client's data; returns the update."""
+
+    def step(w, _):
+        g = jax.grad(loss_fn)(w, client_batch)
+        return w - eta_l * g, None
+
+    w_tau, _ = jax.lax.scan(step, w0, None, length=tau)
+    return w_tau - w0
+
+
+def cohort_updates(loss_fn: Callable, w: jax.Array, client_batches, tau: int, eta_l: float) -> jax.Array:
+    """(M, d) matrix of raw local updates for the full cohort (vmapped)."""
+    fn = lambda batch: local_update(loss_fn, w, batch, tau, eta_l)
+    return jax.vmap(fn)(client_batches)

@@ -1,0 +1,15 @@
+"""Pallas TPU kernels for the compute hot-spots (validated in interpret mode).
+
+- ``dp_aggregate``    — fused clip+noise+aggregate server reduction (the
+  paper's per-round hot loop over the (M, d) update matrix).
+- ``flash_attention`` — blockwise online-softmax attention (causal, sliding
+  window, GQA/MQA) for the transformer architectures.
+- ``ssd_scan``        — Mamba2 chunked state-space-duality scan for the
+  SSM/hybrid architectures.
+"""
+
+from repro.kernels.dp_aggregate import dp_aggregate
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.ssd_scan import ssd_scan
+
+__all__ = ["dp_aggregate", "flash_attention", "ssd_scan"]

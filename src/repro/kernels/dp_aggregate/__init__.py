@@ -1,0 +1,4 @@
+from repro.kernels.dp_aggregate import ops, ref
+from repro.kernels.dp_aggregate.ops import dp_aggregate
+
+__all__ = ["ops", "ref", "dp_aggregate"]

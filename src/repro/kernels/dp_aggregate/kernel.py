@@ -1,0 +1,102 @@
+"""Fused DP aggregation kernel (Pallas TPU).
+
+Server hot loop of Algorithms 1/2: given the raw (M, d) client-update matrix
+(and optionally an (M, d) LDP noise matrix), produce in ONE pass over HBM:
+
+    sum_released     (d,)  = sum_i clip(u_i) + n_i
+    sum_sq_released  (1,1) = sum_i ||clip(u_i) + n_i||^2     (FedEXP numerator)
+    sum_sq_clipped   (1,1) = sum_i ||clip(u_i)||^2           (CDP numerator)
+
+The naive composition (norms pass, scale pass, reduce pass) reads the update
+matrix three times; at fedsim scale (M=1000, d up to ~1e5) the op is purely
+memory-bound, so the fusion is a ~3x bandwidth win on TPU.
+
+Tiling: grid over row blocks; each program holds a (block_m, d) tile in VMEM
+(d padded to the 128-lane boundary by the wrapper). TPU grid execution is
+sequential, so outputs are accumulated across grid steps with a first-step
+initialization guard — the standard Pallas reduction pattern.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+__all__ = ["dp_aggregate_kernel_call"]
+
+_EPS = 1e-12
+
+
+def _kernel(u_ref, n_ref, sum_ref, sq_rel_ref, sq_clip_ref, *, clip_norm: float, with_noise: bool):
+    step = pl.program_id(0)
+
+    u = u_ref[...].astype(jnp.float32)                      # (bm, d)
+    sq_norms = jnp.sum(u * u, axis=1, keepdims=True)        # (bm, 1)
+    scale = jnp.minimum(1.0, clip_norm / jnp.sqrt(jnp.maximum(sq_norms, _EPS)))
+    clipped = u * scale
+    sq_clipped = jnp.sum(clipped * clipped, axis=1)         # (bm,)
+
+    if with_noise:
+        released = clipped + n_ref[...].astype(jnp.float32)
+    else:
+        released = clipped
+    sq_released = jnp.sum(released * released, axis=1)      # (bm,)
+
+    part_sum = jnp.sum(released, axis=0, keepdims=True)     # (1, d)
+    part_sq_rel = jnp.sum(sq_released)[None, None]          # (1, 1)
+    part_sq_clip = jnp.sum(sq_clipped)[None, None]
+
+    @pl.when(step == 0)
+    def _init():
+        sum_ref[...] = part_sum
+        sq_rel_ref[...] = part_sq_rel
+        sq_clip_ref[...] = part_sq_clip
+
+    @pl.when(step != 0)
+    def _accum():
+        sum_ref[...] += part_sum
+        sq_rel_ref[...] += part_sq_rel
+        sq_clip_ref[...] += part_sq_clip
+
+
+def dp_aggregate_kernel_call(
+    updates: jax.Array,
+    noise: jax.Array | None,
+    clip_norm: float,
+    *,
+    block_m: int = 8,
+    interpret: bool = True,
+):
+    """Invoke the fused kernel. Expects M % block_m == 0 and d % 128 == 0
+    (the ops.py wrapper pads). Returns (sum_released, sum_sq_released,
+    sum_sq_clipped)."""
+    m, d = updates.shape
+    assert m % block_m == 0, (m, block_m)
+    with_noise = noise is not None
+    if noise is None:  # dummy operand keeps the kernel signature static
+        noise = jnp.zeros((block_m, d), updates.dtype)
+        noise_spec = pl.BlockSpec((block_m, d), lambda i: (0, 0))
+    else:
+        noise_spec = pl.BlockSpec((block_m, d), lambda i: (i, 0))
+
+    kernel = functools.partial(_kernel, clip_norm=float(clip_norm), with_noise=with_noise)
+    out = pl.pallas_call(
+        kernel,
+        grid=(m // block_m,),
+        in_specs=[pl.BlockSpec((block_m, d), lambda i: (i, 0)), noise_spec],
+        out_specs=[
+            pl.BlockSpec((1, d), lambda i: (0, 0)),
+            pl.BlockSpec((1, 1), lambda i: (0, 0)),
+            pl.BlockSpec((1, 1), lambda i: (0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((1, d), jnp.float32),
+            jax.ShapeDtypeStruct((1, 1), jnp.float32),
+            jax.ShapeDtypeStruct((1, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(updates, noise)
+    sum_released, sq_rel, sq_clip = out
+    return sum_released[0], sq_rel[0, 0], sq_clip[0, 0]

@@ -1,0 +1,63 @@
+"""Jitted public wrapper for the fused DP aggregation kernel.
+
+Pads (M, d) to the kernel's tiling contract, invokes the Pallas kernel (or the
+jnp oracle on request) and converts raw sums into the ``RoundStats`` consumed
+by the step-size rules.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.aggregation import RoundStats
+from repro.kernels.dp_aggregate.kernel import dp_aggregate_kernel_call
+from repro.kernels.dp_aggregate.ref import dp_aggregate_ref
+
+__all__ = ["dp_aggregate"]
+
+
+def _pad_axis(x: jax.Array, axis: int, multiple: int) -> jax.Array:
+    size = x.shape[axis]
+    pad = (-size) % multiple
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths)
+
+
+@functools.partial(jax.jit, static_argnames=("clip_norm", "use_ref", "interpret", "block_m"))
+def _impl(updates, noise, clip_norm, use_ref, interpret, block_m):
+    m = updates.shape[0]
+    if use_ref:
+        s, sq_rel, sq_clip = dp_aggregate_ref(updates, noise, clip_norm)
+    else:
+        u = _pad_axis(_pad_axis(updates, 1, 128), 0, block_m)
+        n = None if noise is None else _pad_axis(_pad_axis(noise, 1, 128), 0, block_m)
+        s, sq_rel, sq_clip = dp_aggregate_kernel_call(
+            u, n, clip_norm, block_m=block_m, interpret=interpret)
+        s = s[: updates.shape[1]]
+    cbar = s / m
+    return cbar, sq_rel / m, sq_clip / m
+
+
+def dp_aggregate(
+    updates: jax.Array,
+    clip_norm: float,
+    noise: jax.Array | None = None,
+    *,
+    use_ref: bool = False,
+    interpret: bool = True,
+    block_m: int = 8,
+) -> RoundStats:
+    """Fused clip(+noise)+aggregate returning FedEXP round statistics."""
+    cbar, mean_sq, mean_sq_clipped = _impl(
+        updates, noise, float(clip_norm), use_ref, interpret, block_m)
+    return RoundStats(
+        cbar=cbar,
+        mean_sq=mean_sq,
+        agg_sq=jnp.sum(jnp.square(cbar)),
+        mean_sq_clipped=mean_sq_clipped,
+    )

@@ -1,0 +1,21 @@
+"""Pure-jnp oracle for the fused DP aggregation kernel."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+_EPS = 1e-12
+
+
+def dp_aggregate_ref(updates: jax.Array, noise: jax.Array | None, clip_norm: float):
+    """Returns (sum_released (d,), sum_sq_released (), sum_sq_clipped ())."""
+    u = updates.astype(jnp.float32)
+    norms = jnp.linalg.norm(u, axis=-1)
+    scale = jnp.minimum(1.0, clip_norm / jnp.maximum(norms, _EPS))
+    clipped = u * scale[:, None]
+    released = clipped if noise is None else clipped + noise.astype(jnp.float32)
+    return (
+        jnp.sum(released, axis=0),
+        jnp.sum(jnp.square(released)),
+        jnp.sum(jnp.square(clipped)),
+    )

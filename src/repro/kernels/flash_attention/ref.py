@@ -1,0 +1,28 @@
+"""Dense-softmax oracle for the flash attention kernel."""
+from __future__ import annotations
+
+import math
+
+import jax.numpy as jnp
+
+
+def attention_ref(q, k, v, *, causal=True, window=None, scale=None):
+    """q: (B, Hq, Sq, Dh); k, v: (B, Hkv, Skv, Dh). Dense reference."""
+    b, hq, sq, dh = q.shape
+    _, hkv, skv, _ = k.shape
+    group = hq // hkv
+    k = jnp.repeat(k, group, axis=1)
+    v = jnp.repeat(v, group, axis=1)
+    scale = scale if scale is not None else 1.0 / math.sqrt(dh)
+    s = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32), k.astype(jnp.float32)) * scale
+    q_idx = jnp.arange(sq)[:, None]
+    k_idx = jnp.arange(skv)[None, :]
+    mask = jnp.ones((sq, skv), bool)
+    if causal:
+        mask &= k_idx <= q_idx
+    if window is not None:
+        mask &= k_idx > q_idx - window
+    s = jnp.where(mask, s, -jnp.inf)
+    p = jnp.exp(s - jnp.max(s, axis=-1, keepdims=True))
+    p = p / jnp.sum(p, axis=-1, keepdims=True)
+    return jnp.einsum("bhqk,bhkd->bhqd", p, v.astype(jnp.float32)).astype(q.dtype)

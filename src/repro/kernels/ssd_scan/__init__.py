@@ -1,0 +1,4 @@
+from repro.kernels.ssd_scan import ops, ref
+from repro.kernels.ssd_scan.ops import ssd_scan
+
+__all__ = ["ops", "ref", "ssd_scan"]

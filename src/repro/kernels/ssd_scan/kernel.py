@@ -1,0 +1,107 @@
+"""Mamba2 SSD (state-space duality) chunked scan kernel (Pallas TPU).
+
+Computes the selective-state-space recurrence
+
+    h_t = exp(A_h * dt_t) * h_{t-1} + dt_t * (B_t  ⊗ x_t)     (N x P state)
+    y_t = C_t^T h_t
+
+in the chunked dual form of Dao & Gu (arXiv:2405.21060): within a chunk of
+length L the output is a masked (L x L) matmul (MXU-friendly), across chunks a
+small (N x P) state is carried. This replaces the GPU warp-parallel scan with
+a TPU-native schedule: the quadratic intra-chunk term maps onto the MXU and
+the inter-chunk recurrence is the sequential grid carry in VMEM scratch.
+
+    y_intra = ((C K^T) ⊙ D) xbar      D_ij = exp(s_i - s_j) for j <= i
+    h'      = exp(s_L) h + sum_j exp(s_L - s_j) B_j ⊗ xbar_j
+    y_inter = exp(s_i) * (C_i h)
+
+with s the within-chunk cumulative log-decay and xbar = dt * x.
+
+Grid: (batch, heads, n_chunks) — chunk axis innermost so the (N, P) scratch
+state carries across sequential grid steps of the same (b, h).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["ssd_scan_kernel_call"]
+
+
+def _kernel(x_ref, dt_ref, a_ref, b_ref, c_ref, y_ref, h_ref, *, chunk: int):
+    ic = pl.program_id(2)
+
+    @pl.when(ic == 0)
+    def _init():
+        h_ref[...] = jnp.zeros_like(h_ref)
+
+    x = x_ref[0, :, 0, :].astype(jnp.float32)          # (L, P)
+    dt = dt_ref[0, :, 0].astype(jnp.float32)           # (L,)
+    a = a_ref[0]                                       # scalar A_h (negative)
+    bmat = b_ref[0].astype(jnp.float32)                # (L, N)
+    cmat = c_ref[0].astype(jnp.float32)                # (L, N)
+
+    log_a = a * dt                                     # (L,) log decay per step
+    s = jnp.cumsum(log_a)                              # (L,) cumulative log decay
+    xbar = x * dt[:, None]                             # (L, P)
+
+    # Intra-chunk: ((C B^T) ⊙ D) @ xbar, D_ij = exp(s_i - s_j + log_a_j ... )
+    # careful with convention: h_t includes decay a_t applied to h_{t-1} but the
+    # input B_t xbar_t enters *undecayed* at step t. So for j <= i:
+    #   weight(i, j) = exp(s_i - s_j)  (product of a_{j+1..i}), weight(i, i) = 1.
+    diff = s[:, None] - s[None, :]                     # (L, L)
+    li = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 0)
+    lj = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 1)
+    decay = jnp.where(lj <= li, jnp.exp(diff), 0.0)
+    scores = jax.lax.dot_general(cmat, bmat, (((1,), (1,)), ((), ())))  # (L, L)
+    y = jax.lax.dot(scores * decay, xbar)              # (L, P)
+
+    # Inter-chunk: contribution of the carried state.
+    h = h_ref[...]                                     # (N, P)
+    y += jnp.exp(s)[:, None] * jax.lax.dot(cmat, h)    # (L, P)
+
+    # State update for the next chunk.
+    s_last = s[-1]
+    w = jnp.exp(s_last - s)                            # (L,)
+    h_ref[...] = jnp.exp(s_last) * h + jax.lax.dot_general(
+        bmat * w[:, None], xbar, (((0,), (0,)), ((), ())))  # (N, P)
+
+    y_ref[0, :, 0, :] = y.astype(y_ref.dtype)
+
+
+def ssd_scan_kernel_call(
+    x: jax.Array,       # (B, S, H, P)
+    dt: jax.Array,      # (B, S, H)   positive step sizes
+    a: jax.Array,       # (H,)        negative decay rates
+    bmat: jax.Array,    # (B, S, N)   input projections (shared across heads)
+    cmat: jax.Array,    # (B, S, N)   output projections
+    *,
+    chunk: int = 128,
+    interpret: bool = True,
+) -> jax.Array:
+    """Returns y (B, S, H, P). S must be a multiple of ``chunk``."""
+    b, s, h, p = x.shape
+    n = bmat.shape[-1]
+    assert s % chunk == 0, (s, chunk)
+    nc = s // chunk
+
+    kernel = functools.partial(_kernel, chunk=chunk)
+    return pl.pallas_call(
+        kernel,
+        grid=(b, h, nc),
+        in_specs=[
+            pl.BlockSpec((1, chunk, 1, p), lambda ib, ih, ic: (ib, ic, ih, 0)),
+            pl.BlockSpec((1, chunk, 1), lambda ib, ih, ic: (ib, ic, ih)),
+            pl.BlockSpec((1,), lambda ib, ih, ic: (ih,)),
+            pl.BlockSpec((1, chunk, n), lambda ib, ih, ic: (ib, ic, 0)),
+            pl.BlockSpec((1, chunk, n), lambda ib, ih, ic: (ib, ic, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, chunk, 1, p), lambda ib, ih, ic: (ib, ic, ih, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, s, h, p), x.dtype),
+        scratch_shapes=[pltpu.VMEM((n, p), jnp.float32)],
+        interpret=interpret,
+    )(x, dt, a, bmat, cmat)

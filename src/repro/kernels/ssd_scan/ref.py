@@ -1,0 +1,31 @@
+"""Step-by-step recurrence oracle for the SSD scan kernel."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def ssd_scan_ref(x, dt, a, bmat, cmat):
+    """Naive per-step recurrence.
+
+    x: (B, S, H, P), dt: (B, S, H), a: (H,), bmat/cmat: (B, S, N).
+    Returns y: (B, S, H, P).
+    """
+    bsz, s, h, p = x.shape
+    n = bmat.shape[-1]
+
+    def step(hstate, inputs):
+        xt, dtt, bt, ct = inputs          # (B,H,P), (B,H), (B,N), (B,N)
+        decay = jnp.exp(a[None, :] * dtt)                     # (B, H)
+        inject = bt[:, None, :, None] * (xt * dtt[..., None])[:, :, None, :]  # (B,H,N,P)
+        hstate = decay[:, :, None, None] * hstate + inject
+        yt = jnp.einsum("bn,bhnp->bhp", ct, hstate)
+        return hstate, yt
+
+    h0 = jnp.zeros((bsz, h, n, p), jnp.float32)
+    xs = (jnp.moveaxis(x, 1, 0).astype(jnp.float32),
+          jnp.moveaxis(dt, 1, 0).astype(jnp.float32),
+          jnp.moveaxis(bmat, 1, 0).astype(jnp.float32),
+          jnp.moveaxis(cmat, 1, 0).astype(jnp.float32))
+    _, ys = jax.lax.scan(step, h0, xs)
+    return jnp.moveaxis(ys, 0, 1).astype(x.dtype)

@@ -1,0 +1,257 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch x input shape) on the
+production mesh, and extract the roofline terms from the compiled artifact.
+
+MUST be invoked as its own process (``python -m repro.launch.dryrun``) so the
+XLA_FLAGS above precede any jax initialization — do not import this module
+from tests/benches (they must keep seeing 1 device).
+
+Usage:
+    python -m repro.launch.dryrun --arch gemma-2b --shape train_4k
+    python -m repro.launch.dryrun --arch all --shape all --multi-pod
+    python -m repro.launch.dryrun ... --out results/dryrun
+
+Per combo it writes ``<out>/<arch>__<shape>__<mesh>.json`` with:
+  memory_analysis (bytes per device), cost_analysis (flops/bytes), collective
+  bytes by kind, the roofline terms, MODEL_FLOPS and the useful-compute ratio.
+"""
+import argparse
+import json
+import sys
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import ARCHS, SHAPES, FederatedConfig
+from repro.launch import specs as specs_mod
+from repro.launch.hlo_cost import hlo_cost
+from repro.launch.mesh import make_production_mesh
+from repro.launch.roofline import model_flops, roofline_terms, HW
+from repro.launch.rules import count_params, make_rules, safe_pspec, tree_shardings
+from repro.launch.serve import ServeEngine
+from repro.launch.train import FederatedTrainer
+from repro.models.encdec import EncDecLM
+from repro.models.sharding import axis_rules
+from repro.models.transformer import DecoderLM
+
+
+def build_model(cfg, *, attn_impl: str = "xla_flash", remat_policy: str | None = None):
+    if cfg.arch_type == "audio":
+        return EncDecLM(cfg, dtype=jnp.bfloat16, attn_impl=attn_impl)
+    return DecoderLM(cfg, dtype=jnp.bfloat16, attn_impl=attn_impl,
+                     remat_policy=remat_policy)
+
+
+def active_params(cfg, model, total: int) -> int:
+    """6*N_active*D convention for MoE: router always, top_k/E of expert mass."""
+    if not cfg.num_experts:
+        return total
+    shapes = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+    expert_mass = 0
+    for path, leaf in jax.tree_util.tree_flatten_with_path(shapes)[0]:
+        name = str(path[-1].key) if hasattr(path[-1], "key") else ""
+        if name in ("moe_wi", "moe_wo"):
+            expert_mass += int(np.prod(leaf.shape))
+    return total - expert_mass + int(expert_mass * cfg.top_k / cfg.num_experts)
+
+
+def _param_shardings(mesh, model, rules):
+    shapes = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+    return shapes, tree_shardings(mesh, shapes, model.pspecs(), rules)
+
+
+def _key_spec(mesh):
+    spec = jax.eval_shape(lambda: jax.random.PRNGKey(0))
+    return spec, NamedSharding(mesh, P())
+
+
+def lower_one(arch: str, shape_name: str, *, multi_pod: bool,
+              fed: FederatedConfig, attn_impl: str = "xla_flash",
+              remat_policy: str | None = None):
+    cfg = ARCHS[arch]
+    shape = SHAPES[shape_name]
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    chips = int(np.prod(mesh.devices.shape))
+    model = build_model(cfg, attn_impl=attn_impl, remat_policy=remat_policy)
+    n_params = count_params(model)
+    mode = "train" if shape.kind == "train" else "serve"
+    rules = make_rules(cfg, mesh, mode=mode, num_params=n_params)
+
+    with axis_rules(rules):
+        pshapes, pshard = _param_shardings(mesh, model, rules)
+        kspec, kshard = _key_spec(mesh)
+
+        if shape.kind == "train":
+            k = specs_mod.cohort_size(mesh, rules)
+            bshapes, blogical = specs_mod.train_input_specs(cfg, shape, fed, mesh, rules)
+            bshard = specs_mod.tree_input_shardings(mesh, bshapes, blogical, rules)
+            trainer = FederatedTrainer(model, fed, n_params)
+            step = trainer.make_train_step(cohort_k=k)
+            jitted = jax.jit(step, in_shardings=(pshard, bshard, kshard),
+                             out_shardings=(pshard, None))
+            with mesh:
+                lowered = jitted.lower(pshapes, bshapes, kspec)
+            tokens = shape.global_batch * fed.local_steps * (
+                specs_mod.WHISPER_DECODER_LEN if cfg.arch_type == "audio" else shape.seq_len)
+        else:
+            engine = ServeEngine(model, is_encdec=cfg.arch_type == "audio")
+            if shape.kind == "decode":
+                ishapes, ilogical = specs_mod.decode_input_specs(cfg, shape, mesh, rules, model)
+                ishard = specs_mod.tree_input_shardings(mesh, ishapes, ilogical, rules)
+                step = engine.make_decode_step()
+                args = (pshapes, ishapes["token"], ishapes["pos"], ishapes["caches"])
+                shards = (pshard, ishard["token"], ishard["pos"], ishard["caches"])
+                if cfg.arch_type == "audio":
+                    args += (ishapes["enc_out"],)
+                    shards += (ishard["enc_out"],)
+                jitted = jax.jit(step, in_shardings=shards,
+                                 out_shardings=(None, None, ishard["caches"]))
+                with mesh:
+                    lowered = jitted.lower(*args)
+                tokens = shape.global_batch
+            else:  # prefill
+                ishapes, ilogical = specs_mod.prefill_input_specs(cfg, shape, mesh, rules, model)
+                ishard = specs_mod.tree_input_shardings(mesh, ishapes, ilogical, rules)
+                step = engine.make_prefill_step()
+                if cfg.arch_type == "audio":
+                    args = (pshapes, ishapes["frames"], ishapes["tokens"], ishapes["caches"])
+                    shards = (pshard, ishard["frames"], ishard["tokens"], ishard["caches"])
+                    out_shards = (None, ishard["caches"], None)
+                else:
+                    args = (pshapes, ishapes["tokens"], ishapes["caches"])
+                    shards = (pshard, ishard["tokens"], ishard["caches"])
+                    out_shards = (None, ishard["caches"])
+                jitted = jax.jit(step, in_shardings=shards, out_shardings=out_shards)
+                with mesh:
+                    lowered = jitted.lower(*args)
+                tokens = shape.global_batch * shape.seq_len
+
+    return lowered, dict(cfg=cfg, model=model, n_params=n_params, chips=chips,
+                         tokens=tokens, kind=shape.kind, rules=rules)
+
+
+def run_one(arch: str, shape_name: str, *, multi_pod: bool, out_dir: str,
+            fed: FederatedConfig, attn_impl: str = "xla_flash",
+            tag: str = "", remat_policy: str | None = None) -> dict:
+    mesh_name = "2x16x16" if multi_pod else "16x16"
+    t0 = time.time()
+    lowered, info = lower_one(arch, shape_name, multi_pod=multi_pod, fed=fed,
+                              attn_impl=attn_impl, remat_policy=remat_policy)
+    t_lower = time.time() - t0
+    t0 = time.time()
+    compiled = lowered.compile()
+    t_compile = time.time() - t0
+
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):
+        cost = cost[0]
+    hlo = compiled.as_text()
+    # structural walk with while-trip-count multiplication (hlo_cost.py);
+    # the raw cost_analysis (loop bodies counted once) is kept for reference.
+    walked = hlo_cost(hlo)
+    coll = walked["collective_bytes"]
+    coll_total = walked["collective_total"]
+
+    flops = walked["flops"]
+    bytes_acc = walked["bytes"]
+    terms = roofline_terms(flops, bytes_acc, coll_total)
+    mflops = model_flops(info["n_params"],
+                         active_params(info["cfg"], info["model"], info["n_params"]),
+                         info["tokens"], info["kind"])
+
+    result = {
+        "arch": arch,
+        "shape": shape_name,
+        "mesh": mesh_name,
+        "chips": info["chips"],
+        "kind": info["kind"],
+        "num_params": info["n_params"],
+        "tokens_per_step": info["tokens"],
+        "lower_s": round(t_lower, 1),
+        "compile_s": round(t_compile, 1),
+        "memory": {
+            "argument_bytes": getattr(mem, "argument_size_in_bytes", None),
+            "output_bytes": getattr(mem, "output_size_in_bytes", None),
+            "temp_bytes": getattr(mem, "temp_size_in_bytes", None),
+            "peak_bytes": getattr(mem, "peak_memory_in_bytes", None),
+        },
+        "cost": {"flops": flops, "bytes_accessed": bytes_acc,
+                 "raw_xla_flops": float(cost.get("flops", 0.0)),
+                 "raw_xla_bytes": float(cost.get("bytes accessed", 0.0)),
+                 "unknown_loops": walked["unknown_loops"]},
+        "collective_bytes": coll,
+        "collective_total": coll_total,
+        "roofline": terms,
+        "model_flops": mflops,
+        "useful_ratio": (mflops / info["chips"]) / flops if flops else None,
+        "hlo_lines": hlo.count("\n"),
+    }
+    if out_dir:
+        os.makedirs(out_dir, exist_ok=True)
+        name = f"{arch}__{shape_name}__{mesh_name}{tag}.json"
+        with open(os.path.join(out_dir, name), "w") as f:
+            json.dump(result, f, indent=1)
+    return result
+
+
+def eligible(arch: str, shape_name: str) -> bool:
+    cfg = ARCHS[arch]
+    if shape_name == "long_500k" and not cfg.subquadratic:
+        return False  # dense full-attention archs skip 500k decode (DESIGN.md §6)
+    return True
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="all")
+    ap.add_argument("--shape", default="all")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--out", default="results/dryrun")
+    ap.add_argument("--attn-impl", default="xla_flash")
+    ap.add_argument("--remat-policy", default=None)
+    ap.add_argument("--tau", type=int, default=2)
+    ap.add_argument("--algorithm", default="cdp-fedexp")
+    ap.add_argument("--tag", default="")
+    args = ap.parse_args()
+
+    archs = list(ARCHS) if args.arch == "all" else [args.arch]
+    shapes = list(SHAPES) if args.shape == "all" else [args.shape]
+    fed = FederatedConfig(algorithm=args.algorithm, local_steps=args.tau)
+
+    failures = []
+    for arch in archs:
+        for shape in shapes:
+            if not eligible(arch, shape):
+                print(f"SKIP  {arch} x {shape} (full-attention arch; long_500k gate)")
+                continue
+            try:
+                r = run_one(arch, shape, multi_pod=args.multi_pod, out_dir=args.out,
+                            fed=fed, attn_impl=args.attn_impl, tag=args.tag,
+                            remat_policy=args.remat_policy)
+                rt = r["roofline"]
+                print(f"OK    {arch} x {shape} [{r['mesh']}] "
+                      f"compile={r['compile_s']}s flops={r['cost']['flops']:.3g} "
+                      f"coll={r['collective_total']:.3g}B "
+                      f"bottleneck={rt['bottleneck']}", flush=True)
+            except Exception as e:  # noqa: BLE001 - report-and-continue driver
+                failures.append((arch, shape, repr(e)))
+                print(f"FAIL  {arch} x {shape}: {e!r}", flush=True)
+                traceback.print_exc()
+    if failures:
+        print(f"\n{len(failures)} failures:")
+        for f in failures:
+            print(" ", f)
+        sys.exit(1)
+    print("\nall dry-runs passed")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,309 @@
+"""Structural cost analysis of post-SPMD HLO text — the dry-run "profiler".
+
+``compiled.cost_analysis()`` counts every while-loop body ONCE, which under-
+states scanned-layer models by ~num_layers x tau. This walker parses the
+scheduled HLO (``compiled.as_text()``), multiplies while bodies by their
+``known_trip_count`` (emitted by XLA in backend_config), recurses into
+fusions/calls, and accumulates:
+
+  - flops:  dot ops (2 * prod(result dims) * prod(contracted lhs dims)),
+            convolutions approximated, elementwise ignored (matmul-dominated
+            workloads; the elementwise contribution is covered by bytes),
+  - bytes:  operands + results of every top-level op (fusion internals are
+            excluded — the fusion boundary is the HBM traffic model),
+  - collective bytes per kind (result-shape convention; ring-factor
+    (n-1)/n and the 2x all-reduce factor are applied in the roofline layer
+    if desired — we report raw result bytes and document the convention).
+
+All shapes in post-SPMD HLO are PER-DEVICE, so every number this module
+returns is per-chip, matching the roofline denominators.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+
+__all__ = ["parse_hlo", "hlo_cost", "COLLECTIVE_KINDS"]
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1,
+    "f8e4m3fn": 1, "f8e5m2": 1, "f8e4m3b11fnuz": 1,
+    "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16,
+    "token": 0, "opaque": 0,
+}
+
+COLLECTIVE_KINDS = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                    "collective-permute")
+
+_SHAPE_RE = re.compile(r"\b([a-z0-9]+)\[([0-9,]*)\]")
+_TRIP_RE = re.compile(r'"known_trip_count":\{"n":"(\d+)"\}')
+_COMP_HDR = re.compile(r"^(ENTRY\s+)?%?([\w\.\-]+)\s*\(.*\)\s*->")
+_ATTR_COMP = re.compile(r"(?:calls|body|to_apply)=%([\w\.\-]+)")
+_COND_COMP = re.compile(r"condition=%([\w\.\-]+)")
+_BRANCH_COMP = re.compile(r"branch_computations=\{([^}]*)\}")
+_CONTRACT_RE = re.compile(r"lhs_contracting_dims=\{([0-9,]*)\}")
+_OPERAND_NAME = re.compile(r"%([\w\.\-]+)")
+
+# ops that are free (layout/bookkeeping) for the bytes model
+_FREE_OPS = {"parameter", "get-tuple-element", "tuple", "bitcast", "constant",
+             "after-all", "partition-id", "replica-id", "iota", "opt-barrier"}
+
+
+def _shape_dims(type_str: str) -> list[tuple[str, list[int]]]:
+    out = []
+    for dtype, dims in _SHAPE_RE.findall(type_str):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        out.append((dtype, [int(d) for d in dims.split(",")] if dims else []))
+    return out
+
+
+def _shape_bytes(type_str: str) -> int:
+    total = 0
+    for dtype, dims in _shape_dims(type_str):
+        n = 1
+        for d in dims:
+            n *= d
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+@dataclasses.dataclass
+class Op:
+    name: str
+    result_type: str
+    opcode: str
+    operands: list[str]
+    attrs: str
+    line: str
+
+
+@dataclasses.dataclass
+class Computation:
+    name: str
+    ops: list[Op]
+    symbols: dict[str, str]  # op name -> result type
+
+
+def _split_op_line(line: str) -> Op | None:
+    s = line.strip()
+    if s.startswith("ROOT "):
+        s = s[5:]
+    if not s.startswith("%"):
+        return None
+    eq = s.find(" = ")
+    if eq < 0:
+        return None
+    name = s[1:eq].strip()
+    rest = s[eq + 3:]
+    # result type: tuple "( ... )" (match parens) or token up to first space
+    if rest.startswith("("):
+        depth, i = 0, 0
+        for i, ch in enumerate(rest):
+            if ch == "(":
+                depth += 1
+            elif ch == ")":
+                depth -= 1
+                if depth == 0:
+                    break
+        result_type = rest[: i + 1]
+        rest = rest[i + 1:].strip()
+    else:
+        sp = rest.find(" ")
+        if sp < 0:
+            return None
+        result_type = rest[:sp]
+        rest = rest[sp + 1:].strip()
+    par = rest.find("(")
+    if par < 0:
+        return None
+    opcode = rest[:par]
+    # operand section: up to the matching close paren
+    depth, i = 0, par
+    for i in range(par, len(rest)):
+        if rest[i] == "(":
+            depth += 1
+        elif rest[i] == ")":
+            depth -= 1
+            if depth == 0:
+                break
+    operand_str = rest[par + 1: i]
+    attrs = rest[i + 1:]
+    operands = _OPERAND_NAME.findall(operand_str)
+    return Op(name=name, result_type=result_type, opcode=opcode,
+              operands=operands, attrs=attrs, line=line)
+
+
+def parse_hlo(text: str) -> tuple[dict[str, Computation], str | None]:
+    """Returns ({computation name: Computation}, entry computation name)."""
+    comps: dict[str, Computation] = {}
+    entry = None
+    cur: Computation | None = None
+    for line in text.splitlines():
+        if not line:
+            continue
+        if not line.startswith(" "):  # possible computation header
+            m = _COMP_HDR.match(line)
+            if m and line.rstrip().endswith("{"):
+                cur = Computation(name=m.group(2), ops=[], symbols={})
+                comps[cur.name] = cur
+                if m.group(1):
+                    entry = cur.name
+            elif line.startswith("}"):
+                cur = None
+            continue
+        if cur is None:
+            continue
+        op = _split_op_line(line)
+        if op is not None:
+            cur.ops.append(op)
+            cur.symbols[op.name] = op.result_type
+    return comps, entry
+
+
+def _dot_flops(op: Op, symbols: dict[str, str]) -> float:
+    result_elems = 1
+    for _, dims in _shape_dims(op.result_type):
+        for d in dims:
+            result_elems *= d
+    m = _CONTRACT_RE.search(op.attrs)
+    contract = 1
+    if m and op.operands:
+        lhs_type = symbols.get(op.operands[0], "")
+        shapes = _shape_dims(lhs_type)
+        if shapes:
+            _, lhs_dims = shapes[0]
+            for idx in (int(x) for x in m.group(1).split(",") if x):
+                if idx < len(lhs_dims):
+                    contract *= lhs_dims[idx]
+    return 2.0 * result_elems * contract
+
+
+def _conv_flops(op: Op, symbols: dict[str, str]) -> float:
+    # approx: 2 * result_elems * (rhs elems / out_channels); fine for the
+    # fedsim CNNs, no convs appear in the big-model dry-runs.
+    result_elems = 1
+    for _, dims in _shape_dims(op.result_type):
+        for d in dims:
+            result_elems *= d
+    rhs_elems = 1
+    if len(op.operands) > 1:
+        for _, dims in _shape_dims(symbols.get(op.operands[1], "")):
+            for d in dims:
+                rhs_elems *= d
+    out_ch = 1
+    shapes = _shape_dims(op.result_type)
+    if shapes and shapes[0][1]:
+        out_ch = shapes[0][1][-1]
+    return 2.0 * result_elems * max(1, rhs_elems // max(1, out_ch))
+
+
+@dataclasses.dataclass
+class Cost:
+    flops: float = 0.0
+    bytes: float = 0.0
+    coll: dict[str, float] = dataclasses.field(
+        default_factory=lambda: {k: 0.0 for k in COLLECTIVE_KINDS})
+    unknown_loops: int = 0
+
+    def add(self, other: "Cost", mult: float = 1.0):
+        self.flops += mult * other.flops
+        self.bytes += mult * other.bytes
+        for k in COLLECTIVE_KINDS:
+            self.coll[k] += mult * other.coll[k]
+        self.unknown_loops += other.unknown_loops
+
+    @property
+    def coll_total(self) -> float:
+        return sum(self.coll.values())
+
+
+def _comp_cost(comps: dict[str, Computation], name: str,
+               memo: dict[str, Cost], *, count_bytes: bool) -> Cost:
+    key = (name, count_bytes)
+    if key in memo:
+        return memo[key]
+    comp = comps[name]
+    total = Cost()
+    for op in comp.ops:
+        oc = op.opcode
+        base = oc[:-6] if oc.endswith("-start") else oc[:-5] if oc.endswith("-done") else oc
+
+        # --- control flow / nested computations ---
+        if oc == "while":
+            m = _TRIP_RE.search(op.attrs)
+            trip = int(m.group(1)) if m else 1
+            if not m:
+                total.unknown_loops += 1
+            bm = _ATTR_COMP.search(op.attrs)
+            cm = _COND_COMP.search(op.attrs)
+            if bm:
+                total.add(_comp_cost(comps, bm.group(1), memo, count_bytes=count_bytes), trip)
+            if cm:
+                total.add(_comp_cost(comps, cm.group(1), memo, count_bytes=count_bytes), trip)
+            continue
+        if oc == "conditional":
+            mb = _BRANCH_COMP.search(op.attrs)
+            if mb:
+                branches = _OPERAND_NAME.findall(mb.group(1))
+                for b in branches:  # upper bound: sum of branches / len
+                    total.add(_comp_cost(comps, b, memo, count_bytes=count_bytes),
+                              1.0 / max(1, len(branches)))
+            continue
+        if oc == "fusion":
+            cm = _ATTR_COMP.search(op.attrs)
+            if cm:
+                # flops + collectives from inside; bytes at the boundary only
+                total.add(_comp_cost(comps, cm.group(1), memo, count_bytes=False))
+            if count_bytes:
+                total.bytes += _shape_bytes(op.result_type)
+                for o in op.operands:
+                    total.bytes += _shape_bytes(comp.symbols.get(o, ""))
+            continue
+        if oc in ("call", "async-start"):
+            cm = _ATTR_COMP.search(op.attrs)
+            if cm:
+                total.add(_comp_cost(comps, cm.group(1), memo, count_bytes=count_bytes))
+            continue
+
+        # --- collectives ---
+        if base in COLLECTIVE_KINDS:
+            if oc.endswith("-start"):
+                continue  # counted at -done
+            total.coll[base] += _shape_bytes(op.result_type)
+            if count_bytes:
+                total.bytes += _shape_bytes(op.result_type)
+            continue
+
+        # --- compute ---
+        if oc == "dot":
+            total.flops += _dot_flops(op, comp.symbols)
+        elif oc == "convolution":
+            total.flops += _conv_flops(op, comp.symbols)
+
+        # --- bytes ---
+        if count_bytes and oc not in _FREE_OPS and not oc.endswith("-done"):
+            total.bytes += _shape_bytes(op.result_type)
+            for o in op.operands:
+                total.bytes += _shape_bytes(comp.symbols.get(o, ""))
+    memo[key] = total
+    return total
+
+
+def hlo_cost(text: str) -> dict:
+    """Walk the scheduled HLO module; returns per-device flops/bytes/collectives."""
+    comps, entry = parse_hlo(text)
+    if entry is None:
+        raise ValueError("no ENTRY computation found")
+    memo: dict = {}
+    c = _comp_cost(comps, entry, memo, count_bytes=True)
+    return {
+        "flops": c.flops,
+        "bytes": c.bytes,
+        "collective_bytes": dict(c.coll),
+        "collective_total": c.coll_total,
+        "unknown_loops": c.unknown_loops,
+        "num_computations": len(comps),
+    }

@@ -1,0 +1,23 @@
+"""Production mesh construction (single-pod 16x16, multi-pod 2x16x16).
+
+A function, not a module-level constant, so importing this module never
+touches jax device state (the dry-run sets XLA_FLAGS before any jax import;
+tests and benches must keep seeing 1 device).
+"""
+from __future__ import annotations
+
+import jax
+
+__all__ = ["make_production_mesh", "make_test_mesh"]
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16x16 = 256 chips per pod; 2 pods = 512 chips with a leading pod axis."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_test_mesh(data: int = 1, model: int = 1):
+    """Tiny mesh over however many (CPU) devices exist — for unit tests."""
+    return jax.make_mesh((data, model), ("data", "model"))

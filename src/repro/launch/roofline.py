@@ -1,0 +1,104 @@
+"""Roofline-term extraction from compiled dry-run artifacts.
+
+Three terms per (arch x shape x mesh), in seconds (see EXPERIMENTS.md):
+
+    compute    = HLO_FLOPs    / (chips x peak_FLOP/s)
+    memory     = HLO_bytes    / (chips x HBM_bw)
+    collective = coll_bytes   / (chips x link_bw)
+
+``compiled.cost_analysis()`` provides HLO_FLOPs / HLO_bytes; collective bytes
+are NOT in cost_analysis, so we parse the post-SPMD HLO text and sum the
+result-shape bytes of every all-gather / all-reduce / reduce-scatter /
+all-to-all / collective-permute (the ``-start`` variant counted, ``-done``
+skipped to avoid double counting).
+
+Hardware model: TPU v5e — 197 TFLOP/s bf16 per chip, 819 GB/s HBM,
+~50 GB/s/link ICI.
+
+Note on per-device vs global numbers: XLA reports cost_analysis for the
+*partitioned per-device module*, so FLOPs/bytes are per-chip and the terms
+divide by peak per chip (chips appears only via the partitioning itself).
+We verify this convention against MODEL_FLOPS = 6*N*D in the dry-run report
+(the ratio column would be off by exactly `chips` x if the convention
+flipped in a jax upgrade).
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+
+__all__ = ["HW", "Hardware", "collective_bytes", "roofline_terms", "model_flops"]
+
+
+@dataclasses.dataclass(frozen=True)
+class Hardware:
+    peak_flops: float = 197e12       # bf16 / chip
+    hbm_bw: float = 819e9            # bytes/s / chip
+    ici_bw: float = 50e9             # bytes/s / link
+
+
+HW = Hardware()
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16,
+}
+
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute")
+# result type(s) precede `op-name(`; `-done` ops forward the -start buffer.
+_OP_RE = re.compile(
+    r"=\s*([^=]*?)\s+(" + "|".join(_COLLECTIVES) + r")(?:-start)?\(")
+_SHAPE_RE = re.compile(r"\b([a-z0-9]+)\[([0-9,]*)\]")
+
+
+def _shape_bytes(type_str: str) -> int:
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(type_str):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> dict[str, int]:
+    """Sum result-shape bytes per collective kind over a post-SPMD HLO module."""
+    out = {k: 0 for k in _COLLECTIVES}
+    for line in hlo_text.splitlines():
+        if "-done(" in line:
+            continue
+        m = _OP_RE.search(line)
+        if not m:
+            continue
+        out[m.group(2)] += _shape_bytes(m.group(1))
+    return out
+
+
+def roofline_terms(flops: float, bytes_accessed: float, coll_bytes: float,
+                   hw: Hardware = HW) -> dict[str, float]:
+    """Per-chip seconds for each roofline term + the dominant one."""
+    terms = {
+        "compute_s": flops / hw.peak_flops,
+        "memory_s": bytes_accessed / hw.hbm_bw,
+        "collective_s": coll_bytes / hw.ici_bw,
+    }
+    terms["bottleneck"] = max(
+        ("compute_s", "memory_s", "collective_s"), key=lambda k: terms[k])
+    return terms
+
+
+def model_flops(num_params: int, active_params: int, tokens: int, kind: str) -> float:
+    """MODEL_FLOPS = 6*N*D (dense) / 6*N_active*D (MoE); D = tokens in the step.
+
+    For decode, tokens = batch (one new token per request). Train counts the
+    backward (the 6x already includes fwd+bwd); serve kinds use 2*N*D.
+    """
+    n = active_params
+    mult = 6.0 if kind == "train" else 2.0
+    return mult * n * tokens

@@ -1,0 +1,115 @@
+"""Physical sharding rules: logical axis names -> mesh axes, per arch x mode.
+
+See DESIGN.md §4. Two regimes:
+
+- **standard** (fits replicated-per-client): clients enumerate the data axis
+  (x pod axis multi-pod); tensor parallelism over the model axis.
+- **giant** (>= ~20B params — command-r-plus-104b, llama4-maverick-400b,
+  chameleon-34b): a client's parameters diverge during local steps, so they
+  cannot be FSDP-sharded *across clients*; instead ONE client spans the whole
+  (data, model) grid — batch parallel over data, tensor parallel over model,
+  param storage additionally sharded over data on the embed dim (FSDP-style;
+  XLA all-gathers per layer inside the scan) — and the cohort axis is the pod
+  axis (multi-pod) or handled by sequential virtual clients (single-pod).
+
+``safe_pspec`` drops any mesh axis that does not divide the concrete dim
+(e.g. vocab 49155 % 16 != 0 -> replicated embedding), so every (arch x shape)
+pair lowers without manual case work; the roofline table shows what it costs.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+from repro.models.sharding import logical_to_pspec
+
+__all__ = ["GIANT_PARAM_THRESHOLD", "count_params", "is_giant", "make_rules",
+           "safe_pspec", "tree_shardings"]
+
+GIANT_PARAM_THRESHOLD = 20e9
+
+
+def count_params(model, key=None) -> int:
+    """Exact parameter count via eval_shape (no allocation)."""
+    key = key if key is not None else jax.random.PRNGKey(0)
+    shapes = jax.eval_shape(model.init, key)
+    return int(sum(np.prod(l.shape) for l in jax.tree_util.tree_leaves(shapes)))
+
+
+def is_giant(cfg: ModelConfig, num_params: int) -> bool:
+    return num_params >= GIANT_PARAM_THRESHOLD
+
+
+def make_rules(cfg: ModelConfig, mesh: Mesh, *, mode: str, num_params: int) -> dict[str, Any]:
+    """mode: 'train' | 'serve'."""
+    has_pod = "pod" in mesh.axis_names
+    giant = is_giant(cfg, num_params)
+    from repro.models.sharding import AXIS_SIZES_KEY
+    rules: dict[str, Any] = {
+        AXIS_SIZES_KEY: dict(zip(mesh.axis_names, mesh.devices.shape)),
+        "heads": "model",
+        "ff": "model",
+        "vocab": "model",
+        "experts": "model",
+        "embed": None,
+        "layers": None,
+        "seq": None,
+    }
+    if mode == "train":
+        if giant:
+            rules["clients"] = "pod" if has_pod else None
+            rules["batch"] = "data"
+            rules["embed"] = "data"           # FSDP-style param storage
+            # group-local MoE dispatch measured a 6x collective REGRESSION
+            # for giant-arch training (expert-combine AR over the model
+            # axis, x remat/backward) with no memory benefit — serve keeps
+            # it (it is what makes prefill/decode fit HBM). §Perf HC2.
+            rules["moe_group_dispatch"] = False
+        else:
+            rules["clients"] = ("pod", "data") if has_pod else "data"
+            rules["batch"] = None
+    else:
+        rules["clients"] = None
+        rules["batch"] = ("pod", "data") if has_pod else "data"
+        # sequence-sharded KV cache: kv heads rarely divide the model axis
+        # (GQA kv=8 vs 16) which would replicate the cache + all-gather it
+        # every step; the 32k/500k cache seq dim always divides. Scores are
+        # then psum'ed over the model axis (tiny next to the cache reads).
+        rules["kv_seq"] = "model"
+        if giant:
+            rules["embed"] = "data"
+    return rules
+
+
+def _axis_sizes(mesh: Mesh) -> dict[str, int]:
+    return dict(zip(mesh.axis_names, mesh.devices.shape))
+
+
+def safe_pspec(shape: tuple[int, ...], logical: tuple, rules: dict, mesh: Mesh) -> P:
+    """logical names -> PartitionSpec, dropping axes that don't divide dims."""
+    sizes = _axis_sizes(mesh)
+    raw = logical_to_pspec(tuple(logical), rules)
+    out = []
+    for dim, ax in zip(shape, tuple(raw) + (None,) * (len(shape) - len(raw))):
+        if ax is None:
+            out.append(None)
+            continue
+        axes = (ax,) if isinstance(ax, str) else tuple(ax)
+        total = math.prod(sizes[a] for a in axes)
+        out.append(ax if dim % total == 0 else None)
+    return P(*out)
+
+
+def tree_shardings(mesh: Mesh, shapes_tree, logical_tree, rules: dict):
+    """Build a NamedSharding pytree from shapes + logical-axes pytrees."""
+    # leaves of shapes_tree are ShapeDtypeStructs; the matching nodes of
+    # logical_tree (tuples of axis names) are treated as leaves by tree_map.
+    return jax.tree_util.tree_map(
+        lambda s, l: NamedSharding(mesh, safe_pspec(s.shape, l, rules, mesh)),
+        shapes_tree, logical_tree)

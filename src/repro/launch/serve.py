@@ -1,0 +1,76 @@
+"""Serving steps for the decode/prefill input shapes.
+
+``decode_32k`` / ``long_500k`` lower ``serve_step`` — ONE new token against a
+KV/SSM cache of ``seq_len`` — and ``prefill_32k`` lowers the prefill step.
+Batched requests share a uniform position counter (the continuous-batching
+generalization would carry per-request positions; uniform pos is the shape-
+and collective-identical case and keeps the dry-run honest).
+
+In a DP-FL deployment these serve the *global* model, so there is no client
+axis: batch shards over (pod, data) and tensor parallelism over model.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["ServeEngine"]
+
+
+@dataclasses.dataclass
+class ServeEngine:
+    model: Any                 # DecoderLM | EncDecLM
+    is_encdec: bool = False
+
+    def make_decode_step(self):
+        model = self.model
+
+        if self.is_encdec:
+            def decode_step(params, token, pos, caches, enc_out):
+                logits, caches = model.decode_step(params, token, pos, enc_out, caches)
+                next_tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+                return next_tok, logits, caches
+        else:
+            def decode_step(params, token, pos, caches):
+                logits, caches = model.decode_step(params, token, pos, caches)
+                next_tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+                return next_tok, logits, caches
+
+        return decode_step
+
+    def make_prefill_step(self):
+        model = self.model
+
+        if self.is_encdec:
+            def prefill_step(params, frames, tokens, caches):
+                enc_out = model.encode(params, frames)
+                logits, caches = model.decode(params, tokens, enc_out, caches=caches)
+                next_tok = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
+                return next_tok, caches, enc_out
+        else:
+            def prefill_step(params, tokens, caches):
+                logits, caches = model.prefill(params, tokens, caches)
+                next_tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+                return next_tok, caches
+
+        return prefill_step
+
+    def generate(self, params, prompt_tokens, max_new: int, cache_len: int, dtype=None):
+        """Greedy generation loop (examples / integration tests; CPU-sized)."""
+        model = self.model
+        b, s = prompt_tokens.shape
+        caches = model.init_cache(b, cache_len, dtype=dtype)
+        logits, caches = model.prefill(params, prompt_tokens, caches)
+        tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        decode = jax.jit(self.make_decode_step())
+
+        out = [tok]
+        pos = jnp.int32(s)
+        for _ in range(max_new - 1):
+            tok, _, caches = decode(params, tok, pos, caches)
+            out.append(tok)
+            pos = pos + 1
+        return jnp.stack(out, axis=1)  # (B, max_new)

@@ -1,0 +1,145 @@
+"""ShapeDtypeStruct input specs + sharding specs for every (arch x shape).
+
+The dry-run lowers against these stand-ins (weak-type-correct, shardable, no
+device allocation). For the stubbed frontends ([audio]/[vlm]) the specs carry
+precomputed frame embeddings / VQ token ids, per the assignment carve-out.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import FederatedConfig, ModelConfig, ShapeConfig
+from repro.launch.rules import safe_pspec
+
+__all__ = ["cohort_size", "train_input_specs", "decode_input_specs",
+           "prefill_input_specs", "cache_logical", "tree_input_shardings",
+           "WHISPER_DECODER_LEN", "WHISPER_ENC_FRAMES"]
+
+WHISPER_DECODER_LEN = 256    # decoder tokens per utterance in train/prefill
+WHISPER_ENC_FRAMES = 1500    # whisper's fixed 30 s encoder length (decode mode)
+
+
+def cohort_size(mesh: Mesh, rules: dict) -> int:
+    ax = rules.get("clients")
+    if ax is None:
+        return 1
+    axes = (ax,) if isinstance(ax, str) else tuple(ax)
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    return math.prod(sizes[a] for a in axes)
+
+
+# ---------------------------------------------------------------------------
+# logical axes for pytrees whose structure we don't enumerate by hand
+# ---------------------------------------------------------------------------
+
+def cache_logical(cache_shapes) -> Any:
+    """Logical axes for a KV/SSM cache pytree, keyed on leaf names/ranks."""
+
+    def leaf_logical(path, leaf):
+        name = str(path[-1].key) if hasattr(path[-1], "key") else ""
+        nd = len(leaf.shape)
+        # "kv_seq" (not "seq"): the KV cache shards its sequence dim over the
+        # model axis in serve mode (sequence-sharded cache). KV heads rarely
+        # divide the model axis (GQA kv=8 vs model=16) so head sharding would
+        # replicate the cache; the 32k/500k seq dim always divides.
+        if name in ("k", "v"):
+            return ("layers", "batch", "kv_seq", "heads", None)[:nd] if nd == 5 \
+                else ("batch", "kv_seq", "heads", None)[:nd]
+        if name == "slot_pos":
+            return ("layers", "kv_seq")[:nd] if nd == 2 else ("kv_seq",)
+        if name == "conv":
+            return ("layers", "batch", None, "ff")[:nd] if nd == 4 else ("batch", None, "ff")
+        if name == "state":
+            return ("layers", "batch", "ff", None, None)[:nd] if nd == 5 \
+                else ("batch", "ff", None, None)
+        return (None,) * nd
+
+    return jax.tree_util.tree_map_with_path(leaf_logical, cache_shapes)
+
+
+def tree_input_shardings(mesh: Mesh, shapes, logical, rules):
+    return jax.tree_util.tree_map(
+        lambda s, l: NamedSharding(mesh, safe_pspec(s.shape, l, rules, mesh)),
+        shapes, logical)
+
+
+# ---------------------------------------------------------------------------
+# per-mode specs
+# ---------------------------------------------------------------------------
+
+def train_input_specs(cfg: ModelConfig, shape: ShapeConfig, fed: FederatedConfig,
+                      mesh: Mesh, rules: dict):
+    """Returns (shapes dict, logical dict). Batch layout: (K, tau, b, S)."""
+    k = cohort_size(mesh, rules)
+    assert shape.global_batch % k == 0, (shape.global_batch, k)
+    b = shape.global_batch // k
+    tau = fed.local_steps
+    s = shape.seq_len
+    tok = jax.ShapeDtypeStruct((k, tau, b, s), jnp.int32)
+    logical_tok = ("clients", None, "batch", None)
+    shapes = {"tokens": tok, "labels": tok}
+    logical = {"tokens": logical_tok, "labels": logical_tok}
+    if cfg.arch_type == "audio":
+        # stub frontend: precomputed frame embeddings for the encoder; the
+        # decoder consumes WHISPER_DECODER_LEN text tokens per utterance.
+        shapes["frames"] = jax.ShapeDtypeStruct((k, tau, b, s, cfg.d_model), jnp.bfloat16)
+        logical["frames"] = ("clients", None, "batch", "seq", None)
+        dec = jax.ShapeDtypeStruct((k, tau, b, WHISPER_DECODER_LEN), jnp.int32)
+        shapes["tokens"] = dec
+        shapes["labels"] = dec
+    return shapes, logical
+
+
+def decode_input_specs(cfg: ModelConfig, shape: ShapeConfig, mesh: Mesh,
+                       rules: dict, model):
+    """ONE new token against a cache of shape.seq_len (serve_step)."""
+    b, s = shape.global_batch, shape.seq_len
+    caches = jax.eval_shape(lambda: model.init_cache(b, s, dtype=jnp.bfloat16))
+    shapes = {
+        "token": jax.ShapeDtypeStruct((b,), jnp.int32),
+        "pos": jax.ShapeDtypeStruct((), jnp.int32),
+        "caches": caches,
+    }
+    logical = {
+        "token": ("batch",),
+        "pos": (),
+        "caches": cache_logical(caches),
+    }
+    if cfg.arch_type == "audio":
+        shapes["enc_out"] = jax.ShapeDtypeStruct((b, WHISPER_ENC_FRAMES, cfg.d_model), jnp.bfloat16)
+        logical["enc_out"] = ("batch", "seq", None)
+    return shapes, logical
+
+
+def prefill_input_specs(cfg: ModelConfig, shape: ShapeConfig, mesh: Mesh,
+                        rules: dict, model):
+    b, s = shape.global_batch, shape.seq_len
+    if cfg.arch_type == "audio":
+        caches = jax.eval_shape(lambda: model.init_cache(b, WHISPER_DECODER_LEN, dtype=jnp.bfloat16))
+        shapes = {
+            "frames": jax.ShapeDtypeStruct((b, s, cfg.d_model), jnp.bfloat16),
+            "tokens": jax.ShapeDtypeStruct((b, WHISPER_DECODER_LEN), jnp.int32),
+            "caches": caches,
+        }
+        logical = {
+            "frames": ("batch", "seq", None),
+            "tokens": ("batch", None),
+            "caches": cache_logical(caches),
+        }
+        return shapes, logical
+    caches = jax.eval_shape(lambda: model.init_cache(b, s, dtype=jnp.bfloat16))
+    shapes = {
+        "tokens": jax.ShapeDtypeStruct((b, s), jnp.int32),
+        "caches": caches,
+    }
+    logical = {
+        "tokens": ("batch", None),
+        "caches": cache_logical(caches),
+    }
+    return shapes, logical

@@ -1,0 +1,149 @@
+"""Datacenter federated train step: DP-FedEXP over large models on a mesh.
+
+One jitted ``train_step`` executes a full federated round (Algorithms 1/2 of
+the paper) for a cohort of K clients laid out on the client mesh axes:
+
+  1. vmapped local training — each client runs tau local SGD steps on its own
+     token microbatches (zero cross-client communication by construction;
+     tensor-parallel collectives run *inside* each client),
+  2. per-client global-norm clipping of the parameter-update pytrees,
+  3. (LDP) per-client Gaussian randomization / (CDP) server noise on the mean,
+  4. the FedEXP statistics — mean ||c_i||^2, ||cbar||^2 — which GSPMD lowers
+     to scalar all-reduces over the client axes (the paper's O(1)-overhead
+     claim, checked structurally in EXPERIMENTS.md §Roofline),
+  5. the adaptive global step size (Eqs. 6/8) and the model update.
+
+Supports sequential "virtual clients" per mesh slot (scan) to reach
+realistic cohort sizes M >> K without extra memory.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import FederatedConfig, ModelConfig
+from repro.core import stepsize
+
+__all__ = ["FederatedTrainer"]
+
+
+def _tree_sq_norm(tree, axes_are_client: bool = False):
+    """Sum of squares over all dims except (optionally) the leading client dim."""
+    leaves = jax.tree_util.tree_leaves(tree)
+    if axes_are_client:
+        return sum(jnp.sum(jnp.square(l.astype(jnp.float32)),
+                           axis=tuple(range(1, l.ndim))) for l in leaves)
+    return sum(jnp.sum(jnp.square(l.astype(jnp.float32))) for l in leaves)
+
+
+def _tree_noise(key, tree, std):
+    leaves, treedef = jax.tree_util.tree_flatten(tree)
+    keys = jax.random.split(key, len(leaves))
+    noise = [std * jax.random.normal(k, l.shape, jnp.float32).astype(l.dtype)
+             for k, l in zip(keys, leaves)]
+    return jax.tree_util.tree_unflatten(treedef, noise)
+
+
+@dataclasses.dataclass
+class FederatedTrainer:
+    model: Any                      # DecoderLM | EncDecLM
+    fed: FederatedConfig
+    num_params: int                 # d, for the hyperparameter-free sigma_xi
+
+    # ------------------------------------------------------------------
+
+    def _local_loss(self, params, step_batch):
+        if "frames" in step_batch:
+            return self.model.loss(params, step_batch["frames"],
+                                   step_batch["tokens"], step_batch["labels"])
+        return self.model.loss(params, step_batch["tokens"], step_batch["labels"])
+
+    def _local_train(self, params, client_batch):
+        """tau local SGD steps (Algorithm 3). client_batch leaves: (tau, b, ...)."""
+        eta_l = self.fed.local_lr
+
+        def sgd(p, step_batch):
+            loss, g = jax.value_and_grad(self._local_loss)(p, step_batch)
+            p = jax.tree_util.tree_map(lambda a, b: a - eta_l * b.astype(a.dtype), p, g)
+            return p, loss
+
+        p_tau, losses = jax.lax.scan(sgd, params, client_batch)
+        delta = jax.tree_util.tree_map(lambda a, b: a - b, p_tau, params)
+        return delta, jnp.mean(losses)
+
+    # ------------------------------------------------------------------
+
+    def make_train_step(self, cohort_k: int):
+        fed = self.fed
+        alg = fed.algorithm
+        c = fed.clip_norm
+        sigma = fed.noise_sigma
+        m_total = cohort_k * fed.virtual_clients
+        d = self.num_params
+        sigma_xi = d * sigma**2 / m_total
+
+        def train_step(params, batch, key):
+            # batch leaves: (K, tau, b, ...) — vmap over the client axis.
+            deltas, losses = jax.vmap(self._local_train, in_axes=(None, 0))(params, batch)
+
+            # --- clip (per-client global L2 over the update pytree) ---
+            sq = _tree_sq_norm(deltas, axes_are_client=True)          # (K,)
+            norms = jnp.sqrt(jnp.maximum(sq, 1e-24))
+            scale = jnp.minimum(1.0, c / norms)                       # (K,)
+
+            def bcast(s, leaf):
+                return s.reshape((-1,) + (1,) * (leaf.ndim - 1)).astype(jnp.float32)
+
+            clipped = jax.tree_util.tree_map(
+                lambda l: (l.astype(jnp.float32) * bcast(scale, l)).astype(l.dtype), deltas)
+            clipped_sq = jnp.square(jnp.minimum(norms, c))            # (K,)
+            mean_sq_clipped = jnp.mean(clipped_sq)
+
+            k_noise, k_xi = jax.random.split(key)
+
+            if alg in ("ldp-fedexp-gauss", "dp-fedavg-ldp-gauss"):
+                noise = _tree_noise(k_noise, clipped, sigma)          # per-client (K, ...)
+                released = jax.tree_util.tree_map(jnp.add, clipped, noise)
+                mean_sq = jnp.mean(_tree_sq_norm(released, axes_are_client=True))
+                cbar = jax.tree_util.tree_map(lambda l: jnp.mean(l, axis=0), released)
+                agg_sq = _tree_sq_norm(cbar)
+                if alg == "ldp-fedexp-gauss":
+                    eta = stepsize.ldp_gaussian(mean_sq, agg_sq, d, sigma)
+                else:
+                    eta = jnp.float32(1.0)
+            elif alg in ("cdp-fedexp", "dp-fedavg-cdp"):
+                cbar = jax.tree_util.tree_map(lambda l: jnp.mean(l, axis=0), clipped)
+                server_std = sigma / math.sqrt(m_total)
+                noise = _tree_noise(k_noise, cbar, server_std)
+                cbar = jax.tree_util.tree_map(jnp.add, cbar, noise)
+                agg_sq = _tree_sq_norm(cbar)
+                if alg == "cdp-fedexp":
+                    xi = sigma_xi * jax.random.normal(k_xi, ())
+                    eta = stepsize.cdp(mean_sq_clipped, xi, agg_sq)
+                else:
+                    eta = jnp.float32(1.0)
+            elif alg in ("fedexp", "fedavg"):
+                cbar = jax.tree_util.tree_map(lambda l: jnp.mean(l, axis=0), clipped)
+                agg_sq = _tree_sq_norm(cbar)
+                eta = stepsize.fedexp(mean_sq_clipped, agg_sq) if alg == "fedexp" \
+                    else jnp.float32(1.0)
+            else:
+                raise ValueError(f"unknown datacenter algorithm {alg!r}")
+
+            new_params = jax.tree_util.tree_map(
+                lambda p, u: (p.astype(jnp.float32) + eta * u.astype(jnp.float32)).astype(p.dtype),
+                params, cbar)
+            metrics = {
+                "loss": jnp.mean(losses),
+                "eta_g": eta,
+                "mean_update_norm": jnp.mean(norms),
+                "agg_sq": agg_sq,
+            }
+            return new_params, metrics
+
+        return train_step

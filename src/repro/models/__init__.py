@@ -1,0 +1,16 @@
+"""Model zoo: paper-scale CNNs/linear + the datacenter transformer stack."""
+
+from repro.models.cnn import CNNModel, accuracy_fn, make_cnn, masked_xent_loss
+from repro.models.encdec import EncDecLM
+from repro.models.transformer import DecoderLM
+
+
+def build_model(cfg, **kwargs):
+    """Factory: ModelConfig -> DecoderLM or EncDecLM."""
+    if cfg.arch_type == "audio":
+        return EncDecLM(cfg, **kwargs)
+    return DecoderLM(cfg, **kwargs)
+
+
+__all__ = ["CNNModel", "make_cnn", "masked_xent_loss", "accuracy_fn",
+           "DecoderLM", "EncDecLM", "build_model"]

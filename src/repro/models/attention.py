@@ -1,0 +1,304 @@
+"""Attention layer: GQA/MQA/MHA, causal & sliding-window, KV cache, qk-norm.
+
+Three execution paths:
+  - ``xla_flash``: blockwise online-softmax attention in pure jnp (lax.scan
+    over KV blocks) — the default; never materializes the S x S matrix, so
+    prefill_32k lowers with sane memory. Masked blocks are still computed
+    (baseline; see EXPERIMENTS.md §Perf for the banded variant).
+  - ``dense``: plain einsum (tiny smoke shapes and the oracle path).
+  - ``pallas``: repro.kernels.flash_attention (TPU target kernel).
+
+Decode path: single-query attention against a KV cache; sliding-window layers
+keep a ring-buffer cache of ``window`` slots (the long_500k enabler for
+h2o-danube3).
+"""
+from __future__ import annotations
+
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.common import Param, rms_norm, rope, softcap
+from repro.models.sharding import shard
+
+__all__ = ["attention_defs", "attention_apply", "init_kv_cache", "decode_attention",
+           "blockwise_attention", "dense_attention"]
+
+_NEG_INF = -1e30
+
+
+# ---------------------------------------------------------------------------
+# Parameter definitions
+# ---------------------------------------------------------------------------
+
+def attention_defs(cfg: ModelConfig, prefix: str = "attn_") -> dict[str, Param]:
+    d, dh = cfg.d_model, cfg.resolved_head_dim
+    hq, hkv = cfg.num_heads, cfg.num_kv_heads
+    defs = {
+        prefix + "wq": Param((d, hq * dh), ("embed", "heads"), fan_in=d),
+        prefix + "wk": Param((d, hkv * dh), ("embed", "heads"), fan_in=d),
+        prefix + "wv": Param((d, hkv * dh), ("embed", "heads"), fan_in=d),
+        prefix + "wo": Param((hq * dh, d), ("heads", "embed"), fan_in=hq * dh),
+    }
+    if cfg.use_bias:
+        defs[prefix + "wq_b"] = Param((hq * dh,), ("heads",))
+        defs[prefix + "wv_b"] = Param((hkv * dh,), ("heads",))
+        defs[prefix + "wo_b"] = Param((d,), ("embed",))
+    if cfg.qk_norm:
+        defs[prefix + "qnorm"] = Param((dh,), (None,))
+        defs[prefix + "knorm"] = Param((dh,), (None,))
+    return defs
+
+
+# ---------------------------------------------------------------------------
+# Core attention math
+# ---------------------------------------------------------------------------
+
+def dense_attention(q, k, v, *, causal, window, q_offset=0, softcap_val=None):
+    """q: (B, Sq, Hq, dh); k/v: (B, Skv, Hkv, dh). Dense reference path."""
+    b, sq, hq, dh = q.shape
+    skv, hkv = k.shape[1], k.shape[2]
+    group = hq // hkv
+    qg = q.reshape(b, sq, hkv, group, dh)
+    s = jnp.einsum("bqhgd,bkhd->bhgqk", qg.astype(jnp.float32), k.astype(jnp.float32))
+    s = softcap(s * (1.0 / math.sqrt(dh)), softcap_val)
+    q_idx = q_offset + jnp.arange(sq)[:, None]
+    k_idx = jnp.arange(skv)[None, :]
+    mask = jnp.ones((sq, skv), bool)
+    if causal:
+        mask &= k_idx <= q_idx
+    if window is not None:
+        mask &= k_idx > q_idx - window
+    s = jnp.where(mask[None, None, None], s, _NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhgqk,bkhd->bqhgd", p, v.astype(jnp.float32))
+    return o.reshape(b, sq, hq, dh).astype(q.dtype)
+
+
+def blockwise_attention(q, k, v, *, causal, window, block_k: int = 512, softcap_val=None):
+    """Online-softmax attention scanning KV blocks; same signature as dense."""
+    b, sq, hq, dh = q.shape
+    skv, hkv = k.shape[1], k.shape[2]
+    group = hq // hkv
+    bk = min(block_k, skv)
+    pad = (-skv) % bk
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    nk = k.shape[1] // bk
+    scale = 1.0 / math.sqrt(dh)
+
+    qg = (q.astype(jnp.float32) * scale).reshape(b, sq, hkv, group, dh)
+    kb = k.reshape(b, nk, bk, hkv, dh).astype(jnp.float32)
+    vb = v.reshape(b, nk, bk, hkv, dh).astype(jnp.float32)
+    q_idx = jnp.arange(sq)[:, None]
+
+    def step(carry, xs):
+        m_prev, l_prev, acc = carry
+        kblk, vblk, ik = xs
+        s = jnp.einsum("bqhgd,bkhd->bhgqk", qg, kblk)
+        s = softcap(s, softcap_val)
+        k_idx = ik * bk + jnp.arange(bk)[None, :]
+        mask = k_idx < skv
+        if causal:
+            mask &= k_idx <= q_idx
+        if window is not None:
+            mask &= k_idx > q_idx - window
+        s = jnp.where(mask[None, None, None], s, _NEG_INF)
+        m_cur = jnp.maximum(m_prev, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_cur[..., None])
+        alpha = jnp.exp(m_prev - m_cur)
+        l_cur = alpha * l_prev + jnp.sum(p, axis=-1)
+        acc = alpha[..., None] * acc + jnp.einsum("bhgqk,bkhd->bhgqd", p, vblk)
+        return (m_cur, l_cur, acc), None
+
+    m0 = jnp.full((b, hkv, group, sq), _NEG_INF, jnp.float32)
+    l0 = jnp.zeros((b, hkv, group, sq), jnp.float32)
+    acc0 = jnp.zeros((b, hkv, group, sq, dh), jnp.float32)
+    (m, l, acc), _ = jax.lax.scan(
+        step, (m0, l0, acc0),
+        (jnp.moveaxis(kb, 1, 0), jnp.moveaxis(vb, 1, 0), jnp.arange(nk)))
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    return jnp.moveaxis(out, 3, 1).reshape(b, sq, hq, dh).astype(q.dtype)
+
+
+def chunked_attention(q, k, v, *, causal, window, block_q: int = 512, softcap_val=None):
+    """Q-chunked attention: dense scores per chunk, no carried accumulator.
+
+    The online-softmax scan (``blockwise_attention``) carries a full
+    (sq x dh) f32 accumulator through every KV step — per-layer HBM traffic
+    of ~n_kv_blocks x acc bytes, which dominates the §Roofline memory term
+    for training shapes. Materializing one (block_q x skv) score block per
+    q-chunk costs a little peak memory and ~2x masked flops but removes the
+    carried-accumulator traffic entirely (§Perf hillclimb 3, iteration 4).
+    On TPU the Pallas kernel (repro.kernels.flash_attention) is the real
+    answer — the accumulator lives in VMEM; this is the XLA-level analogue.
+    """
+    b, sq, hq, dh = q.shape
+    skv, hkv = k.shape[1], k.shape[2]
+    group = hq // hkv
+    bq = min(block_q, sq)
+    pad = (-sq) % bq
+    if pad:
+        q = jnp.pad(q, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    nq = q.shape[1] // bq
+    scale = 1.0 / math.sqrt(dh)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    k_idx = jnp.arange(skv)[None, :]
+
+    def one_chunk(_, i):
+        qi = jax.lax.dynamic_slice_in_dim(q, i * bq, bq, axis=1)
+        qg = (qi.astype(jnp.float32) * scale).reshape(b, bq, hkv, group, dh)
+        s = jnp.einsum("bqhgd,bkhd->bhgqk", qg, kf)
+        s = softcap(s, softcap_val)
+        q_idx = i * bq + jnp.arange(bq)[:, None]
+        mask = jnp.ones((bq, skv), bool)
+        if causal:
+            mask &= k_idx <= q_idx
+        if window is not None:
+            mask &= k_idx > q_idx - window
+        s = jnp.where(mask[None, None, None], s, _NEG_INF)
+        p = jax.nn.softmax(s, axis=-1)
+        o = jnp.einsum("bhgqk,bkhd->bqhgd", p, vf)
+        return None, o.reshape(b, bq, hq, dh).astype(q.dtype)
+
+    _, chunks = jax.lax.scan(one_chunk, None, jnp.arange(nq))
+    out = jnp.moveaxis(chunks, 0, 1).reshape(b, nq * bq, hq, dh)
+    return out[:, :sq]
+
+
+def decode_attention(q, k_cache, v_cache, cache_positions, pos, *, window, softcap_val=None):
+    """Single-token attention against a cache.
+
+    q: (B, 1, Hq, dh); caches: (B, Smax, Hkv, dh); cache_positions: (Smax,)
+    absolute positions stored in each slot (-1 = empty); pos: current step.
+    """
+    b, _, hq, dh = q.shape
+    hkv = k_cache.shape[2]
+    group = hq // hkv
+    qg = q.reshape(b, hkv, group, dh).astype(jnp.float32) / math.sqrt(dh)
+    s = jnp.einsum("bhgd,bkhd->bhgk", qg, k_cache.astype(jnp.float32))
+    s = softcap(s, softcap_val)
+    valid = (cache_positions >= 0) & (cache_positions <= pos)
+    if window is not None:
+        valid &= cache_positions > pos - window
+    s = jnp.where(valid[None, None, None], s, _NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhgk,bkhd->bhgd", p, v_cache.astype(jnp.float32))
+    return o.reshape(b, 1, hq, dh).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Layer apply (projections + cache management)
+# ---------------------------------------------------------------------------
+
+def init_kv_cache(cfg: ModelConfig, batch: int, seq_len: int, dtype=jnp.bfloat16):
+    """Cache for ONE attention layer. Window layers get a ring of `window` slots."""
+    smax = min(seq_len, cfg.sliding_window) if cfg.sliding_window else seq_len
+    dh, hkv = cfg.resolved_head_dim, cfg.num_kv_heads
+    return {
+        "k": jnp.zeros((batch, smax, hkv, dh), dtype),
+        "v": jnp.zeros((batch, smax, hkv, dh), dtype),
+        "slot_pos": jnp.full((smax,), -1, jnp.int32),
+    }
+
+
+def attention_apply(
+    params: dict,
+    x: jax.Array,
+    cfg: ModelConfig,
+    *,
+    positions: jax.Array,
+    causal: bool = True,
+    cache: dict | None = None,
+    decode_pos: jax.Array | None = None,
+    cross_kv: tuple[jax.Array, jax.Array] | None = None,
+    impl: str = "xla_flash",
+    prefix: str = "attn_",
+) -> tuple[jax.Array, dict | None]:
+    """Returns (output, updated_cache)."""
+    d, dh = cfg.d_model, cfg.resolved_head_dim
+    hq, hkv = cfg.num_heads, cfg.num_kv_heads
+    b, s, _ = x.shape
+    window = cfg.sliding_window
+
+    # constrain the FLATTENED (h*dh) projections: the flat dim divides the
+    # model axis even when the head count does not (MQA/GQA, e.g. 8 q-heads
+    # on a 16-way axis), so XLA keeps a factorized sharding through the
+    # 4-D reshape instead of remat-copying (§Perf hillclimb 3).
+    q = shard(x @ params[prefix + "wq"], "batch", "seq", "heads").reshape(b, s, hq, dh)
+    if prefix + "wq_b" in params:
+        q = q + params[prefix + "wq_b"].reshape(hq, dh)
+    if cross_kv is None:
+        k = shard(x @ params[prefix + "wk"], "batch", "seq", "heads").reshape(b, s, hkv, dh)
+        v = shard(x @ params[prefix + "wv"], "batch", "seq", "heads").reshape(b, s, hkv, dh)
+        if prefix + "wv_b" in params:
+            v = v + params[prefix + "wv_b"].reshape(hkv, dh)
+    else:
+        k, v = cross_kv
+
+    if cfg.qk_norm:
+        q = rms_norm(q, params[prefix + "qnorm"], cfg.norm_eps)
+        if cross_kv is None:
+            k = rms_norm(k, params[prefix + "knorm"], cfg.norm_eps)
+    if cfg.use_rope and cross_kv is None:
+        q = rope(q, positions, cfg.rope_theta)
+        k = rope(k, positions, cfg.rope_theta)
+
+    q = shard(q, "batch", "seq", "heads", None)
+
+    if cache is not None and cross_kv is None:
+        smax = cache["k"].shape[1]
+        if s == 1:  # decode: write the new KV into its (ring) slot
+            slot = (decode_pos % smax).astype(jnp.int32)
+            cache = dict(
+                k=jax.lax.dynamic_update_slice(cache["k"], k.astype(cache["k"].dtype), (0, slot, 0, 0)),
+                v=jax.lax.dynamic_update_slice(cache["v"], v.astype(cache["v"].dtype), (0, slot, 0, 0)),
+                slot_pos=jax.lax.dynamic_update_slice(cache["slot_pos"], decode_pos[None].astype(jnp.int32), (slot,)),
+            )
+            out = decode_attention(q, cache["k"], cache["v"], cache["slot_pos"],
+                                   decode_pos, window=window, softcap_val=cfg.attn_logit_softcap)
+        else:  # prefill into cache (window layers keep only the last smax KVs,
+            # written at their ring slots pos % smax so later decode writes at
+            # pos % smax evict exactly the oldest position)
+            keep = min(s, smax)
+            pos_arr = jnp.arange(s - keep, s, dtype=jnp.int32)
+            slots = pos_arr % smax
+            cache = dict(
+                k=cache["k"].at[:, slots].set(k[:, -keep:].astype(cache["k"].dtype)),
+                v=cache["v"].at[:, slots].set(v[:, -keep:].astype(cache["v"].dtype)),
+                slot_pos=cache["slot_pos"].at[slots].set(pos_arr),
+            )
+            out = _self_attention(q, k, v, causal, window, impl, cfg)
+    elif cross_kv is not None:
+        if impl == "dense" or s == 1:
+            out = dense_attention(q, k, v, causal=False, window=None)
+        else:
+            out = blockwise_attention(q, k, v, causal=False, window=None)
+    else:
+        out = _self_attention(q, k, v, causal, window, impl, cfg)
+
+    y = shard(out.reshape(b, s, hq * dh), "batch", "seq", "heads") @ params[prefix + "wo"]
+    if prefix + "wo_b" in params:
+        y = y + params[prefix + "wo_b"]
+    return shard(y, "batch", "seq", None), cache
+
+
+def _self_attention(q, k, v, causal, window, impl, cfg: ModelConfig):
+    sc = cfg.attn_logit_softcap
+    if impl == "dense":
+        return dense_attention(q, k, v, causal=causal, window=window, softcap_val=sc)
+    if impl == "chunked":
+        return chunked_attention(q, k, v, causal=causal, window=window, softcap_val=sc)
+    if impl == "pallas":
+        from repro.kernels.flash_attention import flash_attention
+
+        out = flash_attention(
+            jnp.moveaxis(q, 2, 1), jnp.moveaxis(k, 2, 1), jnp.moveaxis(v, 2, 1),
+            causal=causal, window=window)
+        return jnp.moveaxis(out, 1, 2)
+    return blockwise_attention(q, k, v, causal=causal, window=window, softcap_val=sc)

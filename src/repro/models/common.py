@@ -1,0 +1,79 @@
+"""Common building blocks for the transformer/SSM model zoo."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["rms_norm", "layer_norm", "rope", "sinusoidal_positions",
+           "dense_init", "Param", "softcap"]
+
+
+def rms_norm(x: jax.Array, scale: jax.Array, eps: float = 1e-6) -> jax.Array:
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x32), axis=-1, keepdims=True)
+    return ((x32 * jax.lax.rsqrt(var + eps)) * (1.0 + scale)).astype(x.dtype)
+
+
+def layer_norm(x: jax.Array, scale: jax.Array, bias: jax.Array, eps: float = 1e-6) -> jax.Array:
+    x32 = x.astype(jnp.float32)
+    mean = jnp.mean(x32, axis=-1, keepdims=True)
+    var = jnp.var(x32, axis=-1, keepdims=True)
+    # zero-init friendly: effective scale is (1 + scale), as for rms_norm
+    return ((x32 - mean) * jax.lax.rsqrt(var + eps) * (1.0 + scale) + bias).astype(x.dtype)
+
+
+def softcap(x: jax.Array, cap: float | None) -> jax.Array:
+    if cap is None:
+        return x
+    return cap * jnp.tanh(x / cap)
+
+
+def rope(x: jax.Array, positions: jax.Array, theta: float = 10000.0) -> jax.Array:
+    """Rotary embedding. x: (..., S, H, Dh); positions: (..., S)."""
+    dh = x.shape[-1]
+    half = dh // 2
+    freqs = 1.0 / (theta ** (jnp.arange(half, dtype=jnp.float32) / half))
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (..., S, half)
+    cos = jnp.cos(angles)[..., None, :]
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def sinusoidal_positions(length: int, dim: int, dtype=jnp.float32) -> jax.Array:
+    pos = jnp.arange(length, dtype=jnp.float32)[:, None]
+    div = jnp.exp(jnp.arange(0, dim, 2, dtype=jnp.float32) * (-jnp.log(10000.0) / dim))
+    pe = jnp.zeros((length, dim), jnp.float32)
+    pe = pe.at[:, 0::2].set(jnp.sin(pos * div))
+    pe = pe.at[:, 1::2].set(jnp.cos(pos * div[: (dim + 1) // 2]))
+    return pe.astype(dtype)
+
+
+def dense_init(key: jax.Array, shape: tuple[int, ...], fan_in: int, dtype) -> jax.Array:
+    return (jax.random.normal(key, shape, jnp.float32) / jnp.sqrt(float(fan_in))).astype(dtype)
+
+
+class Param:
+    """(shape, fan_in, logical axes) triple used to build init + pspec trees."""
+
+    def __init__(self, shape, logical, fan_in=None):
+        self.shape = tuple(shape)
+        self.logical = tuple(logical)
+        self.fan_in = fan_in if fan_in is not None else (shape[0] if len(shape) > 1 else 1)
+        assert len(self.shape) == len(self.logical), (shape, logical)
+
+
+def init_params(key: jax.Array, defs: dict[str, Param], dtype) -> dict:
+    keys = jax.random.split(key, len(defs))
+    out = {}
+    for k, (name, p) in zip(keys, sorted(defs.items())):
+        if len(p.shape) == 1 or name.endswith("_b") or "norm" in name:
+            out[name] = jnp.zeros(p.shape, dtype)
+        else:
+            out[name] = dense_init(k, p.shape, p.fan_in, dtype)
+    return out
+
+
+def logical_specs(defs: dict[str, Param]) -> dict:
+    return {name: p.logical for name, p in defs.items()}

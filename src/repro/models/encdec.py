@@ -1,0 +1,189 @@
+"""Whisper-style encoder-decoder (audio backbone; conv frontend stubbed).
+
+The mel-spectrogram + conv feature extractor is a STUB per the assignment:
+``input_specs()`` provides precomputed frame embeddings (B, T, d_model) for
+the encoder. This module implements the transformer backbone:
+
+  encoder: N layers of bidirectional self-attention + GELU MLP
+  decoder: N layers of causal self-attention + cross-attention + GELU MLP
+
+Cross-attention K/V are computed once from the encoder output and reused for
+every decode step (the standard serving cache layout).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import attention as attn_mod
+from repro.models import mlp as mlp_mod
+from repro.models.common import Param, init_params, layer_norm, logical_specs, sinusoidal_positions
+from repro.models.sharding import shard
+
+__all__ = ["EncDecLM"]
+
+
+def _enc_block_defs(cfg: ModelConfig) -> dict[str, Param]:
+    return {
+        "ln1": Param((cfg.d_model,), (None,)), "ln1_b": Param((cfg.d_model,), (None,)),
+        "ln2": Param((cfg.d_model,), (None,)), "ln2_b": Param((cfg.d_model,), (None,)),
+        **attn_mod.attention_defs(cfg, "attn_"),
+        **mlp_mod.mlp_defs(cfg, "mlp_"),
+    }
+
+
+def _dec_block_defs(cfg: ModelConfig) -> dict[str, Param]:
+    return {
+        "ln1": Param((cfg.d_model,), (None,)), "ln1_b": Param((cfg.d_model,), (None,)),
+        "ln2": Param((cfg.d_model,), (None,)), "ln2_b": Param((cfg.d_model,), (None,)),
+        "ln3": Param((cfg.d_model,), (None,)), "ln3_b": Param((cfg.d_model,), (None,)),
+        **attn_mod.attention_defs(cfg, "attn_"),
+        **attn_mod.attention_defs(cfg, "xattn_"),
+        **mlp_mod.mlp_defs(cfg, "mlp_"),
+    }
+
+
+@dataclasses.dataclass
+class EncDecLM:
+    cfg: ModelConfig
+    dtype: Any = jnp.float32
+    attn_impl: str = "xla_flash"
+    remat: bool = True
+    max_positions: int = 32_768
+
+    def init(self, key: jax.Array) -> dict:
+        cfg = self.cfg
+        k_e, k_enc, k_dec = jax.random.split(key, 3)
+        enc_keys = jax.random.split(k_enc, cfg.num_encoder_layers)
+        dec_keys = jax.random.split(k_dec, cfg.num_layers)
+        return {
+            "embed": (jax.random.normal(k_e, (cfg.vocab_size, cfg.d_model), jnp.float32)
+                      * 0.02).astype(self.dtype),
+            "enc_blocks": jax.vmap(lambda k: init_params(k, _enc_block_defs(cfg), self.dtype))(enc_keys),
+            "dec_blocks": jax.vmap(lambda k: init_params(k, _dec_block_defs(cfg), self.dtype))(dec_keys),
+            "enc_norm": jnp.zeros((cfg.d_model,), self.dtype),
+            "enc_norm_b": jnp.zeros((cfg.d_model,), self.dtype),
+            "dec_norm": jnp.zeros((cfg.d_model,), self.dtype),
+            "dec_norm_b": jnp.zeros((cfg.d_model,), self.dtype),
+        }
+
+    def pspecs(self) -> dict:
+        cfg = self.cfg
+        return {
+            "embed": ("vocab", "embed"),
+            "enc_blocks": {k: ("layers",) + v for k, v in logical_specs(_enc_block_defs(cfg)).items()},
+            "dec_blocks": {k: ("layers",) + v for k, v in logical_specs(_dec_block_defs(cfg)).items()},
+            "enc_norm": (None,), "enc_norm_b": (None,),
+            "dec_norm": (None,), "dec_norm_b": (None,),
+        }
+
+    # ----------------------------------------------------------------- encoder
+
+    def encode(self, params, frames):
+        """frames: (B, T, d_model) stubbed frontend embeddings."""
+        cfg = self.cfg
+        t = frames.shape[1]
+        pe = sinusoidal_positions(t, cfg.d_model, self.dtype)
+        x = shard(frames.astype(self.dtype) + pe[None], "batch", "seq", None)
+        positions = jnp.broadcast_to(jnp.arange(t), frames.shape[:2])
+
+        def block(h, bp):
+            a_in = layer_norm(h, bp["ln1"], bp["ln1_b"], cfg.norm_eps)
+            a, _ = attn_mod.attention_apply(bp, a_in, cfg, positions=positions,
+                                            causal=False, impl=self.attn_impl)
+            h = h + a
+            m = layer_norm(h, bp["ln2"], bp["ln2_b"], cfg.norm_eps)
+            return h + mlp_mod.mlp_apply(bp, m, cfg), None
+
+        if self.remat:
+            block = jax.checkpoint(block)
+        x, _ = jax.lax.scan(block, x, params["enc_blocks"])
+        return layer_norm(x, params["enc_norm"], params["enc_norm_b"], cfg.norm_eps)
+
+    def cross_kv(self, params, enc_out):
+        """Precompute per-layer cross-attention K/V from the encoder output."""
+        cfg = self.cfg
+        dh, hkv = cfg.resolved_head_dim, cfg.num_kv_heads
+        b, t, _ = enc_out.shape
+
+        def one(bp):
+            k = (enc_out @ bp["xattn_wk"]).reshape(b, t, hkv, dh)
+            v = (enc_out @ bp["xattn_wv"]).reshape(b, t, hkv, dh)
+            if "xattn_wv_b" in bp:
+                v = v + bp["xattn_wv_b"].reshape(hkv, dh)
+            return k, v
+
+        return jax.lax.map(one, params["dec_blocks"])
+
+    # ----------------------------------------------------------------- decoder
+
+    def _dec_block(self, bp, h, *, positions, xkv, cache=None, decode_pos=None):
+        cfg = self.cfg
+        a_in = layer_norm(h, bp["ln1"], bp["ln1_b"], cfg.norm_eps)
+        a, cache = attn_mod.attention_apply(bp, a_in, cfg, positions=positions,
+                                            cache=cache, decode_pos=decode_pos,
+                                            impl=self.attn_impl, prefix="attn_")
+        h = h + a
+        x_in = layer_norm(h, bp["ln2"], bp["ln2_b"], cfg.norm_eps)
+        xa, _ = attn_mod.attention_apply(bp, x_in, cfg, positions=positions,
+                                         cross_kv=xkv, impl=self.attn_impl, prefix="xattn_")
+        h = h + xa
+        m = layer_norm(h, bp["ln3"], bp["ln3_b"], cfg.norm_eps)
+        return h + mlp_mod.mlp_apply(bp, m, cfg), cache
+
+    def decode(self, params, tokens, enc_out, caches=None, decode_pos=None):
+        cfg = self.cfg
+        b, s = tokens.shape
+        if decode_pos is None:
+            positions = jnp.broadcast_to(jnp.arange(s), (b, s))
+        else:
+            positions = jnp.full((b, s), decode_pos, jnp.int32)
+        pe = sinusoidal_positions(self.max_positions, cfg.d_model, self.dtype)
+        x = jnp.take(params["embed"], tokens, axis=0).astype(self.dtype)
+        x = x + jnp.take(pe, jnp.minimum(positions, self.max_positions - 1), axis=0)
+        x = shard(x, "batch", "seq", None)
+        xkvs = self.cross_kv(params, enc_out)
+
+        def block(carry, xs):
+            h = carry
+            bp, xkv, cache = xs
+            h, cache = self._dec_block(bp, h, positions=positions, xkv=xkv,
+                                       cache=cache, decode_pos=decode_pos)
+            return h, cache
+
+        if caches is None:
+            body = jax.checkpoint(lambda c, xs: block(c, xs + (None,))) if self.remat \
+                else (lambda c, xs: block(c, xs + (None,)))
+            x, _ = jax.lax.scan(body, x, (params["dec_blocks"], xkvs))
+            new_caches = None
+        else:
+            x, new_caches = jax.lax.scan(block, x, (params["dec_blocks"], xkvs, caches))
+        x = layer_norm(x, params["dec_norm"], params["dec_norm_b"], cfg.norm_eps)
+        logits = x @ params["embed"].T
+        return shard(logits, "batch", "seq", "vocab"), new_caches
+
+    # ----------------------------------------------------------------- losses
+
+    def loss(self, params, frames, tokens, labels):
+        enc_out = self.encode(params, frames)
+        logits, _ = self.decode(params, tokens, enc_out)
+        logits = logits.astype(jnp.float32)
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, jnp.maximum(labels, 0)[..., None], axis=-1)[..., 0]
+        valid = (labels >= 0).astype(jnp.float32)
+        return jnp.sum((lse - gold) * valid) / jnp.maximum(jnp.sum(valid), 1.0)
+
+    def init_cache(self, batch: int, seq_len: int, dtype=None):
+        cfg = self.cfg
+        one = attn_mod.init_kv_cache(cfg, batch, seq_len, dtype or self.dtype)
+        return jax.tree_util.tree_map(
+            lambda a: jnp.broadcast_to(a, (cfg.num_layers,) + a.shape).copy(), one)
+
+    def decode_step(self, params, token, pos, enc_out, caches):
+        logits, caches = self.decode(params, token[:, None], enc_out,
+                                     caches=caches, decode_pos=pos)
+        return logits[:, 0], caches

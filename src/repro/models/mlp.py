@@ -1,0 +1,41 @@
+"""Feed-forward blocks: SwiGLU / GeGLU / plain GELU."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.common import Param
+from repro.models.sharding import shard
+
+__all__ = ["mlp_defs", "mlp_apply"]
+
+
+def mlp_defs(cfg: ModelConfig, prefix: str = "mlp_", d_ff: int | None = None) -> dict[str, Param]:
+    d, f = cfg.d_model, d_ff or cfg.d_ff
+    gated = cfg.activation in ("swiglu", "geglu")
+    defs = {
+        prefix + "wi": Param((d, (2 if gated else 1) * f), ("embed", "ff"), fan_in=d),
+        prefix + "wo": Param((f, d), ("ff", "embed"), fan_in=f),
+    }
+    if cfg.use_bias:
+        defs[prefix + "wi_b"] = Param(((2 if gated else 1) * f,), ("ff",))
+        defs[prefix + "wo_b"] = Param((d,), ("embed",))
+    return defs
+
+
+def mlp_apply(params: dict, x: jax.Array, cfg: ModelConfig, prefix: str = "mlp_") -> jax.Array:
+    h = x @ params[prefix + "wi"]
+    if prefix + "wi_b" in params:
+        h = h + params[prefix + "wi_b"]
+    h = shard(h, "batch", "seq", "ff")
+    if cfg.activation in ("swiglu", "geglu"):
+        gate, up = jnp.split(h, 2, axis=-1)
+        act = jax.nn.silu(gate) if cfg.activation == "swiglu" else jax.nn.gelu(gate)
+        h = act * up
+    else:
+        h = jax.nn.gelu(h)
+    y = h @ params[prefix + "wo"]
+    if prefix + "wo_b" in params:
+        y = y + params[prefix + "wo_b"]
+    return shard(y, "batch", "seq", None)

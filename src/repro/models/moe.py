@@ -1,0 +1,122 @@
+"""Mixture-of-Experts block: top-k routing with capacity-bounded dispatch.
+
+Gather/scatter dispatch (not the GShard (T, E, C) einsum, whose dispatch
+tensor would be ~5e9 elements for llama4): tokens are scattered into
+capacity-bounded per-expert buffers (E, C, D), experts run as one batched
+einsum with E sharded over the model axis, and outputs are gathered back.
+The loop over the k routing slots is unrolled (k <= 8), so peak memory is
+O(T*D + E*C*D) instead of O(T*k*D).
+
+Capacity C = ceil(cf * T * k / E); overflowing tokens are dropped (their
+combine weight is zero) — standard capacity-factor semantics, and the router
+load-balance auxiliary loss keeps drops rare.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.common import Param
+from repro.models.sharding import group_count, shard
+
+__all__ = ["moe_defs", "moe_apply"]
+
+
+def moe_defs(cfg: ModelConfig, prefix: str = "moe_") -> dict[str, Param]:
+    d, f, e = cfg.d_model, cfg.d_ff, cfg.num_experts
+    gated = cfg.activation in ("swiglu", "geglu")
+    defs = {
+        prefix + "router": Param((d, e), ("embed", None), fan_in=d),
+        prefix + "wi": Param((e, d, (2 if gated else 1) * f), ("experts", "embed", "ff"), fan_in=d),
+        prefix + "wo": Param((e, f, d), ("experts", "ff", "embed"), fan_in=f),
+    }
+    if cfg.moe_shared_expert:
+        defs[prefix + "shared_wi"] = Param((d, (2 if gated else 1) * f), ("embed", "ff"), fan_in=d)
+        defs[prefix + "shared_wo"] = Param((f, d), ("ff", "embed"), fan_in=f)
+    return defs
+
+
+def _act(cfg: ModelConfig, h: jax.Array) -> jax.Array:
+    if cfg.activation in ("swiglu", "geglu"):
+        gate, up = jnp.split(h, 2, axis=-1)
+        return (jax.nn.silu(gate) if cfg.activation == "swiglu" else jax.nn.gelu(gate)) * up
+    return jax.nn.gelu(h)
+
+
+def moe_apply(params: dict, x: jax.Array, cfg: ModelConfig, prefix: str = "moe_"):
+    """x: (B, S, D) -> (y, aux_loss).
+
+    Dispatch is GROUP-LOCAL: tokens are reshaped to (G, T/G) with G = the
+    shard count behind the logical "batch" axis, so the capacity scatter and
+    the gather-back are local to each data shard (GShard local-dispatch
+    semantics). Without the grouping, the scatter indexes a global (E*C, D)
+    buffer and GSPMD all-gathers the FULL token matrix every layer — the
+    dominant collective of the MoE serve path (§Perf hillclimb 2). Capacity
+    is per-group and per-slot: cap = ceil(cf * T/G / E), floor 4 so tiny
+    decode batches stay drop-free. (Sizing by the total k-slot load — the
+    GShard shared-buffer convention — made every slot einsum k x too large:
+    §Perf hillclimb 1.)
+    """
+    b, s, d = x.shape
+    e, k = cfg.num_experts, cfg.top_k
+    t = b * s
+    from repro.models.sharding import current_rules
+    rules = current_rules() or {}
+    g = group_count("batch") if rules.get("moe_group_dispatch", True) else 1
+    # batch-major grouping must align with the batch sharding (g | b), and
+    # each group needs at least ~E tokens to be worth dispatching locally.
+    if g > 1 and (b % g or (t // g) < e):
+        g = 1
+    tg = t // g
+    cap = int(max(4, -(-int(cfg.capacity_factor * tg) // e)))
+
+    xf = shard(x.reshape(g, tg, d), "batch", None, None)
+    logits = (xf @ params[prefix + "router"]).astype(jnp.float32)   # (G, Tg, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, gate_idx = jax.lax.top_k(probs, k)                   # (G, Tg, k)
+    gate_vals = gate_vals / jnp.maximum(jnp.sum(gate_vals, -1, keepdims=True), 1e-9)
+
+    # Load-balance auxiliary loss (Switch): E * sum_e f_e * p_e.
+    me = jnp.mean(probs, axis=(0, 1))
+    ce = jnp.mean(jax.nn.one_hot(gate_idx[..., 0], e), axis=(0, 1))
+    aux_loss = e * jnp.sum(me * ce)
+
+    # combine accumulator in the model dtype when a single slot feeds it
+    # (top-1): the cross-expert combine lowers to a collective over the
+    # expert axis and an f32 accumulator doubles its bytes. Multi-slot sums
+    # keep f32 for accuracy.
+    acc_dtype = x.dtype if k == 1 else jnp.float32
+    y = jnp.zeros((g, tg, d), acc_dtype)
+    for slot in range(k):
+        eid = gate_idx[..., slot]                                   # (G, Tg)
+        onehot = jax.nn.one_hot(eid, e, dtype=jnp.int32)            # (G, Tg, E)
+        pos = jnp.cumsum(onehot, axis=1) - 1                        # per-group
+        pos_tok = jnp.sum(pos * onehot, axis=2)                     # (G, Tg)
+        keep = pos_tok < cap
+        slot_idx = jnp.where(keep, eid * cap + pos_tok, e * cap)    # overflow -> sentinel
+
+        if g == 1:  # unbatched scatter (faster on the CPU test path)
+            buf = jnp.zeros((1, e * cap + 1, d), xf.dtype).at[0, slot_idx[0]].set(xf[0])
+        else:
+            buf = jax.vmap(lambda sx, si: jnp.zeros((e * cap + 1, d), sx.dtype).at[si].set(sx))(
+                xf, slot_idx)                                       # (G, E*C+1, D)
+        buf = shard(buf[:, : e * cap].reshape(g, e, cap, d), "batch", "experts", None, None)
+
+        h = jnp.einsum("gecd,edf->gecf", buf, params[prefix + "wi"])
+        h = shard(_act(cfg, h), "batch", "experts", None, "ff")
+        out = jnp.einsum("gecf,efd->gecd", h, params[prefix + "wo"])  # (G, E, C, D)
+
+        # combine in the model dtype: the masked gather across expert shards
+        # lowers to an all-reduce over the expert axis, and an f32 combine
+        # doubles its bytes (§Perf hillclimb 2, iteration 2).
+        out_flat = jnp.concatenate([out.reshape(g, e * cap, d),
+                                    jnp.zeros((g, 1, d), out.dtype)], axis=1).astype(x.dtype)
+        gathered = jax.vmap(lambda of, si: of[si])(out_flat, slot_idx)  # (G, Tg, D)
+        y = y + gathered.astype(acc_dtype) * (gate_vals[..., slot] * keep)[..., None].astype(acc_dtype)
+
+    if cfg.moe_shared_expert:
+        h = _act(cfg, xf @ params[prefix + "shared_wi"])
+        y = y + (h @ params[prefix + "shared_wo"]).astype(acc_dtype)
+
+    return shard(y.reshape(b, s, d).astype(x.dtype), "batch", "seq", None), aux_loss

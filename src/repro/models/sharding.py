@@ -1,0 +1,106 @@
+"""Logical-axis sharding for the model zoo (MaxText-style axis rules).
+
+Model code annotates activations/params with *logical* axis names
+(``shard(x, "batch", "seq", None, "heads")``); the launch layer installs a
+mapping from logical names to physical mesh axes. With no rules installed
+(CPU unit tests) every annotation is the identity, so the same model code
+runs single-device and on the 512-chip production mesh.
+
+Rule sets (see DESIGN.md §4):
+  - standard archs: clients->data, heads/ff/vocab/experts->model
+  - giant archs (>= ~30B params): clients->pod (or none), batch->data,
+    heads/ff/vocab/experts->model, param embed dim->data (FSDP-style storage)
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+__all__ = ["axis_rules", "shard", "logical_to_pspec", "current_rules"]
+
+_STATE = threading.local()
+
+
+def current_rules() -> dict | None:
+    return getattr(_STATE, "rules", None)
+
+
+@contextlib.contextmanager
+def axis_rules(rules: dict[str, str | tuple[str, ...] | None]):
+    """Install logical->mesh axis rules for the enclosed region."""
+    prev = current_rules()
+    _STATE.rules = rules
+    try:
+        yield
+    finally:
+        _STATE.rules = prev
+
+
+AXIS_SIZES_KEY = "__axis_sizes__"   # installed by the launch layer (mesh sizes)
+
+
+def logical_to_pspec(names: tuple[str | None, ...], rules: dict | None = None,
+                     dims: tuple[int, ...] | None = None) -> P:
+    """Map logical axis names to a PartitionSpec under the installed rules.
+
+    If ``dims`` is given and the rules carry mesh axis sizes (AXIS_SIZES_KEY),
+    any mesh axis that does not evenly divide its dim is dropped — forcing a
+    non-dividing constraint (e.g. 8 query heads over a 16-way model axis)
+    makes GSPMD insert involuntary full rematerializations (§Perf hillclimb 3);
+    left unconstrained, XLA keeps its natural factorized sharding.
+    """
+    rules = rules if rules is not None else (current_rules() or {})
+    sizes = rules.get(AXIS_SIZES_KEY)
+    axes = []
+    used: set[str] = set()
+    for i, n in enumerate(names):
+        ax = rules.get(n) if n is not None else None
+        # a mesh axis may appear at most once in a PartitionSpec
+        if ax is not None:
+            flat = (ax,) if isinstance(ax, str) else tuple(ax)
+            flat = tuple(a for a in flat if a not in used)
+            if flat and sizes is not None and dims is not None:
+                total = 1
+                for a in flat:
+                    total *= sizes.get(a, 1)
+                if dims[i] % total != 0:
+                    flat = ()
+            used.update(flat)
+            ax = None if not flat else (flat[0] if len(flat) == 1 else flat)
+        axes.append(ax)
+    return P(*axes)
+
+
+def group_count(logical_name: str) -> int:
+    """Number of mesh shards behind a logical axis under the current rules.
+
+    Used by the MoE block to pick its dispatch-group count G: with tokens
+    grouped (G, T/G) and G sharded like the token batch, the capacity
+    scatter/gather is shard-local (GShard local-dispatch semantics) instead
+    of an all-gather of the full token matrix (§Perf hillclimb 2).
+    """
+    rules = current_rules()
+    if not rules:
+        return 1
+    sizes = rules.get(AXIS_SIZES_KEY)
+    ax = rules.get(logical_name)
+    if ax is None or sizes is None:
+        return 1
+    axes = (ax,) if isinstance(ax, str) else tuple(ax)
+    g = 1
+    for a in axes:
+        g *= sizes.get(a, 1)
+    return g
+
+
+def shard(x: jax.Array, *names: str | None) -> jax.Array:
+    """Constrain ``x`` to the PartitionSpec implied by logical axis names."""
+    rules = current_rules()
+    if rules is None:
+        return x
+    assert len(names) == x.ndim, (names, x.shape)
+    return jax.lax.with_sharding_constraint(
+        x, logical_to_pspec(names, rules, dims=tuple(x.shape)))

@@ -1,0 +1,194 @@
+"""Mamba2 block (SSD — state-space duality, arXiv:2405.21060).
+
+Layer structure (single group, matching the mamba2 reference):
+    in_proj -> [z | x | B | C | dt]
+    causal depthwise conv1d (width 4) over [x | B | C]
+    dt = softplus(dt + dt_bias);  A = -exp(A_log)  (per head)
+    y = SSD(x, dt, A, B, C) + D * x          (selective state space scan)
+    out = out_proj( RMSNorm(y) * silu(z) )
+
+The SSD scan runs in the chunked dual form (quadratic intra-chunk matmuls +
+small inter-chunk state carry) — pure-jnp here, with the Pallas kernel
+``repro.kernels.ssd_scan`` as the TPU target (identical math; see its tests).
+
+Sharding: d_inner (and the SSD heads along it) shard over the model axis;
+B/C/dt projections are small and replicated; in/out projections are the
+usual column/row-parallel pair.
+
+Decode: O(1) state update — the long_500k enabler for mamba2/zamba2.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.common import Param, rms_norm
+from repro.models.sharding import shard
+
+__all__ = ["ssm_defs", "ssm_apply", "init_ssm_cache", "ssd_chunked"]
+
+
+def ssm_defs(cfg: ModelConfig, prefix: str = "ssm_") -> dict[str, Param]:
+    d, di, n, h = cfg.d_model, cfg.d_inner, cfg.ssm_state, cfg.ssm_heads
+    w = cfg.ssm_conv_width
+    conv_ch = di + 2 * n
+    return {
+        prefix + "in_zx": Param((d, 2 * di), ("embed", "ff"), fan_in=d),
+        prefix + "in_bcdt": Param((d, 2 * n + h), ("embed", None), fan_in=d),
+        prefix + "conv_w": Param((w, conv_ch), (None, None), fan_in=w),
+        prefix + "conv_b": Param((conv_ch,), (None,)),
+        prefix + "a_log": Param((h,), (None,)),
+        prefix + "d_skip": Param((h,), (None,)),
+        prefix + "dt_bias": Param((h,), (None,)),
+        prefix + "norm": Param((di,), (None,)),
+        prefix + "out": Param((di, d), ("ff", "embed"), fan_in=di),
+    }
+
+
+def ssd_chunked(x, dt, a, bmat, cmat, chunk: int = 128):
+    """Chunked SSD. x: (B,S,H,P), dt: (B,S,H), a: (H,), bmat/cmat: (B,S,N)."""
+    bsz, s, h, p = x.shape
+    n = bmat.shape[-1]
+    c = min(chunk, s)
+    pad = (-s) % c
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        bmat = jnp.pad(bmat, ((0, 0), (0, pad), (0, 0)))
+        cmat = jnp.pad(cmat, ((0, 0), (0, pad), (0, 0)))
+    sp = x.shape[1]
+    nc = sp // c
+
+    xc = x.reshape(bsz, nc, c, h, p).astype(jnp.float32)
+    dtc = dt.reshape(bsz, nc, c, h).astype(jnp.float32)
+    bc = bmat.reshape(bsz, nc, c, n).astype(jnp.float32)
+    cc = cmat.reshape(bsz, nc, c, n).astype(jnp.float32)
+
+    li = jnp.arange(c)[:, None]
+    lj = jnp.arange(c)[None, :]
+    tril = lj <= li
+
+    def step(hstate, xs):
+        xk, dtk, bk, ck = xs                      # (B,c,H,P), (B,c,H), (B,c,N), (B,c,N)
+        log_a = a[None, None, :] * dtk            # (B,c,H)
+        sdec = jnp.cumsum(log_a, axis=1)          # (B,c,H)
+        xbar = xk * dtk[..., None]
+        decay = jnp.where(tril[None, :, :, None],
+                          jnp.exp(sdec[:, :, None, :] - sdec[:, None, :, :]), 0.0)  # (B,c,c,H)
+        scores = jnp.einsum("bln,bmn->blm", ck, bk)                                  # (B,c,c)
+        y = jnp.einsum("blmh,bmhp->blhp", scores[..., None] * decay, xbar)
+        y = y + jnp.exp(sdec)[..., None] * jnp.einsum("bln,bhnp->blhp", ck, hstate)
+        s_last = sdec[:, -1, :]                   # (B,H)
+        wdec = jnp.exp(s_last[:, None, :] - sdec)  # (B,c,H)
+        hstate = jnp.exp(s_last)[:, :, None, None] * hstate + jnp.einsum(
+            "bln,blhp->bhnp", bk, xbar * wdec[..., None])
+        return hstate, y
+
+    h0 = jnp.zeros((bsz, h, n, p), jnp.float32)
+    _, ys = jax.lax.scan(step, h0, (jnp.moveaxis(xc, 1, 0), jnp.moveaxis(dtc, 1, 0),
+                                    jnp.moveaxis(bc, 1, 0), jnp.moveaxis(cc, 1, 0)))
+    y = jnp.moveaxis(ys, 0, 1).reshape(bsz, sp, h, p)
+    return y[:, :s].astype(x.dtype)
+
+
+def init_ssm_cache(cfg: ModelConfig, batch: int, dtype=jnp.float32):
+    di, n = cfg.d_inner, cfg.ssm_state
+    return {
+        "conv": jnp.zeros((batch, cfg.ssm_conv_width - 1, di + 2 * n), dtype),
+        "state": jnp.zeros((batch, cfg.ssm_heads, n, cfg.ssm_head_dim), dtype),
+    }
+
+
+def _causal_conv(h, w, b):
+    """Depthwise causal conv1d. h: (B, S, C); w: (W, C)."""
+    width = w.shape[0]
+    hp = jnp.pad(h, ((0, 0), (width - 1, 0), (0, 0)))
+    out = sum(hp[:, i : i + h.shape[1], :] * w[i] for i in range(width))
+    return jax.nn.silu(out + b)
+
+
+def ssm_apply(params: dict, x: jax.Array, cfg: ModelConfig, *,
+              cache: dict | None = None, prefix: str = "ssm_"):
+    """x: (B, S, D) -> (y, updated_cache). S=1 with cache = decode step."""
+    b, s, d = x.shape
+    di, n, heads, p = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads, cfg.ssm_head_dim
+
+    zx = x @ params[prefix + "in_zx"]                      # (B,S,2*di)
+    zx = shard(zx, "batch", "seq", "ff")
+    z, xin = jnp.split(zx, 2, axis=-1)
+    bcdt = x @ params[prefix + "in_bcdt"]                  # (B,S,2N+H)
+    bmat, cmat, dt_raw = jnp.split(bcdt, [n, 2 * n], axis=-1)
+
+    conv_in = jnp.concatenate([xin, bmat, cmat], axis=-1)  # (B,S,di+2N)
+    a = -jnp.exp(params[prefix + "a_log"].astype(jnp.float32))
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + params[prefix + "dt_bias"])
+
+    if cache is not None and s == 1:
+        hist = jnp.concatenate([cache["conv"], conv_in.astype(cache["conv"].dtype)], axis=1)
+        conv_out = _causal_conv(hist, params[prefix + "conv_w"], params[prefix + "conv_b"])[:, -1:]
+        new_conv = hist[:, 1:]
+        xc, bc, cc = jnp.split(conv_out, [di, di + n], axis=-1)
+        xh = xc.reshape(b, heads, p).astype(jnp.float32)
+        decay = jnp.exp(a[None] * dt[:, 0])                # (B,H)
+        inject = bc[:, 0][:, None, :, None] * (xh * dt[:, 0][..., None])[:, :, None, :]
+        state = decay[:, :, None, None] * cache["state"] + inject
+        y = jnp.einsum("bn,bhnp->bhp", cc[:, 0].astype(jnp.float32), state)
+        y = y + params[prefix + "d_skip"][None, :, None] * xh
+        y = y.reshape(b, 1, di)
+        cache = {"conv": new_conv, "state": state}
+    else:
+        conv_out = _causal_conv(conv_in, params[prefix + "conv_w"], params[prefix + "conv_b"])
+        xc, bc, cc = jnp.split(conv_out, [di, di + n], axis=-1)
+        xh = shard(xc.reshape(b, s, heads, p), "batch", "seq", "ff", None)
+        dth = dt.reshape(b, s, heads)
+        y = ssd_chunked(xh.astype(jnp.float32), dth, a,
+                        bc.astype(jnp.float32), cc.astype(jnp.float32))
+        y = y + params[prefix + "d_skip"][None, None, :, None] * xh.astype(jnp.float32)
+        y = y.reshape(b, s, di)
+        if cache is not None:  # prefill: leave a valid decode cache behind
+            # recompute final state cheaply via one extra scan over chunks is
+            # wasteful; instead run the recurrence on the last conv window +
+            # full state from ssd. For simplicity we rebuild the state with a
+            # dedicated pass (used only in serving prefill).
+            state = _final_state(xh.astype(jnp.float32), dth, a,
+                                 bc.astype(jnp.float32), cc.astype(jnp.float32))
+            cache = {"conv": conv_in[:, -(cfg.ssm_conv_width - 1):, :].astype(jnp.float32),
+                     "state": state}
+
+    y = shard(y, "batch", "seq", "ff")
+    y = rms_norm(y, params[prefix + "norm"], cfg.norm_eps) * jax.nn.silu(z)
+    out = (y @ params[prefix + "out"]).astype(x.dtype)
+    return shard(out, "batch", "seq", None), cache
+
+
+def _final_state(x, dt, a, bmat, cmat, chunk: int = 128):
+    """State after consuming the full sequence (for prefill->decode handoff)."""
+    bsz, s, h, p = x.shape
+    n = bmat.shape[-1]
+    c = min(chunk, s)
+    pad = (-s) % c
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        bmat = jnp.pad(bmat, ((0, 0), (0, pad), (0, 0)))
+    nc = x.shape[1] // c
+    xc = x.reshape(bsz, nc, c, h, p)
+    dtc = dt.reshape(bsz, nc, c, h)
+    bc = bmat.reshape(bsz, nc, c, n)
+
+    def step(hstate, xs):
+        xk, dtk, bk = xs
+        log_a = a[None, None, :] * dtk
+        sdec = jnp.cumsum(log_a, axis=1)
+        s_last = sdec[:, -1, :]
+        wdec = jnp.exp(s_last[:, None, :] - sdec)
+        xbar = xk * dtk[..., None]
+        hstate = jnp.exp(s_last)[:, :, None, None] * hstate + jnp.einsum(
+            "bln,blhp->bhnp", bk, xbar * wdec[..., None])
+        return hstate, None
+
+    h0 = jnp.zeros((bsz, h, n, p), jnp.float32)
+    hstate, _ = jax.lax.scan(step, h0, (jnp.moveaxis(xc, 1, 0), jnp.moveaxis(dtc, 1, 0),
+                                        jnp.moveaxis(bc, 1, 0)))
+    return hstate

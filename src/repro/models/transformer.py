@@ -1,0 +1,326 @@
+"""Decoder-only LM assembling the model zoo: dense / MoE / SSM / hybrid / VLM.
+
+Layers are *stacked* (leading L axis) and executed with ``lax.scan`` so that
+trace/compile time stays flat in depth (64-layer 104B configs lower in
+seconds). The hybrid (zamba2) stack scans over super-blocks of
+``hybrid_attn_every`` Mamba2 layers followed by ONE weight-shared attention
+block (closed over, so its gradients sum over application sites — tied
+weights).
+
+The LM head is evaluated in sequence chunks under ``jax.checkpoint`` so the
+(tokens, vocab) logits tensor never materializes for the full sequence
+(vocab 256k x 1M tokens would be ~1 TB); this is the standard
+memory-efficient CE and is exact.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import attention as attn_mod
+from repro.models import mlp as mlp_mod
+from repro.models import moe as moe_mod
+from repro.models import ssm as ssm_mod
+from repro.models.common import Param, init_params, logical_specs, rms_norm, sinusoidal_positions
+from repro.models.sharding import shard
+
+__all__ = ["DecoderLM"]
+
+_MOE_AUX_COEF = 0.01
+
+
+def _block_defs(cfg: ModelConfig) -> dict[str, Param]:
+    """Parameter defs for ONE block of the scanned stack."""
+    if cfg.arch_type in ("dense", "vlm"):
+        return {
+            "ln1": Param((cfg.d_model,), (None,)),
+            "ln2": Param((cfg.d_model,), (None,)),
+            **attn_mod.attention_defs(cfg),
+            **mlp_mod.mlp_defs(cfg),
+        }
+    if cfg.arch_type == "moe":
+        return {
+            "ln1": Param((cfg.d_model,), (None,)),
+            "ln2": Param((cfg.d_model,), (None,)),
+            **attn_mod.attention_defs(cfg),
+            **moe_mod.moe_defs(cfg),
+        }
+    if cfg.arch_type in ("ssm", "hybrid"):
+        return {
+            "ln1": Param((cfg.d_model,), (None,)),
+            **ssm_mod.ssm_defs(cfg),
+        }
+    raise ValueError(cfg.arch_type)
+
+
+def _shared_attn_defs(cfg: ModelConfig) -> dict[str, Param]:
+    """zamba2's weight-shared attention(+MLP) block."""
+    return {
+        "ln1": Param((cfg.d_model,), (None,)),
+        "ln2": Param((cfg.d_model,), (None,)),
+        **attn_mod.attention_defs(cfg),
+        **mlp_mod.mlp_defs(cfg),
+    }
+
+
+@dataclasses.dataclass
+class DecoderLM:
+    cfg: ModelConfig
+    dtype: Any = jnp.float32
+    attn_impl: str = "xla_flash"
+    remat: bool = True
+    remat_policy: str | None = None   # None = full remat; "dots" saves matmuls
+    loss_chunk: int = 512
+    max_positions: int = 32_768   # sinusoidal table rows (non-RoPE archs)
+
+    # ------------------------------------------------------------------ init
+
+    def init(self, key: jax.Array) -> dict:
+        cfg = self.cfg
+        k_embed, k_blocks, k_shared, k_head = jax.random.split(key, 4)
+        defs = _block_defs(cfg)
+        block_keys = jax.random.split(k_blocks, cfg.num_layers)
+        blocks = jax.vmap(lambda k: init_params(k, defs, self.dtype))(block_keys)
+        params = {
+            "embed": (jax.random.normal(k_embed, (cfg.vocab_size, cfg.d_model), jnp.float32)
+                      * 0.02).astype(self.dtype),
+            "final_norm": jnp.zeros((cfg.d_model,), self.dtype),
+            "blocks": blocks,
+        }
+        if cfg.arch_type == "hybrid":
+            params["shared_attn"] = init_params(k_shared, _shared_attn_defs(cfg), self.dtype)
+        if not cfg.tie_embeddings:
+            params["head"] = (jax.random.normal(k_head, (cfg.d_model, cfg.vocab_size), jnp.float32)
+                              / jnp.sqrt(float(cfg.d_model))).astype(self.dtype)
+        return params
+
+    def pspecs(self) -> dict:
+        cfg = self.cfg
+        defs = _block_defs(cfg)
+        blocks = {k: ("layers",) + v for k, v in logical_specs(defs).items()}
+        specs = {
+            "embed": ("vocab", "embed"),
+            "final_norm": (None,),
+            "blocks": blocks,
+        }
+        if cfg.arch_type == "hybrid":
+            specs["shared_attn"] = logical_specs(_shared_attn_defs(cfg))
+        if not cfg.tie_embeddings:
+            specs["head"] = ("embed", "vocab")
+        return specs
+
+    # --------------------------------------------------------------- blocks
+
+    def _apply_block(self, bp, x, *, positions, cache=None, decode_pos=None):
+        cfg = self.cfg
+        if cfg.arch_type in ("dense", "vlm", "moe"):
+            h = rms_norm(x, bp["ln1"], cfg.norm_eps)
+            a, cache = attn_mod.attention_apply(
+                bp, h, cfg, positions=positions, cache=cache,
+                decode_pos=decode_pos, impl=self.attn_impl)
+            if cfg.parallel_block:
+                m = rms_norm(x, bp["ln2"], cfg.norm_eps)
+                if cfg.arch_type == "moe":
+                    f, aux = moe_mod.moe_apply(bp, m, cfg)
+                else:
+                    f, aux = mlp_mod.mlp_apply(bp, m, cfg), 0.0
+                return x + a + f, cache, aux
+            x = x + a
+            m = rms_norm(x, bp["ln2"], cfg.norm_eps)
+            if cfg.arch_type == "moe":
+                f, aux = moe_mod.moe_apply(bp, m, cfg)
+            else:
+                f, aux = mlp_mod.mlp_apply(bp, m, cfg), 0.0
+            return x + f, cache, aux
+        # ssm / hybrid mamba block
+        h = rms_norm(x, bp["ln1"], cfg.norm_eps)
+        y, cache = ssm_mod.ssm_apply(bp, h, cfg, cache=cache)
+        return x + y, cache, 0.0
+
+    def _apply_shared_attn(self, sp, x, *, positions, cache=None, decode_pos=None):
+        cfg = self.cfg
+        h = rms_norm(x, sp["ln1"], cfg.norm_eps)
+        a, cache = attn_mod.attention_apply(
+            sp, h, cfg, positions=positions, cache=cache,
+            decode_pos=decode_pos, impl=self.attn_impl)
+        x = x + a
+        m = rms_norm(x, sp["ln2"], cfg.norm_eps)
+        return x + mlp_mod.mlp_apply(sp, m, cfg), cache
+
+    def _stack(self, params, x, *, positions, caches=None, decode_pos=None):
+        """Run all blocks. caches: None (train) or pytree of stacked caches."""
+        cfg = self.cfg
+        body = self._apply_block
+        if self.remat and caches is None:
+            policy = (jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+                      if self.remat_policy == "dots" else None)
+            body = jax.checkpoint(body, static_argnums=(), policy=policy)
+
+        if cfg.arch_type != "hybrid":
+            def scan_fn(carry, xs):
+                h, aux = carry
+                bp, cache = xs
+                h, cache, aux_i = body(bp, h, positions=positions, cache=cache,
+                                       decode_pos=decode_pos)
+                return (h, aux + aux_i), cache
+
+            caches_in = caches["blocks"] if caches is not None else None
+            xs = (params["blocks"], caches_in) if caches is not None else (params["blocks"], None)
+            if caches is None:
+                (x, aux), _ = jax.lax.scan(
+                    lambda c, bp: scan_fn(c, (bp, None)), (x, 0.0), params["blocks"])
+                return x, aux, None
+            (x, aux), new_caches = jax.lax.scan(scan_fn, (x, 0.0), xs)
+            return x, aux, {"blocks": new_caches}
+
+        # hybrid: super-blocks of `every` mamba layers + shared attention
+        every = cfg.hybrid_attn_every
+        n_super = cfg.num_layers // every
+        grouped = jax.tree_util.tree_map(
+            lambda a: a.reshape((n_super, every) + a.shape[1:]), params["blocks"])
+        sp = params["shared_attn"]
+
+        def super_fn(carry, xs):
+            h = carry
+            bp_group, ssm_cache_group, attn_cache = xs
+
+            def inner(hc, xs2):
+                bp, cache = xs2
+                hh, cache, _ = self._apply_block(bp, hc, positions=positions, cache=cache,
+                                                 decode_pos=decode_pos)
+                return hh, cache
+
+            h, new_ssm = jax.lax.scan(inner, h, (bp_group, ssm_cache_group))
+            h, new_attn = self._apply_shared_attn(sp, h, positions=positions,
+                                                  cache=attn_cache, decode_pos=decode_pos)
+            return h, (new_ssm, new_attn)
+
+        if caches is None:
+            empty = jax.tree_util.tree_map(lambda a: None, ())  # unused
+            def super_nocache(carry, bp_group):
+                h = carry
+
+                def inner(hc, bp):
+                    hh, _, _ = body(bp, hc, positions=positions)
+                    return hh, None
+
+                h, _ = jax.lax.scan(inner, h, bp_group)
+                h, _ = self._apply_shared_attn(sp, h, positions=positions)
+                return h, None
+
+            x, _ = jax.lax.scan(super_nocache, x, grouped)
+            return x, 0.0, None
+
+        ssm_caches = jax.tree_util.tree_map(
+            lambda a: a.reshape((n_super, every) + a.shape[1:]), caches["ssm"])
+        x, (new_ssm, new_attn) = jax.lax.scan(
+            super_fn, x, (grouped, ssm_caches, caches["attn"]))
+        new_caches = {
+            "ssm": jax.tree_util.tree_map(
+                lambda a: a.reshape((n_super * every,) + a.shape[2:]), new_ssm),
+            "attn": new_attn,
+        }
+        return x, 0.0, new_caches
+
+    # -------------------------------------------------------------- forward
+
+    def _embed(self, params, tokens, positions):
+        x = jnp.take(params["embed"], tokens, axis=0).astype(self.dtype)
+        if not self.cfg.use_rope:
+            # sinusoidal table computed inline (static max_positions rows) and
+            # gathered at the actual positions (supports decode offsets).
+            pe = sinusoidal_positions(self.max_positions, self.cfg.d_model, self.dtype)
+            x = x + jnp.take(pe, jnp.minimum(positions, self.max_positions - 1), axis=0)
+        return shard(x, "batch", "seq", None)
+
+    def forward(self, params, tokens):
+        positions = jnp.broadcast_to(jnp.arange(tokens.shape[1]), tokens.shape)
+        x = self._embed(params, tokens, positions)
+        x, aux, _ = self._stack(params, x, positions=positions)
+        return rms_norm(x, params["final_norm"], self.cfg.norm_eps), aux
+
+    def _head_matrix(self, params):
+        return params["embed"].T if self.cfg.tie_embeddings else params["head"]
+
+    def logits(self, params, h):
+        out = h @ self._head_matrix(params)
+        return shard(out, "batch", "seq", "vocab")
+
+    def loss(self, params, tokens, labels):
+        """Mean next-token CE (+ MoE aux). Chunked over the sequence.
+
+        Chunks are taken with dynamic_slice inside the scan — reshaping to a
+        leading (nchunk, ...) stack transposes the sharded hidden tensor and
+        GSPMD inserts all-to-all/collective-permute per chunk (§Perf
+        hillclimb 3, iteration 3); slicing keeps the layout intact.
+        """
+        h, aux = self.forward(params, tokens)
+        w = self._head_matrix(params)
+        b, s, d = h.shape
+        chunk = min(self.loss_chunk, s)
+        pad = (-s) % chunk
+        if pad:
+            h = jnp.pad(h, ((0, 0), (0, pad), (0, 0)))
+            labels = jnp.pad(labels, ((0, 0), (0, pad)), constant_values=-1)
+        nchunk = h.shape[1] // chunk
+
+        @jax.checkpoint
+        def body(carry, i):
+            hh = jax.lax.dynamic_slice_in_dim(h, i * chunk, chunk, axis=1)
+            ll = jax.lax.dynamic_slice_in_dim(labels, i * chunk, chunk, axis=1)
+            logits = (hh @ w).astype(jnp.float32)
+            logits = shard(logits, "batch", "seq", "vocab")
+            lse = jax.nn.logsumexp(logits, axis=-1)
+            gold = jnp.take_along_axis(logits, jnp.maximum(ll, 0)[..., None], axis=-1)[..., 0]
+            valid = (ll >= 0).astype(jnp.float32)
+            nll = jnp.sum((lse - gold) * valid)
+            return (carry[0] + nll, carry[1] + jnp.sum(valid)), None
+
+        (total, count), _ = jax.lax.scan(body, (0.0, 0.0), jnp.arange(nchunk))
+        ce = total / jnp.maximum(count, 1.0)
+        return ce + _MOE_AUX_COEF * aux
+
+    # ------------------------------------------------------------- serving
+
+    def init_cache(self, batch: int, seq_len: int, dtype=None):
+        cfg = self.cfg
+        dtype = dtype or self.dtype
+        if cfg.arch_type in ("dense", "vlm", "moe"):
+            one = attn_mod.init_kv_cache(cfg, batch, seq_len, dtype)
+            return {"blocks": jax.tree_util.tree_map(
+                lambda a: jnp.broadcast_to(a, (cfg.num_layers,) + a.shape).copy(), one)}
+        if cfg.arch_type == "ssm":
+            one = ssm_mod.init_ssm_cache(cfg, batch)
+            return {"blocks": jax.tree_util.tree_map(
+                lambda a: jnp.broadcast_to(a, (cfg.num_layers,) + a.shape).copy(), one)}
+        # hybrid
+        n_super = cfg.num_layers // cfg.hybrid_attn_every
+        ssm_one = ssm_mod.init_ssm_cache(cfg, batch)
+        attn_one = attn_mod.init_kv_cache(cfg, batch, seq_len, dtype)
+        return {
+            "ssm": jax.tree_util.tree_map(
+                lambda a: jnp.broadcast_to(a, (cfg.num_layers,) + a.shape).copy(), ssm_one),
+            "attn": jax.tree_util.tree_map(
+                lambda a: jnp.broadcast_to(a, (n_super,) + a.shape).copy(), attn_one),
+        }
+
+    def prefill(self, params, tokens, caches):
+        positions = jnp.broadcast_to(jnp.arange(tokens.shape[1]), tokens.shape)
+        x = self._embed(params, tokens, positions)
+        x, _, caches = self._stack(params, x, positions=positions, caches=caches)
+        h = rms_norm(x[:, -1:], params["final_norm"], self.cfg.norm_eps)
+        return self.logits(params, h)[:, 0], caches
+
+    def decode_step(self, params, token, pos, caches):
+        """token: (B,) int32; pos: scalar int32 (uniform across batch)."""
+        positions = jnp.full((token.shape[0], 1), pos, jnp.int32)
+        x = self._embed(params, token[:, None], positions)
+        x, _, caches = self._stack(params, x, positions=positions,
+                                   caches=caches, decode_pos=pos)
+        h = rms_norm(x, params["final_norm"], self.cfg.norm_eps)
+        return self.logits(params, h)[:, 0], caches

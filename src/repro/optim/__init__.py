@@ -1,0 +1,77 @@
+"""Server-side optimizers for federated pseudo-gradients.
+
+DP-FedEXP's contribution is the *adaptive scalar* global step size; this
+package provides the orthogonal axis — what the server does with the
+(scaled) pseudo-gradient. ``sgd`` recovers the paper exactly; ``adam`` /
+``momentum`` implement the FedOpt family (Reddi et al., 2021) that the paper
+argues against (extra hyperparameters), kept as baselines and for the
+beyond-paper ablations. All are pure (state, update) -> (state, step)
+transforms over flat vectors or pytrees.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["Optimizer", "sgd", "momentum", "adam", "apply_update"]
+
+
+class Optimizer(NamedTuple):
+    init: Callable[[Any], Any]
+    update: Callable[[Any, Any], tuple[Any, Any]]  # (grad-like, state) -> (step, state)
+
+
+def _tmap(f, *trees):
+    return jax.tree_util.tree_map(f, *trees)
+
+
+def sgd(lr: float = 1.0) -> Optimizer:
+    """Plain scaling — lr=1 is exactly the paper's server update."""
+
+    def init(params):
+        return ()
+
+    def update(g, state):
+        return _tmap(lambda x: lr * x, g), state
+
+    return Optimizer(init, update)
+
+
+def momentum(lr: float = 1.0, beta: float = 0.9) -> Optimizer:
+    def init(params):
+        return _tmap(lambda p: jnp.zeros_like(p, jnp.float32), params)
+
+    def update(g, m):
+        m = _tmap(lambda mm, gg: beta * mm + gg.astype(jnp.float32), m, g)
+        return _tmap(lambda mm: lr * mm, m), m
+
+    return Optimizer(init, update)
+
+
+def adam(lr: float = 1e-3, b1: float = 0.9, b2: float = 0.999, eps: float = 1e-8) -> Optimizer:
+    """FedAdam (server Adam over pseudo-gradients)."""
+
+    def init(params):
+        z = _tmap(lambda p: jnp.zeros_like(p, jnp.float32), params)
+        return (z, _tmap(jnp.copy, z), jnp.zeros((), jnp.int32))
+
+    def update(g, state):
+        m, v, t = state
+        t = t + 1
+        m = _tmap(lambda mm, gg: b1 * mm + (1 - b1) * gg.astype(jnp.float32), m, g)
+        v = _tmap(lambda vv, gg: b2 * vv + (1 - b2) * jnp.square(gg.astype(jnp.float32)), v, g)
+        bc1 = 1 - b1 ** t.astype(jnp.float32)
+        bc2 = 1 - b2 ** t.astype(jnp.float32)
+        step = _tmap(lambda mm, vv: lr * (mm / bc1) / (jnp.sqrt(vv / bc2) + eps), m, v)
+        return step, (m, v, t)
+
+    return Optimizer(init, update)
+
+
+def apply_update(params, step):
+    """w <- w + step (pseudo-gradient ascent on the aggregated update)."""
+    return _tmap(lambda p, s: (p.astype(jnp.float32) + s.astype(jnp.float32)).astype(p.dtype),
+                 params, step)

@@ -1,0 +1,64 @@
+"""Privacy accounting (Props. 4.1/4.2, GDP numerics, PrivUnit pure DP)."""
+import math
+
+import pytest
+
+from repro.core import accounting as acc
+
+
+class TestGDP:
+    def test_delta_eps_inverse(self):
+        for mu in (0.1, 1.0, 3.0):
+            eps = acc.gdp_epsilon(mu, 1e-5)
+            assert abs(acc.gdp_delta(mu, eps) - 1e-5) < 1e-8
+
+    def test_monotone_in_mu(self):
+        es = [acc.gdp_epsilon(mu, 1e-5) for mu in (0.5, 1.0, 2.0, 4.0)]
+        assert es == sorted(es)
+
+    def test_known_value(self):
+        # mu = 1 GDP at delta=1e-5 is eps ~ 3.9-4.0 (Balle-Wang / Dong et al.)
+        eps = acc.gdp_epsilon(1.0, 1e-5)
+        assert 3.5 < eps < 4.5
+
+    def test_rdp_upper_bounds_gdp(self):
+        """RDP conversion is looser than the exact analytic curve."""
+        for c, sigma in ((1.0, 0.7), (0.3, 1.5)):
+            r = acc.ldp_gaussian_budget(c, sigma, 1e-5)
+            assert r.eps_rdp >= r.eps_numerical
+
+
+class TestPaperBudgets:
+    def test_ldp_gaussian_paper_setting(self):
+        """Paper Table 1: sigma = 0.7*C gives eps ~ 15.66 at delta=1e-5."""
+        r = acc.ldp_gaussian_budget(1.0, 0.7, 1e-5)
+        assert abs(r.eps_numerical - 15.659) < 0.2
+
+    def test_privunit_paper_setting(self):
+        r = acc.privunit_budget(2.0, 2.0, 2.0)
+        assert r.eps_numerical == 6.0
+        assert r.delta == 0.0
+
+    def test_cdp_fedexp_overhead_negligible(self):
+        """Table 1: CDP-FedEXP eps barely exceeds DP-FedAvg with sigma_xi=d sigma^2/M."""
+        m, t, c, delta = 1000, 50, 1.0, 1e-5
+        sigma = 5.0 * c / math.sqrt(m)
+        d = 5046  # the paper's CDP CNN dimension
+        sigma_xi = d * sigma**2 / m
+        base = acc.cdp_budget(c, sigma, m, t, delta, sigma_xi=None)
+        with_xi = acc.cdp_budget(c, sigma, m, t, delta, sigma_xi=sigma_xi)
+        assert with_xi.eps_numerical > base.eps_numerical
+        assert with_xi.eps_numerical - base.eps_numerical < 0.05 * base.eps_numerical
+        # absolute scale matches Table 1 (~15.26-15.65)
+        assert 14.0 < base.eps_numerical < 17.0
+
+    def test_cdp_scaling_in_rounds(self):
+        e1 = acc.cdp_budget(1.0, 0.5, 100, 10, 1e-5).eps_numerical
+        e2 = acc.cdp_budget(1.0, 0.5, 100, 40, 1e-5).eps_numerical
+        # GDP: mu scales with sqrt(T); eps roughly with mu at these scales
+        assert 1.5 < e2 / e1 < 3.0
+
+    def test_more_noise_less_eps(self):
+        es = [acc.ldp_gaussian_budget(1.0, s, 1e-5).eps_numerical
+              for s in (0.5, 1.0, 2.0, 4.0)]
+        assert es == sorted(es, reverse=True)

@@ -1,0 +1,107 @@
+"""Integration tests: the paper's training loop on the synthetic problem.
+
+These are miniature versions of the paper's experiments (fewer clients/rounds)
+asserting the *qualitative claims*: FedEXP >= FedAvg, DP-FedEXP >= DP-FedAvg,
+eta_g >= 1, and the bias-correction behaviour of Fig. 2.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.fedexp import make_algorithm
+from repro.data.synthetic import distance_to_opt, linreg_loss, make_synthetic_linreg
+from repro.fedsim.scaffold import DPScaffoldConfig, run_dp_scaffold
+from repro.fedsim.server import run_federated
+
+M, D, TAU, ETA_L, ROUNDS = 200, 50, 10, 0.01, 15
+
+
+@pytest.fixture(scope="module")
+def problem():
+    data = make_synthetic_linreg(jax.random.PRNGKey(0), M, D)
+    w0 = jnp.zeros(D)
+    return data, w0
+
+
+def _run(problem, alg, rounds=ROUNDS, **kw):
+    data, w0 = problem
+    algorithm = make_algorithm(alg, **kw)
+    return run_federated(
+        algorithm, linreg_loss, w0, data.client_batches(),
+        rounds=rounds, tau=TAU, eta_l=ETA_L, key=jax.random.PRNGKey(42),
+        eval_fn=distance_to_opt(data.w_star))
+
+
+class TestNonPrivate:
+    def test_fedexp_beats_fedavg(self, problem):
+        r_avg = _run(problem, "fedavg")
+        r_exp = _run(problem, "fedexp")
+        assert float(r_exp.metric_history[-1]) < float(r_avg.metric_history[-1])
+        assert float(jnp.min(r_exp.eta_history)) >= 1.0
+        # both make progress
+        assert float(r_avg.metric_history[-1]) < float(r_avg.metric_history[0])
+
+    def test_iterate_averaging(self, problem):
+        r = _run(problem, "fedexp")
+        # final_w = mean of last 2 iterates, close to but not equal to last_w
+        assert not np.allclose(np.asarray(r.final_w), np.asarray(r.last_w))
+
+
+class TestLDP:
+    def test_ldp_fedexp_beats_dp_fedavg(self, problem):
+        kw = dict(clip_norm=0.3, sigma=0.7 * 0.3)
+        r_avg = _run(problem, "dp-fedavg-ldp-gauss", **kw)
+        r_exp = _run(problem, "ldp-fedexp-gauss", **kw)
+        assert float(r_exp.metric_history[-1]) < float(r_avg.metric_history[-1])
+        assert float(jnp.min(r_exp.eta_history)) >= 1.0
+
+    def test_bias_correction_fig2(self, problem):
+        """Naive eta (Eq. 3) >> corrected eta (Eq. 6) ~ target (Eq. 5) at t=0."""
+        r = _run(problem, "ldp-fedexp-gauss", rounds=1, clip_norm=0.3, sigma=0.21)
+        naive = float(r.eta_naive_history[0])
+        corrected = float(r.eta_history[0])
+        target = float(r.eta_target_history[0])
+        assert naive > 3 * max(corrected, 1.0)
+        assert corrected <= naive
+        # corrected is within a factor ~2 of max(1, target)
+        assert corrected / max(target, 1.0) < 3.0
+
+    def test_privunit_runs_and_eta_ge_one(self, problem):
+        r = _run(problem, "ldp-fedexp-privunit", rounds=3,
+                 clip_norm=0.3, eps0=2.0, eps1=2.0, eps2=2.0, dim=D)
+        assert float(jnp.min(r.eta_history)) >= 1.0
+        assert np.all(np.isfinite(np.asarray(r.metric_history)))
+
+
+class TestCDP:
+    def test_cdp_fedexp_beats_dp_fedavg(self, problem):
+        kw = dict(clip_norm=0.3, sigma=5 * 0.3 / np.sqrt(M), num_clients=M)
+        r_avg = _run(problem, "dp-fedavg-cdp", **kw)
+        r_exp = _run(problem, "cdp-fedexp", **kw)
+        assert float(r_exp.metric_history[-1]) < float(r_avg.metric_history[-1])
+
+    def test_sigma_xi_default_is_hyperparameter_free(self, problem):
+        data, w0 = problem
+        alg = make_algorithm("cdp-fedexp", clip_norm=0.3,
+                             sigma=5 * 0.3 / np.sqrt(M), num_clients=M)
+        assert alg.sigma_xi is None  # resolved to d*sigma^2/M inside apply_round
+
+
+class TestScaffold:
+    def test_dp_scaffold_runs(self, problem):
+        data, w0 = problem
+        cfg = DPScaffoldConfig(clip_norm=0.3, sigma=5 * 0.3 / np.sqrt(M),
+                               central=True, num_clients=M)
+        r = run_dp_scaffold(cfg, linreg_loss, w0, data.client_batches(),
+                            rounds=5, tau=TAU, eta_l=ETA_L,
+                            key=jax.random.PRNGKey(1),
+                            eval_fn=distance_to_opt(data.w_star))
+        assert np.all(np.isfinite(np.asarray(r.metric_history)))
+
+
+class TestDeterminism:
+    def test_same_seed_same_result(self, problem):
+        r1 = _run(problem, "ldp-fedexp-gauss", rounds=3, clip_norm=0.3, sigma=0.21)
+        r2 = _run(problem, "ldp-fedexp-gauss", rounds=3, clip_norm=0.3, sigma=0.21)
+        np.testing.assert_array_equal(np.asarray(r1.final_w), np.asarray(r2.final_w))

@@ -1,0 +1,148 @@
+"""Pallas kernels vs their pure-jnp oracles (interpret mode, shape/dtype sweep)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.dp_aggregate.ops import dp_aggregate
+from repro.kernels.dp_aggregate.ref import dp_aggregate_ref
+from repro.kernels.flash_attention.ops import flash_attention
+from repro.kernels.flash_attention.ref import attention_ref
+from repro.kernels.ssd_scan.ops import ssd_scan
+from repro.kernels.ssd_scan.ref import ssd_scan_ref
+
+
+# ---------------------------------------------------------------------------
+# dp_aggregate
+# ---------------------------------------------------------------------------
+
+class TestDPAggregate:
+    @pytest.mark.parametrize("m,d", [(8, 128), (16, 256), (24, 300), (10, 64)])
+    @pytest.mark.parametrize("with_noise", [False, True])
+    def test_matches_ref(self, m, d, with_noise):
+        key = jax.random.PRNGKey(m * d)
+        u = 2.0 * jax.random.normal(key, (m, d))
+        noise = (0.5 * jax.random.normal(jax.random.fold_in(key, 1), (m, d))
+                 if with_noise else None)
+        clip = 1.0
+        want_sum, want_sq_rel, want_sq_clip = dp_aggregate_ref(u, noise, clip)
+        got = dp_aggregate(u, clip, noise, use_ref=False, interpret=True, block_m=8)
+        np.testing.assert_allclose(np.asarray(got.cbar), np.asarray(want_sum) / m,
+                                   rtol=1e-5, atol=1e-5)
+        np.testing.assert_allclose(float(got.mean_sq), float(want_sq_rel) / m, rtol=1e-5)
+        np.testing.assert_allclose(float(got.mean_sq_clipped), float(want_sq_clip) / m,
+                                   rtol=1e-5)
+
+    @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+    def test_dtypes(self, dtype):
+        u = jax.random.normal(jax.random.PRNGKey(0), (16, 128)).astype(dtype)
+        got = dp_aggregate(u, 0.5, None, interpret=True)
+        want = dp_aggregate_ref(u, None, 0.5)
+        np.testing.assert_allclose(np.asarray(got.cbar, np.float32),
+                                   np.asarray(want[0], np.float32) / 16,
+                                   rtol=2e-2, atol=2e-2)
+
+    def test_clipping_enforced(self):
+        u = 100.0 * jax.random.normal(jax.random.PRNGKey(1), (8, 128))
+        got = dp_aggregate(u, 1.0, None, interpret=True)
+        assert float(got.mean_sq_clipped) <= 1.0 + 1e-5
+
+
+# ---------------------------------------------------------------------------
+# flash attention
+# ---------------------------------------------------------------------------
+
+class TestFlashAttention:
+    @pytest.mark.parametrize("b,hq,hkv,sq,skv,dh", [
+        (1, 2, 2, 64, 64, 32),     # MHA
+        (2, 4, 2, 128, 128, 64),   # GQA
+        (1, 8, 1, 96, 96, 64),     # MQA, non-multiple seq (pads)
+        (1, 2, 2, 32, 160, 32),    # cross-length
+    ])
+    @pytest.mark.parametrize("causal", [True, False])
+    def test_matches_ref(self, b, hq, hkv, sq, skv, dh, causal):
+        if causal and sq != skv:
+            pytest.skip("causal ref assumes aligned q/k indices")
+        key = jax.random.PRNGKey(hash((b, hq, sq, skv)) % 2**31)
+        q = jax.random.normal(key, (b, hq, sq, dh))
+        k = jax.random.normal(jax.random.fold_in(key, 1), (b, hkv, skv, dh))
+        v = jax.random.normal(jax.random.fold_in(key, 2), (b, hkv, skv, dh))
+        got = flash_attention(q, k, v, causal=causal, block_q=32, block_k=32)
+        want = attention_ref(q, k, v, causal=causal)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=2e-4, atol=2e-4)
+
+    @pytest.mark.parametrize("window", [16, 64])
+    def test_sliding_window(self, window):
+        b, h, s, dh = 1, 2, 128, 32
+        key = jax.random.PRNGKey(7)
+        q = jax.random.normal(key, (b, h, s, dh))
+        k = jax.random.normal(jax.random.fold_in(key, 1), (b, h, s, dh))
+        v = jax.random.normal(jax.random.fold_in(key, 2), (b, h, s, dh))
+        got = flash_attention(q, k, v, causal=True, window=window, block_q=32, block_k=32)
+        want = attention_ref(q, k, v, causal=True, window=window)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=2e-4, atol=2e-4)
+
+    def test_bf16(self):
+        b, h, s, dh = 1, 2, 64, 32
+        key = jax.random.PRNGKey(9)
+        mk = lambda i: jax.random.normal(jax.random.fold_in(key, i), (b, h, s, dh)).astype(jnp.bfloat16)
+        q, k, v = mk(0), mk(1), mk(2)
+        got = flash_attention(q, k, v, causal=True, block_q=32, block_k=32)
+        want = attention_ref(q, k, v, causal=True)
+        np.testing.assert_allclose(np.asarray(got, np.float32), np.asarray(want, np.float32),
+                                   rtol=5e-2, atol=5e-2)
+
+
+# ---------------------------------------------------------------------------
+# ssd scan (Mamba2)
+# ---------------------------------------------------------------------------
+
+class TestSSDScan:
+    @pytest.mark.parametrize("b,s,h,p,n,chunk", [
+        (1, 64, 2, 16, 8, 16),
+        (2, 128, 4, 32, 16, 32),
+        (1, 100, 2, 16, 8, 32),   # pad path
+        (1, 256, 1, 64, 32, 64),
+    ])
+    def test_matches_ref(self, b, s, h, p, n, chunk):
+        key = jax.random.PRNGKey(hash((b, s, h, p)) % 2**31)
+        x = jax.random.normal(key, (b, s, h, p))
+        dt = 0.1 + 0.5 * jax.random.uniform(jax.random.fold_in(key, 1), (b, s, h))
+        a = -jnp.exp(jax.random.normal(jax.random.fold_in(key, 2), (h,)) * 0.3)
+        bm = jax.random.normal(jax.random.fold_in(key, 3), (b, s, n)) / np.sqrt(n)
+        cm = jax.random.normal(jax.random.fold_in(key, 4), (b, s, n)) / np.sqrt(n)
+        got = ssd_scan(x, dt, a, bm, cm, chunk=chunk)
+        want = ssd_scan_ref(x, dt, a, bm, cm)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=2e-4, atol=2e-4)
+
+    def test_model_chunked_matches_ref(self):
+        """models.ssm.ssd_chunked (the jnp training path) vs the recurrence."""
+        from repro.models.ssm import ssd_chunked
+        key = jax.random.PRNGKey(11)
+        b, s, h, p, n = 2, 96, 2, 16, 8
+        x = jax.random.normal(key, (b, s, h, p))
+        dt = 0.1 + 0.5 * jax.random.uniform(jax.random.fold_in(key, 1), (b, s, h))
+        a = -jnp.exp(jax.random.normal(jax.random.fold_in(key, 2), (h,)) * 0.3)
+        bm = jax.random.normal(jax.random.fold_in(key, 3), (b, s, n)) / np.sqrt(n)
+        cm = jax.random.normal(jax.random.fold_in(key, 4), (b, s, n)) / np.sqrt(n)
+        got = ssd_chunked(x, dt, a, bm, cm, chunk=32)
+        want = ssd_scan_ref(x, dt, a, bm, cm)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=2e-4, atol=2e-4)
+
+    def test_decay_state_carry(self):
+        """Long sequence with strong decay: chunk boundaries must be seamless."""
+        b, s, h, p, n = 1, 128, 1, 8, 4
+        key = jax.random.PRNGKey(12)
+        x = jax.random.normal(key, (b, s, h, p))
+        dt = jnp.full((b, s, h), 1.5)
+        a = jnp.array([-2.0])
+        bm = jnp.ones((b, s, n)) / n
+        cm = jnp.ones((b, s, n))
+        got = ssd_scan(x, dt, a, bm, cm, chunk=16)
+        want = ssd_scan_ref(x, dt, a, bm, cm)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=1e-4, atol=1e-4)

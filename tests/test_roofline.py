@@ -1,0 +1,59 @@
+"""Roofline-layer unit tests (pure python, no jax compilation)."""
+from repro.launch.roofline import HW, Hardware, collective_bytes, model_flops, roofline_terms
+
+
+class TestTerms:
+    def test_terms_and_bottleneck(self):
+        t = roofline_terms(197e12, 819e9, 50e9)  # exactly 1 second each
+        assert abs(t["compute_s"] - 1.0) < 1e-9
+        assert abs(t["memory_s"] - 1.0) < 1e-9
+        assert abs(t["collective_s"] - 1.0) < 1e-9
+
+    def test_bottleneck_selection(self):
+        assert roofline_terms(1e15, 1e9, 1e6)["bottleneck"] == "compute_s"
+        assert roofline_terms(1e9, 1e13, 1e6)["bottleneck"] == "memory_s"
+        assert roofline_terms(1e9, 1e9, 1e12)["bottleneck"] == "collective_s"
+
+    def test_custom_hardware(self):
+        hw = Hardware(peak_flops=100.0, hbm_bw=10.0, ici_bw=1.0)
+        t = roofline_terms(200.0, 20.0, 3.0, hw)
+        assert t["compute_s"] == 2.0 and t["memory_s"] == 2.0 and t["collective_s"] == 3.0
+
+
+class TestModelFlops:
+    def test_train_vs_serve(self):
+        assert model_flops(10, 10, 100, "train") == 6 * 10 * 100
+        assert model_flops(10, 10, 100, "decode") == 2 * 10 * 100
+        assert model_flops(10, 10, 100, "prefill") == 2 * 10 * 100
+
+    def test_moe_uses_active(self):
+        # N total is informational; active drives the count
+        assert model_flops(1000, 17, 5, "train") == 6 * 17 * 5
+
+
+class TestLegacyCollectiveParse:
+    def test_simple_module(self):
+        hlo = """
+HloModule m
+ENTRY %main (p: f32[4]) -> f32[4] {
+  %p = f32[4]{0} parameter(0)
+  %ar = f32[4]{0} all-reduce(%p), replica_groups={}, to_apply=%add
+  %ag = f32[8]{0} all-gather(%ar), dimensions={0}
+  ROOT %out = f32[4]{0} slice(%ag), slice={[0:4]}
+}
+"""
+        got = collective_bytes(hlo)
+        assert got["all-reduce"] == 16
+        assert got["all-gather"] == 32
+        assert got["all-to-all"] == 0
+
+    def test_done_not_double_counted(self):
+        hlo = """
+ENTRY %main () -> f32[4] {
+  %s = (f32[4]{0}, f32[4]{0}) all-reduce-start(%x)
+  %d = f32[4]{0} all-reduce-done(%s)
+}
+"""
+        got = collective_bytes(hlo)
+        # -start counted once (result tuple), -done skipped
+        assert got["all-reduce"] == 32
