@@ -1,0 +1,18 @@
+PYTHON ?= python
+export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
+
+.PHONY: test bench-quick bench lint
+
+test:                      ## tier-1 test suite
+	$(PYTHON) -m pytest -x -q
+
+bench-quick:               ## reduced-size benchmarks + JSON (CI, CPU interpret)
+	$(PYTHON) -m benchmarks.run --quick --json
+
+bench:                     ## full benchmark suite + JSON
+	$(PYTHON) -m benchmarks.run --json
+
+lint:                      ## ruff (config in pyproject.toml)
+	@command -v ruff >/dev/null 2>&1 \
+		&& ruff check src tests benchmarks examples \
+		|| echo "ruff not installed; skipping (pip install ruff)"

@@ -2,12 +2,23 @@
 from __future__ import annotations
 
 import csv
+import json
 import os
 import time
 
 import numpy as np
 
 RESULTS_DIR = os.environ.get("REPRO_RESULTS", "results/bench")
+
+
+def write_json(name: str, obj) -> str:
+    """Dump a benchmark result object to results/bench/<name> (trajectory
+    tracking; every benchmark emits one when run.py is passed --json)."""
+    os.makedirs(RESULTS_DIR, exist_ok=True)
+    path = os.path.join(RESULTS_DIR, name)
+    with open(path, "w") as f:
+        json.dump(obj, f, indent=2, default=float)
+    return path
 
 
 def write_csv(name: str, header: list[str], rows: list[list]) -> str:
@@ -49,3 +60,27 @@ class Timer:
 
     def __exit__(self, *a):
         self.seconds = time.time() - self.t0
+
+
+def make_dp_algorithm(setting: str, alg: str, *, clip: float, clients: int,
+                      dim: int):
+    """Setting -> algorithm factory shared by e1/e2 (the paper's protocol:
+    sigma = 5C/sqrt(M) for CDP, 0.7C for LDP Gaussian, eps0=eps1=eps2=2 for
+    PrivUnit); ``alg`` is "fedexp" or "fedavg"."""
+    import math as _math
+
+    from repro.core.fedexp import make_algorithm
+
+    if setting == "cdp":
+        name = "cdp-fedexp" if alg == "fedexp" else "dp-fedavg-cdp"
+        return make_algorithm(name, clip_norm=clip,
+                              sigma=5 * clip / _math.sqrt(clients),
+                              num_clients=clients)
+    if setting == "ldp-gauss":
+        name = "ldp-fedexp-gauss" if alg == "fedexp" else "dp-fedavg-ldp-gauss"
+        return make_algorithm(name, clip_norm=clip, sigma=0.7 * clip)
+    if setting == "ldp-privunit":
+        name = "ldp-fedexp-privunit" if alg == "fedexp" else "dp-fedavg-privunit"
+        return make_algorithm(name, clip_norm=clip, eps0=2.0, eps1=2.0,
+                              eps2=2.0, dim=dim)
+    raise ValueError(f"unknown DP setting {setting!r}")

@@ -12,11 +12,10 @@ import math
 import jax
 import jax.numpy as jnp
 
-from benchmarks.common import mean_std, print_table, write_csv
-from repro.core.fedexp import make_algorithm
+from benchmarks.common import make_dp_algorithm, mean_std, print_table, write_csv
 from repro.data.synthetic import distance_to_opt, linreg_loss, make_synthetic_linreg
 from repro.fedsim.scaffold import DPScaffoldConfig, run_dp_scaffold
-from repro.fedsim.server import run_federated
+from repro.fedsim.server import RunResult, run_federated, run_federated_batched
 
 # (eta_l, C) per algorithm x DP type, selected by re-running the paper's
 # grid-search protocol (E.1) on OUR generation (unit-normalized features —
@@ -29,7 +28,41 @@ HP = {
 }
 
 
+def _make_algorithm(setting: str, alg: str, m: int, d: int):
+    _, c = HP[setting][alg]
+    return make_dp_algorithm(setting, alg, clip=c, clients=m, dim=d)
+
+
+def _run_setting_batched(setting: str, alg: str, data, w0, *, rounds, tau, seeds):
+    """All seeds of one (setting, algorithm) cell as ONE batched program
+    (scaffold keeps its own loop — its client state lives outside the
+    engine)."""
+    m, d = data.x.shape
+    eta_l, c = HP[setting][alg]
+    keys = jnp.stack([jax.random.PRNGKey(1000 + s) for s in range(seeds)])
+    eval_fn = distance_to_opt(data.w_star)
+    if alg == "scaffold":
+        central = setting == "cdp"
+        sigma = 5 * c / math.sqrt(m) if central else 0.7 * c
+        cfg = DPScaffoldConfig(clip_norm=c, sigma=sigma, central=central, num_clients=m)
+        runs = [run_dp_scaffold(cfg, linreg_loss, w0, data.client_batches(),
+                                rounds=rounds, tau=tau, eta_l=eta_l, key=keys[s],
+                                eval_fn=eval_fn)
+                for s in range(seeds)]
+        return RunResult(
+            final_w=jnp.stack([r.final_w for r in runs]),
+            last_w=jnp.stack([r.last_w for r in runs]),
+            eta_history=jnp.stack([r.eta_history for r in runs]),
+            metric_history=jnp.stack([r.metric_history for r in runs]))
+    algorithm = _make_algorithm(setting, alg, m, d)
+    return run_federated_batched(algorithm, linreg_loss, w0, data.client_batches(),
+                                 rounds=rounds, tau=tau, eta_l=eta_l, keys=keys,
+                                 eval_fn=eval_fn)
+
+
 def _run_setting(setting: str, alg: str, data, w0, *, rounds, tau, seed):
+    """Single-seed variant (spot checks / external callers) — runs ONLY the
+    requested seed."""
     m, d = data.x.shape
     eta_l, c = HP[setting][alg]
     key = jax.random.PRNGKey(1000 + seed)
@@ -38,41 +71,30 @@ def _run_setting(setting: str, alg: str, data, w0, *, rounds, tau, seed):
         central = setting == "cdp"
         sigma = 5 * c / math.sqrt(m) if central else 0.7 * c
         cfg = DPScaffoldConfig(clip_norm=c, sigma=sigma, central=central, num_clients=m)
-        r = run_dp_scaffold(cfg, linreg_loss, w0, data.client_batches(),
-                            rounds=rounds, tau=tau, eta_l=eta_l, key=key, eval_fn=eval_fn)
-        return r
-    if setting == "cdp":
-        name = "cdp-fedexp" if alg == "fedexp" else "dp-fedavg-cdp"
-        algorithm = make_algorithm(name, clip_norm=c, sigma=5 * c / math.sqrt(m),
-                                   num_clients=m)
-    elif setting == "ldp-gauss":
-        name = "ldp-fedexp-gauss" if alg == "fedexp" else "dp-fedavg-ldp-gauss"
-        algorithm = make_algorithm(name, clip_norm=c, sigma=0.7 * c)
-    else:  # ldp-privunit
-        name = "ldp-fedexp-privunit" if alg == "fedexp" else "dp-fedavg-privunit"
-        algorithm = make_algorithm(name, clip_norm=c, eps0=2.0, eps1=2.0, eps2=2.0, dim=d)
-    return run_federated(algorithm, linreg_loss, w0, data.client_batches(),
-                         rounds=rounds, tau=tau, eta_l=eta_l, key=key, eval_fn=eval_fn)
+        return run_dp_scaffold(cfg, linreg_loss, w0, data.client_batches(),
+                               rounds=rounds, tau=tau, eta_l=eta_l, key=key,
+                               eval_fn=eval_fn)
+    return run_federated(_make_algorithm(setting, alg, m, d), linreg_loss, w0,
+                         data.client_batches(), rounds=rounds, tau=tau,
+                         eta_l=eta_l, key=key, eval_fn=eval_fn)
 
 
 def main(*, clients: int = 400, rounds: int = 30, tau: int = 20, seeds: int = 2):
     """Defaults slightly reduced from the paper's M=1000/T=50/5 seeds to fit
-    the single-core CI budget; pass the paper's values explicitly to match."""
+    the single-core CI budget; pass the paper's values explicitly to match.
+    Each (setting, algorithm) cell runs all seeds as one batched program."""
     rows = []
     curves = []
     for setting, d in (("cdp", 500), ("ldp-gauss", 100), ("ldp-privunit", 100)):
         data = make_synthetic_linreg(jax.random.PRNGKey(0), clients, d)
         w0 = jnp.zeros(d)
         for alg in ("fedavg", "fedexp", "scaffold"):
-            finals, final_dists = [], []
-            for s in range(seeds):
-                r = _run_setting(setting, alg, data, w0, rounds=rounds, tau=tau, seed=s)
-                hist = [float(x) for x in r.metric_history]
-                finals.append(hist)
-                final_dists.append(float(distance_to_opt(data.w_star)(r.final_w)))
-                if s == 0:
-                    for t, v in enumerate(hist):
-                        curves.append([setting, alg, t, v])
+            r = _run_setting_batched(setting, alg, data, w0, rounds=rounds,
+                                     tau=tau, seeds=seeds)
+            ev = distance_to_opt(data.w_star)
+            final_dists = [float(ev(r.final_w[s])) for s in range(seeds)]
+            for t, v in enumerate(float(x) for x in r.metric_history[0]):
+                curves.append([setting, alg, t, v])
             mu, sd = mean_std(final_dists)
             rows.append([setting, alg, d, mu, sd])
     write_csv("e1_synthetic_curves.csv", ["setting", "algorithm", "round", "dist"], curves)

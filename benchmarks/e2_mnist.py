@@ -12,12 +12,11 @@ import math
 import jax
 import jax.numpy as jnp
 
-from benchmarks.common import mean_std, print_table, write_csv
-from repro.core.fedexp import make_algorithm
+from benchmarks.common import make_dp_algorithm, mean_std, print_table, write_csv
 from repro.data.dirichlet import client_image_batches, dirichlet_partition
 from repro.data.images import make_image_dataset
 from repro.fedsim.scaffold import DPScaffoldConfig, run_dp_scaffold
-from repro.fedsim.server import run_federated
+from repro.fedsim.server import run_federated, run_federated_batched
 from repro.models.cnn import accuracy_fn, make_cnn, masked_xent_loss
 
 # (eta_l, C): LDP rows follow the paper's Table 2; the CDP row is re-selected
@@ -30,14 +29,20 @@ HP = {
 }
 
 
-def _make_problem(setting: str, clients: int, seed: int):
-    dataset = make_image_dataset(jax.random.PRNGKey(7))
+def _make_problem(setting: str, clients: int, seed: int, dataset=None):
+    if dataset is None:  # seed-independent; callers hoist it across seeds
+        dataset = make_image_dataset(jax.random.PRNGKey(7))
     part = dirichlet_partition(seed, jax.device_get(dataset.train_y), clients, alpha=0.3)
     batches = client_image_batches(dataset, part)
     model = make_cnn(jax.random.PRNGKey(100 + seed), "cdp" if setting == "cdp" else "ldp")
     loss = masked_xent_loss(model)
     eval_fn = accuracy_fn(model, dataset.test_x, dataset.test_y)
     return model, loss, eval_fn, batches
+
+
+def _make_e2_algorithm(setting: str, alg: str, clients: int, dim: int):
+    _, c = HP[setting][alg]
+    return make_dp_algorithm(setting, alg, clip=c, clients=clients, dim=dim)
 
 
 def _run(setting, alg, model, loss, eval_fn, batches, *, clients, rounds, tau, seed):
@@ -49,37 +54,57 @@ def _run(setting, alg, model, loss, eval_fn, batches, *, clients, rounds, tau, s
         cfg = DPScaffoldConfig(clip_norm=c, sigma=sigma, central=central, num_clients=clients)
         return run_dp_scaffold(cfg, loss, model.init_flat, batches, rounds=rounds,
                                tau=tau, eta_l=eta_l, key=key, eval_fn=eval_fn)
-    if setting == "cdp":
-        name = "cdp-fedexp" if alg == "fedexp" else "dp-fedavg-cdp"
-        algorithm = make_algorithm(name, clip_norm=c, sigma=5 * c / math.sqrt(clients),
-                                   num_clients=clients)
-    elif setting == "ldp-gauss":
-        name = "ldp-fedexp-gauss" if alg == "fedexp" else "dp-fedavg-ldp-gauss"
-        algorithm = make_algorithm(name, clip_norm=c, sigma=0.7 * c)
-    else:
-        name = "ldp-fedexp-privunit" if alg == "fedexp" else "dp-fedavg-privunit"
-        algorithm = make_algorithm(name, clip_norm=c, eps0=2.0, eps1=2.0, eps2=2.0,
-                                   dim=model.dim)
+    algorithm = _make_e2_algorithm(setting, alg, clients, model.dim)
     return run_federated(algorithm, loss, model.init_flat, batches, rounds=rounds,
                          tau=tau, eta_l=eta_l, key=key, eval_fn=eval_fn)
 
 
+def _run_batched(setting, alg, problems, *, clients, rounds, tau, seeds):
+    """All seeds as ONE batched program: per-seed model inits and Dirichlet
+    partitions ride a leading seed axis (batched_w0 / batched_data); the
+    architecture, loss, and eval closure are shared."""
+    model, loss, eval_fn, _ = problems[0]
+    eta_l, _c = HP[setting][alg]
+    keys = jnp.stack([jax.random.PRNGKey(2000 + s) for s in range(seeds)])
+    w0s = jnp.stack([p[0].init_flat for p in problems])
+    batches = {k: jnp.stack([p[3][k] for p in problems])
+               for k in problems[0][3]}
+    algorithm = _make_e2_algorithm(setting, alg, clients, model.dim)
+    return run_federated_batched(algorithm, loss, w0s, batches, rounds=rounds,
+                                 tau=tau, eta_l=eta_l, keys=keys, eval_fn=eval_fn,
+                                 batched_w0=True, batched_data=True)
+
+
 def main(*, clients: int = 150, rounds: int = 25, tau: int = 10, seeds: int = 1):
     """Reduced from the paper's M=1000/T=50/5 seeds for the single-core CI
-    budget (noise scale keeps the paper's sigma = 5C/sqrt(M) formula)."""
+    budget (noise scale keeps the paper's sigma = 5C/sqrt(M) formula).
+    Non-scaffold cells run all seeds as one batched scan-engine program."""
     rows, curves = [], []
+    dataset = make_image_dataset(jax.random.PRNGKey(7))  # shared by all seeds
     for setting in ("cdp", "ldp-gauss", "ldp-privunit"):
+        problems = [_make_problem(setting, clients, s, dataset=dataset)
+                    for s in range(seeds)]
         for alg in ("fedavg", "fedexp", "scaffold"):
             accs = []
-            for s in range(seeds):
-                model, loss, eval_fn, batches = _make_problem(setting, clients, s)
-                r = _run(setting, alg, model, loss, eval_fn, batches,
-                         clients=clients, rounds=rounds, tau=tau, seed=s)
-                hist = [float(x) for x in r.metric_history]
-                accs.append(100.0 * sum(hist[-5:]) / 5.0)  # Table 4 protocol
-                if s == 0:
-                    for t, v in enumerate(hist):
-                        curves.append([setting, alg, t, 100.0 * v])
+            if alg == "scaffold":
+                for s in range(seeds):
+                    model, loss, eval_fn, batches = problems[s]
+                    r = _run(setting, alg, model, loss, eval_fn, batches,
+                             clients=clients, rounds=rounds, tau=tau, seed=s)
+                    hist = [float(x) for x in r.metric_history]
+                    accs.append(100.0 * sum(hist[-5:]) / 5.0)  # Table 4 protocol
+                    if s == 0:
+                        for t, v in enumerate(hist):
+                            curves.append([setting, alg, t, 100.0 * v])
+            else:
+                r = _run_batched(setting, alg, problems, clients=clients,
+                                 rounds=rounds, tau=tau, seeds=seeds)
+                for s in range(seeds):
+                    hist = [float(x) for x in r.metric_history[s]]
+                    accs.append(100.0 * sum(hist[-5:]) / 5.0)  # Table 4 protocol
+                    if s == 0:
+                        for t, v in enumerate(hist):
+                            curves.append([setting, alg, t, 100.0 * v])
             mu, sd = mean_std(accs)
             rows.append([setting, alg, mu, sd])
     write_csv("e2_mnistlike_curves.csv", ["setting", "algorithm", "round", "acc"], curves)

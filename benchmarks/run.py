@@ -1,8 +1,9 @@
-"""Benchmark driver: one benchmark per paper table/figure + the roofline table.
+"""Benchmark driver: one benchmark per paper table/figure + perf tracking.
 
     PYTHONPATH=src python -m benchmarks.run             # everything
     PYTHONPATH=src python -m benchmarks.run --only e3 e4
-    PYTHONPATH=src python -m benchmarks.run --quick     # reduced sizes
+    PYTHONPATH=src python -m benchmarks.run --quick     # reduced sizes (CI)
+    PYTHONPATH=src python -m benchmarks.run --json      # + results/bench/*.json
 
 Benchmarks:
     e1  Fig. 1 left   — synthetic linreg convergence (3 DP settings x 3 algs)
@@ -11,6 +12,8 @@ Benchmarks:
     e4  Table 1       — privacy budgets
     e5  Fig. 3        — eta_g trajectories
     e6  (beyond-paper) FedOpt server-lr sensitivity vs hyperparameter-free
+    e7  engine throughput — scan engine vs per-round dispatch; always emits
+        BENCH_engine.json (results/bench/ + repo root) for trajectory tracking
     roofline          — §Roofline tables (baseline + optimized) from dry-runs
 """
 from __future__ import annotations
@@ -18,46 +21,72 @@ from __future__ import annotations
 import argparse
 import time
 
+ALL = ("e1", "e2", "e3", "e4", "e5", "e6", "e7", "roofline")
+
 
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", nargs="*", default=None,
-                    help="subset of: e1 e2 e3 e4 e5 roofline")
+                    help=f"subset of: {' '.join(ALL)}")
     ap.add_argument("--quick", action="store_true", help="reduced sizes (CI)")
+    ap.add_argument("--json", action="store_true",
+                    help="emit results/bench/<name>.json per benchmark")
     args = ap.parse_args()
-    which = set(args.only) if args.only else {"e1", "e2", "e3", "e4", "e5", "e6", "roofline"}
+    which = set(args.only) if args.only else set(ALL)
+    if args.quick and not args.only and "e2" in which:
+        # the CNN cells compile for ~100 s EACH on a 2-vCPU CI box (seed
+        # state was no faster); e2 stays full-run / --only-e2 territory
+        which.discard("e2")
+        print("skipping e2 under --quick (CNN cells compile ~100 s each; "
+              "run with --only e2 to include it)")
+
+    emitted = {}
+
+    def record(name, rows):
+        if args.json and rows is not None:
+            from benchmarks.common import write_json
+            emitted[name] = write_json(f"{name}.json", {"benchmark": name,
+                                                        "quick": args.quick,
+                                                        "rows": rows})
 
     t0 = time.time()
     if "e4" in which:  # closed-form, instant
         from benchmarks import e4_privacy
-        e4_privacy.main()
+        record("e4_privacy", e4_privacy.main())
     if "e3" in which:
         from benchmarks import e3_stepsize
         if args.quick:
-            e3_stepsize.main(ms=(50, 200, 1000), trials=4)
+            record("e3_stepsize", e3_stepsize.main(ms=(50, 200, 1000), trials=4))
         else:
-            e3_stepsize.main()
+            record("e3_stepsize", e3_stepsize.main())
     if "e1" in which:
         from benchmarks import e1_synthetic
         if args.quick:
-            e1_synthetic.main(clients=300, rounds=20, seeds=2)
+            record("e1_synthetic", e1_synthetic.main(clients=300, rounds=20, seeds=2))
         else:
-            e1_synthetic.main()
+            record("e1_synthetic", e1_synthetic.main())
     if "e5" in which:
         from benchmarks import e5_trajectories
         if args.quick:
-            e5_trajectories.main(clients=300, rounds=20)
+            record("e5_trajectories", e5_trajectories.main(clients=300, rounds=20))
         else:
-            e5_trajectories.main()
+            record("e5_trajectories", e5_trajectories.main())
     if "e2" in which:
         from benchmarks import e2_mnist
         if args.quick:
-            e2_mnist.main(clients=100, rounds=10, seeds=1)
+            record("e2_mnist", e2_mnist.main(clients=60, rounds=5, seeds=1))
         else:
-            e2_mnist.main()
+            record("e2_mnist", e2_mnist.main())
     if "e6" in which:
         from benchmarks import e6_fedopt_ablation
-        e6_fedopt_ablation.main()
+        if args.quick:
+            record("e6_fedopt", e6_fedopt_ablation.main(
+                clients=150, dim=80, rounds=10, lr_grid=(0.01, 0.1, 0.3)))
+        else:
+            record("e6_fedopt", e6_fedopt_ablation.main())
+    if "e7" in which:
+        from benchmarks import e7_engine_throughput
+        record("e7_engine", e7_engine_throughput.main(quick=args.quick))
     if "roofline" in which:
         import os as _os
         from benchmarks import roofline_table
@@ -71,6 +100,8 @@ def main() -> None:
             importlib.reload(roofline_table)
         roofline_table.main("16x16", label="optimized")
         roofline_table.main("2x16x16", label="optimized")
+    if emitted:
+        print("json results:", ", ".join(sorted(emitted.values())))
     print(f"\nall benchmarks done in {time.time() - t0:.1f}s; CSVs in results/bench/")
 
 

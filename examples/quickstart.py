@@ -4,6 +4,12 @@
 
 Runs the paper's CDP setting (M=1000 clients, tau=20 local steps, 50 rounds)
 and prints the distance to the shared optimum plus the adaptive step size.
+
+The chunked-scan engine compiles all 50 rounds as ONE XLA program (histories
+come back as stacked scan outputs); pass ``chunk_rounds=k`` to
+``run_federated`` to trade compile time for ceil(50/k) dispatches instead,
+or ``engine="eager"`` for the legacy one-program-per-round loop (see
+DESIGN.md §8 and benchmarks/e7_engine_throughput.py).
 """
 import math
 import sys

@@ -7,11 +7,26 @@ exactly three reductions per round (Algorithms 1 & 2):
     mean_sq   = (1/M) sum_i ||c_i||^2            -- FedEXP numerator statistic
     agg_sq    = ||cbar||^2                       -- FedEXP denominator
 
-``aggregate_stats`` is the pure-jnp reference; ``fused_clip_aggregate``
-performs clip -> (optional noise) -> the three reductions in one pass and can
-be served by the Pallas TPU kernel ``repro.kernels.dp_aggregate`` (the naive
-composition makes three passes over the (M, d) update matrix; the fused kernel
-makes one — see DESIGN.md §5).
+``aggregate_stats`` is the jnp reference; ``fused_clip_aggregate`` performs
+clip -> (optional noise) -> the three reductions and routes between backends
+(see DESIGN.md §5 and §8):
+
+    "jnp"          one elementwise pass + BLAS reductions.  The column sum is
+                   expressed as ``ones @ u`` because XLA:CPU's strided
+                   axis-0 reduce runs ~15x below memcpy bandwidth while the
+                   BLAS matvec saturates it; the per-row square norms use the
+                   contiguous axis-1 reduce.  This is the cross-backend
+                   fallback and the oracle for the kernel tests.
+    "kernel"       the fused Pallas ``dp_aggregate`` kernel (one pass over
+                   HBM; compiled on TPU, interpret elsewhere), with the
+                   LDP noise matrix materialized by the caller or from
+                   ``noise_key``.
+    "kernel-fused" the same kernel drawing the Gaussian noise *inside* the
+                   kernel (per-block PRNG, DESIGN.md §8), eliminating the
+                   (M, d) noise write+read from HBM entirely.
+    "auto"         kernel-fused (when noise is requested) or kernel on TPU;
+                   the tuned jnp path on CPU/GPU, where interpret-mode Pallas
+                   cannot beat BLAS.
 """
 from __future__ import annotations
 
@@ -20,7 +35,7 @@ import dataclasses
 import jax
 import jax.numpy as jnp
 
-__all__ = ["RoundStats", "aggregate_stats", "fused_clip_aggregate"]
+__all__ = ["RoundStats", "aggregate_stats", "fused_clip_aggregate", "resolve_backend"]
 
 _EPS = 1e-12
 
@@ -35,46 +50,109 @@ class RoundStats:
     mean_sq_clipped: jax.Array | None = None  # mean_i ||Delta_i||^2 (pre-noise; CDP only)
 
 
+def _colmean(updates: jax.Array) -> jax.Array:
+    """Column mean via matvec: XLA:CPU's axis-0 reduce is ~15x slower."""
+    m = updates.shape[0]
+    ones = jnp.ones((m,), jnp.float32)
+    return (ones @ updates) / m
+
+
 def aggregate_stats(updates: jax.Array) -> RoundStats:
     """Reference reductions over an ``(M, d)`` matrix of released updates."""
-    cbar = jnp.mean(updates, axis=0)
+    cbar = _colmean(updates)
     mean_sq = jnp.mean(jnp.sum(jnp.square(updates), axis=-1))
     agg_sq = jnp.sum(jnp.square(cbar))
     return RoundStats(cbar=cbar, mean_sq=mean_sq, agg_sq=agg_sq)
 
 
+def resolve_backend(backend: str | None, *, wants_noise_gen: bool = False) -> str:
+    """Map "auto"/None to a concrete backend for the current JAX platform."""
+    if backend in (None, "auto"):
+        if jax.default_backend() == "tpu":
+            return "kernel-fused" if wants_noise_gen else "kernel"
+        return "jnp"
+    return backend
+
+
 def fused_clip_aggregate(
     raw_updates: jax.Array,
-    clip_norm: float,
+    clip_norm,
     noise: jax.Array | None = None,
     *,
+    noise_key: jax.Array | None = None,
+    noise_sigma=None,
+    backend: str = "auto",
     use_kernel: bool = False,
-    interpret: bool = True,
+    interpret: bool | None = None,
+    block_m: int | None = None,
 ) -> RoundStats:
     """Clip rows to L2 <= C, optionally add per-client noise, and reduce.
 
     Args:
       raw_updates: (M, d) raw client updates.
-      clip_norm: clipping threshold C.
-      noise: optional (M, d) noise matrix (LDP Gaussian); None for CDP (noise
-        is added to the *mean* by the caller, which needs ``mean_sq_clipped``).
-      use_kernel: route through the Pallas ``dp_aggregate`` kernel.
-      interpret: run the kernel in interpreter mode (CPU container).
+      clip_norm: clipping threshold C (python float or traced scalar).
+      noise: optional pre-materialized (M, d) noise matrix (LDP Gaussian);
+        None for CDP (noise is added to the *mean* by the caller, which needs
+        ``mean_sq_clipped``).
+      noise_key: PRNG key for LDP Gaussian noise of std ``noise_sigma``;
+        the backend decides whether to materialize it (jnp / kernel) or draw
+        it inside the kernel (kernel-fused).  Mutually exclusive with
+        ``noise``.
+      noise_sigma: noise std (python float or traced scalar), with noise_key.
+      backend: "auto" | "jnp" | "kernel" | "kernel-fused" (see module doc).
+      use_kernel: legacy alias for backend="kernel".
+      interpret: run the Pallas kernel in interpreter mode; None = auto
+        (interpret everywhere but TPU).
+      block_m: kernel row-block size; None = shape-based heuristic.
 
     Returns RoundStats where ``mean_sq`` is computed on the *released* c_i
     (post-noise if noise given) and ``mean_sq_clipped`` on the clipped
     deltas (pre-noise).
     """
-    if use_kernel:
+    if noise is not None and noise_key is not None:
+        raise ValueError("pass either a materialized `noise` or `noise_key`, not both")
+    if noise_key is not None and noise_sigma is None:
+        # without this, the kernel-fused path would default sigma to 0 and
+        # silently release UN-noised updates — a privacy-guarantee violation
+        raise ValueError("`noise_key` requires `noise_sigma`")
+    wants_noise_gen = noise_key is not None
+    if use_kernel and backend == "auto":
+        backend = "kernel"
+    backend = resolve_backend(backend, wants_noise_gen=wants_noise_gen)
+
+    if backend in ("kernel", "kernel-fused"):
         from repro.kernels.dp_aggregate import ops as _ops
 
-        return _ops.dp_aggregate(raw_updates, clip_norm, noise, interpret=interpret)
+        if backend == "kernel" and wants_noise_gen:
+            noise = noise_sigma * jax.random.normal(
+                noise_key, raw_updates.shape, raw_updates.dtype)
+            noise_key = None
+        return _ops.dp_aggregate(
+            raw_updates, clip_norm, noise,
+            noise_key=noise_key if backend == "kernel-fused" else None,
+            noise_sigma=noise_sigma if backend == "kernel-fused" else None,
+            interpret=interpret, block_m=block_m)
 
-    norms = jnp.linalg.norm(raw_updates, axis=-1)
-    scale = jnp.minimum(1.0, clip_norm / jnp.maximum(norms, _EPS))
+    if backend != "jnp":
+        raise ValueError(f"unknown aggregation backend {backend!r}")
+
+    if wants_noise_gen:
+        noise = noise_sigma * jax.random.normal(noise_key, raw_updates.shape,
+                                                raw_updates.dtype)
+    sq_norms = jnp.sum(jnp.square(raw_updates), axis=-1)      # contiguous reduce
+    scale = jnp.minimum(1.0, clip_norm / jnp.maximum(jnp.sqrt(sq_norms), _EPS))
     clipped = raw_updates * scale[:, None]
-    mean_sq_clipped = jnp.mean(jnp.sum(jnp.square(clipped), axis=-1))
-    released = clipped if noise is None else clipped + noise
-    stats = aggregate_stats(released)
-    stats.mean_sq_clipped = mean_sq_clipped
-    return stats
+    mean_sq_clipped = jnp.mean(sq_norms * jnp.square(scale))
+    if noise is None:
+        released = clipped
+        mean_sq = mean_sq_clipped
+    else:
+        released = clipped + noise
+        mean_sq = jnp.mean(jnp.sum(jnp.square(released), axis=-1))
+    cbar = _colmean(released)
+    return RoundStats(
+        cbar=cbar,
+        mean_sq=mean_sq,
+        agg_sq=jnp.sum(jnp.square(cbar)),
+        mean_sq_clipped=mean_sq_clipped,
+    )

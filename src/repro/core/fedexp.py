@@ -11,6 +11,14 @@ Client-side randomization (clipping + LDP noise) is executed inside
 ``apply_round`` with independent per-client keys — mathematically identical to
 clients randomizing locally, which is how the privacy guarantee is stated.
 
+Engine contract (DESIGN.md §8): algorithm dataclasses are FROZEN (hashable by
+config, so the scan engine caches one compiled program per configuration) and
+``RoundAux`` is fixed-shape — optional diagnostics are NaN sentinels, never
+None — so a round can live inside ``jax.lax.scan``.  Algorithms that release
+through ``fused_clip_aggregate`` carry a ``backend`` field ("auto" routes to
+the Pallas kernel on TPU with in-kernel noise where applicable, and to the
+tuned jnp path elsewhere).
+
 Implemented algorithms (paper names):
     FedAvg, FedEXP                       -- non-private references
     DP-FedAvg (LDP-Gaussian / CDP)       -- McMahan et al. 2017b
@@ -48,12 +56,22 @@ __all__ = [
 
 @dataclasses.dataclass
 class RoundAux:
-    """Diagnostics for one round (logged by fedsim / benchmarks)."""
+    """Diagnostics for one round (logged by fedsim / benchmarks).
+
+    Every field is a fixed-shape scalar array: diagnostics an algorithm does
+    not produce are NaN, NOT None, so one round is scan-compatible (the
+    engine stacks these across rounds without Python-level branching).
+    """
 
     eta_g: jax.Array
     eta_naive: jax.Array | None = None   # Eq. (3), for the Fig. 2 ablation
     eta_target: jax.Array | None = None  # Eq. (5), oracle diagnostic
     update_norm: jax.Array | None = None
+
+    def __post_init__(self):
+        for f in ("eta_naive", "eta_target", "update_norm"):
+            if getattr(self, f) is None:
+                setattr(self, f, jnp.float32(jnp.nan))
 
 
 class ServerAlgorithm:
@@ -83,7 +101,7 @@ class ServerAlgorithm:
 # Non-private references
 # ---------------------------------------------------------------------------
 
-@dataclasses.dataclass
+@dataclasses.dataclass(frozen=True)
 class FedAvg(ServerAlgorithm):
     name: str = "fedavg"
     is_private: bool = False
@@ -94,7 +112,7 @@ class FedAvg(ServerAlgorithm):
         return w_next, RoundAux(eta_g=jnp.float32(1.0), update_norm=jnp.linalg.norm(stats.cbar))
 
 
-@dataclasses.dataclass
+@dataclasses.dataclass(frozen=True)
 class FedEXP(ServerAlgorithm):
     name: str = "fedexp"
     is_private: bool = False
@@ -109,23 +127,24 @@ class FedEXP(ServerAlgorithm):
 # LDP — Gaussian mechanism
 # ---------------------------------------------------------------------------
 
-@dataclasses.dataclass
+@dataclasses.dataclass(frozen=True)
 class DPFedAvgLDPGaussian(ServerAlgorithm):
     clip_norm: float
     sigma: float
     name: str = "dp-fedavg-ldp-gauss"
+    backend: str = "auto"
 
     def _release(self, key, raw_deltas):
-        m, d = raw_deltas.shape
-        noise = self.sigma * jax.random.normal(key, (m, d), raw_deltas.dtype)
-        return fused_clip_aggregate(raw_deltas, self.clip_norm, noise)
+        return fused_clip_aggregate(raw_deltas, self.clip_norm,
+                                    noise_key=key, noise_sigma=self.sigma,
+                                    backend=self.backend)
 
     def apply_round(self, key, w, raw_deltas):
         stats = self._release(key, raw_deltas)
         return w + stats.cbar, RoundAux(eta_g=jnp.float32(1.0))
 
 
-@dataclasses.dataclass
+@dataclasses.dataclass(frozen=True)
 class LDPFedEXPGaussian(DPFedAvgLDPGaussian):
     """Algorithm 1 with the bias-corrected step size, Eq. (6)."""
 
@@ -147,7 +166,7 @@ class LDPFedEXPGaussian(DPFedAvgLDPGaussian):
 # LDP — PrivUnit
 # ---------------------------------------------------------------------------
 
-@dataclasses.dataclass
+@dataclasses.dataclass(frozen=True)
 class DPFedAvgPrivUnit(ServerAlgorithm):
     clip_norm: float
     eps0: float
@@ -157,8 +176,8 @@ class DPFedAvgPrivUnit(ServerAlgorithm):
     name: str = "dp-fedavg-privunit"
 
     def __post_init__(self):
-        self.pu = mech.make_privunit_params(self.dim, self.eps0, self.eps1)
-        self.sc = mech.make_scalardp_params(self.eps2, self.clip_norm)
+        object.__setattr__(self, "pu", mech.make_privunit_params(self.dim, self.eps0, self.eps1))
+        object.__setattr__(self, "sc", mech.make_scalardp_params(self.eps2, self.clip_norm))
 
     def _release(self, key, raw_deltas):
         m, _ = raw_deltas.shape
@@ -176,7 +195,7 @@ class DPFedAvgPrivUnit(ServerAlgorithm):
         return w + stats.cbar, RoundAux(eta_g=jnp.float32(1.0))
 
 
-@dataclasses.dataclass
+@dataclasses.dataclass(frozen=True)
 class LDPFedEXPPrivUnit(DPFedAvgPrivUnit):
     """Algorithm 1 with the PrivUnit norm-estimation step size, Eq. (7)."""
 
@@ -198,16 +217,18 @@ class LDPFedEXPPrivUnit(DPFedAvgPrivUnit):
 # CDP
 # ---------------------------------------------------------------------------
 
-@dataclasses.dataclass
+@dataclasses.dataclass(frozen=True)
 class DPFedAvgCDP(ServerAlgorithm):
     clip_norm: float
     sigma: float           # paper's sigma; server noise std is sigma/sqrt(M)
     num_clients: int
     name: str = "dp-fedavg-cdp"
+    backend: str = "auto"
 
     def _release(self, key, raw_deltas):
         d = raw_deltas.shape[-1]
-        stats = fused_clip_aggregate(raw_deltas, self.clip_norm, noise=None)
+        stats = fused_clip_aggregate(raw_deltas, self.clip_norm, noise=None,
+                                     backend=self.backend)
         server_noise = (self.sigma / jnp.sqrt(float(self.num_clients))) * jax.random.normal(key, (d,))
         cbar = stats.cbar + server_noise
         return stats, cbar
@@ -217,7 +238,7 @@ class DPFedAvgCDP(ServerAlgorithm):
         return w + cbar, RoundAux(eta_g=jnp.float32(1.0))
 
 
-@dataclasses.dataclass
+@dataclasses.dataclass(frozen=True)
 class CDPFedEXP(DPFedAvgCDP):
     """Algorithm 2 with the privatized-numerator step size, Eq. (8).
 
@@ -247,7 +268,7 @@ class CDPFedEXP(DPFedAvgCDP):
 # paper mentions but leaves out "for simplicity"
 # ---------------------------------------------------------------------------
 
-@dataclasses.dataclass
+@dataclasses.dataclass(frozen=True)
 class CDPFedEXPAdaptiveClip(ServerAlgorithm):
     """CDP-FedEXP with a quantile-tracked clipping threshold.
 
@@ -257,6 +278,9 @@ class CDPFedEXPAdaptiveClip(ServerAlgorithm):
     fraction. The step-size rule reads the same round's C through sigma_xi =
     d * (zC)^2 / M — everything stays hyperparameter-free except gamma=0.5
     (a universal constant in Andrew et al.).
+
+    The clip threshold is a TRACED scalar that changes every round; the
+    kernel backend takes it as a prefetched operand, so no recompiles.
     """
 
     z_mult: float               # noise multiplier; per-round std = z*C/sqrt(M)
@@ -267,6 +291,7 @@ class CDPFedEXPAdaptiveClip(ServerAlgorithm):
     clip_lr: float = 0.2
     sigma_b: float = 10.0
     name: str = "cdp-fedexp-adaptive-clip"
+    backend: str = "auto"
 
     def init_state(self, w):
         from repro.core import adaptive_clip as ac
@@ -278,7 +303,7 @@ class CDPFedEXPAdaptiveClip(ServerAlgorithm):
         k_noise, k_xi, k_bit = jax.random.split(key, 3)
         c = state.clip
         sigma = self.z_mult * c                     # paper's sigma, tracking C
-        stats = fused_clip_aggregate(raw_deltas, c, None)
+        stats = fused_clip_aggregate(raw_deltas, c, None, backend=self.backend)
         server_noise = (sigma / jnp.sqrt(float(m))) * jax.random.normal(k_noise, (d,))
         cbar = stats.cbar + server_noise
         sigma_xi = d * sigma**2 / m
@@ -300,7 +325,7 @@ class CDPFedEXPAdaptiveClip(ServerAlgorithm):
 # FedOpt family (Reddi et al., 2021) — the servers the paper argues against
 # ---------------------------------------------------------------------------
 
-@dataclasses.dataclass
+@dataclasses.dataclass(frozen=True)
 class DPFedAdamCDP(DPFedAvgCDP):
     """DP-FedAdam: server Adam over the privatized pseudo-gradient.
 
@@ -317,7 +342,7 @@ class DPFedAdamCDP(DPFedAvgCDP):
 
     def __post_init__(self):
         from repro import optim
-        self._opt = optim.adam(lr=self.server_lr)
+        object.__setattr__(self, "_opt", optim.adam(lr=self.server_lr))
 
     def init_state(self, w):
         return self._opt.init(w)
@@ -335,24 +360,33 @@ class DPFedAdamCDP(DPFedAvgCDP):
 # Registry
 # ---------------------------------------------------------------------------
 
+def _backend(kw) -> str:
+    return kw.get("backend", "auto")
+
+
 _FACTORIES: dict[str, Callable[..., ServerAlgorithm]] = {
     "fedavg": lambda **kw: FedAvg(),
     "fedexp": lambda **kw: FedEXP(),
-    "dp-fedavg-ldp-gauss": lambda **kw: DPFedAvgLDPGaussian(kw["clip_norm"], kw["sigma"]),
-    "ldp-fedexp-gauss": lambda **kw: LDPFedEXPGaussian(kw["clip_norm"], kw["sigma"]),
+    "dp-fedavg-ldp-gauss": lambda **kw: DPFedAvgLDPGaussian(
+        kw["clip_norm"], kw["sigma"], backend=_backend(kw)),
+    "ldp-fedexp-gauss": lambda **kw: LDPFedEXPGaussian(
+        kw["clip_norm"], kw["sigma"], backend=_backend(kw)),
     "dp-fedavg-privunit": lambda **kw: DPFedAvgPrivUnit(
         kw["clip_norm"], kw["eps0"], kw["eps1"], kw["eps2"], kw["dim"]),
     "ldp-fedexp-privunit": lambda **kw: LDPFedEXPPrivUnit(
         kw["clip_norm"], kw["eps0"], kw["eps1"], kw["eps2"], kw["dim"]),
-    "dp-fedavg-cdp": lambda **kw: DPFedAvgCDP(kw["clip_norm"], kw["sigma"], kw["num_clients"]),
+    "dp-fedavg-cdp": lambda **kw: DPFedAvgCDP(
+        kw["clip_norm"], kw["sigma"], kw["num_clients"], backend=_backend(kw)),
     "cdp-fedexp": lambda **kw: CDPFedEXP(kw["clip_norm"], kw["sigma"], kw["num_clients"],
-                                         sigma_xi=kw.get("sigma_xi")),
+                                         sigma_xi=kw.get("sigma_xi"),
+                                         backend=_backend(kw)),
     "dp-fedadam-cdp": lambda **kw: DPFedAdamCDP(kw["clip_norm"], kw["sigma"],
                                                 kw["num_clients"],
-                                                server_lr=kw.get("server_lr", 0.1)),
+                                                server_lr=kw.get("server_lr", 0.1),
+                                                backend=_backend(kw)),
     "cdp-fedexp-adaptive-clip": lambda **kw: CDPFedEXPAdaptiveClip(
         z_mult=kw["z_mult"], num_clients=kw["num_clients"], dim=kw["dim"],
-        c0=kw.get("c0", 1.0)),
+        c0=kw.get("c0", 1.0), backend=_backend(kw)),
 }
 
 

@@ -3,9 +3,10 @@
 from repro.fedsim.flat import flatten_model
 from repro.fedsim.local import cohort_updates, local_update
 from repro.fedsim.scaffold import DPScaffoldConfig, run_dp_scaffold
-from repro.fedsim.server import RunResult, run_federated
+from repro.fedsim.server import RunResult, run_federated, run_federated_batched
 
 __all__ = [
     "flatten_model", "local_update", "cohort_updates",
-    "run_federated", "RunResult", "DPScaffoldConfig", "run_dp_scaffold",
+    "run_federated", "run_federated_batched", "RunResult",
+    "DPScaffoldConfig", "run_dp_scaffold",
 ]

@@ -2,8 +2,26 @@
 
 Runs T rounds of: broadcast -> vmapped local training (Algorithm 3) ->
 clip/randomize/aggregate + adaptive step size (Algorithms 1/2) -> global
-update.  One round is one jitted XLA program; the server algorithm object is
-closed over (its float fields are compile-time constants).
+update.
+
+Engine (DESIGN.md §8).  The default ``engine="scan"`` compiles the whole
+round loop as ``jax.lax.scan`` programs: T rounds run as ceil(T/chunk_rounds)
+XLA dispatches (one, by default) instead of T, per-round PRNG keys are
+``fold_in``-derived inside the scan, the eta/metric/naive/target histories
+come back as stacked scan outputs, and the trailing ``avg_last`` iterates ride
+in the scan carry so the §5 iterate average needs no host-side tail. The
+carry is donated on accelerators, reusing the weight buffer in place, and the
+compiled chunk program is cached across calls keyed on the (frozen, hashable)
+algorithm configuration — repeated runs of the same setting pay zero
+retrace/recompile, where the per-round loop re-jits every invocation.
+
+``engine="eager"`` preserves the original loop — one jitted XLA program per
+round, dispatched from Python — as the baseline that
+``benchmarks/e7_engine_throughput.py`` measures the scan engine against.
+
+``run_federated_batched`` vmaps the scan engine over seeds (optionally also
+over per-seed initializations and client data), so a whole mean±std sweep is
+ONE batched XLA program.
 
 Following §5 of the paper, the returned final model is the average of the last
 two iterates ("to mitigate the oscillating behaviour of DP-FedEXP").
@@ -11,6 +29,7 @@ two iterates ("to mitigate the oscillating behaviour of DP-FedEXP").
 from __future__ import annotations
 
 import dataclasses
+import functools
 from typing import Callable
 
 import jax
@@ -19,7 +38,7 @@ import jax.numpy as jnp
 from repro.core.fedexp import ServerAlgorithm
 from repro.fedsim.local import cohort_updates
 
-__all__ = ["RunResult", "run_federated"]
+__all__ = ["RunResult", "run_federated", "run_federated_batched"]
 
 
 @dataclasses.dataclass
@@ -30,6 +49,117 @@ class RunResult:
     metric_history: jax.Array     # (T,) eval metric per round (nan if no eval_fn)
     eta_naive_history: jax.Array | None = None
     eta_target_history: jax.Array | None = None
+
+
+def _round_step(algorithm, loss_fn, eval_fn, tau):
+    """One server round; identical computation for both engines."""
+
+    def step(w, opt_state, round_key, client_batches, eta_l):
+        deltas = cohort_updates(loss_fn, w, client_batches, tau, eta_l)
+        w_next, aux, opt_state = algorithm.apply_round_stateful(
+            round_key, w, deltas, opt_state)
+        metric = eval_fn(w_next) if eval_fn is not None else jnp.float32(jnp.nan)
+        outs = (aux.eta_g, metric, aux.eta_naive, aux.eta_target)
+        return w_next, opt_state, outs
+
+    return step
+
+
+def _fold_round_keys(key, ts):
+    """Per-round keys, derived identically by every engine."""
+    return jax.vmap(lambda t: jax.random.fold_in(key, t))(ts)
+
+
+def _scan_body(step_round, client_batches, eta_l):
+    """The one scan body both the chunked and the batched engine compile —
+    the tail-carry and key semantics the bit-exactness tests pin down."""
+
+    def body(carry, round_key):
+        w, opt_state, tail = carry
+        w_next, opt_state, outs = step_round(
+            w, opt_state, round_key, client_batches, eta_l)
+        tail = jnp.concatenate([tail[1:], w_next[None]], axis=0)
+        return (w_next, opt_state, tail), outs
+
+    return body
+
+
+def _build_scan_chunk_fn(algorithm: ServerAlgorithm, loss_fn, eval_fn,
+                         tau: int, donate: bool, unroll: int):
+    step_round = _round_step(algorithm, loss_fn, eval_fn, tau)
+
+    def chunk(carry, key, ts, client_batches, eta_l):
+        keys = _fold_round_keys(key, ts)
+        body = _scan_body(step_round, client_batches, eta_l)
+        return jax.lax.scan(body, carry, keys, unroll=min(unroll, len(ts)))
+
+    return jax.jit(chunk, donate_argnums=(0,) if donate else ())
+
+
+_cached_scan_chunk_fn = functools.lru_cache(maxsize=32)(_build_scan_chunk_fn)
+
+
+def _scan_chunk_fn(algorithm: ServerAlgorithm, loss_fn, eval_fn, tau: int,
+                   donate: bool, unroll: int):
+    """Compiled scan over a chunk of rounds, cached by configuration.
+
+    The cache key is (algorithm config, loss/eval *identity*, tau, donation,
+    unroll); round count, eta_l, and all array shapes are traced, so any two
+    calls with equal configuration share one compiled program per chunk
+    length.  For the cache to hit, callers must hold onto their loss/eval
+    closures — a fresh closure per call retraces (exactly the legacy cost,
+    no worse).  ``unroll`` packs that many rounds per loop trip — XLA:CPU
+    penalizes ops inside while-loop bodies, and a small unroll claws most of
+    it back for ~proportional compile time (results are bit-identical).
+
+    Algorithms with unhashable fields (arrays, user-defined non-frozen
+    dataclasses) can't be cache keys; they get an uncached build — again the
+    legacy per-call-retrace cost, never an error.
+    """
+    try:
+        return _cached_scan_chunk_fn(algorithm, loss_fn, eval_fn, tau,
+                                     donate, unroll)
+    except TypeError:
+        return _build_scan_chunk_fn(algorithm, loss_fn, eval_fn, tau,
+                                    donate, unroll)
+
+
+def _build_batched_run_fn(algorithm: ServerAlgorithm, loss_fn, eval_fn,
+                          tau: int, tail_n: int, batched_w0: bool,
+                          batched_data: bool):
+    step_round = _round_step(algorithm, loss_fn, eval_fn, tau)
+
+    def run_one(w0, key, client_batches, eta_l, ts):
+        keys = _fold_round_keys(key, ts)
+        carry = (w0, algorithm.init_state(w0),
+                 jnp.zeros((tail_n,) + w0.shape, w0.dtype))
+        body = _scan_body(step_round, client_batches, eta_l)
+        (w, _, tail), outs = jax.lax.scan(body, carry, keys)
+        return (jnp.mean(tail, axis=0), w) + outs
+
+    in_axes = (0 if batched_w0 else None, 0, 0 if batched_data else None,
+               None, None)
+    return jax.jit(jax.vmap(run_one, in_axes=in_axes))
+
+
+_cached_batched_run_fn = functools.lru_cache(maxsize=32)(_build_batched_run_fn)
+
+
+def _batched_run_fn(algorithm: ServerAlgorithm, loss_fn, eval_fn, tau: int,
+                    tail_n: int, batched_w0: bool, batched_data: bool):
+    """vmapped-over-seeds full run (single scan, no chunking); cached with
+    the same hashability fallback as `_scan_chunk_fn`."""
+    try:
+        return _cached_batched_run_fn(algorithm, loss_fn, eval_fn, tau,
+                                      tail_n, batched_w0, batched_data)
+    except TypeError:
+        return _build_batched_run_fn(algorithm, loss_fn, eval_fn, tau,
+                                     tail_n, batched_w0, batched_data)
+
+
+def _chunk_bounds(rounds: int, chunk_rounds: int | None):
+    chunk = rounds if not chunk_rounds else max(1, int(chunk_rounds))
+    return [(s, min(s + chunk, rounds)) for s in range(0, rounds, chunk)]
 
 
 def run_federated(
@@ -44,21 +174,90 @@ def run_federated(
     key: jax.Array,
     eval_fn: Callable | None = None,
     avg_last: int = 2,
+    engine: str = "scan",
+    chunk_rounds: int | None = None,
+    scan_unroll: int = 2,
 ) -> RunResult:
-    """Run T federated rounds and return the iterate-averaged final model."""
+    """Run T federated rounds and return the iterate-averaged final model.
+
+    engine="scan" (default): chunked-scan engine — ceil(T/chunk_rounds)
+    compiled programs (one when chunk_rounds is None), donated carry,
+    cross-call program cache, ``scan_unroll`` rounds per loop trip.
+    engine="eager": the legacy one-program-per-round dispatch loop.
+    """
+    if engine == "eager":
+        return _run_eager(algorithm, loss_fn, w0, client_batches, rounds=rounds,
+                          tau=tau, eta_l=eta_l, key=key, eval_fn=eval_fn,
+                          avg_last=avg_last)
+    if engine != "scan":
+        raise ValueError(f"unknown engine {engine!r}; use 'scan' or 'eager'")
+
+    tail_n = max(1, min(avg_last, rounds))
+    donate = jax.default_backend() in ("tpu", "gpu")
+    # Donation would consume the caller's w0 buffer; hand the engine a copy.
+    w = jnp.array(w0, copy=True) if donate else jnp.asarray(w0)
+    carry = (w, algorithm.init_state(w),
+             jnp.zeros((tail_n,) + w.shape, w.dtype))
+    fn = _scan_chunk_fn(algorithm, loss_fn, eval_fn, int(tau), donate,
+                        max(1, int(scan_unroll)))
+    eta_l_arr = jnp.float32(eta_l)
+
+    outs = []
+    for start, stop in _chunk_bounds(rounds, chunk_rounds):
+        carry, chunk_outs = fn(carry, key, jnp.arange(start, stop, dtype=jnp.int32),
+                               client_batches, eta_l_arr)
+        outs.append(chunk_outs)
+    etas, metrics, naives, targets = (
+        jnp.concatenate([o[i] for o in outs]) for i in range(4))
+    w_last, _, tail = carry
+    return RunResult(
+        final_w=jnp.mean(tail, axis=0),
+        last_w=w_last,
+        eta_history=etas,
+        metric_history=metrics,
+        eta_naive_history=naives,
+        eta_target_history=targets,
+    )
+
+
+def run_federated_batched(
+    algorithm: ServerAlgorithm,
+    loss_fn: Callable,
+    w0: jax.Array,
+    client_batches,
+    *,
+    rounds: int,
+    tau: int,
+    eta_l: float,
+    keys: jax.Array,
+    eval_fn: Callable | None = None,
+    avg_last: int = 2,
+    batched_w0: bool = False,
+    batched_data: bool = False,
+) -> RunResult:
+    """Run one batched program over S seeds: ``keys`` is (S,)-stacked PRNG
+    keys; set ``batched_w0`` / ``batched_data`` when w0 / client_batches carry
+    a matching leading seed axis.  Every RunResult field gains a leading (S,)
+    axis."""
+    tail_n = max(1, min(avg_last, rounds))
+    fn = _batched_run_fn(algorithm, loss_fn, eval_fn, int(tau), tail_n,
+                         bool(batched_w0), bool(batched_data))
+    final_w, last_w, etas, metrics, naives, targets = fn(
+        w0, keys, client_batches, jnp.float32(eta_l),
+        jnp.arange(rounds, dtype=jnp.int32))
+    return RunResult(final_w=final_w, last_w=last_w, eta_history=etas,
+                     metric_history=metrics, eta_naive_history=naives,
+                     eta_target_history=targets)
+
+
+def _run_eager(algorithm, loss_fn, w0, client_batches, *, rounds, tau, eta_l,
+               key, eval_fn, avg_last):
+    """Legacy engine: one jitted XLA program per round, dispatched from a
+    Python loop (re-traced per call — kept as the e7 throughput baseline)."""
+    step_round = _round_step(algorithm, loss_fn, eval_fn, tau)
 
     def one_round(w, opt_state, round_key):
-        deltas = cohort_updates(loss_fn, w, client_batches, tau, eta_l)
-        w_next, aux, opt_state = algorithm.apply_round_stateful(
-            round_key, w, deltas, opt_state)
-        metric = eval_fn(w_next) if eval_fn is not None else jnp.nan
-        outs = (
-            aux.eta_g,
-            metric,
-            aux.eta_naive if aux.eta_naive is not None else jnp.nan,
-            aux.eta_target if aux.eta_target is not None else jnp.nan,
-        )
-        return w_next, opt_state, outs
+        return step_round(w, opt_state, round_key, client_batches, eta_l)
 
     round_jit = jax.jit(one_round)
 

@@ -1,4 +1,4 @@
 from repro.kernels.dp_aggregate import ops, ref
-from repro.kernels.dp_aggregate.ops import dp_aggregate
+from repro.kernels.dp_aggregate.ops import dp_aggregate, generate_ldp_noise
 
-__all__ = ["ops", "ref", "dp_aggregate"]
+__all__ = ["ops", "ref", "dp_aggregate", "generate_ldp_noise"]

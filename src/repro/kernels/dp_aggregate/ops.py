@@ -2,7 +2,9 @@
 
 Pads (M, d) to the kernel's tiling contract, invokes the Pallas kernel (or the
 jnp oracle on request) and converts raw sums into the ``RoundStats`` consumed
-by the step-size rules.
+by the step-size rules.  The clip threshold, noise sigma, and noise seed are
+traced operands (scalar-prefetched by the kernel), so per-round values — e.g.
+the adaptive-clip threshold — do not trigger recompilation.
 """
 from __future__ import annotations
 
@@ -12,10 +14,40 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.aggregation import RoundStats
-from repro.kernels.dp_aggregate.kernel import dp_aggregate_kernel_call
+from repro.kernels.dp_aggregate.kernel import (
+    dp_aggregate_kernel_call,
+    ldp_noise_kernel_call,
+)
 from repro.kernels.dp_aggregate.ref import dp_aggregate_ref
 
-__all__ = ["dp_aggregate"]
+__all__ = ["dp_aggregate", "generate_ldp_noise", "pick_block_m"]
+
+# VMEM budget per input tile on TPU (bytes); conservative vs the ~16 MB arena
+# since the kernel holds the tile plus a handful of same-shape temporaries.
+_TPU_TILE_BYTES = 2 * 1024 * 1024
+_INTERPRET_MAX_BLOCK_M = 2048
+
+
+def pick_block_m(m: int, d_padded: int, interpret: bool) -> int:
+    """Shape-based row-block heuristic (replaces the old hardcoded 8).
+
+    Interpreter mode: one grid step when feasible — each extra step is an
+    extra python-traced block copy, and there is no VMEM to respect.
+    Compiled TPU: the largest multiple of 8 whose f32 tile fits the VMEM
+    budget, clamped to [8, 1024].
+    """
+    m8 = -(-m // 8) * 8
+    if interpret:
+        if m8 <= _INTERPRET_MAX_BLOCK_M:
+            return m8
+        # split into the fewest blocks under the cap and size them evenly, so
+        # row padding stays < 8 * nblocks (a naive cap of 2048 would pad
+        # M=2100 all the way to 4096)
+        nblocks = -(-m8 // _INTERPRET_MAX_BLOCK_M)
+        per_block = -(-m8 // nblocks)
+        return -(-per_block // 8) * 8
+    rows = _TPU_TILE_BYTES // (4 * d_padded)
+    return max(8, min(1024, (rows // 8) * 8, m8))
 
 
 def _pad_axis(x: jax.Array, axis: int, multiple: int) -> jax.Array:
@@ -28,36 +60,92 @@ def _pad_axis(x: jax.Array, axis: int, multiple: int) -> jax.Array:
     return jnp.pad(x, widths)
 
 
-@functools.partial(jax.jit, static_argnames=("clip_norm", "use_ref", "interpret", "block_m"))
-def _impl(updates, noise, clip_norm, use_ref, interpret, block_m):
-    m = updates.shape[0]
+def _key_to_seed(key: jax.Array) -> jax.Array:
+    """Fold a JAX PRNG key (typed or raw uint32 pair) to one int32 scalar."""
+    if jnp.issubdtype(key.dtype, jax.dtypes.prng_key):
+        key = jax.random.key_data(key)
+    mixed = key.reshape(-1)[0] ^ key.reshape(-1)[-1]
+    return jax.lax.bitcast_convert_type(mixed.astype(jnp.uint32), jnp.int32)
+
+
+@functools.partial(jax.jit, static_argnames=("use_ref", "interpret", "block_m", "fused"))
+def _impl(updates, noise, clip_norm, sigma, seed, use_ref, interpret, block_m, fused):
+    m, d = updates.shape
     if use_ref:
         s, sq_rel, sq_clip = dp_aggregate_ref(updates, noise, clip_norm)
     else:
         u = _pad_axis(_pad_axis(updates, 1, 128), 0, block_m)
         n = None if noise is None else _pad_axis(_pad_axis(noise, 1, 128), 0, block_m)
         s, sq_rel, sq_clip = dp_aggregate_kernel_call(
-            u, n, clip_norm, block_m=block_m, interpret=interpret)
-        s = s[: updates.shape[1]]
+            u, n, clip_norm,
+            noise_sigma=sigma if fused else None,
+            noise_seed=seed if fused else None,
+            m_true=m, d_true=d,
+            block_m=block_m, interpret=interpret)
+        s = s[:d]
     cbar = s / m
     return cbar, sq_rel / m, sq_clip / m
 
 
 def dp_aggregate(
     updates: jax.Array,
-    clip_norm: float,
+    clip_norm,
     noise: jax.Array | None = None,
     *,
+    noise_key: jax.Array | None = None,
+    noise_sigma=None,
     use_ref: bool = False,
-    interpret: bool = True,
-    block_m: int = 8,
+    interpret: bool | None = None,
+    block_m: int | None = None,
 ) -> RoundStats:
-    """Fused clip(+noise)+aggregate returning FedEXP round statistics."""
+    """Fused clip(+noise)+aggregate returning FedEXP round statistics.
+
+    Pass a materialized ``noise`` matrix OR (``noise_key``, ``noise_sigma``)
+    to draw the Gaussian noise inside the kernel (fused-noise path).
+    """
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    if block_m is None:
+        d_padded = -(-updates.shape[1] // 128) * 128
+        block_m = pick_block_m(updates.shape[0], d_padded, interpret)
+    fused = noise_key is not None
+    if fused and noise_sigma is None:
+        raise ValueError("`noise_key` requires `noise_sigma` (sigma=0 would "
+                         "silently release un-noised updates)")
+    if fused and use_ref:
+        raise ValueError("in-kernel noise has no jnp reference path; "
+                         "materialize the noise for use_ref=True")
+    seed = _key_to_seed(noise_key) if fused else jnp.int32(0)
+    sigma = jnp.asarray(noise_sigma if noise_sigma is not None else 0.0, jnp.float32)
     cbar, mean_sq, mean_sq_clipped = _impl(
-        updates, noise, float(clip_norm), use_ref, interpret, block_m)
+        updates, noise, jnp.asarray(clip_norm, jnp.float32), sigma, seed,
+        use_ref, interpret, block_m, fused)
     return RoundStats(
         cbar=cbar,
         mean_sq=mean_sq,
         agg_sq=jnp.sum(jnp.square(cbar)),
         mean_sq_clipped=mean_sq_clipped,
     )
+
+
+def generate_ldp_noise(
+    m: int,
+    d: int,
+    noise_key: jax.Array,
+    noise_sigma,
+    *,
+    interpret: bool | None = None,
+    block_m: int | None = None,
+) -> jax.Array:
+    """Materialize the (m, d) Gaussian noise the fused kernel draws in-kernel
+    for ``noise_key`` — the test oracle for the in-kernel PRNG statistics."""
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    d_padded = -(-d // 128) * 128
+    if block_m is None:
+        block_m = pick_block_m(m, d_padded, interpret)
+    m_padded = -(-m // block_m) * block_m
+    full = ldp_noise_kernel_call(
+        m_padded, d_padded, _key_to_seed(noise_key), noise_sigma,
+        block_m=block_m, interpret=interpret)
+    return full[:m, :d]

@@ -1,7 +1,10 @@
 """Property-based tests (hypothesis) for the system's invariants."""
 import math
 
-import hypothesis
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
+
 import hypothesis.strategies as st
 import jax
 import jax.numpy as jnp
