@@ -1,7 +1,11 @@
 PYTHON ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
-.PHONY: test bench-quick bench lint
+# LINT_STRICT=1 makes a missing ruff an ERROR instead of a soft skip (CI
+# always sets it; local runs without ruff keep working).
+LINT_STRICT ?=
+
+.PHONY: test bench-quick bench bench-check lint
 
 test:                      ## tier-1 test suite
 	$(PYTHON) -m pytest -x -q
@@ -12,7 +16,16 @@ bench-quick:               ## reduced-size benchmarks + JSON (CI, CPU interpret)
 bench:                     ## full benchmark suite + JSON
 	$(PYTHON) -m benchmarks.run --json
 
-lint:                      ## ruff (config in pyproject.toml)
-	@command -v ruff >/dev/null 2>&1 \
-		&& ruff check src tests benchmarks examples \
-		|| echo "ruff not installed; skipping (pip install ruff)"
+bench-check:               ## e7 quick run + regression gate vs committed BENCH_engine.json
+	$(PYTHON) -m benchmarks.run --quick --json --only e7
+	$(PYTHON) benchmarks/check_regression.py
+
+lint:                      ## ruff (config in pyproject.toml); LINT_STRICT=1 to require ruff
+	@if command -v ruff >/dev/null 2>&1; then \
+		ruff check src tests benchmarks examples; \
+	elif [ -n "$(LINT_STRICT)" ]; then \
+		echo "ERROR: ruff not installed but LINT_STRICT=1 (pip install ruff)" >&2; \
+		exit 1; \
+	else \
+		echo "ruff not installed; skipping (pip install ruff; LINT_STRICT=1 to fail instead)"; \
+	fi

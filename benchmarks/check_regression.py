@@ -1,0 +1,114 @@
+"""Benchmark regression gate: fresh e7 numbers vs the committed baseline.
+
+    PYTHONPATH=src python benchmarks/check_regression.py          # after a bench run
+    make bench-check                                              # bench-quick + gate
+
+Compares the rounds/sec headline metrics of a fresh ``BENCH_engine.json``
+(written by ``make bench-quick`` / ``benchmarks.run --only e7``) against the
+committed baseline and exits non-zero when any gated metric regressed by more
+than ``--threshold`` (default 30%).
+
+Because ``bench-quick`` OVERWRITES the repo-root ``BENCH_engine.json``, the
+baseline defaults to ``git show HEAD:BENCH_engine.json`` — the file as
+committed — with ``--baseline PATH`` as the escape hatch for detached
+checkouts.  Gated metrics are the engine-relative throughputs; the absolute
+rounds/sec are also compared but only when the fresh run's config matches
+the baseline's — and the config identity includes the device count and host
+CPU count precisely so a baseline measured on one machine class never gates
+absolute numbers on another (a slower runner would fail spuriously; ratio
+metrics are machine-relative and always gated).
+
+The committed baseline should be refreshed (copy a CI artifact or rerun
+``make bench-quick`` on the reference box) whenever a PR intentionally
+changes engine throughput.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import subprocess
+import sys
+
+# always gated: dimensionless, machine-relative speedups
+RATIO_KEYS = ("speedup_scan_vs_eager", "speedup_single_seed")
+# gated only when the run configs match: absolute throughputs
+ABS_KEYS = (
+    ("rounds_per_sec", "scan_batched_workload"),
+    ("rounds_per_sec", "scan_single_seed"),
+)
+
+
+def _get(d, path):
+    for k in path:
+        if not isinstance(d, dict) or k not in d:
+            return None
+        d = d[k]
+    return d
+
+
+def _load_baseline(path: str | None):
+    if path is not None:
+        with open(path) as f:
+            return json.load(f), path
+    try:
+        blob = subprocess.run(
+            ["git", "show", "HEAD:BENCH_engine.json"],
+            capture_output=True, text=True, check=True).stdout
+        return json.loads(blob), "git:HEAD:BENCH_engine.json"
+    except (subprocess.CalledProcessError, FileNotFoundError, json.JSONDecodeError):
+        return None, None
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--fresh", default="BENCH_engine.json",
+                    help="freshly-benchmarked JSON (default: repo root copy)")
+    ap.add_argument("--baseline", default=None,
+                    help="baseline JSON (default: HEAD's committed copy)")
+    ap.add_argument("--threshold", type=float, default=0.30,
+                    help="max tolerated fractional regression (default 0.30)")
+    args = ap.parse_args(argv)
+
+    try:
+        with open(args.fresh) as f:
+            fresh = json.load(f)
+    except (OSError, json.JSONDecodeError) as e:
+        print(f"FAIL cannot read fresh benchmark {args.fresh!r}: {e}")
+        return 2
+
+    base, base_src = _load_baseline(args.baseline)
+    if base is None:
+        print("SKIP no committed BENCH_engine.json baseline found; "
+              "gate passes vacuously (first benchmarked commit)")
+        return 0
+
+    configs_match = base.get("config") == fresh.get("config")
+    checks = [(".".join(("",) + k).strip("."), _get(base, k), _get(fresh, k))
+              for k in ([(k,) for k in RATIO_KEYS]
+                        + (list(ABS_KEYS) if configs_match else []))]
+    if not configs_match:
+        print(f"NOTE config mismatch vs baseline ({base.get('config')} != "
+              f"{fresh.get('config')}); gating ratio metrics only")
+
+    failed = []
+    for name, b, f in checks:
+        if b is None or f is None or not isinstance(b, (int, float)) or b <= 0:
+            print(f"SKIP {name}: missing/invalid in baseline or fresh run")
+            continue
+        drop = (b - f) / b
+        status = "FAIL" if drop > args.threshold else "ok  "
+        print(f"{status} {name}: baseline {b:.2f} -> fresh {f:.2f} "
+              f"({-drop:+.1%} vs -{args.threshold:.0%} floor)")
+        if drop > args.threshold:
+            failed.append(name)
+
+    if failed:
+        print(f"FAIL benchmark regression gate ({base_src}): {', '.join(failed)} "
+              f"regressed more than {args.threshold:.0%}")
+        return 1
+    print("OK  benchmark regression gate passed")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,54 @@
+"""Emit a GitHub job-summary markdown table from BENCH_engine.json.
+
+    python benchmarks/ci_summary.py >> "$GITHUB_STEP_SUMMARY"
+
+One table of per-algorithm rounds/sec (batched / scan / eager + speedups) and
+one line per client-shard count from the sharded scaling curve, so each
+(python x device-count) matrix leg publishes its throughput at a glance
+without downloading the artifact.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--json", default="BENCH_engine.json")
+    ap.add_argument("--title", default="Engine throughput")
+    args = ap.parse_args(argv)
+    try:
+        with open(args.json) as f:
+            rep = json.load(f)
+    except (OSError, json.JSONDecodeError) as e:
+        print(f"_no benchmark JSON ({e})_")
+        return 0
+
+    cfg = rep.get("config", {})
+    print(f"### {args.title}")
+    print(f"`M={cfg.get('clients')} d={cfg.get('dim')} T={cfg.get('rounds')} "
+          f"S={cfg.get('seeds')} backend={cfg.get('backend')} "
+          f"quick={cfg.get('quick')}`\n")
+    print("| algorithm | batched r/s | scan r/s | eager r/s | workload speedup |")
+    print("|---|---:|---:|---:|---:|")
+    per_alg = rep.get("rounds_per_sec", {}).get("per_algorithm", {})
+    for name, row in per_alg.items():
+        print(f"| {name} | {row.get('batched', 0):.0f} | {row.get('scan', 0):.0f} "
+              f"| {row.get('eager', 0):.0f} | {row.get('workload_speedup', 0):.1f}x |")
+
+    sharded = rep.get("sharded")
+    if sharded:
+        print(f"\n**Client-sharded engine** ({sharded.get('devices')} devices, "
+              f"{sharded.get('algorithm')}):\n")
+        print("| client shards | rounds/sec |")
+        print("|---:|---:|")
+        for n, rps in sorted(sharded.get("rounds_per_sec_by_shards", {}).items(),
+                             key=lambda kv: int(kv[0])):
+            print(f"| {n} | {rps:.0f} |")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -19,9 +19,18 @@ the simulation hot path.  Three comparisons (DESIGN.md §8):
      fused-noise kernel reads the update matrix once, full stop (1·M·d·4 B).
   3. Multi-seed batching: S seeds as one vmapped program vs S sequential
      engine runs, in aggregate rounds/sec.
+  4. Client sharding (DESIGN.md §9): the shard_map engine's rounds/sec over a
+     1..n_devices ``clients``-mesh scaling curve.  On a stock CPU run there is
+     one device and the curve is a single point; CI's 8-device leg
+     (``XLA_FLAGS=--xla_force_host_platform_device_count=8``) records the
+     full curve.  Forced host devices SHARE the physical cores, so this curve
+     measures sharding overhead (shard_map + psum vs one fused program), not
+     speedup — real scaling needs real chips; the point is that the overhead
+     stays modest and the curve exists to regress against.
 
 Emits ``results/bench/BENCH_engine.json`` and a repo-root copy
-``BENCH_engine.json`` so the perf trajectory is tracked across PRs.
+``BENCH_engine.json`` so the perf trajectory is tracked across PRs
+(``benchmarks/check_regression.py`` gates CI on it).
 """
 from __future__ import annotations
 
@@ -36,6 +45,7 @@ from benchmarks.common import RESULTS_DIR, print_table, write_csv
 from repro.core.aggregation import fused_clip_aggregate
 from repro.core.fedexp import make_algorithm
 from repro.fedsim.server import run_federated, run_federated_batched
+from repro.launch.mesh import make_client_mesh
 
 FLOAT_BYTES = 4
 
@@ -116,6 +126,30 @@ def _engine_rows(targets, w0, key, rounds, seeds, algs):
     return rows
 
 
+def _sharded_rows(targets, w0, key, rounds, *, algorithm="ldp-fedexp-gauss",
+                  alg_kwargs=(("clip_norm", 0.3), ("sigma", 0.21))):
+    """Rounds/sec of the client-sharded engine over 1..n_devices shards.
+
+    Uses the DP probe (clip + per-client noise + step size) so the sharded
+    path covers the full moment pipeline, not just the raw mean.
+    """
+    alg = make_algorithm(algorithm, **dict(alg_kwargs))
+    n_dev = len(jax.devices())
+    counts = [n for n in (1, 2, 4, 8, 16) if n <= n_dev]
+    rows = []
+    for n in counts:
+        mesh = make_client_mesh(n)
+
+        def sharded_run():
+            r = run_federated(alg, _quad_loss, w0, targets, rounds=rounds,
+                              tau=1, eta_l=0.5, key=key, mesh=mesh)
+            return (r.last_w, r.eta_history)
+
+        secs = _bench(sharded_run, repeats=3, warm=True)
+        rows.append([n, rounds / secs])
+    return rows
+
+
 def _backend_rows(m, d, key):
     u = jax.random.normal(key, (m, d))
     noise = 0.21 * jax.random.normal(jax.random.fold_in(key, 1), (m, d))
@@ -152,6 +186,7 @@ def main(*, clients: int = 300, dim: int = 4096, rounds: int = 50,
         ("ldp-fedexp-gauss", dict(clip_norm=0.3, sigma=0.21)),
     ])
     backend_rows = _backend_rows(clients, dim, key)
+    sharded_rows = _sharded_rows(targets, w0, key, rounds)
 
     print_table(
         f"E7 engine throughput (M={clients}, d={dim}, T={rounds}, S={seeds})",
@@ -159,6 +194,9 @@ def main(*, clients: int = 300, dim: int = 4096, rounds: int = 50,
          "workload speedup", "1-seed speedup"], engine_rows)
     print_table(f"E7 aggregation backends (M={clients}, d={dim})",
                 ["backend", "ms/round", "modeled HBM bytes/round"], backend_rows)
+    print_table(f"E7 client-sharded engine (M={clients}, d={dim}, "
+                f"{len(jax.devices())} devices)",
+                ["client shards", "rounds/sec"], sharded_rows)
 
     write_csv("e7_engine_throughput.csv",
               ["algorithm", "batched_rps", "scan_rps", "eager_rps",
@@ -172,7 +210,14 @@ def main(*, clients: int = 300, dim: int = 4096, rounds: int = 50,
     report = {
         "config": {"clients": clients, "dim": dim, "rounds": rounds,
                    "seeds": seeds, "quick": quick,
-                   "backend": jax.default_backend()},
+                   "backend": jax.default_backend(),
+                   # device/CPU counts are part of the config identity:
+                   # absolute rounds/sec from a different forced-host-device
+                   # leg or machine class are not comparable, and
+                   # check_regression gates only the machine-relative
+                   # speedup ratios when the configs differ
+                   "devices": len(jax.devices()),
+                   "host_cpus": os.cpu_count()},
         "rounds_per_sec": {
             "scan_batched_workload": headline[1],
             "scan_single_seed": headline[2],
@@ -186,6 +231,15 @@ def main(*, clients: int = 300, dim: int = 4096, rounds: int = 50,
         # on the vmapped scan engine vs seeds-sequential per-round dispatch
         "speedup_scan_vs_eager": headline[4],
         "speedup_single_seed": headline[5],
+        # rounds/sec of the shard_map engine per client-shard count; forced
+        # host devices share cores, so this tracks sharding OVERHEAD (see
+        # module docstring), keyed by device count for apples-to-apples
+        # regression comparisons
+        "sharded": {
+            "devices": len(jax.devices()),
+            "algorithm": "ldp-fedexp-gauss",
+            "rounds_per_sec_by_shards": {str(r[0]): r[1] for r in sharded_rows},
+        },
         "hbm_bytes_per_round_model": bytes_by,
         "fused_noise_fewer_bytes_than_materialized": (
             bytes_by["kernel_fused_noise"] < bytes_by["kernel_materialized"]
@@ -203,6 +257,11 @@ def main(*, clients: int = 300, dim: int = 4096, rounds: int = 50,
           f"({report['speedup_single_seed']:.1f}x single-seed)")
     print(f"OK  fused-noise kernel models {bytes_by['kernel_fused_noise']/2**20:.1f} MiB/round "
           f"vs {bytes_by['jnp_materialized']/2**20:.1f} MiB (jnp 3-pass + materialized noise)")
+    shard_rps = {r[0]: r[1] for r in sharded_rows}
+    top = max(shard_rps)
+    print(f"OK  client-sharded engine: {shard_rps[1]:.0f} r/s on a 1-shard mesh, "
+          f"{shard_rps[top]:.0f} r/s on {top} shard(s) "
+          f"({len(jax.devices())} visible devices)")
     return engine_rows
 
 

@@ -10,6 +10,18 @@ come back as stacked scan outputs); pass ``chunk_rounds=k`` to
 ``run_federated`` to trade compile time for ceil(50/k) dispatches instead,
 or ``engine="eager"`` for the legacy one-program-per-round loop (see
 DESIGN.md §8 and benchmarks/e7_engine_throughput.py).
+
+Client sharding (DESIGN.md §9): to partition the M=1000 clients across
+devices, pass a client mesh —
+
+    from repro.launch.mesh import make_client_mesh
+    run_federated(..., mesh=make_client_mesh())
+
+On a CPU-only box, force several host devices BEFORE jax is imported to try
+it locally (results match the single-device engine to ~1e-5):
+
+    XLA_FLAGS=--xla_force_host_platform_device_count=8 \
+        PYTHONPATH=src python examples/quickstart.py
 """
 import math
 import sys

@@ -29,7 +29,7 @@ import jax
 import jax.numpy as jnp
 
 __all__ = ["AdaptiveClipConfig", "AdaptiveClipState", "init_state", "update_clip",
-           "adaptive_clip_rho"]
+           "update_clip_from_stats", "adaptive_clip_rho"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -61,7 +61,20 @@ def update_clip(key: jax.Array, state: AdaptiveClipState, raw_norms: jax.Array,
     """
     m = raw_norms.shape[0]
     bits = (raw_norms <= state.clip).astype(jnp.float32)
-    noisy_sum = jnp.sum(bits) + cfg.sigma_b * jax.random.normal(key, ())
+    return update_clip_from_stats(key, state, jnp.sum(bits), m, cfg)
+
+
+def update_clip_from_stats(key: jax.Array, state: AdaptiveClipState,
+                           count_below, m, cfg: AdaptiveClipConfig
+                           ) -> tuple[AdaptiveClipState, jax.Array]:
+    """Quantile update from the aggregate bit SUM instead of per-client norms.
+
+    ``count_below = sum_i 1{||Delta~_i|| <= C}`` decomposes over client shards
+    (each shard sums its own masked bits, the engine psums), so this is the
+    entry point the client-sharded engine uses; ``update_clip`` reduces to it
+    and stays numerically identical.
+    """
+    noisy_sum = count_below + cfg.sigma_b * jax.random.normal(key, ())
     b_bar = jnp.clip(noisy_sum / m, 0.0, 1.0)
     new_c = state.clip * jnp.exp(-cfg.lr * (b_bar - cfg.gamma))
     new_c = jnp.clip(new_c, cfg.c_min, cfg.c_max)

@@ -27,6 +27,15 @@ clip -> (optional noise) -> the three reductions and routes between backends
     "auto"         kernel-fused (when noise is requested) or kernel on TPU;
                    the tuned jnp path on CPU/GPU, where interpret-mode Pallas
                    cannot beat BLAS.
+
+Moment-based API (DESIGN.md §9).  The three reductions above are exact sums
+over clients, so they decompose over any partition of the cohort:
+``partial_clip_moments`` computes one shard's *partial sums* (Σ c_i,
+Σ ||c_i||^2, Σ ||Delta_i||^2, Σ mask_i), which the client-sharded engine
+``psum``s across the ``clients`` mesh axis before ``RoundMoments.stats``
+normalizes them into the same ``RoundStats`` the step-size rules consume.
+A ``weight_mask`` row weight (0.0 for padding clients when M % n_shards != 0)
+keeps padded rows out of every sum, including the client count.
 """
 from __future__ import annotations
 
@@ -35,7 +44,15 @@ import dataclasses
 import jax
 import jax.numpy as jnp
 
-__all__ = ["RoundStats", "aggregate_stats", "fused_clip_aggregate", "resolve_backend"]
+__all__ = [
+    "RoundStats",
+    "RoundMoments",
+    "aggregate_stats",
+    "fused_clip_aggregate",
+    "partial_clip_moments",
+    "materialize_ldp_noise",
+    "resolve_backend",
+]
 
 _EPS = 1e-12
 
@@ -50,6 +67,49 @@ class RoundStats:
     mean_sq_clipped: jax.Array | None = None  # mean_i ||Delta_i||^2 (pre-noise; CDP only)
 
 
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class RoundMoments:
+    """Per-shard partial sums of one round's release — a psum-able pytree.
+
+    Every field is a SUM over the shard's (mask-weighted) clients, never a
+    mean, so moments from different shards combine by addition alone:
+    ``psum(local_moments, 'clients')`` is the global moments.
+    """
+
+    sum_c: jax.Array           # (d,) sum of released updates
+    sum_sq: jax.Array          # scalar, sum_i ||c_i||^2 (post-noise)
+    sum_sq_clipped: jax.Array  # scalar, sum_i ||clip(Delta_i)||^2 (pre-noise)
+    count: jax.Array           # scalar, sum of row weights (true client count)
+
+    def stats(self) -> RoundStats:
+        """Normalize global sums into the RoundStats the stepsize rules eat."""
+        return RoundStats(
+            cbar=self.sum_c / self.count,
+            mean_sq=self.sum_sq / self.count,
+            agg_sq=jnp.sum(jnp.square(self.sum_c / self.count)),
+            mean_sq_clipped=self.sum_sq_clipped / self.count,
+        )
+
+
+def materialize_ldp_noise(noise_key: jax.Array, m: int, d: int, sigma,
+                          dtype=jnp.float32, *, start: int | jax.Array = 0) -> jax.Array:
+    """(m, d) per-client LDP Gaussian noise, row i drawn from
+    ``fold_in(noise_key, start + i)``.
+
+    Keying rows by GLOBAL client index (not by one (M, d) tensor draw) is what
+    lets a client shard materialize exactly its own rows of the cohort noise:
+    shard s passes ``start = s * m_local`` and reproduces rows [start, start+m)
+    of the single-device matrix bit-for-bit.  Mathematically this is clients
+    randomizing locally with independent keys — the form in which the LDP
+    guarantee is stated.
+    """
+    idx = start + jnp.arange(m)
+    keys = jax.vmap(lambda i: jax.random.fold_in(noise_key, i))(idx)
+    rows = jax.vmap(lambda k: jax.random.normal(k, (d,), dtype))(keys)
+    return (sigma * rows).astype(dtype)
+
+
 def _colmean(updates: jax.Array) -> jax.Array:
     """Column mean via matvec: XLA:CPU's axis-0 reduce is ~15x slower."""
     m = updates.shape[0]
@@ -58,9 +118,15 @@ def _colmean(updates: jax.Array) -> jax.Array:
 
 
 def aggregate_stats(updates: jax.Array) -> RoundStats:
-    """Reference reductions over an ``(M, d)`` matrix of released updates."""
+    """Reference reductions over an ``(M, d)`` matrix of released updates.
+
+    Means are written ``sum / m`` (NOT ``jnp.mean``, which lowers to a
+    reciprocal-multiply one ULP away) so they are bit-identical to the
+    moment path's psummed-sums-then-divide normalization.
+    """
+    m = updates.shape[0]
     cbar = _colmean(updates)
-    mean_sq = jnp.mean(jnp.sum(jnp.square(updates), axis=-1))
+    mean_sq = jnp.sum(jnp.sum(jnp.square(updates), axis=-1)) / m
     agg_sq = jnp.sum(jnp.square(cbar))
     return RoundStats(cbar=cbar, mean_sq=mean_sq, agg_sq=agg_sq)
 
@@ -124,8 +190,8 @@ def fused_clip_aggregate(
         from repro.kernels.dp_aggregate import ops as _ops
 
         if backend == "kernel" and wants_noise_gen:
-            noise = noise_sigma * jax.random.normal(
-                noise_key, raw_updates.shape, raw_updates.dtype)
+            noise = materialize_ldp_noise(noise_key, *raw_updates.shape,
+                                          noise_sigma, raw_updates.dtype)
             noise_key = None
         return _ops.dp_aggregate(
             raw_updates, clip_norm, noise,
@@ -137,18 +203,20 @@ def fused_clip_aggregate(
         raise ValueError(f"unknown aggregation backend {backend!r}")
 
     if wants_noise_gen:
-        noise = noise_sigma * jax.random.normal(noise_key, raw_updates.shape,
-                                                raw_updates.dtype)
+        noise = materialize_ldp_noise(noise_key, *raw_updates.shape,
+                                      noise_sigma, raw_updates.dtype)
+    m = raw_updates.shape[0]
     sq_norms = jnp.sum(jnp.square(raw_updates), axis=-1)      # contiguous reduce
     scale = jnp.minimum(1.0, clip_norm / jnp.maximum(jnp.sqrt(sq_norms), _EPS))
     clipped = raw_updates * scale[:, None]
-    mean_sq_clipped = jnp.mean(sq_norms * jnp.square(scale))
+    # sum/m (not jnp.mean) to stay bit-identical to the sharded moment path
+    mean_sq_clipped = jnp.sum(sq_norms * jnp.square(scale)) / m
     if noise is None:
         released = clipped
         mean_sq = mean_sq_clipped
     else:
         released = clipped + noise
-        mean_sq = jnp.mean(jnp.sum(jnp.square(released), axis=-1))
+        mean_sq = jnp.sum(jnp.sum(jnp.square(released), axis=-1)) / m
     cbar = _colmean(released)
     return RoundStats(
         cbar=cbar,
@@ -156,3 +224,62 @@ def fused_clip_aggregate(
         agg_sq=jnp.sum(jnp.square(cbar)),
         mean_sq_clipped=mean_sq_clipped,
     )
+
+
+def partial_clip_moments(
+    raw_updates: jax.Array,
+    clip_norm,
+    noise: jax.Array | None = None,
+    *,
+    weight_mask: jax.Array | None = None,
+    backend: str = "auto",
+    interpret: bool | None = None,
+    block_m: int | None = None,
+) -> RoundMoments:
+    """Shard-local clip -> (optional noise) -> PARTIAL SUMS over the rows.
+
+    The moment-producing half of ``fused_clip_aggregate``: identical
+    clip/noise math, but the reductions stay un-normalized sums so shards
+    combine by ``psum`` (DESIGN.md §9).  ``noise`` must be materialized by the
+    caller (per-client rows via ``materialize_ldp_noise`` with the shard's
+    global ``start``) — the in-kernel PRNG path is deliberately excluded here
+    because its seed derivation is shard-oblivious: every shard would draw the
+    SAME noise block, silently correlating "independent" client randomizers.
+
+    ``weight_mask`` (float (M,) of {0., 1.}) weights each row's contribution
+    to all four sums; padding rows (mask 0) are zeroed BEFORE the clip so a
+    NaN from local training on dummy data cannot poison the reduction.
+    """
+    m = raw_updates.shape[0]
+    backend = resolve_backend(backend)
+    if backend == "kernel-fused":   # no key routed here; see docstring
+        backend = "kernel"
+    if weight_mask is not None:
+        keep = weight_mask[:, None] > 0
+        raw_updates = jnp.where(keep, raw_updates, 0.0)
+        if noise is not None:
+            noise = jnp.where(keep, noise, 0.0)
+        count = jnp.sum(weight_mask)
+    else:
+        count = jnp.float32(m)
+
+    if backend == "kernel":
+        from repro.kernels.dp_aggregate import ops as _ops
+
+        sum_c, sum_sq, sum_sq_clipped = _ops.dp_aggregate_sums(
+            raw_updates, clip_norm, noise, interpret=interpret, block_m=block_m)
+        return RoundMoments(sum_c=sum_c, sum_sq=sum_sq,
+                            sum_sq_clipped=sum_sq_clipped, count=count)
+    if backend != "jnp":
+        raise ValueError(f"unknown aggregation backend {backend!r}")
+
+    sq_norms = jnp.sum(jnp.square(raw_updates), axis=-1)
+    scale = jnp.minimum(1.0, clip_norm / jnp.maximum(jnp.sqrt(sq_norms), _EPS))
+    clipped = raw_updates * scale[:, None]
+    sum_sq_clipped = jnp.sum(sq_norms * jnp.square(scale))
+    released = clipped if noise is None else clipped + noise
+    sum_sq = (sum_sq_clipped if noise is None
+              else jnp.sum(jnp.sum(jnp.square(released), axis=-1)))
+    ones = jnp.ones((released.shape[0],), jnp.float32)
+    return RoundMoments(sum_c=ones @ released, sum_sq=sum_sq,
+                        sum_sq_clipped=sum_sq_clipped, count=count)

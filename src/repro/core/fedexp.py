@@ -37,11 +37,18 @@ import jax.numpy as jnp
 
 from repro.core import mechanisms as mech
 from repro.core import stepsize
-from repro.core.aggregation import aggregate_stats, fused_clip_aggregate
+from repro.core.aggregation import (
+    RoundMoments,
+    aggregate_stats,
+    fused_clip_aggregate,
+    materialize_ldp_noise,
+    partial_clip_moments,
+)
 
 __all__ = [
     "RoundAux",
     "ServerAlgorithm",
+    "client_keys",
     "FedAvg",
     "FedEXP",
     "DPFedAvgLDPGaussian",
@@ -52,6 +59,30 @@ __all__ = [
     "CDPFedEXP",
     "make_algorithm",
 ]
+
+
+def _set_static_count(moments, m_total: int):
+    """Swap the traced psummed client count for its statically-known value in
+    every RoundMoments of an algorithm's moments pytree (see
+    ``ServerAlgorithm.apply_round_sharded``)."""
+    c = jnp.float32(m_total)
+
+    def fix(x):
+        return dataclasses.replace(x, count=c) if isinstance(x, RoundMoments) else x
+
+    if isinstance(moments, tuple):
+        return tuple(fix(e) for e in moments)
+    return fix(moments)
+
+
+def client_keys(key: jax.Array, m: int, start: int | jax.Array = 0) -> jax.Array:
+    """(m,) per-client PRNG keys: row i is ``fold_in(key, start + i)``.
+
+    Keyed by GLOBAL client index so a client shard derives exactly its own
+    clients' keys (pass ``start = shard_index * m_local``) and the sharded
+    release reproduces the single-device randomization bit-for-bit.
+    """
+    return jax.vmap(lambda i: jax.random.fold_in(key, i))(start + jnp.arange(m))
 
 
 @dataclasses.dataclass
@@ -81,6 +112,20 @@ class ServerAlgorithm:
     FedOpt family — server Adam/momentum over pseudo-gradients) override
     ``init_state`` / ``apply_round_stateful``, which the training loop
     threads through its carry. Default wrappers keep the two interchangeable.
+
+    Sharded-round protocol (DESIGN.md §9).  A round is also expressible as
+    two halves the client-sharded engine splits across the ``clients`` mesh
+    axis:
+
+        local_moments(key, w, deltas, mask, start, state)  -> pytree of SUMS
+        apply_from_moments(key, w, global_moments, state)  -> (w', aux, state)
+
+    ``local_moments`` runs per-device on that shard's (m_local, d) slice of
+    the cohort (``start`` = global index of its first client, ``mask``
+    zero-weights padding rows) and returns only partial sums; the engine
+    ``psum``s them and every device applies the identical server update —
+    noise is drawn AFTER the reduction from the replicated round key, so DP
+    semantics match the single-device path exactly.
     """
 
     name: str = "base"
@@ -96,10 +141,48 @@ class ServerAlgorithm:
         w_next, aux = self.apply_round(key, w, raw_deltas)
         return w_next, aux, state
 
+    def local_moments(self, key, w, deltas, mask, start, state):
+        """Shard-local partial sums (a psum-able pytree; SUMS, never means)."""
+        raise NotImplementedError(f"{self.name} has no sharded-round support")
+
+    def apply_from_moments(self, key, w, moments, state):
+        """Server update from globally-reduced moments; replicated math."""
+        raise NotImplementedError(f"{self.name} has no sharded-round support")
+
+    def apply_round_sharded(self, key, w, deltas, mask, state, axis_name,
+                            m_total: int | None = None):
+        """One round on a client shard (call inside ``shard_map``).
+
+        ``m_total`` is the STATIC true client count when the caller knows it
+        (the engine always does — it built the padding mask).  Replacing the
+        psummed mask-sum with the static constant lets XLA fold the 1/M
+        normalizations exactly as the single-device reference's static
+        ``sum / m`` does, keeping the two engines bit-compatible instead of
+        one ULP apart."""
+        start = jax.lax.axis_index(axis_name) * deltas.shape[0]
+        moments = self.local_moments(key, w, deltas, mask, start, state)
+        moments = jax.lax.psum(moments, axis_name)
+        if m_total is not None:
+            moments = _set_static_count(moments, m_total)
+        return self.apply_from_moments(key, w, moments, state)
+
 
 # ---------------------------------------------------------------------------
 # Non-private references
 # ---------------------------------------------------------------------------
+
+def _raw_moments(deltas: jax.Array, mask: jax.Array) -> RoundMoments:
+    """Unclipped per-shard sums (non-private algorithms); mask-weighted.
+
+    Every masked scalar sum is a dot with the mask: on XLA:CPU a fused
+    ``sum(mask * x)`` accumulates in a different order than the plain
+    ``sum(x)`` the unsharded reference lowers to, while ``mask @ x`` matches
+    it bit-for-bit (and the column sum already rides the same matvec idiom as
+    ``aggregate_stats``)."""
+    sum_sq = mask @ jnp.sum(jnp.square(deltas), axis=-1)
+    return RoundMoments(sum_c=mask @ deltas, sum_sq=sum_sq,
+                        sum_sq_clipped=sum_sq, count=jnp.sum(mask))
+
 
 @dataclasses.dataclass(frozen=True)
 class FedAvg(ServerAlgorithm):
@@ -111,6 +194,14 @@ class FedAvg(ServerAlgorithm):
         w_next = w + stats.cbar
         return w_next, RoundAux(eta_g=jnp.float32(1.0), update_norm=jnp.linalg.norm(stats.cbar))
 
+    def local_moments(self, key, w, deltas, mask, start, state):
+        return _raw_moments(deltas, mask)
+
+    def apply_from_moments(self, key, w, moments, state):
+        cbar = moments.sum_c / moments.count
+        aux = RoundAux(eta_g=jnp.float32(1.0), update_norm=jnp.linalg.norm(cbar))
+        return w + cbar, aux, state
+
 
 @dataclasses.dataclass(frozen=True)
 class FedEXP(ServerAlgorithm):
@@ -121,6 +212,15 @@ class FedEXP(ServerAlgorithm):
         stats = aggregate_stats(raw_deltas)
         eta = stepsize.fedexp(stats.mean_sq, stats.agg_sq)
         return w + eta * stats.cbar, RoundAux(eta_g=eta, update_norm=eta * jnp.linalg.norm(stats.cbar))
+
+    def local_moments(self, key, w, deltas, mask, start, state):
+        return _raw_moments(deltas, mask)
+
+    def apply_from_moments(self, key, w, moments, state):
+        stats = moments.stats()
+        eta = stepsize.fedexp(stats.mean_sq, stats.agg_sq)
+        aux = RoundAux(eta_g=eta, update_norm=eta * jnp.linalg.norm(stats.cbar))
+        return w + eta * stats.cbar, aux, state
 
 
 # ---------------------------------------------------------------------------
@@ -143,6 +243,22 @@ class DPFedAvgLDPGaussian(ServerAlgorithm):
         stats = self._release(key, raw_deltas)
         return w + stats.cbar, RoundAux(eta_g=jnp.float32(1.0))
 
+    def local_moments(self, key, w, deltas, mask, start, state):
+        # Per-client noise rows keyed by global index: the same rows the
+        # single-device release materializes for this round key — bit-parity
+        # wherever the unsharded backend materializes noise (jnp / kernel).
+        # On TPU, unsharded "auto" resolves to kernel-fused, whose in-kernel
+        # stream is shard-oblivious (every shard would repeat the same
+        # block), so the sharded path always materializes and the TPU-auto
+        # comparison is distributional, not bitwise (DESIGN.md §9).
+        noise = materialize_ldp_noise(key, *deltas.shape, self.sigma,
+                                      deltas.dtype, start=start)
+        return partial_clip_moments(deltas, self.clip_norm, noise,
+                                    weight_mask=mask, backend=self.backend)
+
+    def apply_from_moments(self, key, w, moments, state):
+        return w + moments.sum_c / moments.count, RoundAux(eta_g=jnp.float32(1.0)), state
+
 
 @dataclasses.dataclass(frozen=True)
 class LDPFedEXPGaussian(DPFedAvgLDPGaussian):
@@ -150,9 +266,8 @@ class LDPFedEXPGaussian(DPFedAvgLDPGaussian):
 
     name: str = "ldp-fedexp-gauss"
 
-    def apply_round(self, key, w, raw_deltas):
-        d = raw_deltas.shape[-1]
-        stats = self._release(key, raw_deltas)
+    def _stepped(self, w, stats):
+        d = w.shape[-1]
         eta = stepsize.ldp_gaussian(stats.mean_sq, stats.agg_sq, d, self.sigma)
         aux = RoundAux(
             eta_g=eta,
@@ -160,6 +275,13 @@ class LDPFedEXPGaussian(DPFedAvgLDPGaussian):
             eta_target=stepsize.target(stats.mean_sq_clipped, stats.agg_sq),
         )
         return w + eta * stats.cbar, aux
+
+    def apply_round(self, key, w, raw_deltas):
+        return self._stepped(w, self._release(key, raw_deltas))
+
+    def apply_from_moments(self, key, w, moments, state):
+        w_next, aux = self._stepped(w, moments.stats())
+        return w_next, aux, state
 
 
 # ---------------------------------------------------------------------------
@@ -179,20 +301,46 @@ class DPFedAvgPrivUnit(ServerAlgorithm):
         object.__setattr__(self, "pu", mech.make_privunit_params(self.dim, self.eps0, self.eps1))
         object.__setattr__(self, "sc", mech.make_scalardp_params(self.eps2, self.clip_norm))
 
-    def _release(self, key, raw_deltas):
+    def _randomize(self, key, raw_deltas, start=0):
+        """Per-client clip + PrivUnit release, keys by GLOBAL client index
+        (``client_keys``), so shards reproduce their rows of the cohort."""
         m, _ = raw_deltas.shape
-        keys = jax.random.split(key, m)
+        keys = client_keys(key, m, start)
         norms = jnp.linalg.norm(raw_deltas, axis=-1)
         scale = jnp.minimum(1.0, self.clip_norm / jnp.maximum(norms, 1e-12))
         clipped = raw_deltas * scale[:, None]
         released = jax.vmap(lambda k, dlt: mech.privunit_randomize(k, dlt, self.pu, self.sc))(keys, clipped)
+        return released, clipped
+
+    def _release(self, key, raw_deltas):
+        released, clipped = self._randomize(key, raw_deltas)
         stats = aggregate_stats(released)
-        stats.mean_sq_clipped = jnp.mean(jnp.sum(jnp.square(clipped), axis=-1))
+        stats.mean_sq_clipped = (
+            jnp.sum(jnp.sum(jnp.square(clipped), axis=-1)) / raw_deltas.shape[0])
         return released, stats
+
+    def _released_moments(self, key, deltas, mask, start):
+        released, clipped = self._randomize(key, deltas, start)
+        released = jnp.where(mask[:, None] > 0, released, 0.0)
+        # dots with the mask, not sum(mask * x): bit-parity with the
+        # unsharded reference reductions (see _raw_moments)
+        mom = RoundMoments(
+            sum_c=mask @ released,
+            sum_sq=mask @ jnp.sum(jnp.square(released), axis=-1),
+            sum_sq_clipped=mask @ jnp.sum(jnp.square(clipped), axis=-1),
+            count=jnp.sum(mask))
+        return released, mom
+
+    def local_moments(self, key, w, deltas, mask, start, state):
+        _, mom = self._released_moments(key, deltas, mask, start)
+        return mom
 
     def apply_round(self, key, w, raw_deltas):
         _, stats = self._release(key, raw_deltas)
         return w + stats.cbar, RoundAux(eta_g=jnp.float32(1.0))
+
+    def apply_from_moments(self, key, w, moments, state):
+        return w + moments.sum_c / moments.count, RoundAux(eta_g=jnp.float32(1.0)), state
 
 
 @dataclasses.dataclass(frozen=True)
@@ -201,16 +349,29 @@ class LDPFedEXPPrivUnit(DPFedAvgPrivUnit):
 
     name: str = "ldp-fedexp-privunit"
 
-    def apply_round(self, key, w, raw_deltas):
-        released, stats = self._release(key, raw_deltas)
-        s_hat = jax.vmap(lambda c: mech.estimate_norm_sq(c, self.pu, self.sc))(released)
-        eta = stepsize.ldp_privunit(jnp.mean(s_hat), stats.agg_sq)
+    def _stepped(self, w, stats, mean_s_hat):
+        eta = stepsize.ldp_privunit(mean_s_hat, stats.agg_sq)
         aux = RoundAux(
             eta_g=eta,
             eta_naive=stepsize.naive_noisy(stats.mean_sq, stats.agg_sq),
             eta_target=stepsize.target(stats.mean_sq_clipped, stats.agg_sq),
         )
         return w + eta * stats.cbar, aux
+
+    def apply_round(self, key, w, raw_deltas):
+        released, stats = self._release(key, raw_deltas)
+        s_hat = jax.vmap(lambda c: mech.estimate_norm_sq(c, self.pu, self.sc))(released)
+        return self._stepped(w, stats, jnp.sum(s_hat) / raw_deltas.shape[0])
+
+    def local_moments(self, key, w, deltas, mask, start, state):
+        released, mom = self._released_moments(key, deltas, mask, start)
+        s_hat = jax.vmap(lambda c: mech.estimate_norm_sq(c, self.pu, self.sc))(released)
+        return mom, {"sum_s_hat": mask @ s_hat}
+
+    def apply_from_moments(self, key, w, moments, state):
+        mom, extras = moments
+        w_next, aux = self._stepped(w, mom.stats(), extras["sum_s_hat"] / mom.count)
+        return w_next, aux, state
 
 
 # ---------------------------------------------------------------------------
@@ -225,17 +386,30 @@ class DPFedAvgCDP(ServerAlgorithm):
     name: str = "dp-fedavg-cdp"
     backend: str = "auto"
 
+    def _noised_cbar(self, key, cbar):
+        """Post-reduction server noise — the ONLY randomness in the CDP
+        release, drawn from the replicated round key, so the sharded and
+        single-device paths add the identical (d,) draw."""
+        d = cbar.shape[-1]
+        server_noise = (self.sigma / jnp.sqrt(float(self.num_clients))) * jax.random.normal(key, (d,))
+        return cbar + server_noise
+
     def _release(self, key, raw_deltas):
-        d = raw_deltas.shape[-1]
         stats = fused_clip_aggregate(raw_deltas, self.clip_norm, noise=None,
                                      backend=self.backend)
-        server_noise = (self.sigma / jnp.sqrt(float(self.num_clients))) * jax.random.normal(key, (d,))
-        cbar = stats.cbar + server_noise
-        return stats, cbar
+        return stats, self._noised_cbar(key, stats.cbar)
 
     def apply_round(self, key, w, raw_deltas):
         _, cbar = self._release(key, raw_deltas)
         return w + cbar, RoundAux(eta_g=jnp.float32(1.0))
+
+    def local_moments(self, key, w, deltas, mask, start, state):
+        return partial_clip_moments(deltas, self.clip_norm, None,
+                                    weight_mask=mask, backend=self.backend)
+
+    def apply_from_moments(self, key, w, moments, state):
+        cbar = self._noised_cbar(key, moments.sum_c / moments.count)
+        return w + cbar, RoundAux(eta_g=jnp.float32(1.0)), state
 
 
 @dataclasses.dataclass(frozen=True)
@@ -248,19 +422,28 @@ class CDPFedEXP(DPFedAvgCDP):
     sigma_xi: float | None = None
     name: str = "cdp-fedexp"
 
-    def apply_round(self, key, w, raw_deltas):
-        d = raw_deltas.shape[-1]
-        k_noise, k_xi = jax.random.split(key)
-        stats, cbar = self._release(k_noise, raw_deltas)
+    def _stepped(self, k_xi, w, cbar, mean_sq_clipped):
+        d = w.shape[-1]
         sigma_xi = self.sigma_xi if self.sigma_xi is not None else d * self.sigma**2 / self.num_clients
         xi = sigma_xi * jax.random.normal(k_xi, ())
         agg_sq = jnp.sum(jnp.square(cbar))
-        eta = stepsize.cdp(stats.mean_sq_clipped, xi, agg_sq)
+        eta = stepsize.cdp(mean_sq_clipped, xi, agg_sq)
         aux = RoundAux(
             eta_g=eta,
-            eta_target=stepsize.target(stats.mean_sq_clipped, agg_sq),
+            eta_target=stepsize.target(mean_sq_clipped, agg_sq),
         )
         return w + eta * cbar, aux
+
+    def apply_round(self, key, w, raw_deltas):
+        k_noise, k_xi = jax.random.split(key)
+        stats, cbar = self._release(k_noise, raw_deltas)
+        return self._stepped(k_xi, w, cbar, stats.mean_sq_clipped)
+
+    def apply_from_moments(self, key, w, moments, state):
+        k_noise, k_xi = jax.random.split(key)
+        cbar = self._noised_cbar(k_noise, moments.sum_c / moments.count)
+        w_next, aux = self._stepped(k_xi, w, cbar, moments.sum_sq_clipped / moments.count)
+        return w_next, aux, state
 
 
 # ---------------------------------------------------------------------------
@@ -297,25 +480,47 @@ class CDPFedEXPAdaptiveClip(ServerAlgorithm):
         from repro.core import adaptive_clip as ac
         return ac.init_state(self.c0)
 
-    def apply_round_stateful(self, key, w, raw_deltas, state):
+    def _serve(self, key, w, cbar_mean, mean_sq_clipped, count_below, m, state):
+        """Replicated server half: noise the mean, pick eta, track the clip.
+        ``m`` may be a traced count — every use is value-identical to the
+        static shape the unsharded path passes."""
         from repro.core import adaptive_clip as ac
-        m, d = raw_deltas.shape
+        d = w.shape[-1]
         k_noise, k_xi, k_bit = jax.random.split(key, 3)
         c = state.clip
         sigma = self.z_mult * c                     # paper's sigma, tracking C
-        stats = fused_clip_aggregate(raw_deltas, c, None, backend=self.backend)
-        server_noise = (sigma / jnp.sqrt(float(m))) * jax.random.normal(k_noise, (d,))
-        cbar = stats.cbar + server_noise
+        server_noise = (sigma / jnp.sqrt(m)) * jax.random.normal(k_noise, (d,))
+        cbar = cbar_mean + server_noise
         sigma_xi = d * sigma**2 / m
         xi = sigma_xi * jax.random.normal(k_xi, ())
-        eta = stepsize.cdp(stats.mean_sq_clipped, xi, jnp.sum(jnp.square(cbar)))
+        eta = stepsize.cdp(mean_sq_clipped, xi, jnp.sum(jnp.square(cbar)))
 
-        norms = jnp.linalg.norm(raw_deltas, axis=-1)
         cfg = ac.AdaptiveClipConfig(gamma=self.gamma, lr=self.clip_lr,
                                     sigma_b=self.sigma_b)
-        state, _ = ac.update_clip(k_bit, state, norms, cfg)
+        state, _ = ac.update_clip_from_stats(k_bit, state, count_below, m, cfg)
         aux = RoundAux(eta_g=eta, update_norm=c)   # report the clip used
         return w + eta * cbar, aux, state
+
+    def apply_round_stateful(self, key, w, raw_deltas, state):
+        m = raw_deltas.shape[0]
+        stats = fused_clip_aggregate(raw_deltas, state.clip, None, backend=self.backend)
+        norms = jnp.linalg.norm(raw_deltas, axis=-1)
+        count_below = jnp.sum((norms <= state.clip).astype(jnp.float32))
+        return self._serve(key, w, stats.cbar, stats.mean_sq_clipped,
+                           count_below, float(m), state)
+
+    def local_moments(self, key, w, deltas, mask, start, state):
+        mom = partial_clip_moments(deltas, state.clip, None,
+                                   weight_mask=mask, backend=self.backend)
+        norms = jnp.linalg.norm(deltas, axis=-1)
+        below = mask @ (norms <= state.clip).astype(jnp.float32)
+        return mom, {"count_below": below}
+
+    def apply_from_moments(self, key, w, moments, state):
+        mom, extras = moments
+        return self._serve(key, w, mom.sum_c / mom.count,
+                           mom.sum_sq_clipped / mom.count,
+                           extras["count_below"], mom.count, state)
 
     def apply_round(self, key, w, raw_deltas):
         raise TypeError("stateful algorithm; use apply_round_stateful")
@@ -349,6 +554,11 @@ class DPFedAdamCDP(DPFedAvgCDP):
 
     def apply_round_stateful(self, key, w, raw_deltas, state):
         _, cbar = self._release(key, raw_deltas)
+        step, state = self._opt.update(cbar, state)
+        return w + step, RoundAux(eta_g=jnp.float32(self.server_lr)), state
+
+    def apply_from_moments(self, key, w, moments, state):
+        cbar = self._noised_cbar(key, moments.sum_c / moments.count)
         step, state = self._opt.update(cbar, state)
         return w + step, RoundAux(eta_g=jnp.float32(self.server_lr)), state
 

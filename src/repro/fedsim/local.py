@@ -4,6 +4,15 @@ Each client runs ``tau`` full-batch gradient steps on its own local dataset
 starting from the broadcast global model and returns the raw local update
 ``Delta~_i = w_i^{(t-1,tau)} - w^{(t-1)}``.  The whole cohort is a single
 ``vmap`` so M=1000 clients execute as one batched XLA program.
+
+Client sharding (DESIGN.md §9): when the engine partitions the cohort across
+a ``clients`` mesh axis, each device vmaps only its (M/n_shards, d) slice.
+``pad_cohort`` rounds M up to a multiple of the shard count by repeating row 0
+(real data, so the padded rows' local training stays numerically tame for any
+loss) and returns a {1., 0.} weight mask; every aggregation moment is
+mask-weighted, so padded clients contribute exactly zero to the round.
+``masked_cohort_updates`` additionally zeroes the padded rows' updates right
+at the source, before they can reach a reduction.
 """
 from __future__ import annotations
 
@@ -12,7 +21,7 @@ from typing import Callable
 import jax
 import jax.numpy as jnp
 
-__all__ = ["local_update", "cohort_updates"]
+__all__ = ["local_update", "cohort_updates", "masked_cohort_updates", "pad_cohort"]
 
 
 def local_update(loss_fn: Callable, w0: jax.Array, client_batch, tau: int, eta_l: float) -> jax.Array:
@@ -36,3 +45,42 @@ def cohort_updates(loss_fn: Callable, w: jax.Array, client_batches, tau: int, et
     """(M, d) matrix of raw local updates for the full cohort (vmapped)."""
     fn = lambda batch: local_update(loss_fn, w, batch, tau, eta_l)
     return jax.vmap(fn)(client_batches)
+
+
+def masked_cohort_updates(loss_fn: Callable, w: jax.Array, client_batches,
+                          tau: int, eta_l: float, mask: jax.Array) -> jax.Array:
+    """``cohort_updates`` with padding rows forced to zero.
+
+    The where (not a multiply) means a non-finite update from a padding
+    client's dummy batch cannot leak into the shard's moments as 0 * nan.
+    """
+    deltas = cohort_updates(loss_fn, w, client_batches, tau, eta_l)
+    return jnp.where(mask[:, None] > 0, deltas, 0.0)
+
+
+def pad_cohort(client_batches, n_shards: int, *, axis: int = 0):
+    """Pad every client-batch leaf to M % n_shards == 0; returns (batches, mask).
+
+    Padding repeats client 0's data (finite, in-distribution) rather than
+    zeros so arbitrary user losses don't see degenerate inputs; the returned
+    float mask is 0. on padded rows and the moment reductions weight by it,
+    which keeps the padded clients out of Σc_i, Σ||c_i||², the client count,
+    and the adaptive-clip bit sum alike.  ``axis`` is the client axis of the
+    leaves (1 in the batched engine, where a seed axis leads).
+    """
+    leaves = jax.tree_util.tree_leaves(client_batches)
+    if not leaves:
+        raise ValueError("client_batches has no array leaves to shard")
+    m = leaves[0].shape[axis]
+    pad = (-m) % n_shards
+    mask = jnp.concatenate([jnp.ones((m,), jnp.float32),
+                            jnp.zeros((pad,), jnp.float32)])
+    if pad == 0:
+        return client_batches, mask
+
+    def pad_leaf(x):
+        first = jax.lax.slice_in_dim(x, 0, 1, axis=axis)
+        shape = x.shape[:axis] + (pad,) + x.shape[axis + 1:]
+        return jnp.concatenate([x, jnp.broadcast_to(first, shape)], axis=axis)
+
+    return jax.tree_util.tree_map(pad_leaf, client_batches), mask

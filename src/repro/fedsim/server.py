@@ -23,6 +23,18 @@ round, dispatched from Python — as the baseline that
 over per-seed initializations and client data), so a whole mean±std sweep is
 ONE batched XLA program.
 
+Client sharding (DESIGN.md §9).  Passing ``mesh=`` (a 1-D mesh with a
+``clients`` axis, e.g. ``repro.launch.mesh.make_client_mesh()``) wraps the
+same scan program in ``shard_map`` over the client axis: each device holds a
+(M/n_shards, d) slice of the cohort for the whole run, computes local updates
+plus the clip/randomize partial sums there, and only the O(d) aggregation
+moments DP-FedEXP needs (Σc_i, Σ||c_i||², Σ||clip(Δ_i)||², M_i) cross devices
+via ``psum`` per round.  The server half (post-reduction DP noise, adaptive
+step size, optimizer state) runs replicated from the shared round key, so the
+sharded engine matches the single-device engine up to partial-sum reordering.
+Cohorts with M % n_shards != 0 are padded with zero-weight clients
+(``pad_cohort``) that every moment masks out.
+
 Following §5 of the paper, the returned final model is the average of the last
 two iterates ("to mitigate the oscillating behaviour of DP-FedEXP").
 """
@@ -34,9 +46,12 @@ from typing import Callable
 
 import jax
 import jax.numpy as jnp
+from jax.experimental.shard_map import shard_map
+from jax.sharding import PartitionSpec as P
 
 from repro.core.fedexp import ServerAlgorithm
-from repro.fedsim.local import cohort_updates
+from repro.fedsim.local import cohort_updates, masked_cohort_updates, pad_cohort
+from repro.models.sharding import client_axis_rules, logical_to_pspec
 
 __all__ = ["RunResult", "run_federated", "run_federated_batched"]
 
@@ -63,6 +78,37 @@ def _round_step(algorithm, loss_fn, eval_fn, tau):
         return w_next, opt_state, outs
 
     return step
+
+
+def _sharded_round_step(algorithm, loss_fn, eval_fn, tau, axis, m_true):
+    """One round on a client shard; runs inside ``shard_map`` over ``axis``.
+
+    Same round semantics as ``_round_step``, but local training and the
+    clip/randomize reductions see only this device's cohort slice, and the
+    algorithm's partial moments are psummed before the replicated server
+    update (the only cross-device communication of the round).  ``m_true`` is
+    the static pre-padding client count the 1/M normalizations fold in.
+    """
+
+    def step(w, opt_state, round_key, batches_and_mask, eta_l):
+        local_batches, mask = batches_and_mask
+        deltas = masked_cohort_updates(loss_fn, w, local_batches, tau, eta_l, mask)
+        w_next, aux, opt_state = algorithm.apply_round_sharded(
+            round_key, w, deltas, mask, opt_state, axis, m_total=m_true)
+        metric = eval_fn(w_next) if eval_fn is not None else jnp.float32(jnp.nan)
+        outs = (aux.eta_g, metric, aux.eta_naive, aux.eta_target)
+        return w_next, opt_state, outs
+
+    return step
+
+
+def _client_batch_specs(treedef, leaf_ndims, mask_len, rules):
+    """PartitionSpecs for the (padded) client-batch pytree + mask, derived
+    through the logical-axis layer: every leaf is ("clients", None, ...)."""
+    specs = [logical_to_pspec(("clients",) + (None,) * (nd - 1), rules)
+             for nd in leaf_ndims]
+    mask_spec = logical_to_pspec(("clients",), rules, dims=(mask_len,))
+    return jax.tree_util.tree_unflatten(treedef, specs), mask_spec
 
 
 def _fold_round_keys(key, ts):
@@ -124,6 +170,48 @@ def _scan_chunk_fn(algorithm: ServerAlgorithm, loss_fn, eval_fn, tau: int,
                                     donate, unroll)
 
 
+def _build_sharded_chunk_fn(algorithm: ServerAlgorithm, loss_fn, eval_fn,
+                            tau: int, donate: bool, unroll: int,
+                            mesh, axis: str, batch_treedef, leaf_ndims,
+                            mask_len: int, m_true: int):
+    step_round = _sharded_round_step(algorithm, loss_fn, eval_fn, tau, axis, m_true)
+    rules = client_axis_rules(mesh, axis=axis)
+    batch_specs, mask_spec = _client_batch_specs(batch_treedef, leaf_ndims,
+                                                 mask_len, rules)
+
+    def chunk(carry, key, ts, local_batches, mask, eta_l):
+        keys = _fold_round_keys(key, ts)
+        body = _scan_body(step_round, (local_batches, mask), eta_l)
+        return jax.lax.scan(body, carry, keys, unroll=min(unroll, len(ts)))
+
+    sharded = shard_map(
+        chunk, mesh=mesh,
+        in_specs=(P(), P(), P(), batch_specs, mask_spec, P()),
+        out_specs=P(),
+        check_rep=False)  # psum-then-replicated-update; rep checker can't see it
+    return jax.jit(sharded, donate_argnums=(0,) if donate else ())
+
+
+_cached_sharded_chunk_fn = functools.lru_cache(maxsize=32)(_build_sharded_chunk_fn)
+
+
+def _sharded_chunk_fn(algorithm, loss_fn, eval_fn, tau, donate, unroll,
+                      mesh, axis, batch_treedef, leaf_ndims, mask_len, m_true):
+    """Compiled shard_mapped scan chunk, cached like `_scan_chunk_fn` (the
+    mesh, client-batch treedef and leaf ranks join the key; same unhashable-
+    algorithm fallback)."""
+    try:
+        return _cached_sharded_chunk_fn(algorithm, loss_fn, eval_fn, tau,
+                                        donate, unroll, mesh, axis,
+                                        batch_treedef, leaf_ndims, mask_len,
+                                        m_true)
+    except TypeError:
+        return _build_sharded_chunk_fn(algorithm, loss_fn, eval_fn, tau,
+                                       donate, unroll, mesh, axis,
+                                       batch_treedef, leaf_ndims, mask_len,
+                                       m_true)
+
+
 def _build_batched_run_fn(algorithm: ServerAlgorithm, loss_fn, eval_fn,
                           tau: int, tail_n: int, batched_w0: bool,
                           batched_data: bool):
@@ -145,6 +233,48 @@ def _build_batched_run_fn(algorithm: ServerAlgorithm, loss_fn, eval_fn,
 _cached_batched_run_fn = functools.lru_cache(maxsize=32)(_build_batched_run_fn)
 
 
+def _build_sharded_batched_run_fn(algorithm: ServerAlgorithm, loss_fn, eval_fn,
+                                  tau: int, tail_n: int, batched_w0: bool,
+                                  batched_data: bool, mesh, axis: str,
+                                  batch_treedef, leaf_ndims, mask_len: int,
+                                  m_true: int):
+    """Seeds vmapped INSIDE shard_map: every device runs all S seeds over its
+    own client slice, so one program serves the whole sweep sharded."""
+    step_round = _sharded_round_step(algorithm, loss_fn, eval_fn, tau, axis, m_true)
+    rules = client_axis_rules(mesh, axis=axis)
+    # with batched_data the seed axis leads and `clients` moves to axis 1
+    names = [(None, "clients") if batched_data else ("clients",)] * len(leaf_ndims)
+    specs = [logical_to_pspec(tuple(n) + (None,) * (nd - len(n)), rules)
+             for n, nd in zip(names, leaf_ndims)]
+    batch_specs = jax.tree_util.tree_unflatten(batch_treedef, specs)
+    mask_spec = logical_to_pspec(("clients",), rules, dims=(mask_len,))
+
+    def run_one(w0, key, local_batches, mask, eta_l, ts):
+        keys = _fold_round_keys(key, ts)
+        carry = (w0, algorithm.init_state(w0),
+                 jnp.zeros((tail_n,) + w0.shape, w0.dtype))
+        body = _scan_body(step_round, (local_batches, mask), eta_l)
+        (w, _, tail), outs = jax.lax.scan(body, carry, keys)
+        return (jnp.mean(tail, axis=0), w) + outs
+
+    def batched(w0, keys, local_batches, mask, eta_l, ts):
+        in_axes = (0 if batched_w0 else None, 0, 0 if batched_data else None,
+                   None, None, None)
+        return jax.vmap(run_one, in_axes=in_axes)(
+            w0, keys, local_batches, mask, eta_l, ts)
+
+    sharded = shard_map(
+        batched, mesh=mesh,
+        in_specs=(P(), P(), batch_specs, mask_spec, P(), P()),
+        out_specs=P(),
+        check_rep=False)
+    return jax.jit(sharded)
+
+
+_cached_sharded_batched_run_fn = (
+    functools.lru_cache(maxsize=32)(_build_sharded_batched_run_fn))
+
+
 def _batched_run_fn(algorithm: ServerAlgorithm, loss_fn, eval_fn, tau: int,
                     tail_n: int, batched_w0: bool, batched_data: bool):
     """vmapped-over-seeds full run (single scan, no chunking); cached with
@@ -155,6 +285,19 @@ def _batched_run_fn(algorithm: ServerAlgorithm, loss_fn, eval_fn, tau: int,
     except TypeError:
         return _build_batched_run_fn(algorithm, loss_fn, eval_fn, tau,
                                      tail_n, batched_w0, batched_data)
+
+
+def _sharded_batched_fn(algorithm, loss_fn, eval_fn, tau, tail_n, batched_w0,
+                        batched_data, mesh, axis, batch_treedef, leaf_ndims,
+                        mask_len, m_true):
+    try:
+        return _cached_sharded_batched_run_fn(
+            algorithm, loss_fn, eval_fn, tau, tail_n, batched_w0, batched_data,
+            mesh, axis, batch_treedef, leaf_ndims, mask_len, m_true)
+    except TypeError:
+        return _build_sharded_batched_run_fn(
+            algorithm, loss_fn, eval_fn, tau, tail_n, batched_w0, batched_data,
+            mesh, axis, batch_treedef, leaf_ndims, mask_len, m_true)
 
 
 def _chunk_bounds(rounds: int, chunk_rounds: int | None):
@@ -177,6 +320,8 @@ def run_federated(
     engine: str = "scan",
     chunk_rounds: int | None = None,
     scan_unroll: int = 2,
+    mesh=None,
+    client_axis: str = "clients",
 ) -> RunResult:
     """Run T federated rounds and return the iterate-averaged final model.
 
@@ -184,8 +329,16 @@ def run_federated(
     compiled programs (one when chunk_rounds is None), donated carry,
     cross-call program cache, ``scan_unroll`` rounds per loop trip.
     engine="eager": the legacy one-program-per-round dispatch loop.
+
+    mesh: optional 1-D ``jax.sharding.Mesh`` with a ``client_axis`` axis
+    (``make_client_mesh()``): the scan engine runs under ``shard_map`` with
+    the cohort partitioned across that axis and only the per-round aggregation
+    moments psummed — same results as single-device up to reduction order
+    (DESIGN.md §9).  Requires engine="scan".
     """
     if engine == "eager":
+        if mesh is not None:
+            raise ValueError("client sharding requires engine='scan'")
         return _run_eager(algorithm, loss_fn, w0, client_batches, rounds=rounds,
                           tau=tau, eta_l=eta_l, key=key, eval_fn=eval_fn,
                           avg_last=avg_last)
@@ -198,14 +351,25 @@ def run_federated(
     w = jnp.array(w0, copy=True) if donate else jnp.asarray(w0)
     carry = (w, algorithm.init_state(w),
              jnp.zeros((tail_n,) + w.shape, w.dtype))
-    fn = _scan_chunk_fn(algorithm, loss_fn, eval_fn, int(tau), donate,
-                        max(1, int(scan_unroll)))
+    if mesh is not None:
+        m_true = jax.tree_util.tree_leaves(client_batches)[0].shape[0]
+        client_batches, mask = pad_cohort(client_batches, mesh.shape[client_axis])
+        leaves, treedef = jax.tree_util.tree_flatten(client_batches)
+        fn = _sharded_chunk_fn(algorithm, loss_fn, eval_fn, int(tau), donate,
+                               max(1, int(scan_unroll)), mesh, client_axis,
+                               treedef, tuple(x.ndim for x in leaves),
+                               mask.shape[0], m_true)
+        extra = (mask,)
+    else:
+        fn = _scan_chunk_fn(algorithm, loss_fn, eval_fn, int(tau), donate,
+                            max(1, int(scan_unroll)))
+        extra = ()
     eta_l_arr = jnp.float32(eta_l)
 
     outs = []
     for start, stop in _chunk_bounds(rounds, chunk_rounds):
         carry, chunk_outs = fn(carry, key, jnp.arange(start, stop, dtype=jnp.int32),
-                               client_batches, eta_l_arr)
+                               client_batches, *extra, eta_l_arr)
         outs.append(chunk_outs)
     etas, metrics, naives, targets = (
         jnp.concatenate([o[i] for o in outs]) for i in range(4))
@@ -234,12 +398,32 @@ def run_federated_batched(
     avg_last: int = 2,
     batched_w0: bool = False,
     batched_data: bool = False,
+    mesh=None,
+    client_axis: str = "clients",
 ) -> RunResult:
     """Run one batched program over S seeds: ``keys`` is (S,)-stacked PRNG
     keys; set ``batched_w0`` / ``batched_data`` when w0 / client_batches carry
     a matching leading seed axis.  Every RunResult field gains a leading (S,)
-    axis."""
+    axis.  ``mesh`` shards the client axis exactly as in ``run_federated``
+    (seeds stay vmapped inside each shard)."""
     tail_n = max(1, min(avg_last, rounds))
+    if mesh is not None:
+        client_axis_pos = 1 if batched_data else 0
+        m_true = jax.tree_util.tree_leaves(client_batches)[0].shape[client_axis_pos]
+        client_batches, mask = pad_cohort(
+            client_batches, mesh.shape[client_axis], axis=client_axis_pos)
+        leaves, treedef = jax.tree_util.tree_flatten(client_batches)
+        fn = _sharded_batched_fn(algorithm, loss_fn, eval_fn, int(tau), tail_n,
+                                 bool(batched_w0), bool(batched_data), mesh,
+                                 client_axis, treedef,
+                                 tuple(x.ndim for x in leaves), mask.shape[0],
+                                 m_true)
+        final_w, last_w, etas, metrics, naives, targets = fn(
+            w0, keys, client_batches, mask, jnp.float32(eta_l),
+            jnp.arange(rounds, dtype=jnp.int32))
+        return RunResult(final_w=final_w, last_w=last_w, eta_history=etas,
+                         metric_history=metrics, eta_naive_history=naives,
+                         eta_target_history=targets)
     fn = _batched_run_fn(algorithm, loss_fn, eval_fn, int(tau), tail_n,
                          bool(batched_w0), bool(batched_data))
     final_w, last_w, etas, metrics, naives, targets = fn(

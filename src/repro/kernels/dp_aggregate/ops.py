@@ -20,7 +20,7 @@ from repro.kernels.dp_aggregate.kernel import (
 )
 from repro.kernels.dp_aggregate.ref import dp_aggregate_ref
 
-__all__ = ["dp_aggregate", "generate_ldp_noise", "pick_block_m"]
+__all__ = ["dp_aggregate", "dp_aggregate_sums", "generate_ldp_noise", "pick_block_m"]
 
 # VMEM budget per input tile on TPU (bytes); conservative vs the ~16 MB arena
 # since the kernel holds the tile plus a handful of same-shape temporaries.
@@ -48,6 +48,16 @@ def pick_block_m(m: int, d_padded: int, interpret: bool) -> int:
         return -(-per_block // 8) * 8
     rows = _TPU_TILE_BYTES // (4 * d_padded)
     return max(8, min(1024, (rows // 8) * 8, m8))
+
+
+def _resolve_defaults(m: int, d: int, interpret: bool | None,
+                      block_m: int | None) -> tuple[bool, int]:
+    """One home for the backend/tiling defaults every entry point shares."""
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    if block_m is None:
+        block_m = pick_block_m(m, -(-d // 128) * 128, interpret)
+    return interpret, block_m
 
 
 def _pad_axis(x: jax.Array, axis: int, multiple: int) -> jax.Array:
@@ -83,8 +93,9 @@ def _impl(updates, noise, clip_norm, sigma, seed, use_ref, interpret, block_m, f
             m_true=m, d_true=d,
             block_m=block_m, interpret=interpret)
         s = s[:d]
-    cbar = s / m
-    return cbar, sq_rel / m, sq_clip / m
+    # raw SUMS, not means: the client-sharded engine psums these across the
+    # `clients` mesh axis before normalizing (dp_aggregate divides below)
+    return s, sq_rel, sq_clip
 
 
 def dp_aggregate(
@@ -103,11 +114,7 @@ def dp_aggregate(
     Pass a materialized ``noise`` matrix OR (``noise_key``, ``noise_sigma``)
     to draw the Gaussian noise inside the kernel (fused-noise path).
     """
-    if interpret is None:
-        interpret = jax.default_backend() != "tpu"
-    if block_m is None:
-        d_padded = -(-updates.shape[1] // 128) * 128
-        block_m = pick_block_m(updates.shape[0], d_padded, interpret)
+    interpret, block_m = _resolve_defaults(*updates.shape, interpret, block_m)
     fused = noise_key is not None
     if fused and noise_sigma is None:
         raise ValueError("`noise_key` requires `noise_sigma` (sigma=0 would "
@@ -117,15 +124,42 @@ def dp_aggregate(
                          "materialize the noise for use_ref=True")
     seed = _key_to_seed(noise_key) if fused else jnp.int32(0)
     sigma = jnp.asarray(noise_sigma if noise_sigma is not None else 0.0, jnp.float32)
-    cbar, mean_sq, mean_sq_clipped = _impl(
+    s, sq_rel, sq_clip = _impl(
         updates, noise, jnp.asarray(clip_norm, jnp.float32), sigma, seed,
         use_ref, interpret, block_m, fused)
+    m = updates.shape[0]
+    cbar = s / m
     return RoundStats(
         cbar=cbar,
-        mean_sq=mean_sq,
+        mean_sq=sq_rel / m,
         agg_sq=jnp.sum(jnp.square(cbar)),
-        mean_sq_clipped=mean_sq_clipped,
+        mean_sq_clipped=sq_clip / m,
     )
+
+
+def dp_aggregate_sums(
+    updates: jax.Array,
+    clip_norm,
+    noise: jax.Array | None = None,
+    *,
+    use_ref: bool = False,
+    interpret: bool | None = None,
+    block_m: int | None = None,
+) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Partial-sum entry point: ``(sum_c, sum_sq_released, sum_sq_clipped)``.
+
+    The same fused clip(+noise)+reduce kernel as ``dp_aggregate``, but the raw
+    per-shard SUMS are returned un-normalized so the client-sharded engine can
+    ``psum`` them across the ``clients`` mesh axis and divide once globally
+    (DESIGN.md §9).  In-kernel noise generation is not offered here: the
+    kernel's seed derivation has no notion of a shard offset, so every shard
+    would draw identical noise — materialize per-client rows instead
+    (``repro.core.aggregation.materialize_ldp_noise``).
+    """
+    interpret, block_m = _resolve_defaults(*updates.shape, interpret, block_m)
+    return _impl(updates, noise, jnp.asarray(clip_norm, jnp.float32),
+                 jnp.float32(0.0), jnp.int32(0), use_ref, interpret,
+                 block_m, False)
 
 
 def generate_ldp_noise(
@@ -139,11 +173,8 @@ def generate_ldp_noise(
 ) -> jax.Array:
     """Materialize the (m, d) Gaussian noise the fused kernel draws in-kernel
     for ``noise_key`` — the test oracle for the in-kernel PRNG statistics."""
-    if interpret is None:
-        interpret = jax.default_backend() != "tpu"
+    interpret, block_m = _resolve_defaults(m, d, interpret, block_m)
     d_padded = -(-d // 128) * 128
-    if block_m is None:
-        block_m = pick_block_m(m, d_padded, interpret)
     m_padded = -(-m // block_m) * block_m
     full = ldp_noise_kernel_call(
         m_padded, d_padded, _key_to_seed(noise_key), noise_sigma,

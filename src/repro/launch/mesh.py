@@ -8,7 +8,7 @@ from __future__ import annotations
 
 import jax
 
-__all__ = ["make_production_mesh", "make_test_mesh"]
+__all__ = ["make_production_mesh", "make_test_mesh", "make_client_mesh"]
 
 
 def make_production_mesh(*, multi_pod: bool = False):
@@ -21,3 +21,15 @@ def make_production_mesh(*, multi_pod: bool = False):
 def make_test_mesh(data: int = 1, model: int = 1):
     """Tiny mesh over however many (CPU) devices exist — for unit tests."""
     return jax.make_mesh((data, model), ("data", "model"))
+
+
+def make_client_mesh(n_shards: int | None = None, *, axis: str = "clients"):
+    """1-D ``clients`` mesh for the client-sharded round engine (DESIGN.md §9).
+
+    ``n_shards`` defaults to every visible device.  On CPU, force multiple
+    host devices BEFORE the first jax import to exercise real sharding:
+
+        XLA_FLAGS=--xla_force_host_platform_device_count=8
+    """
+    n = n_shards if n_shards is not None else len(jax.devices())
+    return jax.make_mesh((n,), (axis,))

@@ -19,7 +19,8 @@ import threading
 import jax
 from jax.sharding import PartitionSpec as P
 
-__all__ = ["axis_rules", "shard", "logical_to_pspec", "current_rules"]
+__all__ = ["axis_rules", "shard", "logical_to_pspec", "current_rules",
+           "client_axis_rules"]
 
 _STATE = threading.local()
 
@@ -40,6 +41,21 @@ def axis_rules(rules: dict[str, str | tuple[str, ...] | None]):
 
 
 AXIS_SIZES_KEY = "__axis_sizes__"   # installed by the launch layer (mesh sizes)
+
+
+def client_axis_rules(mesh, *, axis: str = "clients") -> dict:
+    """Rule set mapping the logical ``clients`` axis onto a client mesh.
+
+    The fedsim client-sharded engine uses these rules (via
+    ``logical_to_pspec``) to derive the PartitionSpec of every client-batch
+    leaf and of the padding mask, so the cohort partitioning logic lives here
+    with the rest of the logical-axis layer rather than being hand-rolled in
+    the engine.
+    """
+    return {
+        "clients": axis,
+        AXIS_SIZES_KEY: dict(zip(mesh.axis_names, mesh.devices.shape)),
+    }
 
 
 def logical_to_pspec(names: tuple[str | None, ...], rules: dict | None = None,

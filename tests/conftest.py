@@ -1,6 +1,9 @@
 import os
 import sys
 
-# tests must see exactly ONE device (the dry-run sets its own XLA_FLAGS in a
-# separate process); make src importable regardless of how pytest is invoked.
+# The suite runs under 1 device by default AND under CI's forced-8-device leg
+# (XLA_FLAGS=--xla_force_host_platform_device_count=8) — tests must not
+# assume a device count; tests/test_sharding.py adapts its mesh to whatever
+# exists.  The dry-run sets its own XLA_FLAGS in a separate process.
+# Make src importable regardless of how pytest is invoked.
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
