@@ -29,12 +29,18 @@ import json
 import subprocess
 import sys
 
-# always gated: dimensionless, machine-relative speedups
-RATIO_KEYS = ("speedup_scan_vs_eager", "speedup_single_seed")
+# always gated: dimensionless, machine-relative speedups (the sampled-cohort
+# ratio gates sampling overhead: sampled r/s relative to full participation)
+RATIO_KEYS = (
+    ("speedup_scan_vs_eager",),
+    ("speedup_single_seed",),
+    ("sampled_cohort", "relative_to_full"),
+)
 # gated only when the run configs match: absolute throughputs
 ABS_KEYS = (
     ("rounds_per_sec", "scan_batched_workload"),
     ("rounds_per_sec", "scan_single_seed"),
+    ("sampled_cohort", "rounds_per_sec"),
 )
 
 
@@ -83,8 +89,8 @@ def main(argv=None) -> int:
         return 0
 
     configs_match = base.get("config") == fresh.get("config")
-    checks = [(".".join(("",) + k).strip("."), _get(base, k), _get(fresh, k))
-              for k in ([(k,) for k in RATIO_KEYS]
+    checks = [(".".join(k), _get(base, k), _get(fresh, k))
+              for k in (list(RATIO_KEYS)
                         + (list(ABS_KEYS) if configs_match else []))]
     if not configs_match:
         print(f"NOTE config mismatch vs baseline ({base.get('config')} != "

@@ -14,8 +14,9 @@ import jax.numpy as jnp
 
 from benchmarks.common import make_dp_algorithm, mean_std, print_table, write_csv
 from repro.data.synthetic import distance_to_opt, linreg_loss, make_synthetic_linreg
+from repro.fedsim import FederatedSession, TrainSpec
 from repro.fedsim.scaffold import DPScaffoldConfig, run_dp_scaffold
-from repro.fedsim.server import RunResult, run_federated, run_federated_batched
+from repro.fedsim.server import RunResult
 
 # (eta_l, C) per algorithm x DP type, selected by re-running the paper's
 # grid-search protocol (E.1) on OUR generation (unit-normalized features —
@@ -55,9 +56,10 @@ def _run_setting_batched(setting: str, alg: str, data, w0, *, rounds, tau, seeds
             eta_history=jnp.stack([r.eta_history for r in runs]),
             metric_history=jnp.stack([r.metric_history for r in runs]))
     algorithm = _make_algorithm(setting, alg, m, d)
-    return run_federated_batched(algorithm, linreg_loss, w0, data.client_batches(),
-                                 rounds=rounds, tau=tau, eta_l=eta_l, keys=keys,
-                                 eval_fn=eval_fn)
+    session = FederatedSession(algorithm, linreg_loss, w0, data.client_batches(),
+                               train=TrainSpec(rounds=rounds, tau=tau, eta_l=eta_l),
+                               eval_fn=eval_fn)
+    return session.run_batched(keys)
 
 
 def _run_setting(setting: str, alg: str, data, w0, *, rounds, tau, seed):
@@ -74,9 +76,11 @@ def _run_setting(setting: str, alg: str, data, w0, *, rounds, tau, seed):
         return run_dp_scaffold(cfg, linreg_loss, w0, data.client_batches(),
                                rounds=rounds, tau=tau, eta_l=eta_l, key=key,
                                eval_fn=eval_fn)
-    return run_federated(_make_algorithm(setting, alg, m, d), linreg_loss, w0,
-                         data.client_batches(), rounds=rounds, tau=tau,
-                         eta_l=eta_l, key=key, eval_fn=eval_fn)
+    session = FederatedSession(_make_algorithm(setting, alg, m, d), linreg_loss,
+                               w0, data.client_batches(),
+                               train=TrainSpec(rounds=rounds, tau=tau, eta_l=eta_l),
+                               eval_fn=eval_fn)
+    return session.run(key)
 
 
 def main(*, clients: int = 400, rounds: int = 30, tau: int = 20, seeds: int = 2):

@@ -15,8 +15,8 @@ import jax.numpy as jnp
 from benchmarks.common import make_dp_algorithm, mean_std, print_table, write_csv
 from repro.data.dirichlet import client_image_batches, dirichlet_partition
 from repro.data.images import make_image_dataset
+from repro.fedsim import FederatedSession, TrainSpec
 from repro.fedsim.scaffold import DPScaffoldConfig, run_dp_scaffold
-from repro.fedsim.server import run_federated, run_federated_batched
 from repro.models.cnn import accuracy_fn, make_cnn, masked_xent_loss
 
 # (eta_l, C): LDP rows follow the paper's Table 2; the CDP row is re-selected
@@ -55,8 +55,10 @@ def _run(setting, alg, model, loss, eval_fn, batches, *, clients, rounds, tau, s
         return run_dp_scaffold(cfg, loss, model.init_flat, batches, rounds=rounds,
                                tau=tau, eta_l=eta_l, key=key, eval_fn=eval_fn)
     algorithm = _make_e2_algorithm(setting, alg, clients, model.dim)
-    return run_federated(algorithm, loss, model.init_flat, batches, rounds=rounds,
-                         tau=tau, eta_l=eta_l, key=key, eval_fn=eval_fn)
+    session = FederatedSession(algorithm, loss, model.init_flat, batches,
+                               train=TrainSpec(rounds=rounds, tau=tau, eta_l=eta_l),
+                               eval_fn=eval_fn)
+    return session.run(key)
 
 
 def _run_batched(setting, alg, problems, *, clients, rounds, tau, seeds):
@@ -70,9 +72,10 @@ def _run_batched(setting, alg, problems, *, clients, rounds, tau, seeds):
     batches = {k: jnp.stack([p[3][k] for p in problems])
                for k in problems[0][3]}
     algorithm = _make_e2_algorithm(setting, alg, clients, model.dim)
-    return run_federated_batched(algorithm, loss, w0s, batches, rounds=rounds,
-                                 tau=tau, eta_l=eta_l, keys=keys, eval_fn=eval_fn,
-                                 batched_w0=True, batched_data=True)
+    session = FederatedSession(algorithm, loss, w0s, batches,
+                               train=TrainSpec(rounds=rounds, tau=tau, eta_l=eta_l),
+                               eval_fn=eval_fn)
+    return session.run_batched(keys, batched_w0=True, batched_data=True)
 
 
 def main(*, clients: int = 150, rounds: int = 25, tau: int = 10, seeds: int = 1):

@@ -15,7 +15,7 @@ import jax.numpy as jnp
 from benchmarks.common import print_table, write_csv
 from repro.core.fedexp import make_algorithm
 from repro.data.synthetic import distance_to_opt, linreg_loss, make_synthetic_linreg
-from repro.fedsim.server import run_federated
+from repro.fedsim import FederatedSession, TrainSpec
 
 
 def main(*, clients: int = 400, rounds: int = 30):
@@ -34,10 +34,11 @@ def main(*, clients: int = 400, rounds: int = 30):
 
     for name, data, alg, eta_l in settings:
         w0 = jnp.zeros(data.dim)
-        r = run_federated(alg, linreg_loss, w0, data.client_batches(),
-                          rounds=rounds, tau=20, eta_l=eta_l,
-                          key=jax.random.PRNGKey(5),
-                          eval_fn=distance_to_opt(data.w_star))
+        session = FederatedSession(
+            alg, linreg_loss, w0, data.client_batches(),
+            train=TrainSpec(rounds=rounds, tau=20, eta_l=eta_l),
+            eval_fn=distance_to_opt(data.w_star))
+        r = session.run(jax.random.PRNGKey(5))
         etas = [float(x) for x in r.eta_history]
         for t, e in enumerate(etas):
             curves.append([name, t, e])

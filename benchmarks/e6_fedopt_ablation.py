@@ -21,7 +21,7 @@ import jax.numpy as jnp
 from benchmarks.common import print_table, write_csv
 from repro.core.fedexp import make_algorithm
 from repro.data.synthetic import distance_to_opt, linreg_loss, make_synthetic_linreg
-from repro.fedsim.server import run_federated
+from repro.fedsim import FederatedSession, TrainSpec
 
 M, D, ROUNDS, TAU, CLIP, ETA_L = 400, 200, 30, 20, 0.3, 0.1
 LR_GRID = (0.003, 0.01, 0.03, 0.1, 0.3)
@@ -35,20 +35,20 @@ def main(*, clients: int = M, dim: int = D, rounds: int = ROUNDS,
     ev = distance_to_opt(data.w_star)
     sigma = 5 * CLIP / math.sqrt(clients)
 
+    train = TrainSpec(rounds=rounds, tau=TAU, eta_l=ETA_L)
+
+    def run(alg):
+        return FederatedSession(alg, linreg_loss, w0, data.client_batches(),
+                                train=train, eval_fn=ev).run(jax.random.PRNGKey(9))
+
     rows = []
     for lr in lr_grid:
-        alg = make_algorithm("dp-fedadam-cdp", clip_norm=CLIP, sigma=sigma,
-                             num_clients=clients, server_lr=lr)
-        r = run_federated(alg, linreg_loss, w0, data.client_batches(),
-                          rounds=rounds, tau=TAU, eta_l=ETA_L,
-                          key=jax.random.PRNGKey(9), eval_fn=ev)
+        r = run(make_algorithm("dp-fedadam-cdp", clip_norm=CLIP, sigma=sigma,
+                               num_clients=clients, server_lr=lr))
         rows.append([f"dp-fedadam lr={lr}", float(r.metric_history[-1])])
 
-    alg = make_algorithm("cdp-fedexp", clip_norm=CLIP, sigma=sigma,
-                         num_clients=clients)
-    r = run_federated(alg, linreg_loss, w0, data.client_batches(),
-                      rounds=rounds, tau=TAU, eta_l=ETA_L,
-                      key=jax.random.PRNGKey(9), eval_fn=ev)
+    r = run(make_algorithm("cdp-fedexp", clip_norm=CLIP, sigma=sigma,
+                           num_clients=clients))
     rows.append(["cdp-fedexp (no server hp)", float(r.metric_history[-1])])
 
     write_csv("e6_fedopt_ablation.csv", ["algorithm", "final_dist"], rows)

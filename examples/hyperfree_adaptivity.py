@@ -18,7 +18,7 @@ import jax.numpy as jnp
 
 from repro.core.fedexp import make_algorithm
 from repro.data.synthetic import distance_to_opt, linreg_loss, make_synthetic_linreg
-from repro.fedsim.server import run_federated
+from repro.fedsim import FederatedSession, TrainSpec
 
 D, TAU, ROUNDS, CLIP, ETA_L = 200, 20, 30, 0.3, 0.1
 
@@ -28,10 +28,11 @@ for m in (200, 1000):
     for noise_mult in (1.0, 3.0, 10.0):
         sigma = noise_mult * 5 * CLIP / math.sqrt(m)
         alg = make_algorithm("cdp-fedexp", clip_norm=CLIP, sigma=sigma, num_clients=m)
-        r = run_federated(alg, linreg_loss, jnp.zeros(D), data.client_batches(),
-                          rounds=ROUNDS, tau=TAU, eta_l=ETA_L,
-                          key=jax.random.PRNGKey(7),
-                          eval_fn=distance_to_opt(data.w_star))
+        session = FederatedSession(
+            alg, linreg_loss, jnp.zeros(D), data.client_batches(),
+            train=TrainSpec(rounds=ROUNDS, tau=TAU, eta_l=ETA_L),
+            eval_fn=distance_to_opt(data.w_star))
+        r = session.run(jax.random.PRNGKey(7))
         print(f"{m:>6} {noise_mult:>10.1f} {float(jnp.mean(r.eta_history)):>10.2f} "
               f"{float(r.metric_history[-1]):>11.4f}")
 

@@ -1,28 +1,31 @@
-"""Quickstart: DP-FedEXP vs DP-FedAvg on the paper's synthetic problem.
+"""Quickstart: DP-FedEXP vs DP-FedAvg via the session API (DESIGN.md §10).
 
-    PYTHONPATH=src python examples/quickstart.py
+    PYTHONPATH=src python examples/quickstart.py            # paper-scale CDP run
+    PYTHONPATH=src python examples/quickstart.py --quick    # CI smoke (seconds)
 
 Runs the paper's CDP setting (M=1000 clients, tau=20 local steps, 50 rounds)
 and prints the distance to the shared optimum plus the adaptive step size.
 
-The chunked-scan engine compiles all 50 rounds as ONE XLA program (histories
-come back as stacked scan outputs); pass ``chunk_rounds=k`` to
-``run_federated`` to trade compile time for ceil(50/k) dispatches instead,
-or ``engine="eager"`` for the legacy one-program-per-round loop (see
-DESIGN.md §8 and benchmarks/e7_engine_throughput.py).
+A run is a ``FederatedSession`` bound to four frozen specs:
 
-Client sharding (DESIGN.md §9): to partition the M=1000 clients across
-devices, pass a client mesh —
+    TrainSpec(rounds, tau, eta_l)     what to train
+    EngineSpec(chunk_rounds, ...)     how to compile it (default: ONE scan
+                                      program for all rounds, cached across
+                                      runs of the same session)
+    ShardSpec(mesh=make_client_mesh())  partition clients across devices
+                                      (DESIGN.md §9; on CPU force host devices
+                                      first: XLA_FLAGS=--xla_force_host_
+                                      platform_device_count=8)
+    CohortSpec(q=0.25)                per-round client sampling with
+                                      amplification-aware accounting
+                                      (session.privacy_report)
 
-    from repro.launch.mesh import make_client_mesh
-    run_federated(..., mesh=make_client_mesh())
-
-On a CPU-only box, force several host devices BEFORE jax is imported to try
-it locally (results match the single-device engine to ~1e-5):
-
-    XLA_FLAGS=--xla_force_host_platform_device_count=8 \
-        PYTHONPATH=src python examples/quickstart.py
+``session.run(key, checkpoint_dir=...)`` makes the run resumable;
+``session.resume(dir)`` continues it bit-exactly.  Pass a parameter PYTREE
+(e.g. ``repro.models.cnn`` params) instead of a flat vector and the session
+ravels/unravels at the boundary — see README.md for the pytree quickstart.
 """
+import argparse
 import math
 import sys
 
@@ -33,27 +36,48 @@ import jax.numpy as jnp
 
 from repro.core.fedexp import make_algorithm
 from repro.data.synthetic import distance_to_opt, linreg_loss, make_synthetic_linreg
-from repro.fedsim.server import run_federated
+from repro.fedsim import CohortSpec, FederatedSession, TrainSpec
 
-M, D, ROUNDS, TAU = 1000, 500, 50, 20
 # grid-searched on this generation (EXPERIMENTS.md): (eta_l, C) per algorithm
 HPS = {"dp-fedavg-cdp": (0.3, 3.0), "cdp-fedexp": (0.1, 0.3)}
 
-data = make_synthetic_linreg(jax.random.PRNGKey(0), M, D)
-w0 = jnp.zeros(D)
-eval_fn = distance_to_opt(data.w_star)
 
-for name in ("dp-fedavg-cdp", "cdp-fedexp"):
-    eta_l, clip = HPS[name]
-    alg = make_algorithm(name, clip_norm=clip,
-                         sigma=5 * clip / math.sqrt(M), num_clients=M)
-    result = run_federated(alg, linreg_loss, w0, data.client_batches(),
-                           rounds=ROUNDS, tau=TAU, eta_l=eta_l,
-                           key=jax.random.PRNGKey(42), eval_fn=eval_fn)
-    dist = float(eval_fn(result.final_w))
-    etas = result.eta_history
-    print(f"{name:16s}  final ||w - w*|| = {dist:8.4f}   "
-          f"eta_g: first={float(etas[0]):.2f} last={float(etas[-1]):.2f}")
+def main(quick: bool = False, sampled_q: float | None = None):
+    m, d, rounds, tau = (120, 64, 8, 5) if quick else (1000, 500, 50, 20)
+    data = make_synthetic_linreg(jax.random.PRNGKey(0), m, d)
+    w0 = jnp.zeros(d)
+    eval_fn = distance_to_opt(data.w_star)
+    cohort = CohortSpec() if sampled_q is None else CohortSpec(q=sampled_q)
 
-print("\nDP-FedEXP reaches a closer iterate at the SAME privacy budget —")
-print("the global step size is derived from already-privatized statistics.")
+    for name in ("dp-fedavg-cdp", "cdp-fedexp"):
+        eta_l, clip = HPS[name]
+        alg = make_algorithm(name, clip_norm=clip,
+                             sigma=5 * clip / math.sqrt(m), num_clients=m)
+        session = FederatedSession(
+            alg, linreg_loss, w0, data.client_batches(),
+            train=TrainSpec(rounds=rounds, tau=tau, eta_l=eta_l),
+            cohort=cohort, eval_fn=eval_fn)
+        result = session.run(jax.random.PRNGKey(42))
+        dist = float(eval_fn(result.final_w))
+        etas = result.eta_history
+        report = session.privacy_report(delta=1e-5)
+        print(f"{name:16s}  final ||w - w*|| = {dist:8.4f}   "
+              f"eta_g: first={float(etas[0]):.2f} last={float(etas[-1]):.2f}   "
+              f"eps={report.eps_numerical:.2f}")
+
+    print("\nDP-FedEXP reaches a closer iterate at the SAME privacy budget —")
+    print("the global step size is derived from already-privatized statistics.")
+    if sampled_q is not None:
+        print(f"(sampled cohorts q={sampled_q}: epsilon accounts for the "
+              "subsampled release — conditional-sensitivity inflation plus "
+              "GDP amplification, see accounting.cdp_budget)")
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="small geometry for CI smoke runs")
+    ap.add_argument("--sampled-q", type=float, default=None,
+                    help="per-round Bernoulli client sampling rate")
+    args = ap.parse_args()
+    main(quick=args.quick, sampled_q=args.sampled_q)

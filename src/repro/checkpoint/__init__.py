@@ -4,6 +4,15 @@ Offline container has no msgpack/orbax, so checkpoints are flat ``npz``
 archives keyed by ``/``-joined tree paths, with a tiny JSON sidecar recording
 the round counter and RNG key. Round-trips exactly (dtype- and
 structure-preserving) and is host-memory streaming (numpy mmap on load).
+
+Path keys cover every jax key type (dict keys, sequence indices, dataclass
+attributes), so registered-dataclass states — e.g. the adaptive-clip
+``AdaptiveClipState`` threaded through a session's carry — round-trip like
+plain dicts.  Both files are written atomically (tmp file + rename), sidecar
+FIRST and the ``.npz`` last: a checkpoint only becomes discoverable
+(``latest_step`` keys on the ``.npz`` listing) once both halves are durable,
+so a kill at any point mid-save leaves at worst a harmless orphan sidecar or
+tmp file, never a latest step that cannot be loaded.
 """
 from __future__ import annotations
 
@@ -20,23 +29,47 @@ __all__ = ["save_checkpoint", "load_checkpoint", "latest_step"]
 _SEP = "/"
 
 
+def _path_str(path) -> str:
+    """``/``-joined key path; supports DictKey(.key), SequenceKey(.idx),
+    GetAttrKey(.name) and FlattenedIndexKey(.key)."""
+    parts = []
+    for p in path:
+        for attr in ("key", "idx", "name"):
+            if hasattr(p, attr):
+                parts.append(str(getattr(p, attr)))
+                break
+        else:
+            parts.append(str(p))
+    return _SEP.join(parts)
+
+
 def _flatten(tree) -> dict[str, np.ndarray]:
     flat = {}
     for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
-        key = _SEP.join(
-            str(p.key) if hasattr(p, "key") else str(p.idx) for p in path)
-        flat[key] = np.asarray(leaf)
+        flat[_path_str(path)] = np.asarray(leaf)
     return flat
+
+
+def _atomic_json_dump(obj: Any, path: str) -> None:
+    tmp = path + ".tmp"
+    with open(tmp, "w") as f:
+        json.dump(obj, f)
+    os.replace(tmp, path)
 
 
 def save_checkpoint(directory: str, step: int, params, extra: dict | None = None) -> str:
     """Write ``<dir>/ckpt_<step>.npz`` (+ meta json). Returns the path."""
     os.makedirs(directory, exist_ok=True)
     path = os.path.join(directory, f"ckpt_{step:08d}.npz")
-    np.savez(path, **_flatten(params))
+    # sidecar FIRST, npz last: latest_step keys on the npz listing, so the
+    # step only becomes visible once both halves exist — a crash between the
+    # writes leaves a harmless orphan sidecar, never a latest checkpoint
+    # whose load raises FileNotFoundError
     meta = {"step": step, **(extra or {})}
-    with open(path.replace(".npz", ".json"), "w") as f:
-        json.dump(meta, f)
+    _atomic_json_dump(meta, path.replace(".npz", ".json"))
+    tmp = path + ".tmp.npz"
+    np.savez(tmp, **_flatten(params))
+    os.replace(tmp, path)
     return path
 
 
@@ -50,9 +83,17 @@ def load_checkpoint(directory: str, template, step: int | None = None):
     paths, treedef = jax.tree_util.tree_flatten_with_path(template)
     leaves = []
     for p, leaf in paths:
-        key = _SEP.join(str(q.key) if hasattr(q, "key") else str(q.idx) for q in p)
+        key = _path_str(p)
+        if key not in data:
+            raise ValueError(
+                f"checkpoint {path} is missing leaf {key!r} required by the "
+                f"template (have: {sorted(data.files)[:10]}...)")
         arr = data[key]
-        assert arr.shape == tuple(leaf.shape), (key, arr.shape, leaf.shape)
+        if arr.shape != tuple(leaf.shape):
+            raise ValueError(
+                f"checkpoint leaf {key!r} has shape {arr.shape}, template "
+                f"expects {tuple(leaf.shape)} — checkpoint and session "
+                "configuration (model dim, avg_last, optimizer) must match")
         leaves.append(arr.astype(leaf.dtype) if hasattr(leaf, "dtype") else arr)
     with open(path.replace(".npz", ".json")) as f:
         meta = json.load(f)

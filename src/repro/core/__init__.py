@@ -14,6 +14,7 @@ from repro.core.fedexp import (
     LDPFedEXPPrivUnit,
     RoundAux,
     ServerAlgorithm,
+    list_algorithms,
     make_algorithm,
 )
 
@@ -21,7 +22,7 @@ __all__ = [
     "accounting", "aggregation", "clipping", "mechanisms", "stepsize",
     "RoundStats", "aggregate_stats", "fused_clip_aggregate",
     "clip_batch", "clip_by_l2", "clip_tree", "global_l2_norm_tree",
-    "ServerAlgorithm", "RoundAux", "make_algorithm",
+    "ServerAlgorithm", "RoundAux", "make_algorithm", "list_algorithms",
     "FedAvg", "FedEXP", "DPFedAvgLDPGaussian", "LDPFedEXPGaussian",
     "DPFedAvgPrivUnit", "LDPFedEXPPrivUnit", "DPFedAvgCDP", "CDPFedEXP",
 ]

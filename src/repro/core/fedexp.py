@@ -58,21 +58,45 @@ __all__ = [
     "DPFedAvgCDP",
     "CDPFedEXP",
     "make_algorithm",
+    "list_algorithms",
+    "set_moment_count",
+    "clamp_moment_counts",
 ]
 
 
-def _set_static_count(moments, m_total: int):
-    """Swap the traced psummed client count for its statically-known value in
-    every RoundMoments of an algorithm's moments pytree (see
-    ``ServerAlgorithm.apply_round_sharded``)."""
-    c = jnp.float32(m_total)
-
-    def fix(x):
-        return dataclasses.replace(x, count=c) if isinstance(x, RoundMoments) else x
+def _map_moments(moments, fix):
+    """Apply ``fix`` to every RoundMoments in an algorithm's moments pytree
+    (a bare RoundMoments or a (RoundMoments, extras) tuple)."""
+    def one(x):
+        return fix(x) if isinstance(x, RoundMoments) else x
 
     if isinstance(moments, tuple):
-        return tuple(fix(e) for e in moments)
-    return fix(moments)
+        return tuple(one(e) for e in moments)
+    return one(moments)
+
+
+def set_moment_count(moments, m_total: int):
+    """Swap the traced client count for its statically-known value in every
+    RoundMoments of an algorithm's moments pytree.
+
+    Used when the true count is known at trace time (the full cohort size on
+    the sharded path, the fixed cohort size on the sampled path): the static
+    constant lets XLA fold the 1/M normalizations exactly as the unsampled
+    single-device reference does, keeping engines bit-compatible (see
+    ``ServerAlgorithm.apply_round_sharded``)."""
+    c = jnp.float32(m_total)
+    return _map_moments(moments, lambda x: dataclasses.replace(x, count=c))
+
+
+def clamp_moment_counts(moments):
+    """Clamp every RoundMoments count to >= 1.
+
+    Bernoulli cohort sampling can draw an empty round; with all sums already
+    zero, a clamped count turns the 0/0 mean into a zero update (the round is
+    a no-op) instead of NaN-poisoning the carry."""
+    return _map_moments(
+        moments,
+        lambda x: dataclasses.replace(x, count=jnp.maximum(x.count, 1.0)))
 
 
 def client_keys(key: jax.Array, m: int, start: int | jax.Array = 0) -> jax.Array:
@@ -163,7 +187,7 @@ class ServerAlgorithm:
         moments = self.local_moments(key, w, deltas, mask, start, state)
         moments = jax.lax.psum(moments, axis_name)
         if m_total is not None:
-            moments = _set_static_count(moments, m_total)
+            moments = set_moment_count(moments, m_total)
         return self.apply_from_moments(key, w, moments, state)
 
 
@@ -600,7 +624,13 @@ _FACTORIES: dict[str, Callable[..., ServerAlgorithm]] = {
 }
 
 
+def list_algorithms() -> list[str]:
+    """Sorted names of every registered server algorithm."""
+    return sorted(_FACTORIES)
+
+
 def make_algorithm(name: str, **kwargs) -> ServerAlgorithm:
     if name not in _FACTORIES:
-        raise KeyError(f"unknown algorithm {name!r}; have {sorted(_FACTORIES)}")
+        raise KeyError(f"unknown algorithm {name!r}; valid names: "
+                       f"{', '.join(list_algorithms())}")
     return _FACTORIES[name](**kwargs)

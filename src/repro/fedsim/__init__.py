@@ -1,12 +1,20 @@
-"""Vectorized federated-learning simulation engine (paper experiments)."""
+"""Vectorized federated-learning simulation engine (paper experiments).
+
+Entry point: ``FederatedSession`` + the four specs (DESIGN.md §10).  The
+kwargs-style ``run_federated`` / ``run_federated_batched`` are deprecated
+shims over a one-shot session.
+"""
 
 from repro.fedsim.flat import flatten_model
 from repro.fedsim.local import cohort_updates, local_update
 from repro.fedsim.scaffold import DPScaffoldConfig, run_dp_scaffold
 from repro.fedsim.server import RunResult, run_federated, run_federated_batched
+from repro.fedsim.session import FederatedSession
+from repro.fedsim.specs import CohortSpec, EngineSpec, ShardSpec, TrainSpec
 
 __all__ = [
     "flatten_model", "local_update", "cohort_updates",
+    "FederatedSession", "TrainSpec", "EngineSpec", "ShardSpec", "CohortSpec",
     "run_federated", "run_federated_batched", "RunResult",
     "DPScaffoldConfig", "run_dp_scaffold",
 ]

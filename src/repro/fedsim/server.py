@@ -1,56 +1,58 @@
-"""Federated training loop for the simulation engine.
+"""Federated round engine: compiled scan chunks, sharding, cohort sampling.
 
 Runs T rounds of: broadcast -> vmapped local training (Algorithm 3) ->
 clip/randomize/aggregate + adaptive step size (Algorithms 1/2) -> global
 update.
 
-Engine (DESIGN.md §8).  The default ``engine="scan"`` compiles the whole
-round loop as ``jax.lax.scan`` programs: T rounds run as ceil(T/chunk_rounds)
-XLA dispatches (one, by default) instead of T, per-round PRNG keys are
-``fold_in``-derived inside the scan, the eta/metric/naive/target histories
-come back as stacked scan outputs, and the trailing ``avg_last`` iterates ride
-in the scan carry so the §5 iterate average needs no host-side tail. The
-carry is donated on accelerators, reusing the weight buffer in place, and the
-compiled chunk program is cached across calls keyed on the (frozen, hashable)
-algorithm configuration — repeated runs of the same setting pay zero
-retrace/recompile, where the per-round loop re-jits every invocation.
+This module owns the ENGINE MACHINERY — the round-step builders, the scan
+bodies, and the compile caches.  The public entry point is
+``repro.fedsim.session.FederatedSession`` (DESIGN.md §10), which composes
+these builders from declarative specs; ``run_federated`` /
+``run_federated_batched`` below are thin deprecated shims over a session and
+keep their historical behavior bit-for-bit.
 
-``engine="eager"`` preserves the original loop — one jitted XLA program per
-round, dispatched from Python — as the baseline that
-``benchmarks/e7_engine_throughput.py`` measures the scan engine against.
+Engine (DESIGN.md §8).  The default scan engine compiles the whole round
+loop as ``jax.lax.scan`` programs: T rounds run as ceil(T/chunk_rounds) XLA
+dispatches (one, by default), per-round PRNG keys are ``fold_in``-derived
+inside the scan, the eta/metric/naive/target histories come back as stacked
+scan outputs, and the trailing ``avg_last`` iterates ride in the scan carry
+so the §5 iterate average needs no host-side tail.  The carry is donated on
+accelerators, and the compiled chunk program is cached across calls keyed on
+the (frozen, hashable) algorithm + spec configuration.
 
-``run_federated_batched`` vmaps the scan engine over seeds (optionally also
-over per-seed initializations and client data), so a whole mean±std sweep is
-ONE batched XLA program.
-
-Client sharding (DESIGN.md §9).  Passing ``mesh=`` (a 1-D mesh with a
-``clients`` axis, e.g. ``repro.launch.mesh.make_client_mesh()``) wraps the
-same scan program in ``shard_map`` over the client axis: each device holds a
-(M/n_shards, d) slice of the cohort for the whole run, computes local updates
-plus the clip/randomize partial sums there, and only the O(d) aggregation
-moments DP-FedEXP needs (Σc_i, Σ||c_i||², Σ||clip(Δ_i)||², M_i) cross devices
-via ``psum`` per round.  The server half (post-reduction DP noise, adaptive
-step size, optimizer state) runs replicated from the shared round key, so the
-sharded engine matches the single-device engine up to partial-sum reordering.
-Cohorts with M % n_shards != 0 are padded with zero-weight clients
+Client sharding (DESIGN.md §9): a 1-D ``clients`` mesh wraps the same scan
+program in ``shard_map``; each device holds a (M/n_shards, d) cohort slice
+and only the O(d) aggregation moments cross devices via one ``psum`` per
+round.  Cohorts with M % n_shards != 0 are padded with zero-weight clients
 (``pad_cohort``) that every moment masks out.
 
-Following §5 of the paper, the returned final model is the average of the last
-two iterates ("to mitigate the oscillating behaviour of DP-FedEXP").
+Cohort sampling (DESIGN.md §10): a ``CohortSpec`` with q<1 or a fixed size
+draws a per-round participation mask INSIDE the scan body (static shapes —
+sampled rounds stay one compiled program per chunk) and routes the round
+through the same masked-moment machinery sharding uses: non-participants'
+updates are zero-weighted at the source and every reduction is mask-weighted,
+so the release is mathematically the sampled-cohort release.  The sampling
+mask is derived from the replicated round key, so sharded and single-device
+sampled runs see the identical cohort.
+
+Following §5 of the paper, the returned final model is the average of the
+last two iterates ("to mitigate the oscillating behaviour of DP-FedEXP").
 """
 from __future__ import annotations
 
 import dataclasses
 import functools
-from typing import Callable
+import warnings
+from typing import Any, Callable
 
 import jax
 import jax.numpy as jnp
 from jax.experimental.shard_map import shard_map
 from jax.sharding import PartitionSpec as P
 
-from repro.core.fedexp import ServerAlgorithm
-from repro.fedsim.local import cohort_updates, masked_cohort_updates, pad_cohort
+from repro.core.fedexp import ServerAlgorithm, clamp_moment_counts, set_moment_count
+from repro.fedsim.local import cohort_updates, masked_cohort_updates
+from repro.fedsim.specs import CohortSpec
 from repro.models.sharding import client_axis_rules, logical_to_pspec
 
 __all__ = ["RunResult", "run_federated", "run_federated_batched"]
@@ -58,44 +60,117 @@ __all__ = ["RunResult", "run_federated", "run_federated_batched"]
 
 @dataclasses.dataclass
 class RunResult:
-    final_w: jax.Array            # average of the last `avg_last` iterates
-    last_w: jax.Array
+    final_w: Any                  # average of the last `avg_last` iterates
+    last_w: Any                   # pytree-shaped when the session got a pytree
     eta_history: jax.Array        # (T,)
-    metric_history: jax.Array     # (T,) eval metric per round (nan if no eval_fn)
+    metric_history: jax.Array     # (T,) eval metric per round (nan if no eval_fn
+    #                               or the round is off the eval_every cadence)
     eta_naive_history: jax.Array | None = None
     eta_target_history: jax.Array | None = None
 
 
-def _round_step(algorithm, loss_fn, eval_fn, tau):
-    """One server round; identical computation for both engines."""
+def _eval_metric(eval_fn, eval_every: int, w_next, t):
+    """Per-round metric honoring the eval cadence.
 
-    def step(w, opt_state, round_key, client_batches, eta_l):
-        deltas = cohort_updates(loss_fn, w, client_batches, tau, eta_l)
-        w_next, aux, opt_state = algorithm.apply_round_stateful(
-            round_key, w, deltas, opt_state)
-        metric = eval_fn(w_next) if eval_fn is not None else jnp.float32(jnp.nan)
+    eval_every == 1 keeps the historical unconditional call (bit-identical
+    program); a larger cadence guards the eval behind ``lax.cond`` so skipped
+    rounds cost nothing and record NaN (fixed-shape histories).
+    """
+    if eval_fn is None:
+        return jnp.float32(jnp.nan)
+    if eval_every == 1:
+        return eval_fn(w_next)
+    return jax.lax.cond((t + 1) % eval_every == 0,
+                        lambda w: jnp.asarray(eval_fn(w), jnp.float32),
+                        lambda w: jnp.float32(jnp.nan), w_next)
+
+
+def _resolve_sampled_count(moments, cohort: CohortSpec):
+    """Fix the moments' client count for a sampled round.
+
+    Fixed-size cohorts have a statically known count — substituting it lets
+    XLA fold the 1/|S_t| normalizations identically on every engine (the same
+    trick as ``m_total`` on the sharded path).  Bernoulli counts are traced
+    and can be zero on an unlucky round; clamping to >= 1 turns the empty
+    round into a zero update instead of NaN poison.
+    """
+    if cohort.size is not None:
+        return set_moment_count(moments, cohort.size)
+    return clamp_moment_counts(moments)
+
+
+def _round_step(algorithm, loss_fn, eval_fn, tau, eval_every: int = 1,
+                cohort: CohortSpec | None = None):
+    """One server round; identical computation for scan and eager engines.
+
+    With no (active) cohort spec this is the historical full-participation
+    round — bit-for-bit.  A sampling spec reroutes the round through the
+    masked-moment protocol: all M clients still compute local updates (static
+    shapes), the participation mask zero-weights non-participants, and the
+    algorithm consumes mask-weighted moments exactly as on a client shard.
+    """
+    sampled = cohort is not None and cohort.is_sampled
+
+    def step(w, opt_state, round_key, t, client_batches, eta_l):
+        if not sampled:
+            deltas = cohort_updates(loss_fn, w, client_batches, tau, eta_l)
+            w_next, aux, opt_state = algorithm.apply_round_stateful(
+                round_key, w, deltas, opt_state)
+        else:
+            m = jax.tree_util.tree_leaves(client_batches)[0].shape[0]
+            mask = cohort.round_mask(round_key, m)
+            deltas = masked_cohort_updates(loss_fn, w, client_batches, tau,
+                                           eta_l, mask)
+            moments = algorithm.local_moments(round_key, w, deltas, mask, 0,
+                                              opt_state)
+            moments = _resolve_sampled_count(moments, cohort)
+            w_next, aux, opt_state = algorithm.apply_from_moments(
+                round_key, w, moments, opt_state)
+        metric = _eval_metric(eval_fn, eval_every, w_next, t)
         outs = (aux.eta_g, metric, aux.eta_naive, aux.eta_target)
         return w_next, opt_state, outs
 
     return step
 
 
-def _sharded_round_step(algorithm, loss_fn, eval_fn, tau, axis, m_true):
+def _sharded_round_step(algorithm, loss_fn, eval_fn, tau, axis, m_true,
+                        m_pad: int | None = None, eval_every: int = 1,
+                        cohort: CohortSpec | None = None):
     """One round on a client shard; runs inside ``shard_map`` over ``axis``.
 
     Same round semantics as ``_round_step``, but local training and the
     clip/randomize reductions see only this device's cohort slice, and the
     algorithm's partial moments are psummed before the replicated server
-    update (the only cross-device communication of the round).  ``m_true`` is
-    the static pre-padding client count the 1/M normalizations fold in.
+    update.  ``m_true`` is the static pre-padding client count.  With cohort
+    sampling, every device derives the FULL participation mask from the
+    replicated round key and slices its own rows, so the sampled cohort is
+    identical to the single-device engine's.
     """
+    sampled = cohort is not None and cohort.is_sampled
 
-    def step(w, opt_state, round_key, batches_and_mask, eta_l):
-        local_batches, mask = batches_and_mask
-        deltas = masked_cohort_updates(loss_fn, w, local_batches, tau, eta_l, mask)
-        w_next, aux, opt_state = algorithm.apply_round_sharded(
-            round_key, w, deltas, mask, opt_state, axis, m_total=m_true)
-        metric = eval_fn(w_next) if eval_fn is not None else jnp.float32(jnp.nan)
+    def step(w, opt_state, round_key, t, batches_and_mask, eta_l):
+        local_batches, pad_mask = batches_and_mask
+        if not sampled:
+            deltas = masked_cohort_updates(loss_fn, w, local_batches, tau,
+                                           eta_l, pad_mask)
+            w_next, aux, opt_state = algorithm.apply_round_sharded(
+                round_key, w, deltas, pad_mask, opt_state, axis, m_total=m_true)
+        else:
+            m_local = pad_mask.shape[0]
+            start = jax.lax.axis_index(axis) * m_local
+            full = cohort.round_mask(round_key, m_true)
+            full = jnp.concatenate(
+                [full, jnp.zeros((m_pad - m_true,), jnp.float32)])
+            mask = jax.lax.dynamic_slice(full, (start,), (m_local,)) * pad_mask
+            deltas = masked_cohort_updates(loss_fn, w, local_batches, tau,
+                                           eta_l, mask)
+            moments = algorithm.local_moments(round_key, w, deltas, mask,
+                                              start, opt_state)
+            moments = jax.lax.psum(moments, axis)
+            moments = _resolve_sampled_count(moments, cohort)
+            w_next, aux, opt_state = algorithm.apply_from_moments(
+                round_key, w, moments, opt_state)
+        metric = _eval_metric(eval_fn, eval_every, w_next, t)
         outs = (aux.eta_g, metric, aux.eta_naive, aux.eta_target)
         return w_next, opt_state, outs
 
@@ -117,13 +192,15 @@ def _fold_round_keys(key, ts):
 
 
 def _scan_body(step_round, client_batches, eta_l):
-    """The one scan body both the chunked and the batched engine compile —
-    the tail-carry and key semantics the bit-exactness tests pin down."""
+    """The one scan body every engine compiles — the tail-carry and key
+    semantics the bit-exactness tests pin down.  xs is (round_keys, ts): the
+    round index rides along for eval cadence and diagnostics."""
 
-    def body(carry, round_key):
+    def body(carry, key_t):
+        round_key, t = key_t
         w, opt_state, tail = carry
         w_next, opt_state, outs = step_round(
-            w, opt_state, round_key, client_batches, eta_l)
+            w, opt_state, round_key, t, client_batches, eta_l)
         tail = jnp.concatenate([tail[1:], w_next[None]], axis=0)
         return (w_next, opt_state, tail), outs
 
@@ -131,13 +208,14 @@ def _scan_body(step_round, client_batches, eta_l):
 
 
 def _build_scan_chunk_fn(algorithm: ServerAlgorithm, loss_fn, eval_fn,
-                         tau: int, donate: bool, unroll: int):
-    step_round = _round_step(algorithm, loss_fn, eval_fn, tau)
+                         tau: int, donate: bool, unroll: int,
+                         eval_every: int, cohort: CohortSpec | None):
+    step_round = _round_step(algorithm, loss_fn, eval_fn, tau, eval_every, cohort)
 
     def chunk(carry, key, ts, client_batches, eta_l):
         keys = _fold_round_keys(key, ts)
         body = _scan_body(step_round, client_batches, eta_l)
-        return jax.lax.scan(body, carry, keys, unroll=min(unroll, len(ts)))
+        return jax.lax.scan(body, carry, (keys, ts), unroll=min(unroll, len(ts)))
 
     return jax.jit(chunk, donate_argnums=(0,) if donate else ())
 
@@ -146,17 +224,20 @@ _cached_scan_chunk_fn = functools.lru_cache(maxsize=32)(_build_scan_chunk_fn)
 
 
 def _scan_chunk_fn(algorithm: ServerAlgorithm, loss_fn, eval_fn, tau: int,
-                   donate: bool, unroll: int):
+                   donate: bool, unroll: int, eval_every: int = 1,
+                   cohort: CohortSpec | None = None):
     """Compiled scan over a chunk of rounds, cached by configuration.
 
     The cache key is (algorithm config, loss/eval *identity*, tau, donation,
-    unroll); round count, eta_l, and all array shapes are traced, so any two
-    calls with equal configuration share one compiled program per chunk
-    length.  For the cache to hit, callers must hold onto their loss/eval
-    closures — a fresh closure per call retraces (exactly the legacy cost,
-    no worse).  ``unroll`` packs that many rounds per loop trip — XLA:CPU
-    penalizes ops inside while-loop bodies, and a small unroll claws most of
-    it back for ~proportional compile time (results are bit-identical).
+    unroll, eval cadence, cohort spec); round count, eta_l, and all array
+    shapes are traced, so any two calls with equal configuration share one
+    compiled program per chunk length.  For the cache to hit, callers must
+    hold onto their loss/eval closures — a fresh closure per call retraces
+    (exactly the legacy cost, no worse); ``FederatedSession`` owns its
+    closures, so repeated ``run`` calls on one session always hit.  ``unroll``
+    packs that many rounds per loop trip — XLA:CPU penalizes ops inside
+    while-loop bodies, and a small unroll claws most of it back for
+    ~proportional compile time (results are bit-identical).
 
     Algorithms with unhashable fields (arrays, user-defined non-frozen
     dataclasses) can't be cache keys; they get an uncached build — again the
@@ -164,17 +245,19 @@ def _scan_chunk_fn(algorithm: ServerAlgorithm, loss_fn, eval_fn, tau: int,
     """
     try:
         return _cached_scan_chunk_fn(algorithm, loss_fn, eval_fn, tau,
-                                     donate, unroll)
+                                     donate, unroll, eval_every, cohort)
     except TypeError:
         return _build_scan_chunk_fn(algorithm, loss_fn, eval_fn, tau,
-                                    donate, unroll)
+                                    donate, unroll, eval_every, cohort)
 
 
 def _build_sharded_chunk_fn(algorithm: ServerAlgorithm, loss_fn, eval_fn,
                             tau: int, donate: bool, unroll: int,
                             mesh, axis: str, batch_treedef, leaf_ndims,
-                            mask_len: int, m_true: int):
-    step_round = _sharded_round_step(algorithm, loss_fn, eval_fn, tau, axis, m_true)
+                            mask_len: int, m_true: int,
+                            eval_every: int, cohort: CohortSpec | None):
+    step_round = _sharded_round_step(algorithm, loss_fn, eval_fn, tau, axis,
+                                     m_true, mask_len, eval_every, cohort)
     rules = client_axis_rules(mesh, axis=axis)
     batch_specs, mask_spec = _client_batch_specs(batch_treedef, leaf_ndims,
                                                  mask_len, rules)
@@ -182,7 +265,7 @@ def _build_sharded_chunk_fn(algorithm: ServerAlgorithm, loss_fn, eval_fn,
     def chunk(carry, key, ts, local_batches, mask, eta_l):
         keys = _fold_round_keys(key, ts)
         body = _scan_body(step_round, (local_batches, mask), eta_l)
-        return jax.lax.scan(body, carry, keys, unroll=min(unroll, len(ts)))
+        return jax.lax.scan(body, carry, (keys, ts), unroll=min(unroll, len(ts)))
 
     sharded = shard_map(
         chunk, mesh=mesh,
@@ -196,7 +279,8 @@ _cached_sharded_chunk_fn = functools.lru_cache(maxsize=32)(_build_sharded_chunk_
 
 
 def _sharded_chunk_fn(algorithm, loss_fn, eval_fn, tau, donate, unroll,
-                      mesh, axis, batch_treedef, leaf_ndims, mask_len, m_true):
+                      mesh, axis, batch_treedef, leaf_ndims, mask_len, m_true,
+                      eval_every: int = 1, cohort: CohortSpec | None = None):
     """Compiled shard_mapped scan chunk, cached like `_scan_chunk_fn` (the
     mesh, client-batch treedef and leaf ranks join the key; same unhashable-
     algorithm fallback)."""
@@ -204,25 +288,26 @@ def _sharded_chunk_fn(algorithm, loss_fn, eval_fn, tau, donate, unroll,
         return _cached_sharded_chunk_fn(algorithm, loss_fn, eval_fn, tau,
                                         donate, unroll, mesh, axis,
                                         batch_treedef, leaf_ndims, mask_len,
-                                        m_true)
+                                        m_true, eval_every, cohort)
     except TypeError:
         return _build_sharded_chunk_fn(algorithm, loss_fn, eval_fn, tau,
                                        donate, unroll, mesh, axis,
                                        batch_treedef, leaf_ndims, mask_len,
-                                       m_true)
+                                       m_true, eval_every, cohort)
 
 
 def _build_batched_run_fn(algorithm: ServerAlgorithm, loss_fn, eval_fn,
                           tau: int, tail_n: int, batched_w0: bool,
-                          batched_data: bool):
-    step_round = _round_step(algorithm, loss_fn, eval_fn, tau)
+                          batched_data: bool, eval_every: int,
+                          cohort: CohortSpec | None):
+    step_round = _round_step(algorithm, loss_fn, eval_fn, tau, eval_every, cohort)
 
     def run_one(w0, key, client_batches, eta_l, ts):
         keys = _fold_round_keys(key, ts)
         carry = (w0, algorithm.init_state(w0),
                  jnp.zeros((tail_n,) + w0.shape, w0.dtype))
         body = _scan_body(step_round, client_batches, eta_l)
-        (w, _, tail), outs = jax.lax.scan(body, carry, keys)
+        (w, _, tail), outs = jax.lax.scan(body, carry, (keys, ts))
         return (jnp.mean(tail, axis=0), w) + outs
 
     in_axes = (0 if batched_w0 else None, 0, 0 if batched_data else None,
@@ -237,10 +322,12 @@ def _build_sharded_batched_run_fn(algorithm: ServerAlgorithm, loss_fn, eval_fn,
                                   tau: int, tail_n: int, batched_w0: bool,
                                   batched_data: bool, mesh, axis: str,
                                   batch_treedef, leaf_ndims, mask_len: int,
-                                  m_true: int):
+                                  m_true: int, eval_every: int,
+                                  cohort: CohortSpec | None):
     """Seeds vmapped INSIDE shard_map: every device runs all S seeds over its
     own client slice, so one program serves the whole sweep sharded."""
-    step_round = _sharded_round_step(algorithm, loss_fn, eval_fn, tau, axis, m_true)
+    step_round = _sharded_round_step(algorithm, loss_fn, eval_fn, tau, axis,
+                                     m_true, mask_len, eval_every, cohort)
     rules = client_axis_rules(mesh, axis=axis)
     # with batched_data the seed axis leads and `clients` moves to axis 1
     names = [(None, "clients") if batched_data else ("clients",)] * len(leaf_ndims)
@@ -254,7 +341,7 @@ def _build_sharded_batched_run_fn(algorithm: ServerAlgorithm, loss_fn, eval_fn,
         carry = (w0, algorithm.init_state(w0),
                  jnp.zeros((tail_n,) + w0.shape, w0.dtype))
         body = _scan_body(step_round, (local_batches, mask), eta_l)
-        (w, _, tail), outs = jax.lax.scan(body, carry, keys)
+        (w, _, tail), outs = jax.lax.scan(body, carry, (keys, ts))
         return (jnp.mean(tail, axis=0), w) + outs
 
     def batched(w0, keys, local_batches, mask, eta_l, ts):
@@ -276,33 +363,92 @@ _cached_sharded_batched_run_fn = (
 
 
 def _batched_run_fn(algorithm: ServerAlgorithm, loss_fn, eval_fn, tau: int,
-                    tail_n: int, batched_w0: bool, batched_data: bool):
+                    tail_n: int, batched_w0: bool, batched_data: bool,
+                    eval_every: int = 1, cohort: CohortSpec | None = None):
     """vmapped-over-seeds full run (single scan, no chunking); cached with
     the same hashability fallback as `_scan_chunk_fn`."""
     try:
         return _cached_batched_run_fn(algorithm, loss_fn, eval_fn, tau,
-                                      tail_n, batched_w0, batched_data)
+                                      tail_n, batched_w0, batched_data,
+                                      eval_every, cohort)
     except TypeError:
         return _build_batched_run_fn(algorithm, loss_fn, eval_fn, tau,
-                                     tail_n, batched_w0, batched_data)
+                                     tail_n, batched_w0, batched_data,
+                                     eval_every, cohort)
 
 
 def _sharded_batched_fn(algorithm, loss_fn, eval_fn, tau, tail_n, batched_w0,
                         batched_data, mesh, axis, batch_treedef, leaf_ndims,
-                        mask_len, m_true):
+                        mask_len, m_true, eval_every: int = 1,
+                        cohort: CohortSpec | None = None):
     try:
         return _cached_sharded_batched_run_fn(
             algorithm, loss_fn, eval_fn, tau, tail_n, batched_w0, batched_data,
-            mesh, axis, batch_treedef, leaf_ndims, mask_len, m_true)
+            mesh, axis, batch_treedef, leaf_ndims, mask_len, m_true,
+            eval_every, cohort)
     except TypeError:
         return _build_sharded_batched_run_fn(
             algorithm, loss_fn, eval_fn, tau, tail_n, batched_w0, batched_data,
-            mesh, axis, batch_treedef, leaf_ndims, mask_len, m_true)
+            mesh, axis, batch_treedef, leaf_ndims, mask_len, m_true,
+            eval_every, cohort)
 
 
-def _chunk_bounds(rounds: int, chunk_rounds: int | None):
-    chunk = rounds if not chunk_rounds else max(1, int(chunk_rounds))
-    return [(s, min(s + chunk, rounds)) for s in range(0, rounds, chunk)]
+def _run_eager(algorithm, loss_fn, w0, client_batches, *, rounds, tau, eta_l,
+               key, eval_fn, avg_last, eval_every: int = 1,
+               cohort: CohortSpec | None = None):
+    """Legacy engine: one jitted XLA program per round, dispatched from a
+    Python loop (re-traced per call — kept as the e7 throughput baseline)."""
+    step_round = _round_step(algorithm, loss_fn, eval_fn, tau, eval_every, cohort)
+
+    def one_round(w, opt_state, round_key, t):
+        return step_round(w, opt_state, round_key, t, client_batches, eta_l)
+
+    round_jit = jax.jit(one_round)
+
+    w = w0
+    opt_state = algorithm.init_state(w0)
+    tail: list[jax.Array] = []
+    etas, metrics, naives, targets = [], [], [], []
+    for t in range(rounds):
+        w, opt_state, (eta, metric, naive, target) = round_jit(
+            w, opt_state, jax.random.fold_in(key, t), jnp.int32(t))
+        etas.append(eta)
+        metrics.append(metric)
+        naives.append(naive)
+        targets.append(target)
+        tail.append(w)
+        if len(tail) > avg_last:
+            tail.pop(0)
+
+    final_w = jnp.mean(jnp.stack(tail), axis=0)
+    return RunResult(
+        final_w=final_w,
+        last_w=w,
+        eta_history=jnp.stack(etas),
+        metric_history=jnp.stack(metrics),
+        eta_naive_history=jnp.stack(naives),
+        eta_target_history=jnp.stack(targets),
+    )
+
+
+# ---------------------------------------------------------------------------
+# Deprecated kwargs-style entry points (shims over FederatedSession)
+# ---------------------------------------------------------------------------
+
+_deprecation_warned = False
+
+
+def _warn_deprecated(name: str) -> None:
+    """One DeprecationWarning per process — the shims stay quiet afterwards."""
+    global _deprecation_warned
+    if not _deprecation_warned:
+        _deprecation_warned = True
+        warnings.warn(
+            f"{name} is deprecated; build a repro.fedsim.FederatedSession "
+            "with TrainSpec/EngineSpec/ShardSpec/CohortSpec instead "
+            "(DESIGN.md §10). The shim delegates to a session and keeps "
+            "historical behavior bit-for-bit.",
+            DeprecationWarning, stacklevel=3)
 
 
 def run_federated(
@@ -323,65 +469,28 @@ def run_federated(
     mesh=None,
     client_axis: str = "clients",
 ) -> RunResult:
-    """Run T federated rounds and return the iterate-averaged final model.
+    """DEPRECATED shim: run T federated rounds via a one-shot session.
 
-    engine="scan" (default): chunked-scan engine — ceil(T/chunk_rounds)
-    compiled programs (one when chunk_rounds is None), donated carry,
-    cross-call program cache, ``scan_unroll`` rounds per loop trip.
-    engine="eager": the legacy one-program-per-round dispatch loop.
-
-    mesh: optional 1-D ``jax.sharding.Mesh`` with a ``client_axis`` axis
-    (``make_client_mesh()``): the scan engine runs under ``shard_map`` with
-    the cohort partitioned across that axis and only the per-round aggregation
-    moments psummed — same results as single-device up to reduction order
-    (DESIGN.md §9).  Requires engine="scan".
+    Equivalent to ``FederatedSession(algorithm, loss_fn, w0, client_batches,
+    train=TrainSpec(...), engine=EngineSpec(...), shard=ShardSpec(...)).run(key)``
+    — same engines, same compile caches, same results bit-for-bit.  New code
+    should build the session directly (it also adds cohort sampling, eval
+    cadence, pytree models, and checkpoint/resume).
     """
-    if engine == "eager":
-        if mesh is not None:
-            raise ValueError("client sharding requires engine='scan'")
-        return _run_eager(algorithm, loss_fn, w0, client_batches, rounds=rounds,
-                          tau=tau, eta_l=eta_l, key=key, eval_fn=eval_fn,
-                          avg_last=avg_last)
-    if engine != "scan":
-        raise ValueError(f"unknown engine {engine!r}; use 'scan' or 'eager'")
+    _warn_deprecated("run_federated")
+    from repro.fedsim.session import FederatedSession
+    from repro.fedsim.specs import EngineSpec, ShardSpec, TrainSpec
 
-    tail_n = max(1, min(avg_last, rounds))
-    donate = jax.default_backend() in ("tpu", "gpu")
-    # Donation would consume the caller's w0 buffer; hand the engine a copy.
-    w = jnp.array(w0, copy=True) if donate else jnp.asarray(w0)
-    carry = (w, algorithm.init_state(w),
-             jnp.zeros((tail_n,) + w.shape, w.dtype))
-    if mesh is not None:
-        m_true = jax.tree_util.tree_leaves(client_batches)[0].shape[0]
-        client_batches, mask = pad_cohort(client_batches, mesh.shape[client_axis])
-        leaves, treedef = jax.tree_util.tree_flatten(client_batches)
-        fn = _sharded_chunk_fn(algorithm, loss_fn, eval_fn, int(tau), donate,
-                               max(1, int(scan_unroll)), mesh, client_axis,
-                               treedef, tuple(x.ndim for x in leaves),
-                               mask.shape[0], m_true)
-        extra = (mask,)
-    else:
-        fn = _scan_chunk_fn(algorithm, loss_fn, eval_fn, int(tau), donate,
-                            max(1, int(scan_unroll)))
-        extra = ()
-    eta_l_arr = jnp.float32(eta_l)
-
-    outs = []
-    for start, stop in _chunk_bounds(rounds, chunk_rounds):
-        carry, chunk_outs = fn(carry, key, jnp.arange(start, stop, dtype=jnp.int32),
-                               client_batches, *extra, eta_l_arr)
-        outs.append(chunk_outs)
-    etas, metrics, naives, targets = (
-        jnp.concatenate([o[i] for o in outs]) for i in range(4))
-    w_last, _, tail = carry
-    return RunResult(
-        final_w=jnp.mean(tail, axis=0),
-        last_w=w_last,
-        eta_history=etas,
-        metric_history=metrics,
-        eta_naive_history=naives,
-        eta_target_history=targets,
-    )
+    session = FederatedSession(
+        algorithm, loss_fn, w0, client_batches,
+        train=TrainSpec(rounds=rounds, tau=tau, eta_l=eta_l,
+                        avg_last=max(1, int(avg_last))),
+        engine=EngineSpec(engine=engine,
+                          chunk_rounds=int(chunk_rounds) if chunk_rounds else None,
+                          scan_unroll=max(1, int(scan_unroll))),
+        shard=ShardSpec(mesh=mesh, client_axis=client_axis),
+        eval_fn=eval_fn)
+    return session.run(key)
 
 
 def run_federated_batched(
@@ -401,71 +510,21 @@ def run_federated_batched(
     mesh=None,
     client_axis: str = "clients",
 ) -> RunResult:
-    """Run one batched program over S seeds: ``keys`` is (S,)-stacked PRNG
-    keys; set ``batched_w0`` / ``batched_data`` when w0 / client_batches carry
-    a matching leading seed axis.  Every RunResult field gains a leading (S,)
-    axis.  ``mesh`` shards the client axis exactly as in ``run_federated``
-    (seeds stay vmapped inside each shard)."""
-    tail_n = max(1, min(avg_last, rounds))
-    if mesh is not None:
-        client_axis_pos = 1 if batched_data else 0
-        m_true = jax.tree_util.tree_leaves(client_batches)[0].shape[client_axis_pos]
-        client_batches, mask = pad_cohort(
-            client_batches, mesh.shape[client_axis], axis=client_axis_pos)
-        leaves, treedef = jax.tree_util.tree_flatten(client_batches)
-        fn = _sharded_batched_fn(algorithm, loss_fn, eval_fn, int(tau), tail_n,
-                                 bool(batched_w0), bool(batched_data), mesh,
-                                 client_axis, treedef,
-                                 tuple(x.ndim for x in leaves), mask.shape[0],
-                                 m_true)
-        final_w, last_w, etas, metrics, naives, targets = fn(
-            w0, keys, client_batches, mask, jnp.float32(eta_l),
-            jnp.arange(rounds, dtype=jnp.int32))
-        return RunResult(final_w=final_w, last_w=last_w, eta_history=etas,
-                         metric_history=metrics, eta_naive_history=naives,
-                         eta_target_history=targets)
-    fn = _batched_run_fn(algorithm, loss_fn, eval_fn, int(tau), tail_n,
-                         bool(batched_w0), bool(batched_data))
-    final_w, last_w, etas, metrics, naives, targets = fn(
-        w0, keys, client_batches, jnp.float32(eta_l),
-        jnp.arange(rounds, dtype=jnp.int32))
-    return RunResult(final_w=final_w, last_w=last_w, eta_history=etas,
-                     metric_history=metrics, eta_naive_history=naives,
-                     eta_target_history=targets)
+    """DEPRECATED shim: S-seed batched run via ``FederatedSession.run_batched``.
 
+    ``keys`` is (S,)-stacked PRNG keys; set ``batched_w0`` / ``batched_data``
+    when w0 / client_batches carry a matching leading seed axis.  Every
+    RunResult field gains a leading (S,) axis.
+    """
+    _warn_deprecated("run_federated_batched")
+    from repro.fedsim.session import FederatedSession
+    from repro.fedsim.specs import ShardSpec, TrainSpec
 
-def _run_eager(algorithm, loss_fn, w0, client_batches, *, rounds, tau, eta_l,
-               key, eval_fn, avg_last):
-    """Legacy engine: one jitted XLA program per round, dispatched from a
-    Python loop (re-traced per call — kept as the e7 throughput baseline)."""
-    step_round = _round_step(algorithm, loss_fn, eval_fn, tau)
-
-    def one_round(w, opt_state, round_key):
-        return step_round(w, opt_state, round_key, client_batches, eta_l)
-
-    round_jit = jax.jit(one_round)
-
-    w = w0
-    opt_state = algorithm.init_state(w0)
-    tail: list[jax.Array] = []
-    etas, metrics, naives, targets = [], [], [], []
-    for t in range(rounds):
-        w, opt_state, (eta, metric, naive, target) = round_jit(
-            w, opt_state, jax.random.fold_in(key, t))
-        etas.append(eta)
-        metrics.append(metric)
-        naives.append(naive)
-        targets.append(target)
-        tail.append(w)
-        if len(tail) > avg_last:
-            tail.pop(0)
-
-    final_w = jnp.mean(jnp.stack(tail), axis=0)
-    return RunResult(
-        final_w=final_w,
-        last_w=w,
-        eta_history=jnp.stack(etas),
-        metric_history=jnp.stack(metrics),
-        eta_naive_history=jnp.stack(naives),
-        eta_target_history=jnp.stack(targets),
-    )
+    session = FederatedSession(
+        algorithm, loss_fn, w0, client_batches,
+        train=TrainSpec(rounds=rounds, tau=tau, eta_l=eta_l,
+                        avg_last=max(1, int(avg_last))),
+        shard=ShardSpec(mesh=mesh, client_axis=client_axis),
+        eval_fn=eval_fn)
+    return session.run_batched(keys, batched_w0=batched_w0,
+                               batched_data=batched_data)

@@ -1,0 +1,406 @@
+"""FederatedSession: the spec-driven, resumable simulation entry point.
+
+DESIGN.md §10.  A session binds (algorithm, loss_fn, model, client data) to
+four frozen specs and owns the compiled chunk program:
+
+    session = FederatedSession(
+        algorithm, loss_fn, params, client_batches,
+        train=TrainSpec(rounds=50, tau=20, eta_l=0.1),
+        cohort=CohortSpec(q=0.25),          # per-round Poisson sampling
+        eval_fn=eval_fn)
+    result = session.run(jax.random.PRNGKey(0))
+
+Three properties the kwargs-style API could not offer:
+
+* **Pytree-native models.**  ``params`` may be any parameter pytree (the
+  ``models/`` zoo plugs in directly); the session ravels it once via
+  ``fedsim.flat.flatten_model``, wraps the loss/eval closures, and unravels
+  ``RunResult.final_w`` / ``last_w`` back to the caller's structure.  Flat
+  (d,) vectors pass through untouched — zero overhead, bit-identical.
+
+* **Per-round client sampling.**  ``CohortSpec`` draws the participation
+  mask inside the scan body (static shapes, one compiled program per chunk)
+  and routes the round through the masked-moment protocol; the sampling rate
+  feeds ``core.accounting`` for amplification-aware epsilon reporting
+  (``privacy_report``).
+
+* **Resumable runs.**  ``run(key, checkpoint_dir=...)`` threads the round
+  counter, RNG key, model, optimizer/clip state, and histories through
+  ``repro.checkpoint``; ``resume(checkpoint_dir)`` continues to
+  ``train.rounds`` and returns the same RunResult an uninterrupted run
+  produces — bit-exactly, because per-round keys are ``fold_in(key, t)`` by
+  GLOBAL round index and the carry round-trips losslessly.
+
+The session holds its loss/eval closures for its lifetime, so the engine's
+cross-call compile cache (keyed on closure identity + hashable specs) hits on
+every ``run``/``resume``/``run_batched`` after the first.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro import checkpoint as ckpt
+from repro.core import accounting
+from repro.core.fedexp import ServerAlgorithm
+from repro.fedsim import server as _srv
+from repro.fedsim.flat import flatten_model
+from repro.fedsim.local import pad_cohort
+from repro.fedsim.server import RunResult
+from repro.fedsim.specs import CohortSpec, EngineSpec, ShardSpec, TrainSpec
+
+__all__ = ["FederatedSession"]
+
+
+def _is_flat_params(w0) -> bool:
+    """True when w0 is already a bare array (the historical flat contract).
+
+    A bare array of ANY rank passes through unwrapped — run_batched's
+    ``batched_w0`` stacks seeds on axis 0 of a flat (S, d) array, which must
+    not be mistaken for a pytree model.  Anything with tree structure (dict,
+    tuple, dataclass of arrays) is a model pytree and gets raveled.
+    """
+    leaves = jax.tree_util.tree_leaves(w0)
+    return len(leaves) == 1 and leaves[0] is w0
+
+
+class FederatedSession:
+    """A reusable, compiled federated run bound to declarative specs."""
+
+    def __init__(self, algorithm: ServerAlgorithm, loss_fn: Callable,
+                 w0: Any, client_batches, *, train: TrainSpec,
+                 engine: EngineSpec = EngineSpec(),
+                 shard: ShardSpec = ShardSpec(),
+                 cohort: CohortSpec = CohortSpec(),
+                 eval_fn: Callable | None = None,
+                 num_clients: int | None = None):
+        self.algorithm = algorithm
+        self.train = train
+        self.engine = engine
+        self.shard = shard
+        # normalize full participation to None so unsampled sessions share
+        # compile-cache entries with pre-cohort callers (and with each other
+        # regardless of how "no sampling" was spelled)
+        self.cohort = cohort if cohort.is_sampled else None
+        self.client_batches = client_batches
+        # leaf axis 0 is the client axis EXCEPT for run_batched(batched_data=
+        # True), where a seed axis leads — pass num_clients= explicitly there
+        # (run_batched re-derives it for its own masks either way)
+        self.num_clients = (num_clients if num_clients is not None else
+                            jax.tree_util.tree_leaves(client_batches)[0].shape[0])
+
+        if _is_flat_params(w0):
+            self._w0 = jnp.asarray(w0)
+            self._unravel = None
+            self.loss_fn = loss_fn
+            self.eval_fn = eval_fn
+        else:
+            flat, unravel = flatten_model(w0)
+            self._w0 = flat
+            self._unravel = unravel
+            # the session OWNS these wrappers: their identity is the compile-
+            # cache key, so they must live exactly as long as the session
+            self.loss_fn = lambda wf, batch: loss_fn(unravel(wf), batch)
+            self.eval_fn = (None if eval_fn is None
+                            else (lambda wf: eval_fn(unravel(wf))))
+
+    # -- helpers -----------------------------------------------------------
+
+    def _validate_cohort(self, m: int) -> None:
+        if self.cohort is not None and self.cohort.size is not None \
+                and not self.cohort.replace and self.cohort.size > m:
+            raise ValueError(
+                f"CohortSpec.size={self.cohort.size} exceeds the "
+                f"{m}-client cohort (without replacement)")
+
+    @property
+    def dim(self) -> int:
+        return self._w0.shape[-1]
+
+    def _tail_n(self) -> int:
+        return max(1, min(self.train.avg_last, self.train.rounds))
+
+    def _donate(self) -> bool:
+        if self.engine.donate is not None:
+            return self.engine.donate
+        return jax.default_backend() in ("tpu", "gpu")
+
+    def _restore_params(self, w):
+        return w if self._unravel is None else self._unravel(w)
+
+    def _restore_batched(self, w):
+        return w if self._unravel is None else jax.vmap(self._unravel)(w)
+
+    def _chunk_callable(self, donate: bool):
+        """The compiled chunk program + the extra positional args it takes."""
+        t, e, s = self.train, self.engine, self.shard
+        if s.mesh is not None:
+            m_true = self.num_clients
+            batches, mask = pad_cohort(self.client_batches,
+                                       s.mesh.shape[s.client_axis])
+            leaves, treedef = jax.tree_util.tree_flatten(batches)
+            fn = _srv._sharded_chunk_fn(
+                self.algorithm, self.loss_fn, self.eval_fn, int(t.tau), donate,
+                e.scan_unroll, s.mesh, s.client_axis, treedef,
+                tuple(x.ndim for x in leaves), mask.shape[0], m_true,
+                t.eval_every, self.cohort)
+            return fn, batches, (mask,)
+        fn = _srv._scan_chunk_fn(self.algorithm, self.loss_fn, self.eval_fn,
+                                 int(t.tau), donate, e.scan_unroll,
+                                 t.eval_every, self.cohort)
+        return fn, self.client_batches, ()
+
+    @staticmethod
+    def _chunk_bounds(start: int, rounds: int, chunk_rounds: int | None,
+                      checkpoint_every: int | None = None):
+        """[start, rounds) split at the chunk grid (anchored at ``start``,
+        matching the historical one-shot behavior) union the checkpoint grid
+        (anchored at round 0, so checkpoints land on stable global rounds)."""
+        stops = set()
+        chunk = (rounds - start) if not chunk_rounds else max(1, int(chunk_rounds))
+        stops.update(range(start + chunk, rounds, chunk))
+        if checkpoint_every:
+            stops.update(b for b in range(checkpoint_every, rounds,
+                                          checkpoint_every) if b > start)
+        stops.add(rounds)
+        edges = [start] + sorted(stops)
+        return list(zip(edges[:-1], edges[1:]))
+
+    # -- checkpoint plumbing ----------------------------------------------
+
+    def _save(self, directory: str, step: int, key, carry, hist) -> str:
+        key_arr, typed = _key_data(key)
+        return ckpt.save_checkpoint(
+            directory, step, {"carry": carry, "hist": hist},
+            extra={"key": [int(x) for x in key_arr.reshape(-1)],
+                   "key_typed": typed,
+                   "algorithm": self.algorithm.name,
+                   "rounds_total": self.train.rounds})
+
+    def _load(self, directory: str):
+        step = ckpt.latest_step(directory)
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints in {directory}")
+        w = jnp.asarray(self._w0)
+        tail_n = self._tail_n()
+        template = {
+            "carry": (w, self.algorithm.init_state(w),
+                      jnp.zeros((tail_n,) + w.shape, w.dtype)),
+            "hist": tuple(jnp.zeros((step,), jnp.float32) for _ in range(4)),
+        }
+        payload, meta = ckpt.load_checkpoint(directory, template, step=step)
+        carry = jax.tree_util.tree_map(jnp.asarray, payload["carry"])
+        hist = tuple(jnp.asarray(h) for h in payload["hist"])
+        key = _key_restore(meta["key"], meta.get("key_typed", False))
+        if meta.get("algorithm") not in (None, self.algorithm.name):
+            raise ValueError(
+                f"checkpoint was written by algorithm {meta['algorithm']!r}, "
+                f"this session runs {self.algorithm.name!r}")
+        return step, key, carry, hist
+
+    # -- entry points ------------------------------------------------------
+
+    def run(self, key: jax.Array, *, checkpoint_dir: str | None = None,
+            checkpoint_every: int | None = None) -> RunResult:
+        """Run all ``train.rounds`` rounds from round 0.
+
+        ``checkpoint_dir`` saves the full resumable state (carry + histories
+        + RNG key + round counter) every ``checkpoint_every`` rounds (plus
+        once at the end); ``resume`` picks it up bit-exactly.
+        """
+        self._validate_cohort(self.num_clients)
+        if checkpoint_every is not None and checkpoint_dir is None:
+            raise ValueError("checkpoint_every requires checkpoint_dir "
+                             "(nothing would be saved)")
+        if self.engine.engine == "eager":
+            if self.shard.mesh is not None:
+                raise ValueError("client sharding requires engine='scan'")
+            if checkpoint_dir is not None:
+                raise ValueError("checkpointing requires engine='scan'")
+            t = self.train
+            out = _srv._run_eager(
+                self.algorithm, self.loss_fn, self._w0, self.client_batches,
+                rounds=t.rounds, tau=t.tau, eta_l=t.eta_l, key=key,
+                eval_fn=self.eval_fn, avg_last=t.avg_last,
+                eval_every=t.eval_every, cohort=self.cohort)
+            out.final_w = self._restore_params(out.final_w)
+            out.last_w = self._restore_params(out.last_w)
+            return out
+        return self._run_scan(key, start=0, carry=None, hist=[],
+                              checkpoint_dir=checkpoint_dir,
+                              checkpoint_every=checkpoint_every)
+
+    def resume(self, checkpoint_dir: str, *,
+               checkpoint_every: int | None = None) -> RunResult:
+        """Continue the latest checkpoint in ``checkpoint_dir`` up to
+        ``train.rounds`` and return the FULL RunResult (pre-checkpoint
+        histories included) — bit-exactly what the uninterrupted run with the
+        same chunk boundaries returns."""
+        self._validate_cohort(self.num_clients)
+        step, key, carry, hist = self._load(checkpoint_dir)
+        if step > self.train.rounds:
+            raise ValueError(f"checkpoint is at round {step}, past this "
+                             f"session's train.rounds={self.train.rounds}")
+        if step == self.train.rounds:
+            return self._assemble(carry, [hist])
+        return self._run_scan(key, start=step, carry=carry, hist=[hist],
+                              checkpoint_dir=checkpoint_dir,
+                              checkpoint_every=checkpoint_every)
+
+    def run_batched(self, keys: jax.Array, *, batched_w0: bool = False,
+                    batched_data: bool = False) -> RunResult:
+        """One batched program over S seeds (``keys`` is (S,)-stacked PRNG
+        keys); set ``batched_w0`` / ``batched_data`` when w0 / client_batches
+        carry a matching leading seed axis.  Every RunResult field gains a
+        leading (S,) axis.  The mesh shards the client axis exactly as in
+        ``run`` (seeds stay vmapped inside each shard).  The batched engine
+        is always one full-length scan program (``chunk_rounds`` /
+        ``scan_unroll`` do not apply); it has no eager counterpart.
+        """
+        if self.engine.engine == "eager":
+            raise ValueError("run_batched has no eager engine; use "
+                             "engine='scan' (the default) or loop run()")
+        if batched_w0 and self._unravel is not None:
+            raise ValueError(
+                "batched_w0 with a pytree model is ambiguous (the seed axis "
+                "would be raveled into the parameters); stack flat vectors "
+                "via flatten_model and unravel per seed instead")
+        # with batched_data the client axis is 1 (seed axis leads)
+        self._validate_cohort(jax.tree_util.tree_leaves(
+            self.client_batches)[0].shape[1 if batched_data else 0])
+        t, s = self.train, self.shard
+        tail_n = self._tail_n()
+        ts = jnp.arange(t.rounds, dtype=jnp.int32)
+        eta_l = jnp.float32(t.eta_l)
+        if s.mesh is not None:
+            client_axis_pos = 1 if batched_data else 0
+            m_true = jax.tree_util.tree_leaves(
+                self.client_batches)[0].shape[client_axis_pos]
+            batches, mask = pad_cohort(self.client_batches,
+                                       s.mesh.shape[s.client_axis],
+                                       axis=client_axis_pos)
+            leaves, treedef = jax.tree_util.tree_flatten(batches)
+            fn = _srv._sharded_batched_fn(
+                self.algorithm, self.loss_fn, self.eval_fn, int(t.tau), tail_n,
+                bool(batched_w0), bool(batched_data), s.mesh, s.client_axis,
+                treedef, tuple(x.ndim for x in leaves), mask.shape[0], m_true,
+                t.eval_every, self.cohort)
+            final_w, last_w, etas, metrics, naives, targets = fn(
+                self._w0, keys, batches, mask, eta_l, ts)
+        else:
+            fn = _srv._batched_run_fn(
+                self.algorithm, self.loss_fn, self.eval_fn, int(t.tau), tail_n,
+                bool(batched_w0), bool(batched_data), t.eval_every, self.cohort)
+            final_w, last_w, etas, metrics, naives, targets = fn(
+                self._w0, keys, self.client_batches, eta_l, ts)
+        return RunResult(final_w=self._restore_batched(final_w),
+                         last_w=self._restore_batched(last_w),
+                         eta_history=etas, metric_history=metrics,
+                         eta_naive_history=naives, eta_target_history=targets)
+
+    def privacy_report(self, delta: float) -> accounting.PrivacyReport:
+        """Privacy budget of this session's full run, amplification-aware.
+
+        CDP algorithms compose over ``train.rounds`` with the cohort's
+        per-round sampling rate feeding the subsampled-GDP accounting
+        (``accounting.cdp_budget(sampling_q=...)`` — conditional-sensitivity
+        inflation plus CLT amplification, see its docstring); LDP reports are
+        per-release (local guarantees do not amplify under central
+        subsampling of who participates).  Raises for non-private algorithms.
+        The sampling rate uses ``self.num_clients`` — construct the session
+        with an explicit ``num_clients=`` when client data carries a leading
+        seed axis (``run_batched(batched_data=True)``).
+        """
+        alg = self.algorithm
+        q = 1.0 if self.cohort is None else self.cohort.sampling_rate(self.num_clients)
+        name = alg.name
+        if name in ("dp-fedavg-ldp-gauss", "ldp-fedexp-gauss"):
+            return accounting.ldp_gaussian_budget(alg.clip_norm, alg.sigma, delta)
+        if name in ("dp-fedavg-privunit", "ldp-fedexp-privunit"):
+            return accounting.privunit_budget(alg.eps0, alg.eps1, alg.eps2)
+        if name == "cdp-fedexp":
+            sigma_xi = (alg.sigma_xi if alg.sigma_xi is not None
+                        else self.dim * alg.sigma**2 / alg.num_clients)
+            return accounting.cdp_budget(alg.clip_norm, alg.sigma,
+                                         alg.num_clients, self.train.rounds,
+                                         delta, sigma_xi=sigma_xi, sampling_q=q)
+        if name in ("dp-fedavg-cdp", "dp-fedadam-cdp"):
+            return accounting.cdp_budget(alg.clip_norm, alg.sigma,
+                                         alg.num_clients, self.train.rounds,
+                                         delta, sampling_q=q)
+        if name == "cdp-fedexp-adaptive-clip":
+            # noise std tracks z*C, so the C/sigma ratio — all the budget
+            # sees — is the constant 1/z; stated in C=1 units, the numerator
+            # release's sigma_xi = d(zC)^2/M follows the same normalization.
+            # Unlike the fixed-sigma CDP family, this algorithm's server
+            # noise scales with the REALIZED cohort (sigma/sqrt(|S_t|)), so
+            # the conditional per-round mu is 2/(z*sqrt(qM)) — a 1/sqrt(q)
+            # inflation; feeding cdp_budget the effective count M/q composes
+            # exactly that (its internal inflation is 1/q against
+            # 1/sqrt(m)).  The bit release adds adaptive_clip_rho,
+            # negligible by construction (sigma_b ~ 10).
+            return accounting.cdp_budget(
+                1.0, alg.z_mult, alg.num_clients / q, self.train.rounds,
+                delta, sigma_xi=self.dim * alg.z_mult**2 / alg.num_clients,
+                sampling_q=q)
+        raise ValueError(f"{name!r} is not a private algorithm")
+
+    # -- scan-engine internals --------------------------------------------
+
+    def _assemble(self, carry, outs) -> RunResult:
+        etas, metrics, naives, targets = (
+            jnp.concatenate([jnp.asarray(o[i]) for o in outs])
+            for i in range(4))
+        w_last, _, tail = carry
+        return RunResult(
+            final_w=self._restore_params(jnp.mean(tail, axis=0)),
+            last_w=self._restore_params(w_last),
+            eta_history=etas,
+            metric_history=metrics,
+            eta_naive_history=naives,
+            eta_target_history=targets,
+        )
+
+    def _run_scan(self, key, *, start: int, carry, hist,
+                  checkpoint_dir: str | None,
+                  checkpoint_every: int | None) -> RunResult:
+        t = self.train
+        donate = self._donate()
+        if carry is None:
+            # Donation would consume the caller's w0 buffer; hand a copy.
+            w = (jnp.array(self._w0, copy=True) if donate
+                 else jnp.asarray(self._w0))
+            carry = (w, self.algorithm.init_state(w),
+                     jnp.zeros((self._tail_n(),) + w.shape, w.dtype))
+        fn, batches, extra = self._chunk_callable(donate)
+        eta_l = jnp.float32(t.eta_l)
+
+        outs = list(hist)  # resumed histories (if any) lead the concat
+        for s, e in self._chunk_bounds(start, t.rounds, self.engine.chunk_rounds,
+                                       checkpoint_every):
+            carry, chunk_outs = fn(carry, key,
+                                   jnp.arange(s, e, dtype=jnp.int32),
+                                   batches, *extra, eta_l)
+            outs.append(chunk_outs)
+            if checkpoint_dir is not None and (
+                    e == t.rounds
+                    or (checkpoint_every and e % checkpoint_every == 0)):
+                self._save(checkpoint_dir, e, key, carry,
+                           tuple(jnp.concatenate([jnp.asarray(o[i])
+                                                  for o in outs])
+                                 for i in range(4)))
+        return self._assemble(carry, outs)
+
+
+def _key_data(key):
+    """(raw uint32 key data, was_typed) for old- and new-style PRNG keys."""
+    if jnp.issubdtype(jnp.asarray(key).dtype, jax.dtypes.prng_key):
+        return jax.device_get(jax.random.key_data(key)), True
+    return jax.device_get(jnp.asarray(key)), False
+
+
+def _key_restore(data, typed: bool):
+    arr = jnp.asarray(data, dtype=jnp.uint32)
+    return jax.random.wrap_key_data(arr) if typed else arr

@@ -1,0 +1,151 @@
+"""Declarative run specifications for the federated simulation engine.
+
+The session API (DESIGN.md §10) replaces ``run_federated``'s ever-growing
+kwargs list with four small frozen dataclasses, each owning one orthogonal
+axis of a run:
+
+    TrainSpec   what to train: rounds, local steps, client LR, iterate
+                averaging, eval cadence
+    EngineSpec  how to compile it: scan vs eager, chunking, unroll, donation
+    ShardSpec   where it runs: optional ``clients`` mesh (DESIGN.md §9)
+    CohortSpec  who participates: per-round client sampling (Bernoulli or
+                fixed-size, with/without replacement)
+
+All four are FROZEN and HASHABLE, so a spec tuple slots directly into the
+engine's cross-call compile cache (``functools.lru_cache`` over the builder
+arguments): two sessions with equal specs share one compiled chunk program.
+
+CohortSpec sampling semantics.  ``q < 1`` draws an independent Bernoulli(q)
+participation mask per round ("Poisson sampling" — the setting privacy
+amplification by subsampling is stated for); ``size=k`` draws a uniformly
+random k-client cohort per round, without replacement by default or with
+replacement (multiplicity-weighted) when ``replace=True``.  The engine keeps
+the cohort shape STATIC: every client computes its local update each round
+and a {0,1}-(or multiplicity-)mask zero-weights the non-participants through
+the same masked-moment machinery the client-sharded engine uses for padding
+(``pad_cohort`` / ``masked_cohort_updates``), so sampled rounds stay one
+compiled scan program per chunk and shard cleanly.  The per-round sampling
+PRNG is ``fold_in(round_key, SAMPLING_TAG)`` — derived from the same
+fold_in-chain as everything else, so sampled runs are reproducible, resumable,
+and identical between the sharded and single-device engines.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["TrainSpec", "EngineSpec", "ShardSpec", "CohortSpec", "SAMPLING_TAG"]
+
+# fold_in tag deriving the per-round sampling key from the round key.  Client
+# randomization folds the GLOBAL CLIENT INDEX (0..M-1) into the same round
+# key, so the tag must sit outside any plausible cohort size: 2**31 - 1 is the
+# largest int32 and can never collide with a client index.
+SAMPLING_TAG = 2**31 - 1
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainSpec:
+    """What to train: the paper-level knobs of one federated run."""
+
+    rounds: int                 # T server rounds
+    tau: int                    # local GD steps per client per round
+    eta_l: float                # client learning rate
+    avg_last: int = 2           # §5 iterate average over the trailing iterates
+    eval_every: int = 1         # eval cadence; non-eval rounds record NaN
+
+    def __post_init__(self):
+        if self.rounds < 1:
+            raise ValueError(f"rounds must be >= 1, got {self.rounds}")
+        if self.tau < 1:
+            raise ValueError(f"tau must be >= 1, got {self.tau}")
+        if self.avg_last < 1:
+            raise ValueError(f"avg_last must be >= 1, got {self.avg_last}")
+        if self.eval_every < 1:
+            raise ValueError(f"eval_every must be >= 1, got {self.eval_every}")
+
+
+@dataclasses.dataclass(frozen=True)
+class EngineSpec:
+    """How to compile the round loop (DESIGN.md §8)."""
+
+    engine: str = "scan"            # "scan" (chunked lax.scan) | "eager"
+    chunk_rounds: int | None = None  # rounds per compiled chunk (None = all)
+    scan_unroll: int = 2            # rounds unrolled per scan-loop trip
+    donate: bool | None = None      # donate the carry; None = auto (tpu/gpu)
+
+    def __post_init__(self):
+        if self.engine not in ("scan", "eager"):
+            raise ValueError(f"unknown engine {self.engine!r}; use 'scan' or 'eager'")
+        if self.chunk_rounds is not None and self.chunk_rounds < 1:
+            raise ValueError(f"chunk_rounds must be >= 1, got {self.chunk_rounds}")
+        if self.scan_unroll < 1:
+            raise ValueError(f"scan_unroll must be >= 1, got {self.scan_unroll}")
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardSpec:
+    """Where the cohort lives: optional client sharding (DESIGN.md §9).
+
+    ``mesh`` is a 1-D ``jax.sharding.Mesh`` with a ``client_axis`` axis (see
+    ``repro.launch.mesh.make_client_mesh``); ``jax.sharding.Mesh`` is hashable,
+    so the spec still keys the compile cache.
+    """
+
+    mesh: object | None = None      # jax.sharding.Mesh | None
+    client_axis: str = "clients"
+
+
+@dataclasses.dataclass(frozen=True)
+class CohortSpec:
+    """Who participates each round: per-round client sampling.
+
+    q=1.0 and size=None (the default) is FULL participation and takes exactly
+    the unsampled engine path — bit-for-bit the pre-session behavior.
+    ``q < 1`` is per-round Bernoulli (Poisson) sampling; ``size=k`` is a
+    fixed-size uniform cohort, with multiplicity weights when ``replace``.
+    """
+
+    q: float = 1.0              # Bernoulli participation probability
+    size: int | None = None     # fixed cohort size (mutually exclusive with q<1)
+    replace: bool = False       # fixed-size sampling with replacement
+
+    def __post_init__(self):
+        if not (0.0 < self.q <= 1.0):
+            raise ValueError(f"q must be in (0, 1], got {self.q}")
+        if self.size is not None and self.size < 1:
+            raise ValueError(f"size must be >= 1, got {self.size}")
+        if self.q < 1.0 and self.size is not None:
+            raise ValueError("specify q<1 (Bernoulli) OR size (fixed), not both")
+        if self.replace and self.size is None:
+            raise ValueError("replace=True requires a fixed cohort size")
+
+    @property
+    def is_sampled(self) -> bool:
+        return self.q < 1.0 or self.size is not None
+
+    def sampling_rate(self, num_clients: int) -> float:
+        """Expected per-round participation fraction (for accounting)."""
+        if self.size is not None:
+            return min(1.0, self.size / float(num_clients))
+        return self.q
+
+    def round_mask(self, round_key: jax.Array, num_clients: int) -> jax.Array:
+        """(num_clients,) float participation mask for one round.
+
+        The sampling key is ``fold_in(round_key, SAMPLING_TAG)``; the mask is
+        {0,1}-valued (Bernoulli / without-replacement) or multiplicity-valued
+        (with replacement, summing to ``size``).  Pure jax, static shapes —
+        safe inside the scan body and identical on every shard.
+        """
+        k = jax.random.fold_in(round_key, SAMPLING_TAG)
+        if self.size is not None:
+            if self.replace:
+                idx = jax.random.randint(k, (self.size,), 0, num_clients)
+                return jnp.zeros((num_clients,), jnp.float32).at[idx].add(1.0)
+            # positions holding values < size in a random permutation form a
+            # uniformly random size-subset — one draw, no index scatter
+            perm = jax.random.permutation(k, num_clients)
+            return (perm < self.size).astype(jnp.float32)
+        return jax.random.bernoulli(k, self.q, (num_clients,)).astype(jnp.float32)

@@ -8,7 +8,8 @@ from __future__ import annotations
 
 import jax
 
-__all__ = ["make_production_mesh", "make_test_mesh", "make_client_mesh"]
+__all__ = ["make_production_mesh", "make_test_mesh", "make_client_mesh",
+           "client_shard_spec"]
 
 
 def make_production_mesh(*, multi_pod: bool = False):
@@ -33,3 +34,16 @@ def make_client_mesh(n_shards: int | None = None, *, axis: str = "clients"):
     """
     n = n_shards if n_shards is not None else len(jax.devices())
     return jax.make_mesh((n,), (axis,))
+
+
+def client_shard_spec(n_shards: int | None = None, *, axis: str = "clients"):
+    """A ready ``ShardSpec`` for the session API over a fresh client mesh:
+
+        FederatedSession(..., shard=client_shard_spec())
+
+    is the one-liner for "shard the cohort over every visible device"
+    (DESIGN.md §10).  Imported lazily so this module still never touches
+    fedsim at import time.
+    """
+    from repro.fedsim.specs import ShardSpec
+    return ShardSpec(mesh=make_client_mesh(n_shards, axis=axis), client_axis=axis)

@@ -28,6 +28,51 @@ class TestGDP:
             assert r.eps_rdp >= r.eps_numerical
 
 
+class TestSubsampling:
+    def test_q1_is_exact_composition(self):
+        assert acc.subsampled_gdp_mu(0.3, 1.0, 25) == pytest.approx(
+            0.3 * math.sqrt(25))
+
+    def test_amplification_tightens_with_q(self):
+        mus = [acc.subsampled_gdp_mu(0.3, q, 50) for q in (0.05, 0.25, 0.5)]
+        assert mus == sorted(mus)
+        # small mu_round: e^{mu^2}-1 ~ mu^2, so mu_total ~ q*mu*sqrt(T)
+        assert mus[0] == pytest.approx(0.05 * 0.3 * math.sqrt(50), rel=0.05)
+
+    def test_cdp_budget_sampling_q(self):
+        """sampling_q models the engine's count-normalized release: the
+        conditional per-round mu is the full-participation mu / q, then the
+        CLT composes at rate q; the amplification at best cancels the
+        inflation (no naive q-discount)."""
+        c, sigma, m, t, q = 0.3, 0.05, 400, 30, 0.25
+        full = acc.cdp_budget(c, sigma, m, t, 1e-5)
+        samp = acc.cdp_budget(c, sigma, m, t, 1e-5, sampling_q=q)
+        assert "q=0.25" in samp.setting
+        mu_round = 2 * c / (sigma * math.sqrt(m)) / q
+        assert samp.mu == pytest.approx(acc.subsampled_gdp_mu(mu_round, q, t))
+        assert samp.eps_numerical >= 0.9 * full.eps_numerical  # no free lunch
+        # the amplification term IS doing work: the inflated conditional
+        # release composed naively (no subsampling credit) would cost more
+        # whenever mu_round is small enough for the CLT to bite
+        small = acc.subsampled_gdp_mu(0.02, 0.5, 30)
+        assert small < 0.02 * math.sqrt(30)
+
+    def test_tiny_q_reports_inf_instead_of_overflowing(self):
+        # the 1/q-inflated conditional mu overflows exp at small q: the
+        # budget must come back inf, not raise OverflowError
+        assert acc.subsampled_gdp_mu(60.0, 0.01, 30) == float("inf")
+        r = acc.cdp_budget(0.3, 0.05, 400, 30, 1e-5, sampling_q=0.01)
+        assert r.mu == float("inf") and r.eps_numerical == float("inf")
+
+    def test_default_q_matches_pre_sampling_numbers(self):
+        # sampling_q=1.0 must not perturb Proposition 4.2's reported budget
+        r = acc.cdp_budget(0.3, 0.05, 400, 30, 1e-5, sigma_xi=0.01)
+        mu_mean = 2 * 0.3 / (0.05 * math.sqrt(400))
+        mu_xi = 0.3**2 / (400 * 0.01)
+        mu = math.sqrt(30 * (mu_mean**2 + mu_xi**2))
+        assert r.mu == pytest.approx(mu)
+
+
 class TestPaperBudgets:
     def test_ldp_gaussian_paper_setting(self):
         """Paper Table 1: sigma = 0.7*C gives eps ~ 15.66 at delta=1e-5."""

@@ -18,7 +18,7 @@ import pytest
 from repro.core.aggregation import fused_clip_aggregate
 from repro.core.fedexp import make_algorithm
 from repro.data.synthetic import distance_to_opt, linreg_loss, make_synthetic_linreg
-from repro.fedsim.server import run_federated, run_federated_batched
+from repro.fedsim import EngineSpec, FederatedSession, TrainSpec
 from repro.kernels.dp_aggregate.ops import dp_aggregate, generate_ldp_noise
 
 M, D, TAU, ETA_L, ROUNDS = 48, 24, 4, 0.1, 6
@@ -46,11 +46,11 @@ def problem():
 def _run(problem, name, engine, **kw):
     data, w0 = problem
     alg = make_algorithm(name, **ALG_KWARGS[name])
-    return run_federated(alg, linreg_loss, w0, data.client_batches(),
-                         rounds=ROUNDS, tau=TAU, eta_l=ETA_L,
-                         key=jax.random.PRNGKey(11),
-                         eval_fn=distance_to_opt(data.w_star),
-                         engine=engine, **kw)
+    session = FederatedSession(alg, linreg_loss, w0, data.client_batches(),
+                               train=TrainSpec(rounds=ROUNDS, tau=TAU, eta_l=ETA_L),
+                               engine=EngineSpec(engine=engine, **kw),
+                               eval_fn=distance_to_opt(data.w_star))
+    return session.run(jax.random.PRNGKey(11))
 
 
 class TestScanEagerEquivalence:
@@ -99,11 +99,13 @@ class TestScanEagerEquivalence:
         """rounds < avg_last: the iterate average covers all iterates."""
         data, w0 = problem
         alg = make_algorithm("fedexp")
-        kw = dict(rounds=1, tau=TAU, eta_l=ETA_L, key=jax.random.PRNGKey(1))
-        r_e = run_federated(alg, linreg_loss, w0, data.client_batches(),
-                            engine="eager", **kw)
-        r_s = run_federated(alg, linreg_loss, w0, data.client_batches(),
-                            engine="scan", **kw)
+        train = TrainSpec(rounds=1, tau=TAU, eta_l=ETA_L)
+        key = jax.random.PRNGKey(1)
+        r_e = FederatedSession(alg, linreg_loss, w0, data.client_batches(),
+                               train=train,
+                               engine=EngineSpec(engine="eager")).run(key)
+        r_s = FederatedSession(alg, linreg_loss, w0, data.client_batches(),
+                               train=train).run(key)
         np.testing.assert_array_equal(np.asarray(r_e.final_w), np.asarray(r_s.final_w))
 
 
@@ -112,15 +114,15 @@ class TestBatchedEngine:
         data, w0 = problem
         alg = make_algorithm("ldp-fedexp-gauss", **ALG_KWARGS["ldp-fedexp-gauss"])
         keys = jnp.stack([jax.random.PRNGKey(21), jax.random.PRNGKey(22)])
-        rb = run_federated_batched(alg, linreg_loss, w0, data.client_batches(),
-                                   rounds=ROUNDS, tau=TAU, eta_l=ETA_L, keys=keys,
+        session = FederatedSession(alg, linreg_loss, w0, data.client_batches(),
+                                   train=TrainSpec(rounds=ROUNDS, tau=TAU,
+                                                   eta_l=ETA_L),
                                    eval_fn=distance_to_opt(data.w_star))
+        rb = session.run_batched(keys)
         assert rb.final_w.shape == (2, D)
         assert rb.metric_history.shape == (2, ROUNDS)
         for s in range(2):
-            r = run_federated(alg, linreg_loss, w0, data.client_batches(),
-                              rounds=ROUNDS, tau=TAU, eta_l=ETA_L, key=keys[s],
-                              eval_fn=distance_to_opt(data.w_star))
+            r = session.run(keys[s])
             # vmap may reorder reductions (batched BLAS): tolerance, not exact
             np.testing.assert_allclose(np.asarray(rb.final_w[s]),
                                        np.asarray(r.final_w), rtol=1e-4, atol=1e-5)
@@ -133,9 +135,9 @@ class TestBatchedEngine:
         keys = jnp.stack([jax.random.PRNGKey(0), jax.random.PRNGKey(1)])
         w0s = jnp.stack([jnp.zeros(D), 0.1 * jnp.ones(D)])
         batches = {k: jnp.stack([v, v]) for k, v in data.client_batches().items()}
-        rb = run_federated_batched(alg, linreg_loss, w0s, batches, rounds=3,
-                                   tau=TAU, eta_l=ETA_L, keys=keys,
-                                   batched_w0=True, batched_data=True)
+        session = FederatedSession(alg, linreg_loss, w0s, batches,
+                                   train=TrainSpec(rounds=3, tau=TAU, eta_l=ETA_L))
+        rb = session.run_batched(keys, batched_w0=True, batched_data=True)
         assert rb.final_w.shape == (2, D)
         # different inits must give different trajectories
         assert not np.allclose(np.asarray(rb.final_w[0]), np.asarray(rb.final_w[1]))
@@ -263,9 +265,9 @@ class TestInKernelNoise:
         data, w0 = problem
         alg = make_algorithm("ldp-fedexp-gauss", clip_norm=0.3, sigma=0.21,
                              backend="kernel-fused")
-        r = run_federated(alg, linreg_loss, w0, data.client_batches(),
-                          rounds=3, tau=TAU, eta_l=ETA_L,
-                          key=jax.random.PRNGKey(2),
-                          eval_fn=distance_to_opt(data.w_star))
+        session = FederatedSession(alg, linreg_loss, w0, data.client_batches(),
+                                   train=TrainSpec(rounds=3, tau=TAU, eta_l=ETA_L),
+                                   eval_fn=distance_to_opt(data.w_star))
+        r = session.run(jax.random.PRNGKey(2))
         assert np.all(np.isfinite(np.asarray(r.metric_history)))
         assert float(jnp.min(r.eta_history)) >= 1.0

@@ -9,7 +9,7 @@ import pytest
 from repro.core import adaptive_clip as ac
 from repro.core.fedexp import make_algorithm
 from repro.data.synthetic import distance_to_opt, linreg_loss, make_synthetic_linreg
-from repro.fedsim.server import run_federated
+from repro.fedsim import FederatedSession, TrainSpec
 
 
 class TestAdaptiveClip:
@@ -55,9 +55,9 @@ class TestAdaptiveClipFedEXP:
         # oversized C0 floods the release with noise before C descends)
         alg = make_algorithm("cdp-fedexp-adaptive-clip", z_mult=5 / math.sqrt(m),
                              num_clients=m, dim=d, c0=1.0)
-        r = run_federated(alg, linreg_loss, jnp.zeros(d), data.client_batches(),
-                          rounds=12, tau=10, eta_l=0.1, key=jax.random.PRNGKey(5),
-                          eval_fn=distance_to_opt(data.w_star))
+        r = FederatedSession(alg, linreg_loss, jnp.zeros(d), data.client_batches(),
+                             train=TrainSpec(rounds=12, tau=10, eta_l=0.1),
+                             eval_fn=distance_to_opt(data.w_star)).run(jax.random.PRNGKey(5))
         hist = np.asarray(r.metric_history)
         assert np.all(np.isfinite(hist))
         assert hist[-1] < hist[0]
@@ -85,9 +85,9 @@ class TestFedOptServers:
         alg = make_algorithm("dp-fedadam-cdp", clip_norm=0.3,
                              sigma=5 * 0.3 / math.sqrt(m), num_clients=m,
                              server_lr=0.05)
-        r = run_federated(alg, linreg_loss, jnp.zeros(d), data.client_batches(),
-                          rounds=10, tau=10, eta_l=0.1, key=jax.random.PRNGKey(1),
-                          eval_fn=distance_to_opt(data.w_star))
+        r = FederatedSession(alg, linreg_loss, jnp.zeros(d), data.client_batches(),
+                             train=TrainSpec(rounds=10, tau=10, eta_l=0.1),
+                             eval_fn=distance_to_opt(data.w_star)).run(jax.random.PRNGKey(1))
         hist = np.asarray(r.metric_history)
         assert np.all(np.isfinite(hist))
         assert hist[-1] < hist[0]  # makes progress
@@ -99,9 +99,9 @@ class TestFedOptServers:
         alg = make_algorithm("cdp-fedexp", clip_norm=0.3,
                              sigma=5 * 0.3 / math.sqrt(m), num_clients=m)
         assert alg.init_state(jnp.zeros(d)) == ()
-        r = run_federated(alg, linreg_loss, jnp.zeros(d), data.client_batches(),
-                          rounds=3, tau=5, eta_l=0.1, key=jax.random.PRNGKey(3),
-                          eval_fn=distance_to_opt(data.w_star))
+        r = FederatedSession(alg, linreg_loss, jnp.zeros(d), data.client_batches(),
+                             train=TrainSpec(rounds=3, tau=5, eta_l=0.1),
+                             eval_fn=distance_to_opt(data.w_star)).run(jax.random.PRNGKey(3))
         assert np.all(np.isfinite(np.asarray(r.metric_history)))
 
     def test_stateful_misuse_guard(self):

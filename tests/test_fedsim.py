@@ -11,8 +11,8 @@ import pytest
 
 from repro.core.fedexp import make_algorithm
 from repro.data.synthetic import distance_to_opt, linreg_loss, make_synthetic_linreg
+from repro.fedsim import FederatedSession, TrainSpec
 from repro.fedsim.scaffold import DPScaffoldConfig, run_dp_scaffold
-from repro.fedsim.server import run_federated
 
 M, D, TAU, ETA_L, ROUNDS = 200, 50, 10, 0.01, 15
 
@@ -27,10 +27,11 @@ def problem():
 def _run(problem, alg, rounds=ROUNDS, **kw):
     data, w0 = problem
     algorithm = make_algorithm(alg, **kw)
-    return run_federated(
+    session = FederatedSession(
         algorithm, linreg_loss, w0, data.client_batches(),
-        rounds=rounds, tau=TAU, eta_l=ETA_L, key=jax.random.PRNGKey(42),
+        train=TrainSpec(rounds=rounds, tau=TAU, eta_l=ETA_L),
         eval_fn=distance_to_opt(data.w_star))
+    return session.run(jax.random.PRNGKey(42))
 
 
 class TestNonPrivate:

@@ -1,0 +1,220 @@
+"""Per-round client sampling (CohortSpec, DESIGN.md §10).
+
+Three layers of evidence:
+  1. CohortSpec(q=1.0) IS the unsampled engine — bit-for-bit for all 10
+     algorithms (full participation routes through the identical program),
+     and a full-cohort fixed-size draw (size=M, every client sampled) pushes
+     the masked-moment machinery itself to agree with the unsampled release.
+  2. Sampled runs are the same algorithm on every engine: fixed-size sampled
+     runs match between the client-sharded mesh (8 devices under the CI leg)
+     and the single-device engine, and sampled rounds stay one compiled scan
+     program per chunk (compile-cache accounting, no per-round retrace).
+  3. The masks themselves: Bernoulli/fixed/with-replacement draw statistics,
+     determinism, and round-to-round variation.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.fedexp import make_algorithm
+from repro.data.synthetic import distance_to_opt, linreg_loss, make_synthetic_linreg
+from repro.fedsim import CohortSpec, EngineSpec, FederatedSession, ShardSpec, TrainSpec
+from repro.launch.mesh import make_client_mesh
+
+# M not divisible by 8 (nor 2/4): the sharded legs exercise zero-weight
+# padding COMBINED with the sampling mask
+M, D, TAU, ETA_L, ROUNDS = 44, 24, 3, 0.1, 5
+
+N_DEV = len(jax.devices())
+
+ALG_KWARGS = {
+    "fedavg": {},
+    "fedexp": {},
+    "dp-fedavg-ldp-gauss": dict(clip_norm=0.3, sigma=0.21),
+    "ldp-fedexp-gauss": dict(clip_norm=0.3, sigma=0.21),
+    "dp-fedavg-privunit": dict(clip_norm=0.3, eps0=2.0, eps1=2.0, eps2=2.0, dim=D),
+    "ldp-fedexp-privunit": dict(clip_norm=0.3, eps0=2.0, eps1=2.0, eps2=2.0, dim=D),
+    "dp-fedavg-cdp": dict(clip_norm=0.3, sigma=0.2, num_clients=M),
+    "cdp-fedexp": dict(clip_norm=0.3, sigma=0.2, num_clients=M),
+    "dp-fedadam-cdp": dict(clip_norm=0.3, sigma=0.2, num_clients=M, server_lr=0.05),
+    "cdp-fedexp-adaptive-clip": dict(z_mult=0.5, num_clients=M, dim=D),
+}
+
+
+@pytest.fixture(scope="module")
+def problem():
+    data = make_synthetic_linreg(jax.random.PRNGKey(3), M, D)
+    return data, jnp.zeros(D)
+
+
+def _session(problem, name, *, cohort=CohortSpec(), mesh=None, rounds=ROUNDS):
+    data, w0 = problem
+    alg = make_algorithm(name, **ALG_KWARGS[name])
+    return FederatedSession(
+        alg, linreg_loss, w0, data.client_batches(),
+        train=TrainSpec(rounds=rounds, tau=TAU, eta_l=ETA_L),
+        shard=ShardSpec(mesh=mesh), cohort=cohort,
+        eval_fn=distance_to_opt(data.w_star))
+
+
+class TestFullParticipationParity:
+    @pytest.mark.parametrize("name", sorted(ALG_KWARGS))
+    def test_q1_is_bit_exact_with_unsampled(self, problem, name):
+        """CohortSpec(q=1.0) normalizes to the unsampled engine path: the
+        SAME compiled program, so bit-exactness is structural, and this test
+        pins that the normalization never regresses."""
+        key = jax.random.PRNGKey(11)
+        r_u = _session(problem, name).run(key)
+        r_q = _session(problem, name, cohort=CohortSpec(q=1.0)).run(key)
+        for field in ("final_w", "last_w", "eta_history", "metric_history",
+                      "eta_naive_history", "eta_target_history"):
+            np.testing.assert_array_equal(
+                np.asarray(getattr(r_u, field)), np.asarray(getattr(r_q, field)),
+                err_msg=f"{name}.{field}")
+
+    @pytest.mark.parametrize("name", ["ldp-fedexp-gauss", "cdp-fedexp"])
+    def test_q1_sharded_is_bit_exact_with_unsampled_sharded(self, problem, name):
+        """Same normalization on the sharded engine: q=1.0 under a client
+        mesh IS the unsampled sharded program (all 10 share this path; two
+        DP representatives keep the runtime bounded)."""
+        key = jax.random.PRNGKey(11)
+        mesh = make_client_mesh()
+        r_u = _session(problem, name, mesh=mesh).run(key)
+        r_q = _session(problem, name, cohort=CohortSpec(q=1.0), mesh=mesh).run(key)
+        for field in ("final_w", "eta_history", "metric_history"):
+            np.testing.assert_array_equal(
+                np.asarray(getattr(r_u, field)), np.asarray(getattr(r_q, field)),
+                err_msg=f"{name}.{field}")
+
+    @pytest.mark.parametrize("name", sorted(ALG_KWARGS))
+    def test_full_cohort_fixed_size_matches_unsampled(self, problem, name):
+        """size=M samples EVERYONE (mask all-ones) but routes through the
+        masked-moment machinery — the real numeric check that the sampled
+        release is the same algorithm (reduction reorder tolerance, as for
+        the sharded engine; eta is a reduction ratio, looser bar)."""
+        key = jax.random.PRNGKey(11)
+        r_u = _session(problem, name).run(key)
+        r_s = _session(problem, name, cohort=CohortSpec(size=M)).run(key)
+        for field in ("final_w", "last_w", "metric_history"):
+            np.testing.assert_allclose(
+                np.asarray(getattr(r_u, field)), np.asarray(getattr(r_s, field)),
+                rtol=1e-5, atol=1e-5, err_msg=f"{name}.{field}")
+        np.testing.assert_allclose(
+            np.asarray(r_u.eta_history), np.asarray(r_s.eta_history),
+            rtol=1e-4, atol=1e-5, err_msg=f"{name}.eta_history")
+
+
+class TestShardedSampledEquivalence:
+    """Fixed-size sampled runs match between the sharded mesh (8 forced host
+    devices under the CI leg) and the single-device engine: the mask derives
+    from the replicated round key, so every shard sees the same cohort."""
+
+    @pytest.mark.parametrize("name", ["ldp-fedexp-gauss", "cdp-fedexp",
+                                      "cdp-fedexp-adaptive-clip"])
+    def test_fixed_size_sharded_matches_single_device(self, problem, name):
+        key = jax.random.PRNGKey(11)
+        cohort = CohortSpec(size=13)
+        r_1 = _session(problem, name, cohort=cohort).run(key)
+        r_m = _session(problem, name, cohort=cohort,
+                       mesh=make_client_mesh()).run(key)
+        for field in ("final_w", "last_w", "metric_history"):
+            np.testing.assert_allclose(
+                np.asarray(getattr(r_1, field)), np.asarray(getattr(r_m, field)),
+                rtol=1e-5, atol=1e-5, err_msg=f"{name}.{field}")
+        np.testing.assert_allclose(
+            np.asarray(r_1.eta_history), np.asarray(r_m.eta_history),
+            rtol=1e-4, atol=1e-5)
+
+    def test_bernoulli_sharded_matches_single_device(self, problem):
+        key = jax.random.PRNGKey(7)
+        cohort = CohortSpec(q=0.4)
+        r_1 = _session(problem, "cdp-fedexp", cohort=cohort).run(key)
+        r_m = _session(problem, "cdp-fedexp", cohort=cohort,
+                       mesh=make_client_mesh()).run(key)
+        np.testing.assert_allclose(np.asarray(r_1.final_w),
+                                   np.asarray(r_m.final_w),
+                                   rtol=1e-5, atol=1e-5)
+
+
+class TestSampledEngineMechanics:
+    def test_sampled_run_is_one_program_per_chunk(self, problem):
+        """A sampled run compiles ONE chunk program (mask drawn inside the
+        scan body): the builder cache registers a single new entry and the
+        second identical run is a pure cache hit — no per-round retrace."""
+        import repro.fedsim.server as srv
+        cohort = CohortSpec(q=0.3)
+        sess = _session(problem, "ldp-fedexp-gauss", cohort=cohort)
+        before = srv._cached_scan_chunk_fn.cache_info()
+        sess.run(jax.random.PRNGKey(0))
+        mid = srv._cached_scan_chunk_fn.cache_info()
+        assert mid.misses == before.misses + 1
+        sess.run(jax.random.PRNGKey(1))
+        after = srv._cached_scan_chunk_fn.cache_info()
+        assert after.misses == mid.misses and after.hits == mid.hits + 1
+
+    def test_sampled_rounds_vary_cohort(self, problem):
+        """Bernoulli rounds draw different cohorts: trajectories differ from
+        full participation, yet stay finite and deterministic."""
+        key = jax.random.PRNGKey(11)
+        r_full = _session(problem, "cdp-fedexp").run(key)
+        r_samp = _session(problem, "cdp-fedexp", cohort=CohortSpec(q=0.3)).run(key)
+        assert not np.allclose(np.asarray(r_full.final_w),
+                               np.asarray(r_samp.final_w))
+        assert np.all(np.isfinite(np.asarray(r_samp.final_w)))
+        r_again = _session(problem, "cdp-fedexp", cohort=CohortSpec(q=0.3)).run(key)
+        np.testing.assert_array_equal(np.asarray(r_samp.final_w),
+                                      np.asarray(r_again.final_w))
+
+    def test_eager_engine_supports_sampling(self, problem):
+        """scan == eager for sampled runs too (same round step, same keys)."""
+        data, w0 = problem
+        alg = make_algorithm("cdp-fedexp", **ALG_KWARGS["cdp-fedexp"])
+        kw = dict(train=TrainSpec(rounds=3, tau=TAU, eta_l=ETA_L),
+                  cohort=CohortSpec(size=10))
+        key = jax.random.PRNGKey(2)
+        r_s = FederatedSession(alg, linreg_loss, w0, data.client_batches(), **kw).run(key)
+        r_e = FederatedSession(alg, linreg_loss, w0, data.client_batches(),
+                               engine=EngineSpec(engine="eager"), **kw).run(key)
+        np.testing.assert_array_equal(np.asarray(r_s.final_w), np.asarray(r_e.final_w))
+
+
+class TestMaskDraws:
+    def test_fixed_size_mask(self):
+        cohort = CohortSpec(size=10)
+        mask = np.asarray(cohort.round_mask(jax.random.PRNGKey(0), M))
+        assert mask.shape == (M,) and set(np.unique(mask)) <= {0.0, 1.0}
+        assert mask.sum() == 10
+
+    def test_with_replacement_mask(self):
+        cohort = CohortSpec(size=30, replace=True)
+        mask = np.asarray(cohort.round_mask(jax.random.PRNGKey(0), 12))
+        assert mask.sum() == 30            # multiplicities sum to the draws
+        assert mask.max() >= 2.0           # 30 draws over 12 slots must repeat
+
+    def test_bernoulli_mask_rate(self):
+        cohort = CohortSpec(q=0.25)
+        draws = np.stack([
+            np.asarray(cohort.round_mask(jax.random.PRNGKey(s), 400))
+            for s in range(32)])
+        rate = draws.mean()
+        assert abs(rate - 0.25) < 5 * np.sqrt(0.25 * 0.75 / draws.size)
+
+    def test_mask_keyed_by_round(self):
+        cohort = CohortSpec(q=0.5)
+        m1 = np.asarray(cohort.round_mask(jax.random.PRNGKey(0), 64))
+        m2 = np.asarray(cohort.round_mask(jax.random.PRNGKey(1), 64))
+        m1b = np.asarray(cohort.round_mask(jax.random.PRNGKey(0), 64))
+        assert not np.array_equal(m1, m2)
+        np.testing.assert_array_equal(m1, m1b)
+
+    def test_empty_bernoulli_round_is_noop_not_nan(self, problem):
+        """q small enough that some round draws zero clients: the clamped
+        count makes it a zero-update round, never NaN poison."""
+        data, w0 = problem
+        alg = make_algorithm("fedavg")
+        sess = FederatedSession(alg, linreg_loss, w0, data.client_batches(),
+                                train=TrainSpec(rounds=8, tau=1, eta_l=ETA_L),
+                                cohort=CohortSpec(q=1e-4))
+        r = sess.run(jax.random.PRNGKey(0))
+        assert np.all(np.isfinite(np.asarray(r.final_w)))

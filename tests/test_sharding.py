@@ -28,8 +28,8 @@ from repro.core.aggregation import (
 )
 from repro.core.fedexp import make_algorithm
 from repro.data.synthetic import distance_to_opt, linreg_loss, make_synthetic_linreg
+from repro.fedsim import EngineSpec, FederatedSession, ShardSpec, TrainSpec
 from repro.fedsim.local import pad_cohort
-from repro.fedsim.server import run_federated, run_federated_batched
 from repro.kernels.dp_aggregate.ops import dp_aggregate, dp_aggregate_sums
 from repro.launch.mesh import make_client_mesh
 
@@ -67,10 +67,11 @@ def mesh():
 def _run(problem, name, *, mesh=None, rounds=ROUNDS):
     data, w0 = problem
     alg = make_algorithm(name, **ALG_KWARGS[name])
-    return run_federated(alg, linreg_loss, w0, data.client_batches(),
-                         rounds=rounds, tau=TAU, eta_l=ETA_L,
-                         key=jax.random.PRNGKey(11),
-                         eval_fn=distance_to_opt(data.w_star), mesh=mesh)
+    session = FederatedSession(alg, linreg_loss, w0, data.client_batches(),
+                               train=TrainSpec(rounds=rounds, tau=TAU, eta_l=ETA_L),
+                               shard=ShardSpec(mesh=mesh),
+                               eval_fn=distance_to_opt(data.w_star))
+    return session.run(jax.random.PRNGKey(11))
 
 
 class TestShardedEquivalence:
@@ -126,24 +127,33 @@ class TestShardedEquivalence:
                                               v[:1], (m_pad - M,) + v.shape[1:])))
 
     def test_mesh_requires_scan_engine(self, problem, mesh):
+        session = FederatedSession(make_algorithm("fedavg"), linreg_loss,
+                                   problem[1], problem[0].client_batches(),
+                                   train=TrainSpec(rounds=2, tau=1, eta_l=0.1),
+                                   engine=EngineSpec(engine="eager"),
+                                   shard=ShardSpec(mesh=mesh))
         with pytest.raises(ValueError, match="scan"):
-            _ = run_federated(make_algorithm("fedavg"), linreg_loss,
-                              problem[1], problem[0].client_batches(),
-                              rounds=2, tau=1, eta_l=0.1,
-                              key=jax.random.PRNGKey(0), engine="eager",
-                              mesh=mesh)
+            session.run(jax.random.PRNGKey(0))
 
 
 class TestShardedBatched:
+    def _batched(self, problem, alg, keys, *, mesh=None, eval_fn=None,
+                 w0=None, batches=None, rounds=ROUNDS, **kw):
+        data, w0_default = problem
+        session = FederatedSession(
+            alg, linreg_loss, w0 if w0 is not None else w0_default,
+            batches if batches is not None else data.client_batches(),
+            train=TrainSpec(rounds=rounds, tau=TAU, eta_l=ETA_L),
+            shard=ShardSpec(mesh=mesh), eval_fn=eval_fn)
+        return session.run_batched(keys, **kw)
+
     def test_batched_sharded_matches_batched(self, problem, mesh):
-        data, w0 = problem
+        data, _ = problem
         alg = make_algorithm("ldp-fedexp-gauss", **ALG_KWARGS["ldp-fedexp-gauss"])
         keys = jnp.stack([jax.random.PRNGKey(21), jax.random.PRNGKey(22)])
-        kw = dict(rounds=ROUNDS, tau=TAU, eta_l=ETA_L, keys=keys,
-                  eval_fn=distance_to_opt(data.w_star))
-        r1 = run_federated_batched(alg, linreg_loss, w0, data.client_batches(), **kw)
-        r2 = run_federated_batched(alg, linreg_loss, w0, data.client_batches(),
-                                   mesh=mesh, **kw)
+        ev = distance_to_opt(data.w_star)
+        r1 = self._batched(problem, alg, keys, eval_fn=ev)
+        r2 = self._batched(problem, alg, keys, mesh=mesh, eval_fn=ev)
         assert r2.final_w.shape == (2, D)
         # vmap may re-batch BLAS reductions: tolerance, not exact
         np.testing.assert_allclose(np.asarray(r1.final_w), np.asarray(r2.final_w),
@@ -157,9 +167,9 @@ class TestShardedBatched:
         keys = jnp.stack([jax.random.PRNGKey(0), jax.random.PRNGKey(1)])
         w0s = jnp.stack([jnp.zeros(D), 0.1 * jnp.ones(D)])
         batches = {k: jnp.stack([v, v]) for k, v in data.client_batches().items()}
-        rb = run_federated_batched(alg, linreg_loss, w0s, batches, rounds=3,
-                                   tau=TAU, eta_l=ETA_L, keys=keys,
-                                   batched_w0=True, batched_data=True, mesh=mesh)
+        rb = self._batched(problem, alg, keys, mesh=mesh, w0=w0s,
+                           batches=batches, rounds=3,
+                           batched_w0=True, batched_data=True)
         assert rb.final_w.shape == (2, D)
         assert not np.allclose(np.asarray(rb.final_w[0]), np.asarray(rb.final_w[1]))
 
