@@ -15,8 +15,13 @@ checkouts.  Gated metrics are the engine-relative throughputs; the absolute
 rounds/sec are also compared but only when the fresh run's config matches
 the baseline's — and the config identity includes the device count and host
 CPU count precisely so a baseline measured on one machine class never gates
-absolute numbers on another (a slower runner would fail spuriously; ratio
-metrics are machine-relative and always gated).
+absolute numbers on another (a slower runner would fail spuriously).
+
+Ratio metrics are machine-relative and always gated, but their REGIME still
+shifts across machine classes (the committed 8-shard-collapse history is
+itself such a shift: per-device slice size flipped the sharding ratio), so
+on a config mismatch the ratio threshold relaxes to 2x the configured one —
+strict within a machine class, tolerant across classes, never ungated.
 
 The committed baseline should be refreshed (copy a CI artifact or rerun
 ``make bench-quick`` on the reference box) whenever a PR intentionally
@@ -30,17 +35,20 @@ import subprocess
 import sys
 
 # always gated: dimensionless, machine-relative speedups (the sampled-cohort
-# ratio gates sampling overhead: sampled r/s relative to full participation)
+# and local-SGD ratios gate per-feature engine overhead: each workload's r/s
+# relative to its plain full-participation / full-batch twin)
 RATIO_KEYS = (
     ("speedup_scan_vs_eager",),
     ("speedup_single_seed",),
     ("sampled_cohort", "relative_to_full"),
+    ("local_sgd", "relative_to_full"),
 )
 # gated only when the run configs match: absolute throughputs
 ABS_KEYS = (
     ("rounds_per_sec", "scan_batched_workload"),
     ("rounds_per_sec", "scan_single_seed"),
     ("sampled_cohort", "rounds_per_sec"),
+    ("local_sgd", "rounds_per_sec"),
 )
 
 
@@ -89,23 +97,27 @@ def main(argv=None) -> int:
         return 0
 
     configs_match = base.get("config") == fresh.get("config")
+    ratio_threshold = args.threshold if configs_match else 2.0 * args.threshold
     checks = [(".".join(k), _get(base, k), _get(fresh, k))
               for k in (list(RATIO_KEYS)
                         + (list(ABS_KEYS) if configs_match else []))]
     if not configs_match:
         print(f"NOTE config mismatch vs baseline ({base.get('config')} != "
-              f"{fresh.get('config')}); gating ratio metrics only")
+              f"{fresh.get('config')}); gating ratio metrics only, at the "
+              f"relaxed cross-machine-class threshold -{ratio_threshold:.0%}")
 
     failed = []
     for name, b, f in checks:
         if b is None or f is None or not isinstance(b, (int, float)) or b <= 0:
             print(f"SKIP {name}: missing/invalid in baseline or fresh run")
             continue
+        is_ratio = tuple(name.split(".")) in RATIO_KEYS
+        threshold = ratio_threshold if is_ratio else args.threshold
         drop = (b - f) / b
-        status = "FAIL" if drop > args.threshold else "ok  "
+        status = "FAIL" if drop > threshold else "ok  "
         print(f"{status} {name}: baseline {b:.2f} -> fresh {f:.2f} "
-              f"({-drop:+.1%} vs -{args.threshold:.0%} floor)")
-        if drop > args.threshold:
+              f"({-drop:+.1%} vs -{threshold:.0%} floor)")
+        if drop > threshold:
             failed.append(name)
 
     if failed:

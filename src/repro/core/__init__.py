@@ -1,8 +1,22 @@
 """Core DP-FedEXP library — the paper's contribution as composable JAX modules."""
 
-from repro.core import accounting, aggregation, clipping, mechanisms, stepsize
+from repro.core import accounting, aggregation, clipping, compose, mechanisms, stepsize
 from repro.core.aggregation import RoundStats, aggregate_stats, fused_clip_aggregate
 from repro.core.clipping import clip_batch, clip_by_l2, clip_tree, global_l2_norm_tree
+from repro.core.compose import (
+    AdaptiveClipStep,
+    CentralGaussian,
+    ComposedAlgorithm,
+    FedEXPStep,
+    FixedEta,
+    GaussianLDP,
+    MeanAggregation,
+    NoPrivacy,
+    PrivUnitLDP,
+    ServerOpt,
+    WeightedAggregation,
+    compose_algorithm,
+)
 from repro.core.fedexp import (
     CDPFedEXP,
     DPFedAvgCDP,
@@ -19,10 +33,14 @@ from repro.core.fedexp import (
 )
 
 __all__ = [
-    "accounting", "aggregation", "clipping", "mechanisms", "stepsize",
+    "accounting", "aggregation", "clipping", "compose", "mechanisms", "stepsize",
     "RoundStats", "aggregate_stats", "fused_clip_aggregate",
     "clip_batch", "clip_by_l2", "clip_tree", "global_l2_norm_tree",
     "ServerAlgorithm", "RoundAux", "make_algorithm", "list_algorithms",
     "FedAvg", "FedEXP", "DPFedAvgLDPGaussian", "LDPFedEXPGaussian",
     "DPFedAvgPrivUnit", "LDPFedEXPPrivUnit", "DPFedAvgCDP", "CDPFedEXP",
+    "ComposedAlgorithm", "compose_algorithm",
+    "NoPrivacy", "GaussianLDP", "PrivUnitLDP", "CentralGaussian",
+    "MeanAggregation", "WeightedAggregation",
+    "FixedEta", "FedEXPStep", "ServerOpt", "AdaptiveClipStep",
 ]

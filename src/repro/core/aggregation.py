@@ -50,6 +50,7 @@ __all__ = [
     "aggregate_stats",
     "fused_clip_aggregate",
     "partial_clip_moments",
+    "raw_moments",
     "materialize_ldp_noise",
     "resolve_backend",
 ]
@@ -232,6 +233,7 @@ def partial_clip_moments(
     noise: jax.Array | None = None,
     *,
     weight_mask: jax.Array | None = None,
+    row_weights: jax.Array | None = None,
     backend: str = "auto",
     interpret: bool | None = None,
     block_m: int | None = None,
@@ -246,22 +248,44 @@ def partial_clip_moments(
     because its seed derivation is shard-oblivious: every shard would draw the
     SAME noise block, silently correlating "independent" client randomizers.
 
-    ``weight_mask`` (float (M,) of {0., 1.}) weights each row's contribution
+    ``weight_mask`` (float (M,) of {0., 1.}) GATES each row's contribution
     to all four sums; padding rows (mask 0) are zeroed BEFORE the clip so a
     NaN from local training on dummy data cannot poison the reduction.
+    KNOWN LIMITATION: a with-replacement multiplicity mask (values > 1,
+    ``CohortSpec(replace=True)``) only inflates ``count`` here — repeated
+    clients are gated in once, not multiplicity-weighted as
+    ``raw_moments``/the PrivUnit moments do (weighting the gated sums is not
+    bit-compatible with the plain sums the dense reference lowers to, and
+    the kernel's fixed sums cannot row-weight).  Exact multiplicity
+    weighting is available through ``row_weights``.
+
+    ``row_weights`` (float (M,), optional) additionally weights each RELEASED
+    row multiplicatively — the weighted-aggregation layer (DESIGN.md §11):
+    ``sum_c = Σ v_i c_i``, the scalar sums weight per-row, and ``count``
+    becomes ``Σ gate_i v_i`` so ``sum_c / count`` is the weighted mean.
+    Weighting happens AFTER clip+noise, so each client's DP release is
+    untouched; ``None`` is bit-identical to the historical unweighted path.
+    Weighted reductions always use the jnp path (the kernel's fixed sums
+    don't take per-row weights).
     """
     m = raw_updates.shape[0]
     backend = resolve_backend(backend)
     if backend == "kernel-fused":   # no key routed here; see docstring
         backend = "kernel"
+    if row_weights is not None:
+        backend = "jnp"
     if weight_mask is not None:
         keep = weight_mask[:, None] > 0
         raw_updates = jnp.where(keep, raw_updates, 0.0)
         if noise is not None:
             noise = jnp.where(keep, noise, 0.0)
-        count = jnp.sum(weight_mask)
+        gate = weight_mask
     else:
-        count = jnp.float32(m)
+        gate = jnp.ones((m,), jnp.float32)
+    count = (jnp.sum(gate) if row_weights is None
+             else jnp.sum(gate * row_weights))
+    if weight_mask is None and row_weights is None:
+        count = jnp.float32(m)  # static-shape constant, as historically
 
     if backend == "kernel":
         from repro.kernels.dp_aggregate import ops as _ops
@@ -276,10 +300,40 @@ def partial_clip_moments(
     sq_norms = jnp.sum(jnp.square(raw_updates), axis=-1)
     scale = jnp.minimum(1.0, clip_norm / jnp.maximum(jnp.sqrt(sq_norms), _EPS))
     clipped = raw_updates * scale[:, None]
-    sum_sq_clipped = jnp.sum(sq_norms * jnp.square(scale))
     released = clipped if noise is None else clipped + noise
+    if row_weights is not None:
+        v = gate * row_weights
+        sum_sq_clipped = v @ (sq_norms * jnp.square(scale))
+        sum_sq = (sum_sq_clipped if noise is None
+                  else v @ jnp.sum(jnp.square(released), axis=-1))
+        return RoundMoments(sum_c=v @ released, sum_sq=sum_sq,
+                            sum_sq_clipped=sum_sq_clipped, count=count)
+    sum_sq_clipped = jnp.sum(sq_norms * jnp.square(scale))
     sum_sq = (sum_sq_clipped if noise is None
               else jnp.sum(jnp.sum(jnp.square(released), axis=-1)))
     ones = jnp.ones((released.shape[0],), jnp.float32)
     return RoundMoments(sum_c=ones @ released, sum_sq=sum_sq,
                         sum_sq_clipped=sum_sq_clipped, count=count)
+
+
+def raw_moments(deltas: jax.Array, mask: jax.Array,
+                row_weights: jax.Array | None = None) -> RoundMoments:
+    """Unclipped per-shard sums (non-private algorithms); mask-weighted.
+
+    Every masked scalar sum is a dot with the mask: on XLA:CPU a fused
+    ``sum(mask * x)`` accumulates in a different order than the plain
+    ``sum(x)`` the unsharded reference lowers to, while ``mask @ x`` matches
+    it bit-for-bit (and the column sum already rides the same matvec idiom as
+    ``aggregate_stats``).  ``row_weights`` folds per-client aggregation
+    weights into the same dot (weighted mean via ``sum_c / count``).
+
+    Masked rows are where-zeroed first: the engine already zeroes them at
+    the source (so this is a numeric no-op on that path), but a direct
+    caller's garbage row must not leak as ``0 * inf = NaN`` through the
+    mask dot — masked clients contribute exactly zero, always.
+    """
+    deltas = jnp.where(mask[:, None] > 0, deltas, 0.0)
+    v = mask if row_weights is None else mask * row_weights
+    sum_sq = v @ jnp.sum(jnp.square(deltas), axis=-1)
+    return RoundMoments(sum_c=v @ deltas, sum_sq=sum_sq,
+                        sum_sq_clipped=sum_sq, count=jnp.sum(v))

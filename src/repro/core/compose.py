@@ -1,0 +1,755 @@
+"""Composable algorithm stack: privacy mechanism x aggregation x global step.
+
+The paper's core claim is that DP-FedEXP is a *composition*: any client
+randomizer (Gaussian LDP, PrivUnit, central Gaussian) under any clipping
+regime can feed the adaptive extrapolated step size.  This module makes that
+literal (DESIGN.md §11).  A server algorithm is
+
+    ComposedAlgorithm(mechanism, step, aggregator, name)
+
+built from three orthogonal frozen-dataclass layers (the fourth layer of the
+stack — ``LocalTrainer`` / ``LocalSpec`` — lives in ``repro.fedsim`` because
+it runs client-side, before the server ever sees an update):
+
+    PrivacyMechanism   owns clipping + noise + the step-size bias correction
+                       + the privacy-accounting hook for ITS release:
+                       ``NoPrivacy``, ``GaussianLDP``, ``PrivUnitLDP``,
+                       ``CentralGaussian`` (fixed sigma or the adaptive-clip
+                       noise multiplier ``z_mult``).
+    Aggregation        how released updates combine: ``MeanAggregation``
+                       (the paper) or ``WeightedAggregation`` (per-client
+                       priority/size weights, Talaei et al. 2024), both
+                       riding the masked-moment machinery of DESIGN.md §9
+                       (``partial_clip_moments`` / the ``dp_aggregate``
+                       kernel path, unchanged).
+    GlobalStep         what the server does with the released mean:
+                       ``FixedEta`` (DP-FedAvg), ``FedEXPStep`` (the paper's
+                       adaptive extrapolation, Eqs. 2/6/7/8 — it asks the
+                       MECHANISM for its debiased numerator, so one step
+                       class serves every randomizer), ``ServerOpt`` (FedOpt
+                       family: server Adam / momentum), ``AdaptiveClipStep``
+                       (Andrew et al. 2021 quantile clip tracking — owns the
+                       clip state and overrides every mechanism's threshold).
+
+Layer contract (who may touch what — DESIGN.md §11):
+
+* The MECHANISM is stateless.  It reads the round key and the clip threshold
+  (its own static ``clip_norm`` unless the step overrides it), draws ALL
+  randomness of the release (per-client LDP noise keyed by global client
+  index; central noise from the replicated post-psum key), and is the only
+  layer that sees per-client rows.
+* The AGGREGATION layer only reweights rows AFTER the per-client release
+  (weights are public), so the DP guarantee is untouched.
+* The STEP owns the carry state (optimizer moments, clip threshold) and the
+  extra PRNG streams (xi, clip-bit noise) — split off the round key exactly
+  as the monolithic classes did, so compositions are bit-identical to them.
+* Accounting: ``ComposedAlgorithm.budget`` delegates to
+  ``mechanism.budget(...)`` with ``with_numerator`` set when the step
+  releases the FedEXP numerator; the session's ``privacy_report`` calls it.
+
+Every legacy registry name (``repro.core.fedexp.make_algorithm``) is now one
+of these compositions, pinned bit-for-bit against the monolithic classes by
+``tests/test_compose.py``.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import accounting, stepsize
+from repro.core import mechanisms as mech
+from repro.core.aggregation import (
+    RoundMoments,
+    RoundStats,
+    aggregate_stats,
+    fused_clip_aggregate,
+    materialize_ldp_noise,
+    partial_clip_moments,
+    raw_moments,
+)
+from repro.core.algorithm import RoundAux, ServerAlgorithm, client_keys
+
+__all__ = [
+    "PrivacyMechanism",
+    "NoPrivacy",
+    "GaussianLDP",
+    "PrivUnitLDP",
+    "CentralGaussian",
+    "Aggregation",
+    "MeanAggregation",
+    "WeightedAggregation",
+    "GlobalStep",
+    "FixedEta",
+    "FedEXPStep",
+    "ServerOpt",
+    "AdaptiveClipStep",
+    "ComposedAlgorithm",
+    "compose_algorithm",
+]
+
+
+# ---------------------------------------------------------------------------
+# Privacy mechanisms
+# ---------------------------------------------------------------------------
+
+class PrivacyMechanism:
+    """One client randomizer + its clipping regime + its accounting.
+
+    ``clip`` arguments below are ``None`` (use the mechanism's own static
+    ``clip_norm`` — the historical, bit-pinned path) or a traced per-round
+    threshold injected by ``AdaptiveClipStep``.
+
+    Methods (all pure; ``key`` is the round key, NEVER pre-split — the step
+    layer owns key splitting so compositions match the monolithic classes):
+
+        release(key, deltas, clip, m)           dense (M, d) -> (RoundStats, extras)
+        moments(key, deltas, mask, start, clip, row_weights)
+                                                -> (RoundMoments, extras) partial SUMS
+        finalize(key, mom, extras, clip, m_eff) psummed moments -> (RoundStats, extras')
+        extrapolation(k_xi, stats, extras, dim, clip, m_eff)
+                                                -> (eta, eta_naive, eta_target)
+        budget(delta, rounds, dim, sampling_q, with_numerator) -> PrivacyReport
+    """
+
+    is_private = True
+    needs_xi_key = False            # CDP-style post-aggregation numerator noise
+
+    @property
+    def clip_independent_budget(self) -> bool:
+        """True when this mechanism's guarantee does not depend on the clip
+        threshold (so an AdaptiveClipStep override keeps the budget sound):
+        PrivUnit (pure-DP in eps0/eps1/eps2) and the z-tracking
+        CentralGaussian (noise std scales with C).  Fixed-sigma Gaussian
+        mechanisms are NOT — their sensitivity/noise ratio moves with C."""
+        return False
+
+    def _clip(self, clip):
+        # subclasses with a clipping regime define a clip_norm field
+        return getattr(self, "clip_norm", None) if clip is None else clip
+
+    def release(self, key, deltas, clip, m):
+        raise NotImplementedError
+
+    def moments(self, key, deltas, mask, start, clip, row_weights=None):
+        raise NotImplementedError
+
+    def finalize(self, key, mom, extras, clip, m_eff):
+        return mom.stats(), {}
+
+    def extrapolation(self, k_xi, stats, extras, dim, clip, m_eff):
+        raise NotImplementedError
+
+    def budget(self, delta, *, rounds, dim, sampling_q, with_numerator):
+        raise ValueError(f"{type(self).__name__} is not a private mechanism")
+
+
+@dataclasses.dataclass(frozen=True)
+class NoPrivacy(PrivacyMechanism):
+    """No clipping, no noise: the FedAvg/FedEXP reference release."""
+
+    is_private = False
+
+    def release(self, key, deltas, clip, m):
+        return aggregate_stats(deltas), {}
+
+    def moments(self, key, deltas, mask, start, clip, row_weights=None):
+        return raw_moments(deltas, mask, row_weights), {}
+
+    def extrapolation(self, k_xi, stats, extras, dim, clip, m_eff):
+        return stepsize.fedexp(stats.mean_sq, stats.agg_sq), None, None
+
+
+@dataclasses.dataclass(frozen=True)
+class GaussianLDP(PrivacyMechanism):
+    """Per-client clip + Gaussian noise (the paper's LDP setting).
+
+    Noise rows are keyed by GLOBAL client index (``materialize_ldp_noise``)
+    so shards reproduce the single-device randomization bit-for-bit; the
+    dense release routes through ``fused_clip_aggregate`` (kernel-fused noise
+    on TPU, tuned jnp elsewhere — DESIGN.md §5/§8).
+    """
+
+    clip_norm: float
+    sigma: float
+    backend: str = "auto"
+
+    def release(self, key, deltas, clip, m):
+        return fused_clip_aggregate(deltas, self._clip(clip), noise_key=key,
+                                    noise_sigma=self.sigma,
+                                    backend=self.backend), {}
+
+    def moments(self, key, deltas, mask, start, clip, row_weights=None):
+        noise = materialize_ldp_noise(key, *deltas.shape, self.sigma,
+                                      deltas.dtype, start=start)
+        return partial_clip_moments(deltas, self._clip(clip), noise,
+                                    weight_mask=mask, row_weights=row_weights,
+                                    backend=self.backend), {}
+
+    def extrapolation(self, k_xi, stats, extras, dim, clip, m_eff):
+        eta = stepsize.ldp_gaussian(stats.mean_sq, stats.agg_sq, dim, self.sigma)
+        return (eta,
+                stepsize.naive_noisy(stats.mean_sq, stats.agg_sq),
+                stepsize.target(stats.mean_sq_clipped, stats.agg_sq))
+
+    def budget(self, delta, *, rounds, dim, sampling_q, with_numerator):
+        # per-release local guarantee (Prop. 4.1): identical for FedAvg /
+        # FedEXP / FedOpt steps — the step size is computed server-side from
+        # already-released updates — and unamplified by central subsampling
+        return accounting.ldp_gaussian_budget(self.clip_norm, self.sigma, delta)
+
+
+@dataclasses.dataclass(frozen=True)
+class PrivUnitLDP(PrivacyMechanism):
+    """Per-client clip + PrivUnit direction x ScalarDP magnitude (pure LDP).
+
+    With a traced clip override (adaptive clipping) the static ScalarDP
+    lattice built at ``clip_norm`` is reused through exact public rescaling:
+    magnitudes are released on the reference scale and multiplied back by
+    ``clip / clip_norm`` (ScalarDP's debias transform is linear in ``r_max``,
+    so this is the r_max=clip release, not an approximation).
+    """
+
+    clip_norm: float
+    eps0: float
+    eps1: float
+    eps2: float
+    dim: int
+
+    def __post_init__(self):
+        object.__setattr__(self, "pu", mech.make_privunit_params(self.dim, self.eps0, self.eps1))
+        object.__setattr__(self, "sc", mech.make_scalardp_params(self.eps2, self.clip_norm))
+
+    @property
+    def clip_independent_budget(self) -> bool:
+        return True  # pure (eps0+eps1+eps2)-LDP at ANY clip threshold
+
+    def _randomize(self, key, deltas, start, clip):
+        """Per-client clip + PrivUnit release, keys by GLOBAL client index."""
+        m, _ = deltas.shape
+        keys = client_keys(key, m, start)
+        c = self._clip(clip)
+        norms = jnp.linalg.norm(deltas, axis=-1)
+        scale = jnp.minimum(1.0, c / jnp.maximum(norms, 1e-12))
+        clipped = deltas * scale[:, None]
+        if clip is None:
+            released = jax.vmap(
+                lambda k, dlt: mech.privunit_randomize(k, dlt, self.pu, self.sc))(keys, clipped)
+        else:  # traced clip: release on the reference scale, rescale publicly
+            to_ref = self.clip_norm / c
+            released = jax.vmap(
+                lambda k, dlt: mech.privunit_randomize(k, dlt, self.pu, self.sc))(
+                keys, clipped * to_ref) / to_ref
+        return released, clipped
+
+    def _s_hat(self, released, clip):
+        est = jax.vmap(lambda v: mech.estimate_norm_sq(v, self.pu, self.sc))
+        if clip is None:
+            return est(released)
+        to_ref = self.clip_norm / self._clip(clip)
+        return est(released * to_ref) / jnp.square(to_ref)
+
+    def release(self, key, deltas, clip, m):
+        released, clipped = self._randomize(key, deltas, 0, clip)
+        stats = aggregate_stats(released)
+        stats.mean_sq_clipped = (
+            jnp.sum(jnp.sum(jnp.square(clipped), axis=-1)) / m)
+        return stats, {"mean_s_hat": jnp.sum(self._s_hat(released, clip)) / m}
+
+    def moments(self, key, deltas, mask, start, clip, row_weights=None):
+        released, clipped = self._randomize(key, deltas, start, clip)
+        # where-zero BOTH row sets (released and pre-noise clipped): the
+        # engine zeroes masked deltas at the source, but a garbage row must
+        # not leak as 0 * inf = NaN through the mask dots below
+        keep = mask[:, None] > 0
+        released = jnp.where(keep, released, 0.0)
+        clipped = jnp.where(keep, clipped, 0.0)
+        # dots with the mask, not sum(mask * x): bit-parity with the
+        # unsharded reference reductions (see ``raw_moments``)
+        v = mask if row_weights is None else mask * row_weights
+        mom = RoundMoments(
+            sum_c=v @ released,
+            sum_sq=v @ jnp.sum(jnp.square(released), axis=-1),
+            sum_sq_clipped=v @ jnp.sum(jnp.square(clipped), axis=-1),
+            count=jnp.sum(v))
+        return mom, {"sum_s_hat": v @ self._s_hat(released, clip)}
+
+    def finalize(self, key, mom, extras, clip, m_eff):
+        return mom.stats(), {"mean_s_hat": extras["sum_s_hat"] / mom.count}
+
+    def extrapolation(self, k_xi, stats, extras, dim, clip, m_eff):
+        eta = stepsize.ldp_privunit(extras["mean_s_hat"], stats.agg_sq)
+        return (eta,
+                stepsize.naive_noisy(stats.mean_sq, stats.agg_sq),
+                stepsize.target(stats.mean_sq_clipped, stats.agg_sq))
+
+    def budget(self, delta, *, rounds, dim, sampling_q, with_numerator):
+        return accounting.privunit_budget(self.eps0, self.eps1, self.eps2)
+
+
+@dataclasses.dataclass(frozen=True)
+class CentralGaussian(PrivacyMechanism):
+    """Clip-only clients + server-side Gaussian noise on the mean (CDP).
+
+    Two noise modes:
+      * fixed ``sigma`` (the paper): server noise std ``sigma / sqrt(M)``
+        with the STATIC configured client count — the release the
+        Proposition 4.2 accounting is stated for;
+      * ``z_mult`` (adaptive clipping, Andrew et al.): std ``z*C / sqrt(m)``
+        tracking the CURRENT clip threshold and the REALIZED cohort size, so
+        the guarantee is C-independent.
+    Noise is drawn from the replicated round key AFTER the psum, so sharded
+    and single-device releases add the identical (d,) draw (DESIGN.md §9).
+    """
+
+    clip_norm: float | None = None
+    sigma: float | None = None
+    num_clients: int = 0
+    sigma_xi: float | None = None     # numerator noise; None = d sigma^2 / M
+    z_mult: float | None = None       # adaptive mode: sigma = z * C
+    backend: str = "auto"
+
+    needs_xi_key = True
+
+    def __post_init__(self):
+        if (self.sigma is None) == (self.z_mult is None):
+            raise ValueError("set exactly one of sigma (fixed) / z_mult (adaptive)")
+        if self.sigma is not None and self.clip_norm is None:
+            raise ValueError("fixed-sigma CentralGaussian requires clip_norm")
+        if self.num_clients < 1:
+            raise ValueError("CentralGaussian requires num_clients >= 1")
+
+    @property
+    def clip_independent_budget(self) -> bool:
+        return self.z_mult is not None  # noise tracks z*C => C cancels
+
+    def _sigma(self, clip):
+        return self.sigma if self.z_mult is None else self.z_mult * self._clip(clip)
+
+    def _m_noise(self, m_eff):
+        """Divisor of the server-noise std: the static configured M for the
+        fixed-sigma release, the realized cohort for the z-tracking one.
+        A traced realized count is floored at 1 (a weight-sum count < 1 must
+        not inflate the noise; the static dense count is left untouched —
+        the monolithic classes' exact expression)."""
+        if self.z_mult is None:
+            return float(self.num_clients)
+        return m_eff if isinstance(m_eff, float) else jnp.maximum(m_eff, 1.0)
+
+    def _noised(self, key, cbar, clip, m_eff):
+        d = cbar.shape[-1]
+        noise = (self._sigma(clip) / jnp.sqrt(self._m_noise(m_eff))) \
+            * jax.random.normal(key, (d,))
+        return cbar + noise
+
+    def release(self, key, deltas, clip, m):
+        stats = fused_clip_aggregate(deltas, self._clip(clip), None,
+                                     backend=self.backend)
+        cbar = self._noised(key, stats.cbar, clip, m)
+        return RoundStats(cbar=cbar, mean_sq=stats.mean_sq,
+                          agg_sq=jnp.sum(jnp.square(cbar)),
+                          mean_sq_clipped=stats.mean_sq_clipped), {}
+
+    def moments(self, key, deltas, mask, start, clip, row_weights=None):
+        return partial_clip_moments(deltas, self._clip(clip), None,
+                                    weight_mask=mask, row_weights=row_weights,
+                                    backend=self.backend), {}
+
+    def finalize(self, key, mom, extras, clip, m_eff):
+        cbar = self._noised(key, mom.sum_c / mom.count, clip, m_eff)
+        return RoundStats(cbar=cbar, mean_sq=mom.sum_sq / mom.count,
+                          agg_sq=jnp.sum(jnp.square(cbar)),
+                          mean_sq_clipped=mom.sum_sq_clipped / mom.count), {}
+
+    def extrapolation(self, k_xi, stats, extras, dim, clip, m_eff):
+        sigma = self._sigma(clip)
+        sigma_xi = (self.sigma_xi if self.sigma_xi is not None
+                    else dim * sigma**2 / self._m_noise(m_eff))
+        xi = sigma_xi * jax.random.normal(k_xi, ())
+        eta = stepsize.cdp(stats.mean_sq_clipped, xi, stats.agg_sq)
+        return eta, None, stepsize.target(stats.mean_sq_clipped, stats.agg_sq)
+
+    def budget(self, delta, *, rounds, dim, sampling_q, with_numerator):
+        q = sampling_q
+        if self.z_mult is not None:
+            # noise std tracks z*C, so the C/sigma ratio — all the budget
+            # sees — is the constant 1/z; stated in C=1 units.  The noise
+            # scales with the REALIZED cohort (sigma/sqrt(|S_t|)), so the
+            # conditional per-round mu inflates by 1/sqrt(q) only; feeding
+            # cdp_budget the effective count M/q composes exactly that.  The
+            # clip-bit release adds adaptive_clip_rho, negligible by
+            # construction (sigma_b ~ 10).
+            return accounting.cdp_budget(
+                1.0, self.z_mult, self.num_clients / q, rounds, delta,
+                sigma_xi=(dim * self.z_mult**2 / self.num_clients
+                          if with_numerator else None),
+                sampling_q=q)
+        sigma_xi = None
+        if with_numerator:
+            sigma_xi = (self.sigma_xi if self.sigma_xi is not None
+                        else dim * self.sigma**2 / self.num_clients)
+        return accounting.cdp_budget(self.clip_norm, self.sigma,
+                                     self.num_clients, rounds, delta,
+                                     sigma_xi=sigma_xi, sampling_q=q)
+
+
+# ---------------------------------------------------------------------------
+# Aggregation layer
+# ---------------------------------------------------------------------------
+
+class Aggregation:
+    """How released client updates combine into the round's moments."""
+
+    is_weighted: bool = False
+
+    def row_weights(self, start, m_local):
+        return None
+
+
+@dataclasses.dataclass(frozen=True)
+class MeanAggregation(Aggregation):
+    """Uniform mean over the (masked) cohort — the paper's aggregation.
+    ``sum / count`` through the masked-moment machinery, bit-identical to
+    the monolithic classes."""
+
+
+@dataclasses.dataclass(frozen=True)
+class WeightedAggregation(Aggregation):
+    """Per-client aggregation weights (priority / dataset-size weighting,
+    Talaei et al. 2024): the round releases ``Σ v_i c_i / Σ v_i``.
+
+    Weights are PUBLIC and applied AFTER each client's DP release, so the
+    per-client guarantee is unchanged (the central sensitivity of the
+    weighted mean is ``2C·max_i v_i / Σv`` — budget reporting stays the
+    mechanism's; see DESIGN.md §11).  ``weights`` is a static per-client
+    tuple indexed by GLOBAL client index; shards slice their own rows.
+    Weighted counts are real-valued, so the engine's static-count
+    substitution is disabled for these compositions.
+    """
+
+    weights: tuple[float, ...] = ()
+
+    is_weighted = True
+
+    def __post_init__(self):
+        if not self.weights:
+            raise ValueError("WeightedAggregation requires per-client weights")
+        if any(w < 0 for w in self.weights) or sum(self.weights) <= 0:
+            raise ValueError("weights must be nonnegative with positive sum")
+
+    def row_weights(self, start, m_local):
+        w = jnp.asarray(self.weights, jnp.float32)
+        if isinstance(start, int) and start == 0 and m_local == len(self.weights):
+            return w
+        # shard slice by (possibly traced) global start; zero-pad so padding
+        # clients past M slice zeros
+        padded = jnp.concatenate([w, jnp.zeros((m_local,), jnp.float32)])
+        return jax.lax.dynamic_slice(padded, (start,), (m_local,))
+
+
+# ---------------------------------------------------------------------------
+# Global step layer
+# ---------------------------------------------------------------------------
+
+class GlobalStep:
+    """Server-side update policy + owner of the carry state and extra keys.
+
+    ``n_extra_keys`` declares how many PRNG streams beyond the mechanism's
+    must be split off the round key (xi for CDP extrapolation, the clip-bit
+    stream) — EXACTLY the splits the monolithic classes performed, which is
+    what keeps compositions bit-identical.
+    """
+
+    stateful: bool = False
+    needs_clip_bits: bool = False
+    uses_extrapolation: bool = False
+
+    def n_extra_keys(self, mechanism) -> int:
+        return 0
+
+    def clip_override(self, state):
+        return None
+
+    def init(self, w):
+        return ()
+
+    def apply(self, extra_keys, w, stats, extras, mechanism, clip, m_eff, state):
+        raise NotImplementedError
+
+
+@dataclasses.dataclass(frozen=True)
+class FixedEta(GlobalStep):
+    """w <- w + eta_g * cbar with a constant eta_g (DP-FedAvg: eta_g = 1)."""
+
+    eta: float = 1.0
+
+    def apply(self, extra_keys, w, stats, extras, mechanism, clip, m_eff, state):
+        w_next = w + stats.cbar if self.eta == 1.0 else w + self.eta * stats.cbar
+        return w_next, RoundAux(eta_g=jnp.float32(self.eta)), state
+
+
+@dataclasses.dataclass(frozen=True)
+class FedEXPStep(GlobalStep):
+    """The paper's adaptive extrapolation (Eqs. 2/6/7/8).
+
+    The mechanism supplies its own debiased numerator (it owns the noise it
+    must correct for); this step owns the policy — extrapolate by the ratio,
+    floored at 1 — and the xi key when the mechanism privatizes the
+    numerator post-aggregation.
+    """
+
+    uses_extrapolation = True
+
+    def n_extra_keys(self, mechanism):
+        return 1 if mechanism.needs_xi_key else 0
+
+    def apply(self, extra_keys, w, stats, extras, mechanism, clip, m_eff, state):
+        k_xi = extra_keys[0] if extra_keys else None
+        eta, naive, target = mechanism.extrapolation(
+            k_xi, stats, extras, w.shape[-1], clip,
+            extras.get("n_clients", m_eff))
+        aux = RoundAux(eta_g=eta, eta_naive=naive, eta_target=target,
+                       update_norm=eta * jnp.linalg.norm(stats.cbar))
+        return w + eta * stats.cbar, aux, state
+
+
+@dataclasses.dataclass(frozen=True)
+class ServerOpt(GlobalStep):
+    """FedOpt servers (Reddi et al. 2021): Adam / momentum over the released
+    pseudo-gradient — the extra-hyperparameter family the paper argues
+    against, kept for the E6 ablation and now composable with ANY mechanism
+    (e.g. LDP-Gaussian + server Adam)."""
+
+    kind: str = "adam"
+    lr: float = 0.1
+    beta1: float = 0.9
+    beta2: float = 0.999
+    eps: float = 1e-8
+
+    stateful = True
+
+    def __post_init__(self):
+        from repro import optim
+        if self.kind == "adam":
+            opt = optim.adam(lr=self.lr, b1=self.beta1, b2=self.beta2, eps=self.eps)
+        elif self.kind == "momentum":
+            opt = optim.momentum(lr=self.lr, beta=self.beta1)
+        else:
+            raise ValueError(f"unknown ServerOpt kind {self.kind!r}")
+        object.__setattr__(self, "_opt", opt)
+
+    def init(self, w):
+        return self._opt.init(w)
+
+    def apply(self, extra_keys, w, stats, extras, mechanism, clip, m_eff, state):
+        step, state = self._opt.update(stats.cbar, state)
+        return w + step, RoundAux(eta_g=jnp.float32(self.lr)), state
+
+
+@dataclasses.dataclass(frozen=True)
+class AdaptiveClipStep(GlobalStep):
+    """Quantile-tracked clipping (Andrew et al. 2021) composed over any
+    mechanism: the clip threshold C lives in the carry, overrides the
+    mechanism's static threshold each round (a TRACED scalar — the kernel
+    backend prefetches it, no recompiles), and updates from the privatized
+    below-threshold bit sum.  The step size is the mechanism's extrapolation
+    rule read at the CURRENT C (for CentralGaussian(z_mult=z) that is the
+    hyperparameter-free sigma_xi = d (zC)^2 / m of §3.2)."""
+
+    c0: float = 1.0
+    gamma: float = 0.5
+    clip_lr: float = 0.2
+    sigma_b: float = 10.0
+
+    stateful = True
+    needs_clip_bits = True
+    uses_extrapolation = True
+
+    def n_extra_keys(self, mechanism):
+        return (1 if mechanism.needs_xi_key else 0) + 1
+
+    def clip_override(self, state):
+        return state.clip
+
+    def init(self, w):
+        from repro.core import adaptive_clip as ac
+        return ac.init_state(self.c0)
+
+    def apply(self, extra_keys, w, stats, extras, mechanism, clip, m_eff, state):
+        from repro.core import adaptive_clip as ac
+        if len(extra_keys) == 2:
+            k_xi, k_bit = extra_keys
+        else:
+            k_xi, (k_bit,) = None, extra_keys
+        c = state.clip
+        # quantile tracking and realized-cohort noise run on the CLIENT
+        # count; weighted compositions deliver it separately because their
+        # moment count is a weight sum (extras["n_clients"]); everywhere
+        # else m_eff IS the client count — the monolithic classes' exact arg
+        m_clients = extras.get("n_clients", m_eff)
+        eta, _, _ = mechanism.extrapolation(
+            k_xi, stats, extras, w.shape[-1], clip, m_clients)
+        cfg = ac.AdaptiveClipConfig(gamma=self.gamma, lr=self.clip_lr,
+                                    sigma_b=self.sigma_b)
+        state, _ = ac.update_clip_from_stats(k_bit, state,
+                                             extras["count_below"],
+                                             m_clients, cfg)
+        aux = RoundAux(eta_g=eta, update_norm=c)   # report the clip used
+        return w + eta * stats.cbar, aux, state
+
+
+# ---------------------------------------------------------------------------
+# The composed server algorithm
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class ComposedAlgorithm(ServerAlgorithm):
+    """mechanism x aggregation x step as one engine-facing ServerAlgorithm.
+
+    Frozen and hashable by configuration (every layer is a frozen dataclass),
+    so compositions key the engine's compile cache exactly like the
+    monolithic classes.  Unknown attributes forward to the layers
+    (``alg.sigma_xi`` -> ``mechanism.sigma_xi``), preserving the monolithic
+    classes' attribute surface.
+    """
+
+    mechanism: PrivacyMechanism
+    step: GlobalStep
+    aggregation: Aggregation = MeanAggregation()
+    name: str = "composed"
+
+    @property
+    def is_private(self):
+        return self.mechanism.is_private
+
+    @property
+    def supports_static_count(self):
+        return not self.aggregation.is_weighted
+
+    def __getattr__(self, item):
+        if item.startswith("__"):
+            raise AttributeError(item)
+        d = object.__getattribute__(self, "__dict__")
+        for layer in ("mechanism", "step", "aggregation"):
+            obj = d.get(layer)
+            if obj is not None and hasattr(obj, item):
+                return getattr(obj, item)
+        raise AttributeError(
+            f"{type(self).__name__} {d.get('name')!r} has no attribute {item!r}")
+
+    # -- key / clip plumbing ----------------------------------------------
+
+    def _split_keys(self, key):
+        """(mechanism key, step extra keys) — the monolithic classes' exact
+        splits: none unless the step needs xi and/or clip-bit streams."""
+        n = self.step.n_extra_keys(self.mechanism)
+        if n == 0:
+            return key, ()
+        ks = jax.random.split(key, n + 1)
+        return ks[0], tuple(ks[i] for i in range(1, n + 1))
+
+    # -- engine interface --------------------------------------------------
+
+    def init_state(self, w):
+        return self.step.init(w)
+
+    def apply_round_stateful(self, key, w, raw_deltas, state):
+        clip = self.step.clip_override(state)
+        k_mech, extra = self._split_keys(key)
+        m = raw_deltas.shape[0]
+        if self.aggregation.is_weighted:
+            # weighted compositions route the dense round through the moment
+            # machinery (the weighting lives there); mask is all-ones
+            mask = jnp.ones((m,), jnp.float32)
+            moments = self.local_moments(key, w, raw_deltas, mask, 0, state)
+            return self.apply_from_moments(key, w, moments, state)
+        stats, extras = self.mechanism.release(k_mech, raw_deltas, clip, float(m))
+        if self.step.needs_clip_bits:
+            norms = jnp.linalg.norm(raw_deltas, axis=-1)
+            extras = dict(extras)
+            extras["count_below"] = jnp.sum((norms <= clip).astype(jnp.float32))
+        return self.step.apply(extra, w, stats, extras, self.mechanism, clip,
+                               float(m), state)
+
+    def apply_round(self, key, w, raw_deltas):
+        if self.step.stateful:
+            raise TypeError(f"{self.name} is stateful; use apply_round_stateful")
+        w_next, aux, _ = self.apply_round_stateful(key, w, raw_deltas, ())
+        return w_next, aux
+
+    def local_moments(self, key, w, deltas, mask, start, state):
+        clip = self.step.clip_override(state)
+        weights = self.aggregation.row_weights(start, deltas.shape[0])
+        # split exactly as the dense path does, so per-client randomness
+        # (LDP noise rows, PrivUnit keys) is identical on every engine even
+        # when the step reserves extra streams (e.g. PrivUnit x adaptive
+        # clip).  For the monolithic-parity names this is the raw key
+        # (no-split steps) or a key their mechanisms never read (CDP).
+        k_mech, _ = self._split_keys(key)
+        mom, extras = self.mechanism.moments(k_mech, deltas, mask, start, clip,
+                                             weights)
+        if self.step.needs_clip_bits:
+            norms = jnp.linalg.norm(deltas, axis=-1)
+            extras = dict(extras)
+            extras["count_below"] = mask @ (norms <= clip).astype(jnp.float32)
+        if self.aggregation.is_weighted:
+            # under weighted aggregation mom.count is a weight SUM; the
+            # clip-quantile update and any realized-cohort noise need the
+            # true participating-CLIENT count (psums additively)
+            extras = dict(extras)
+            extras["n_clients"] = jnp.sum(mask)
+        return mom, extras
+
+    def apply_from_moments(self, key, w, moments, state):
+        mom, extras = moments
+        clip = self.step.clip_override(state)
+        k_mech, extra = self._split_keys(key)
+        # realized cohort size for mechanism noise: the CLIENT count, which
+        # weighted compositions carry in extras (mom.count is their weight
+        # sum); everywhere else mom.count is exactly it
+        m_eff = extras.get("n_clients", mom.count) if isinstance(extras, dict) \
+            else mom.count
+        stats, more = self.mechanism.finalize(k_mech, mom, extras, clip, m_eff)
+        if more:
+            extras = {**extras, **more}
+        return self.step.apply(extra, w, stats, extras, self.mechanism, clip,
+                               mom.count, state)
+
+    # -- accounting --------------------------------------------------------
+
+    def budget(self, delta: float, *, rounds: int, dim: int,
+               sampling_q: float = 1.0) -> accounting.PrivacyReport:
+        """Privacy budget of a ``rounds``-round run of this composition —
+        the mechanism's accounting hook, told whether the step also releases
+        the privatized FedEXP numerator (DESIGN.md §11)."""
+        if not self.mechanism.is_private:
+            raise ValueError(f"{self.name!r} is not a private algorithm")
+        if self.step.needs_clip_bits and not self.mechanism.clip_independent_budget:
+            # a fixed-sigma mechanism under an adaptive clip override has a
+            # sensitivity/noise ratio that MOVES with the traced C; reporting
+            # the static-clip_norm figure would be silently unsound
+            raise ValueError(
+                f"{self.name!r} composes a fixed-noise mechanism with adaptive "
+                "clipping: its per-round guarantee tracks the realized clip "
+                "threshold and has no static budget.  Use CentralGaussian("
+                "z_mult=...) (noise tracks C) or PrivUnitLDP (pure-DP, "
+                "C-independent) under AdaptiveClipStep.")
+        with_num = self.step.uses_extrapolation and self.mechanism.needs_xi_key
+        return self.mechanism.budget(delta, rounds=rounds, dim=dim,
+                                     sampling_q=sampling_q,
+                                     with_numerator=with_num)
+
+
+def compose_algorithm(mechanism: PrivacyMechanism, step: GlobalStep,
+                      aggregation: Aggregation | None = None,
+                      *, name: str | None = None) -> ComposedAlgorithm:
+    """Build a ComposedAlgorithm with a derived name when none is given."""
+    agg = MeanAggregation() if aggregation is None else aggregation
+    if name is None:
+        parts = [type(mechanism).__name__.lower(), type(step).__name__.lower()]
+        if agg.is_weighted:
+            parts.insert(1, "weighted")
+        name = "-".join(parts)
+    return ComposedAlgorithm(mechanism=mechanism, step=step, aggregation=agg,
+                             name=name)

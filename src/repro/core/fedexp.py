@@ -26,6 +26,14 @@ Implemented algorithms (paper names):
     LDP-FedEXP (PrivUnit)                -- Algorithm 1 + Eq. (7) / Algorithm 4
     CDP-FedEXP                           -- Algorithm 2 + Eq. (8)
     DP-FedAvg (PrivUnit)                 -- PrivUnit randomizer, eta_g = 1
+
+Composable stack (DESIGN.md §11).  ``make_algorithm`` now builds every
+registry name as a ``repro.core.compose.ComposedAlgorithm`` — a mechanism x
+aggregation x step composition pinned bit-for-bit against the monolithic
+classes below by ``tests/test_compose.py``.  The monolithic classes remain
+the executable specification (and direct-construction API) of each
+composition; new cross-product names (``ldp-gauss-fedadam``, ``cdp-fedmom``,
+``privunit-fedexp-adaptive-clip``) have no monolithic counterpart.
 """
 from __future__ import annotations
 
@@ -35,6 +43,7 @@ from typing import Callable
 import jax
 import jax.numpy as jnp
 
+from repro.core import compose as _compose
 from repro.core import mechanisms as mech
 from repro.core import stepsize
 from repro.core.aggregation import (
@@ -43,6 +52,14 @@ from repro.core.aggregation import (
     fused_clip_aggregate,
     materialize_ldp_noise,
     partial_clip_moments,
+    raw_moments as _raw_moments,
+)
+from repro.core.algorithm import (
+    RoundAux,
+    ServerAlgorithm,
+    clamp_moment_counts,
+    client_keys,
+    set_moment_count,
 )
 
 __all__ = [
@@ -64,149 +81,9 @@ __all__ = [
 ]
 
 
-def _map_moments(moments, fix):
-    """Apply ``fix`` to every RoundMoments in an algorithm's moments pytree
-    (a bare RoundMoments or a (RoundMoments, extras) tuple)."""
-    def one(x):
-        return fix(x) if isinstance(x, RoundMoments) else x
-
-    if isinstance(moments, tuple):
-        return tuple(one(e) for e in moments)
-    return one(moments)
-
-
-def set_moment_count(moments, m_total: int):
-    """Swap the traced client count for its statically-known value in every
-    RoundMoments of an algorithm's moments pytree.
-
-    Used when the true count is known at trace time (the full cohort size on
-    the sharded path, the fixed cohort size on the sampled path): the static
-    constant lets XLA fold the 1/M normalizations exactly as the unsampled
-    single-device reference does, keeping engines bit-compatible (see
-    ``ServerAlgorithm.apply_round_sharded``)."""
-    c = jnp.float32(m_total)
-    return _map_moments(moments, lambda x: dataclasses.replace(x, count=c))
-
-
-def clamp_moment_counts(moments):
-    """Clamp every RoundMoments count to >= 1.
-
-    Bernoulli cohort sampling can draw an empty round; with all sums already
-    zero, a clamped count turns the 0/0 mean into a zero update (the round is
-    a no-op) instead of NaN-poisoning the carry."""
-    return _map_moments(
-        moments,
-        lambda x: dataclasses.replace(x, count=jnp.maximum(x.count, 1.0)))
-
-
-def client_keys(key: jax.Array, m: int, start: int | jax.Array = 0) -> jax.Array:
-    """(m,) per-client PRNG keys: row i is ``fold_in(key, start + i)``.
-
-    Keyed by GLOBAL client index so a client shard derives exactly its own
-    clients' keys (pass ``start = shard_index * m_local``) and the sharded
-    release reproduces the single-device randomization bit-for-bit.
-    """
-    return jax.vmap(lambda i: jax.random.fold_in(key, i))(start + jnp.arange(m))
-
-
-@dataclasses.dataclass
-class RoundAux:
-    """Diagnostics for one round (logged by fedsim / benchmarks).
-
-    Every field is a fixed-shape scalar array: diagnostics an algorithm does
-    not produce are NaN, NOT None, so one round is scan-compatible (the
-    engine stacks these across rounds without Python-level branching).
-    """
-
-    eta_g: jax.Array
-    eta_naive: jax.Array | None = None   # Eq. (3), for the Fig. 2 ablation
-    eta_target: jax.Array | None = None  # Eq. (5), oracle diagnostic
-    update_norm: jax.Array | None = None
-
-    def __post_init__(self):
-        for f in ("eta_naive", "eta_target", "update_norm"):
-            if getattr(self, f) is None:
-                setattr(self, f, jnp.float32(jnp.nan))
-
-
-class ServerAlgorithm:
-    """Base class; subclasses set `name` and implement apply_round.
-
-    Stateless algorithms implement ``apply_round``; stateful servers (the
-    FedOpt family — server Adam/momentum over pseudo-gradients) override
-    ``init_state`` / ``apply_round_stateful``, which the training loop
-    threads through its carry. Default wrappers keep the two interchangeable.
-
-    Sharded-round protocol (DESIGN.md §9).  A round is also expressible as
-    two halves the client-sharded engine splits across the ``clients`` mesh
-    axis:
-
-        local_moments(key, w, deltas, mask, start, state)  -> pytree of SUMS
-        apply_from_moments(key, w, global_moments, state)  -> (w', aux, state)
-
-    ``local_moments`` runs per-device on that shard's (m_local, d) slice of
-    the cohort (``start`` = global index of its first client, ``mask``
-    zero-weights padding rows) and returns only partial sums; the engine
-    ``psum``s them and every device applies the identical server update —
-    noise is drawn AFTER the reduction from the replicated round key, so DP
-    semantics match the single-device path exactly.
-    """
-
-    name: str = "base"
-    is_private: bool = True
-
-    def apply_round(self, key: jax.Array, w: jax.Array, raw_deltas: jax.Array):
-        raise NotImplementedError
-
-    def init_state(self, w: jax.Array):
-        return ()
-
-    def apply_round_stateful(self, key, w, raw_deltas, state):
-        w_next, aux = self.apply_round(key, w, raw_deltas)
-        return w_next, aux, state
-
-    def local_moments(self, key, w, deltas, mask, start, state):
-        """Shard-local partial sums (a psum-able pytree; SUMS, never means)."""
-        raise NotImplementedError(f"{self.name} has no sharded-round support")
-
-    def apply_from_moments(self, key, w, moments, state):
-        """Server update from globally-reduced moments; replicated math."""
-        raise NotImplementedError(f"{self.name} has no sharded-round support")
-
-    def apply_round_sharded(self, key, w, deltas, mask, state, axis_name,
-                            m_total: int | None = None):
-        """One round on a client shard (call inside ``shard_map``).
-
-        ``m_total`` is the STATIC true client count when the caller knows it
-        (the engine always does — it built the padding mask).  Replacing the
-        psummed mask-sum with the static constant lets XLA fold the 1/M
-        normalizations exactly as the single-device reference's static
-        ``sum / m`` does, keeping the two engines bit-compatible instead of
-        one ULP apart."""
-        start = jax.lax.axis_index(axis_name) * deltas.shape[0]
-        moments = self.local_moments(key, w, deltas, mask, start, state)
-        moments = jax.lax.psum(moments, axis_name)
-        if m_total is not None:
-            moments = set_moment_count(moments, m_total)
-        return self.apply_from_moments(key, w, moments, state)
-
-
 # ---------------------------------------------------------------------------
 # Non-private references
 # ---------------------------------------------------------------------------
-
-def _raw_moments(deltas: jax.Array, mask: jax.Array) -> RoundMoments:
-    """Unclipped per-shard sums (non-private algorithms); mask-weighted.
-
-    Every masked scalar sum is a dot with the mask: on XLA:CPU a fused
-    ``sum(mask * x)`` accumulates in a different order than the plain
-    ``sum(x)`` the unsharded reference lowers to, while ``mask @ x`` matches
-    it bit-for-bit (and the column sum already rides the same matvec idiom as
-    ``aggregate_stats``)."""
-    sum_sq = mask @ jnp.sum(jnp.square(deltas), axis=-1)
-    return RoundMoments(sum_c=mask @ deltas, sum_sq=sum_sq,
-                        sum_sq_clipped=sum_sq, count=jnp.sum(mask))
-
 
 @dataclasses.dataclass(frozen=True)
 class FedAvg(ServerAlgorithm):
@@ -598,29 +475,77 @@ def _backend(kw) -> str:
     return kw.get("backend", "auto")
 
 
+def _gauss_ldp(kw) -> _compose.GaussianLDP:
+    return _compose.GaussianLDP(kw["clip_norm"], kw["sigma"], backend=_backend(kw))
+
+
+def _privunit(kw) -> _compose.PrivUnitLDP:
+    return _compose.PrivUnitLDP(kw["clip_norm"], kw["eps0"], kw["eps1"],
+                                kw["eps2"], kw["dim"])
+
+
+def _cdp(kw) -> _compose.CentralGaussian:
+    return _compose.CentralGaussian(clip_norm=kw["clip_norm"], sigma=kw["sigma"],
+                                    num_clients=kw["num_clients"],
+                                    sigma_xi=kw.get("sigma_xi"),
+                                    backend=_backend(kw))
+
+
+def _adaptive_cdp(kw) -> _compose.CentralGaussian:
+    return _compose.CentralGaussian(z_mult=kw["z_mult"],
+                                    num_clients=kw["num_clients"],
+                                    backend=_backend(kw))
+
+
+def _adaptive_step(kw) -> _compose.AdaptiveClipStep:
+    return _compose.AdaptiveClipStep(c0=kw.get("c0", 1.0),
+                                     gamma=kw.get("gamma", 0.5),
+                                     clip_lr=kw.get("clip_lr", 0.2),
+                                     sigma_b=kw.get("sigma_b", 10.0))
+
+
+def _composed(name: str, mechanism, step) -> _compose.ComposedAlgorithm:
+    return _compose.ComposedAlgorithm(mechanism=mechanism, step=step, name=name)
+
+
+# Every registry name is a (mechanism, step) composition under the uniform
+# MeanAggregation — the first ten reproduce the monolithic classes above
+# bit-for-bit (tests/test_compose.py); the rest are cross-product names the
+# inheritance design could not express.  README.md tabulates the mapping.
 _FACTORIES: dict[str, Callable[..., ServerAlgorithm]] = {
-    "fedavg": lambda **kw: FedAvg(),
-    "fedexp": lambda **kw: FedEXP(),
-    "dp-fedavg-ldp-gauss": lambda **kw: DPFedAvgLDPGaussian(
-        kw["clip_norm"], kw["sigma"], backend=_backend(kw)),
-    "ldp-fedexp-gauss": lambda **kw: LDPFedEXPGaussian(
-        kw["clip_norm"], kw["sigma"], backend=_backend(kw)),
-    "dp-fedavg-privunit": lambda **kw: DPFedAvgPrivUnit(
-        kw["clip_norm"], kw["eps0"], kw["eps1"], kw["eps2"], kw["dim"]),
-    "ldp-fedexp-privunit": lambda **kw: LDPFedEXPPrivUnit(
-        kw["clip_norm"], kw["eps0"], kw["eps1"], kw["eps2"], kw["dim"]),
-    "dp-fedavg-cdp": lambda **kw: DPFedAvgCDP(
-        kw["clip_norm"], kw["sigma"], kw["num_clients"], backend=_backend(kw)),
-    "cdp-fedexp": lambda **kw: CDPFedEXP(kw["clip_norm"], kw["sigma"], kw["num_clients"],
-                                         sigma_xi=kw.get("sigma_xi"),
-                                         backend=_backend(kw)),
-    "dp-fedadam-cdp": lambda **kw: DPFedAdamCDP(kw["clip_norm"], kw["sigma"],
-                                                kw["num_clients"],
-                                                server_lr=kw.get("server_lr", 0.1),
-                                                backend=_backend(kw)),
-    "cdp-fedexp-adaptive-clip": lambda **kw: CDPFedEXPAdaptiveClip(
-        z_mult=kw["z_mult"], num_clients=kw["num_clients"], dim=kw["dim"],
-        c0=kw.get("c0", 1.0), backend=_backend(kw)),
+    "fedavg": lambda **kw: _composed(
+        "fedavg", _compose.NoPrivacy(), _compose.FixedEta()),
+    "fedexp": lambda **kw: _composed(
+        "fedexp", _compose.NoPrivacy(), _compose.FedEXPStep()),
+    "dp-fedavg-ldp-gauss": lambda **kw: _composed(
+        "dp-fedavg-ldp-gauss", _gauss_ldp(kw), _compose.FixedEta()),
+    "ldp-fedexp-gauss": lambda **kw: _composed(
+        "ldp-fedexp-gauss", _gauss_ldp(kw), _compose.FedEXPStep()),
+    "dp-fedavg-privunit": lambda **kw: _composed(
+        "dp-fedavg-privunit", _privunit(kw), _compose.FixedEta()),
+    "ldp-fedexp-privunit": lambda **kw: _composed(
+        "ldp-fedexp-privunit", _privunit(kw), _compose.FedEXPStep()),
+    "dp-fedavg-cdp": lambda **kw: _composed(
+        "dp-fedavg-cdp", _cdp(kw), _compose.FixedEta()),
+    "cdp-fedexp": lambda **kw: _composed(
+        "cdp-fedexp", _cdp(kw), _compose.FedEXPStep()),
+    "dp-fedadam-cdp": lambda **kw: _composed(
+        "dp-fedadam-cdp", _cdp(kw),
+        _compose.ServerOpt(kind="adam", lr=kw.get("server_lr", 0.1))),
+    "cdp-fedexp-adaptive-clip": lambda **kw: _composed(
+        "cdp-fedexp-adaptive-clip", _adaptive_cdp(kw), _adaptive_step(kw)),
+    # -- cross-product compositions with no monolithic counterpart ---------
+    "ldp-gauss-fedadam": lambda **kw: _composed(
+        "ldp-gauss-fedadam", _gauss_ldp(kw),
+        _compose.ServerOpt(kind="adam", lr=kw.get("server_lr", 0.1))),
+    "cdp-fedmom": lambda **kw: _composed(
+        "cdp-fedmom", _cdp(kw),
+        _compose.ServerOpt(kind="momentum", lr=kw.get("server_lr", 1.0),
+                           beta1=kw.get("server_beta", 0.9))),
+    "privunit-fedexp-adaptive-clip": lambda **kw: _composed(
+        "privunit-fedexp-adaptive-clip",
+        _privunit({**kw, "clip_norm": kw.get("clip_norm", kw.get("c0", 1.0))}),
+        _adaptive_step(kw)),
 }
 
 

@@ -6,15 +6,28 @@ shims over a one-shot session.
 """
 
 from repro.fedsim.flat import flatten_model
-from repro.fedsim.local import cohort_updates, local_update
+from repro.fedsim.local import (
+    cohort_updates,
+    cohort_updates_spec,
+    local_update,
+    local_update_spec,
+)
 from repro.fedsim.scaffold import DPScaffoldConfig, run_dp_scaffold
 from repro.fedsim.server import RunResult, run_federated, run_federated_batched
 from repro.fedsim.session import FederatedSession
-from repro.fedsim.specs import CohortSpec, EngineSpec, ShardSpec, TrainSpec
+from repro.fedsim.specs import (
+    CohortSpec,
+    EngineSpec,
+    LocalSpec,
+    ShardSpec,
+    TrainSpec,
+)
 
 __all__ = [
     "flatten_model", "local_update", "cohort_updates",
-    "FederatedSession", "TrainSpec", "EngineSpec", "ShardSpec", "CohortSpec",
+    "local_update_spec", "cohort_updates_spec",
+    "FederatedSession", "TrainSpec", "LocalSpec", "EngineSpec", "ShardSpec",
+    "CohortSpec",
     "run_federated", "run_federated_batched", "RunResult",
     "DPScaffoldConfig", "run_dp_scaffold",
 ]

@@ -1,9 +1,22 @@
 """Client-side local training (Algorithm 3) — vectorized over the cohort.
 
-Each client runs ``tau`` full-batch gradient steps on its own local dataset
-starting from the broadcast global model and returns the raw local update
+Each client runs local gradient steps on its own dataset starting from the
+broadcast global model and returns the raw local update
 ``Delta~_i = w_i^{(t-1,tau)} - w^{(t-1)}``.  The whole cohort is a single
 ``vmap`` so M=1000 clients execute as one batched XLA program.
+
+The LocalTrainer layer (DESIGN.md §11).  ``local_update`` is the historical
+full-batch GD of Algorithm 3; ``local_update_spec`` is the pytree-native
+spec-driven trainer behind ``LocalSpec`` — minibatch SGD with local epochs,
+a FedProx proximal term, and client momentum.  The spec trainers are written
+entirely with ``jax.tree_util`` maps, so they train ANY parameter pytree
+(the ``models/`` zoo plugs in directly) as well as the engine's flat
+vectors; gradients are taken on whatever structure the loss sees and only
+the resulting update is raveled at the clip/aggregate boundary.
+``build_cohort_local_fn`` binds (loss, LocalSpec, tau) into the one
+``local_fn(w, batches, eta_l, round_key, start)`` closure the round engine
+compiles — the default spec routes through ``cohort_updates`` unchanged,
+bit-for-bit.
 
 Client sharding (DESIGN.md §9): when the engine partitions the cohort across
 a ``clients`` mesh axis, each device vmaps only its (M/n_shards, d) slice.
@@ -12,16 +25,30 @@ a ``clients`` mesh axis, each device vmaps only its (M/n_shards, d) slice.
 loss) and returns a {1., 0.} weight mask; every aggregation moment is
 mask-weighted, so padded clients contribute exactly zero to the round.
 ``masked_cohort_updates`` additionally zeroes the padded rows' updates right
-at the source, before they can reach a reduction.
+at the source, before they can reach a reduction.  Spec trainers key their
+minibatch shuffles by GLOBAL client index (``start`` offset), so a shard
+draws exactly the batches the single-device engine would.
 """
 from __future__ import annotations
 
+import functools
 from typing import Callable
 
 import jax
 import jax.numpy as jnp
 
-__all__ = ["local_update", "cohort_updates", "masked_cohort_updates", "pad_cohort"]
+from repro.fedsim.specs import LOCAL_TRAIN_TAG, LocalSpec
+
+__all__ = [
+    "local_update",
+    "local_update_spec",
+    "cohort_updates",
+    "cohort_updates_spec",
+    "build_cohort_local_fn",
+    "masked_cohort_updates",
+    "mask_rows",
+    "pad_cohort",
+]
 
 
 def local_update(loss_fn: Callable, w0: jax.Array, client_batch, tau: int, eta_l: float) -> jax.Array:
@@ -41,21 +68,157 @@ def local_update(loss_fn: Callable, w0: jax.Array, client_batch, tau: int, eta_l
     return w_tau - w0
 
 
+def _tmap(f, *trees):
+    return jax.tree_util.tree_map(f, *trees)
+
+
+def local_update_spec(loss_fn: Callable, w0, client_batch, key: jax.Array,
+                      spec: LocalSpec, tau: int, eta_l):
+    """Spec-driven local training for ONE client; returns the update pytree.
+
+    ``w0`` may be any parameter pytree (a flat (d,) vector is the one-leaf
+    case) — every update is a ``tree_map``, and gradients are taken on the
+    structure ``loss_fn`` consumes.  Static shapes throughout: the step
+    count, minibatch size and epoch layout are trace-time constants, so one
+    compiled program serves every round.
+
+    Semantics (see ``LocalSpec``): with ``batch_size`` set, step ``s`` of
+    epoch ``e`` trains on rows ``perm_e[s*b : (s+1)*b]`` of a per-epoch
+    shuffle drawn from ``fold_in(key, e)``; otherwise ``tau`` full-batch
+    steps.  FedProx adds ``prox_mu * (w - w0)`` to each gradient; client
+    momentum accumulates a velocity that starts at zero every round.
+    """
+    grad_fn = jax.grad(loss_fn)
+
+    def gd_step(carry, batch):
+        w, v = carry
+        g = grad_fn(w, batch)
+        if spec.prox_mu:
+            g = _tmap(lambda gg, ww, w0l: gg + spec.prox_mu * (ww - w0l), g, w, w0)
+        if spec.momentum:
+            v = _tmap(lambda vv, gg: spec.momentum * vv + gg, v, g)
+            d = v
+        else:
+            d = g
+        w = _tmap(lambda ww, dd: ww - eta_l * dd, w, d)
+        return (w, v), None
+
+    carry0 = (w0, _tmap(jnp.zeros_like, w0))
+    if spec.batch_size is None:
+        (w_tau, _), _ = jax.lax.scan(lambda c, _: gd_step(c, client_batch),
+                                     carry0, None, length=tau,
+                                     unroll=tau if tau <= 2 else 1)
+        return _tmap(lambda a, c: a - c, w_tau, w0)
+
+    leaves, treedef = jax.tree_util.tree_flatten(client_batch)
+    if not leaves or leaves[0].ndim < 1:
+        raise ValueError("LocalSpec(batch_size=...) needs client batches "
+                         "with a leading per-sample axis")
+    n = leaves[0].shape[0]
+    b = min(spec.batch_size, n)
+    n_batches = max(1, n // b)
+
+    # ALL PRNG work and ALL minibatch gathers happen up front: one shuffle
+    # per epoch (vmapped), then one (steps, b, ...) gather per leaf, and the
+    # training scan consumes the pre-gathered minibatches as plain xs.  This
+    # keeps fold_in/permutation/gather out of the grad-bearing scan body —
+    # one O(n log n) shuffle per epoch instead of per minibatch, and it is
+    # the formulation that compiles correctly inside vmap-under-shard_map
+    # with a downstream psum (gather+grad inside the scan body miscompiled
+    # per-client randomness on forced-host-device meshes, jax 0.4.37 —
+    # tests/test_local.py pins the sharded == single-device equivalence
+    # this guards).  Cost: epochs extra copies of each client's sample set.
+    perms = jax.vmap(lambda e: jax.random.permutation(
+        jax.random.fold_in(key, e), n))(jnp.arange(spec.epochs, dtype=jnp.int32))
+    idxs = perms[:, : n_batches * b].reshape(spec.epochs * n_batches, b)
+    # only leaves carrying the per-sample axis are sliced; scalars and
+    # differently-shaped leaves (per-client constants) ride along whole
+    sliceable = [x.ndim >= 1 and x.shape[0] == n for x in leaves]
+    xs = [jnp.take(x, idxs, axis=0)
+          for x, ok in zip(leaves, sliceable) if ok]
+
+    def batch_step(carry, mb_leaves):
+        mb = list(mb_leaves)
+        merged = [mb.pop(0) if ok else x for x, ok in zip(leaves, sliceable)]
+        return gd_step(carry, jax.tree_util.tree_unflatten(treedef, merged))
+
+    (w_tau, _), _ = jax.lax.scan(batch_step, carry0, tuple(xs))
+    return _tmap(lambda a, c: a - c, w_tau, w0)
+
+
 def cohort_updates(loss_fn: Callable, w: jax.Array, client_batches, tau: int, eta_l: float) -> jax.Array:
     """(M, d) matrix of raw local updates for the full cohort (vmapped)."""
     fn = lambda batch: local_update(loss_fn, w, batch, tau, eta_l)
     return jax.vmap(fn)(client_batches)
 
 
+def cohort_updates_spec(loss_fn: Callable, w, client_batches, spec: LocalSpec,
+                        tau: int, eta_l, round_key: jax.Array,
+                        start: int | jax.Array = 0):
+    """Spec-driven cohort updates, vmapped with per-client local PRNG keys.
+
+    Client ``i`` of the shard draws its minibatch shuffles from
+    ``fold_in(fold_in(round_key, LOCAL_TRAIN_TAG), start + i)`` — keyed by
+    GLOBAL index so sharded and single-device engines shuffle identically.
+    """
+    m = jax.tree_util.tree_leaves(client_batches)[0].shape[0]
+    base = jax.random.fold_in(round_key, LOCAL_TRAIN_TAG)
+    keys = jax.vmap(lambda i: jax.random.fold_in(base, i))(start + jnp.arange(m))
+    fn = lambda batch, k: local_update_spec(loss_fn, w, batch, k, spec, tau, eta_l)
+    return jax.vmap(fn)(client_batches, keys)
+
+
+def _build_cohort_local_fn(loss_fn: Callable, spec: LocalSpec | None, tau: int):
+    if spec is None or spec.is_default:
+        def local_fn(w, client_batches, eta_l, round_key, start):
+            return cohort_updates(loss_fn, w, client_batches, tau, eta_l)
+        return local_fn
+
+    def local_fn(w, client_batches, eta_l, round_key, start):
+        return cohort_updates_spec(loss_fn, w, client_batches, spec, tau,
+                                   eta_l, round_key, start)
+    return local_fn
+
+
+_cached_cohort_local_fn = functools.lru_cache(maxsize=64)(_build_cohort_local_fn)
+
+
+def build_cohort_local_fn(loss_fn: Callable, spec: LocalSpec | None, tau: int):
+    """Bind (loss, LocalSpec, tau) into the engine's local-training closure:
+
+        local_fn(w, client_batches, eta_l, round_key, start) -> (M, d) deltas
+
+    The default spec returns the historical ``cohort_updates`` computation —
+    the identical jaxpr, so pre-LocalSpec sessions stay bit-for-bit.  The
+    closure's identity keys the engine's compile cache, so it is MEMOIZED on
+    (loss_fn identity, spec, tau): two sessions sharing a loss closure and
+    equal specs receive the same ``local_fn`` object and keep sharing one
+    compiled chunk program, exactly as the pre-LocalSpec engine keyed on
+    ``loss_fn`` directly.  An unhashable loss falls back to an uncached
+    build (a per-session retrace — the cost the engine's builder fallback
+    already documents, never an error).
+    """
+    try:
+        return _cached_cohort_local_fn(loss_fn, spec, tau)
+    except TypeError:
+        return _build_cohort_local_fn(loss_fn, spec, tau)
+
+
+def mask_rows(deltas: jax.Array, mask: jax.Array) -> jax.Array:
+    """Zero the masked-out rows of a delta matrix AT THE SOURCE.
+
+    The where (not a multiply) means a non-finite update from a padding or
+    non-sampled client's dummy batch cannot leak into the round's moments
+    as 0 * nan.
+    """
+    return jnp.where(mask[:, None] > 0, deltas, 0.0)
+
+
 def masked_cohort_updates(loss_fn: Callable, w: jax.Array, client_batches,
                           tau: int, eta_l: float, mask: jax.Array) -> jax.Array:
-    """``cohort_updates`` with padding rows forced to zero.
-
-    The where (not a multiply) means a non-finite update from a padding
-    client's dummy batch cannot leak into the shard's moments as 0 * nan.
-    """
+    """``cohort_updates`` with padding rows forced to zero (see mask_rows)."""
     deltas = cohort_updates(loss_fn, w, client_batches, tau, eta_l)
-    return jnp.where(mask[:, None] > 0, deltas, 0.0)
+    return mask_rows(deltas, mask)
 
 
 def pad_cohort(client_batches, n_shards: int, *, axis: int = 0):

@@ -51,7 +51,7 @@ from jax.experimental.shard_map import shard_map
 from jax.sharding import PartitionSpec as P
 
 from repro.core.fedexp import ServerAlgorithm, clamp_moment_counts, set_moment_count
-from repro.fedsim.local import cohort_updates, masked_cohort_updates
+from repro.fedsim.local import mask_rows
 from repro.fedsim.specs import CohortSpec
 from repro.models.sharding import client_axis_rules, logical_to_pspec
 
@@ -63,8 +63,8 @@ class RunResult:
     final_w: Any                  # average of the last `avg_last` iterates
     last_w: Any                   # pytree-shaped when the session got a pytree
     eta_history: jax.Array        # (T,)
-    metric_history: jax.Array     # (T,) eval metric per round (nan if no eval_fn
-    #                               or the round is off the eval_every cadence)
+    metric_history: jax.Array     # (T,) eval metric per round (nan if no
+    #                               eval_fn or the round is off cadence)
     eta_naive_history: jax.Array | None = None
     eta_target_history: jax.Array | None = None
 
@@ -85,45 +85,54 @@ def _eval_metric(eval_fn, eval_every: int, w_next, t):
                         lambda w: jnp.float32(jnp.nan), w_next)
 
 
-def _resolve_sampled_count(moments, cohort: CohortSpec):
+def _resolve_sampled_count(moments, cohort: CohortSpec, algorithm):
     """Fix the moments' client count for a sampled round.
 
     Fixed-size cohorts have a statically known count — substituting it lets
     XLA fold the 1/|S_t| normalizations identically on every engine (the same
     trick as ``m_total`` on the sharded path).  Bernoulli counts are traced
     and can be zero on an unlucky round; clamping to >= 1 turns the empty
-    round into a zero update instead of NaN poison.
+    round into a zero update instead of NaN poison.  Algorithms whose count
+    is not a client count (weighted aggregation: count = sum of weights)
+    opt out of the static substitution via ``supports_static_count``.
     """
-    if cohort.size is not None:
-        return set_moment_count(moments, cohort.size)
-    return clamp_moment_counts(moments)
+    if getattr(algorithm, "supports_static_count", True):
+        if cohort.size is not None:
+            return set_moment_count(moments, cohort.size)
+        return clamp_moment_counts(moments)
+    # weighted aggregation: the count is a weight sum, legitimately < 1 —
+    # only guard the 0/0 of an empty Bernoulli round
+    return clamp_moment_counts(moments, floor=1e-12)
 
 
-def _round_step(algorithm, loss_fn, eval_fn, tau, eval_every: int = 1,
+def _round_step(algorithm, local_fn, eval_fn, eval_every: int = 1,
                 cohort: CohortSpec | None = None):
     """One server round; identical computation for scan and eager engines.
 
-    With no (active) cohort spec this is the historical full-participation
-    round — bit-for-bit.  A sampling spec reroutes the round through the
-    masked-moment protocol: all M clients still compute local updates (static
-    shapes), the participation mask zero-weights non-participants, and the
-    algorithm consumes mask-weighted moments exactly as on a client shard.
+    ``local_fn`` is the LocalTrainer closure built by
+    ``repro.fedsim.local.build_cohort_local_fn`` — full-batch GD (the
+    historical path, bit-for-bit) or a LocalSpec trainer.  With no (active)
+    cohort spec this is the full-participation round; a sampling spec
+    reroutes the round through the masked-moment protocol: all M clients
+    still compute local updates (static shapes), the participation mask
+    zero-weights non-participants, and the algorithm consumes mask-weighted
+    moments exactly as on a client shard.
     """
     sampled = cohort is not None and cohort.is_sampled
 
     def step(w, opt_state, round_key, t, client_batches, eta_l):
         if not sampled:
-            deltas = cohort_updates(loss_fn, w, client_batches, tau, eta_l)
+            deltas = local_fn(w, client_batches, eta_l, round_key, 0)
             w_next, aux, opt_state = algorithm.apply_round_stateful(
                 round_key, w, deltas, opt_state)
         else:
             m = jax.tree_util.tree_leaves(client_batches)[0].shape[0]
             mask = cohort.round_mask(round_key, m)
-            deltas = masked_cohort_updates(loss_fn, w, client_batches, tau,
-                                           eta_l, mask)
+            deltas = mask_rows(local_fn(w, client_batches, eta_l, round_key, 0),
+                               mask)
             moments = algorithm.local_moments(round_key, w, deltas, mask, 0,
                                               opt_state)
-            moments = _resolve_sampled_count(moments, cohort)
+            moments = _resolve_sampled_count(moments, cohort, algorithm)
             w_next, aux, opt_state = algorithm.apply_from_moments(
                 round_key, w, moments, opt_state)
         metric = _eval_metric(eval_fn, eval_every, w_next, t)
@@ -133,7 +142,7 @@ def _round_step(algorithm, loss_fn, eval_fn, tau, eval_every: int = 1,
     return step
 
 
-def _sharded_round_step(algorithm, loss_fn, eval_fn, tau, axis, m_true,
+def _sharded_round_step(algorithm, local_fn, eval_fn, axis, m_true,
                         m_pad: int | None = None, eval_every: int = 1,
                         cohort: CohortSpec | None = None):
     """One round on a client shard; runs inside ``shard_map`` over ``axis``.
@@ -141,33 +150,35 @@ def _sharded_round_step(algorithm, loss_fn, eval_fn, tau, axis, m_true,
     Same round semantics as ``_round_step``, but local training and the
     clip/randomize reductions see only this device's cohort slice, and the
     algorithm's partial moments are psummed before the replicated server
-    update.  ``m_true`` is the static pre-padding client count.  With cohort
-    sampling, every device derives the FULL participation mask from the
-    replicated round key and slices its own rows, so the sampled cohort is
-    identical to the single-device engine's.
+    update.  ``m_true`` is the static pre-padding client count.  Local
+    training receives the shard's GLOBAL start index, so spec trainers
+    shuffle exactly as the single-device engine.  With cohort sampling,
+    every device derives the FULL participation mask from the replicated
+    round key and slices its own rows, so the sampled cohort is identical to
+    the single-device engine's.
     """
     sampled = cohort is not None and cohort.is_sampled
 
     def step(w, opt_state, round_key, t, batches_and_mask, eta_l):
         local_batches, pad_mask = batches_and_mask
+        m_local = pad_mask.shape[0]
+        start = jax.lax.axis_index(axis) * m_local
         if not sampled:
-            deltas = masked_cohort_updates(loss_fn, w, local_batches, tau,
-                                           eta_l, pad_mask)
+            deltas = mask_rows(
+                local_fn(w, local_batches, eta_l, round_key, start), pad_mask)
             w_next, aux, opt_state = algorithm.apply_round_sharded(
                 round_key, w, deltas, pad_mask, opt_state, axis, m_total=m_true)
         else:
-            m_local = pad_mask.shape[0]
-            start = jax.lax.axis_index(axis) * m_local
             full = cohort.round_mask(round_key, m_true)
             full = jnp.concatenate(
                 [full, jnp.zeros((m_pad - m_true,), jnp.float32)])
             mask = jax.lax.dynamic_slice(full, (start,), (m_local,)) * pad_mask
-            deltas = masked_cohort_updates(loss_fn, w, local_batches, tau,
-                                           eta_l, mask)
+            deltas = mask_rows(
+                local_fn(w, local_batches, eta_l, round_key, start), mask)
             moments = algorithm.local_moments(round_key, w, deltas, mask,
                                               start, opt_state)
             moments = jax.lax.psum(moments, axis)
-            moments = _resolve_sampled_count(moments, cohort)
+            moments = _resolve_sampled_count(moments, cohort, algorithm)
             w_next, aux, opt_state = algorithm.apply_from_moments(
                 round_key, w, moments, opt_state)
         metric = _eval_metric(eval_fn, eval_every, w_next, t)
@@ -207,10 +218,10 @@ def _scan_body(step_round, client_batches, eta_l):
     return body
 
 
-def _build_scan_chunk_fn(algorithm: ServerAlgorithm, loss_fn, eval_fn,
-                         tau: int, donate: bool, unroll: int,
+def _build_scan_chunk_fn(algorithm: ServerAlgorithm, local_fn, eval_fn,
+                         donate: bool, unroll: int,
                          eval_every: int, cohort: CohortSpec | None):
-    step_round = _round_step(algorithm, loss_fn, eval_fn, tau, eval_every, cohort)
+    step_round = _round_step(algorithm, local_fn, eval_fn, eval_every, cohort)
 
     def chunk(carry, key, ts, client_batches, eta_l):
         keys = _fold_round_keys(key, ts)
@@ -223,40 +234,41 @@ def _build_scan_chunk_fn(algorithm: ServerAlgorithm, loss_fn, eval_fn,
 _cached_scan_chunk_fn = functools.lru_cache(maxsize=32)(_build_scan_chunk_fn)
 
 
-def _scan_chunk_fn(algorithm: ServerAlgorithm, loss_fn, eval_fn, tau: int,
+def _scan_chunk_fn(algorithm: ServerAlgorithm, local_fn, eval_fn,
                    donate: bool, unroll: int, eval_every: int = 1,
                    cohort: CohortSpec | None = None):
     """Compiled scan over a chunk of rounds, cached by configuration.
 
-    The cache key is (algorithm config, loss/eval *identity*, tau, donation,
-    unroll, eval cadence, cohort spec); round count, eta_l, and all array
-    shapes are traced, so any two calls with equal configuration share one
-    compiled program per chunk length.  For the cache to hit, callers must
-    hold onto their loss/eval closures — a fresh closure per call retraces
-    (exactly the legacy cost, no worse); ``FederatedSession`` owns its
-    closures, so repeated ``run`` calls on one session always hit.  ``unroll``
-    packs that many rounds per loop trip — XLA:CPU penalizes ops inside
-    while-loop bodies, and a small unroll claws most of it back for
-    ~proportional compile time (results are bit-identical).
+    The cache key is (algorithm config, local-trainer/eval *identity*,
+    donation, unroll, eval cadence, cohort spec); round count, eta_l, and all
+    array shapes are traced, so any two calls with equal configuration share
+    one compiled program per chunk length.  For the cache to hit, callers
+    must hold onto their local/eval closures — a fresh closure per call
+    retraces (exactly the legacy cost, no worse); ``FederatedSession`` builds
+    its ``local_fn`` once (binding loss_fn, LocalSpec and tau) and owns it,
+    so repeated ``run`` calls on one session always hit.  ``unroll`` packs
+    that many rounds per loop trip — XLA:CPU penalizes ops inside while-loop
+    bodies, and a small unroll claws most of it back for ~proportional
+    compile time (results are bit-identical).
 
     Algorithms with unhashable fields (arrays, user-defined non-frozen
     dataclasses) can't be cache keys; they get an uncached build — again the
     legacy per-call-retrace cost, never an error.
     """
     try:
-        return _cached_scan_chunk_fn(algorithm, loss_fn, eval_fn, tau,
+        return _cached_scan_chunk_fn(algorithm, local_fn, eval_fn,
                                      donate, unroll, eval_every, cohort)
     except TypeError:
-        return _build_scan_chunk_fn(algorithm, loss_fn, eval_fn, tau,
+        return _build_scan_chunk_fn(algorithm, local_fn, eval_fn,
                                     donate, unroll, eval_every, cohort)
 
 
-def _build_sharded_chunk_fn(algorithm: ServerAlgorithm, loss_fn, eval_fn,
-                            tau: int, donate: bool, unroll: int,
+def _build_sharded_chunk_fn(algorithm: ServerAlgorithm, local_fn, eval_fn,
+                            donate: bool, unroll: int,
                             mesh, axis: str, batch_treedef, leaf_ndims,
                             mask_len: int, m_true: int,
                             eval_every: int, cohort: CohortSpec | None):
-    step_round = _sharded_round_step(algorithm, loss_fn, eval_fn, tau, axis,
+    step_round = _sharded_round_step(algorithm, local_fn, eval_fn, axis,
                                      m_true, mask_len, eval_every, cohort)
     rules = client_axis_rules(mesh, axis=axis)
     batch_specs, mask_spec = _client_batch_specs(batch_treedef, leaf_ndims,
@@ -278,29 +290,29 @@ def _build_sharded_chunk_fn(algorithm: ServerAlgorithm, loss_fn, eval_fn,
 _cached_sharded_chunk_fn = functools.lru_cache(maxsize=32)(_build_sharded_chunk_fn)
 
 
-def _sharded_chunk_fn(algorithm, loss_fn, eval_fn, tau, donate, unroll,
+def _sharded_chunk_fn(algorithm, local_fn, eval_fn, donate, unroll,
                       mesh, axis, batch_treedef, leaf_ndims, mask_len, m_true,
                       eval_every: int = 1, cohort: CohortSpec | None = None):
     """Compiled shard_mapped scan chunk, cached like `_scan_chunk_fn` (the
     mesh, client-batch treedef and leaf ranks join the key; same unhashable-
     algorithm fallback)."""
     try:
-        return _cached_sharded_chunk_fn(algorithm, loss_fn, eval_fn, tau,
+        return _cached_sharded_chunk_fn(algorithm, local_fn, eval_fn,
                                         donate, unroll, mesh, axis,
                                         batch_treedef, leaf_ndims, mask_len,
                                         m_true, eval_every, cohort)
     except TypeError:
-        return _build_sharded_chunk_fn(algorithm, loss_fn, eval_fn, tau,
+        return _build_sharded_chunk_fn(algorithm, local_fn, eval_fn,
                                        donate, unroll, mesh, axis,
                                        batch_treedef, leaf_ndims, mask_len,
                                        m_true, eval_every, cohort)
 
 
-def _build_batched_run_fn(algorithm: ServerAlgorithm, loss_fn, eval_fn,
-                          tau: int, tail_n: int, batched_w0: bool,
+def _build_batched_run_fn(algorithm: ServerAlgorithm, local_fn, eval_fn,
+                          tail_n: int, batched_w0: bool,
                           batched_data: bool, eval_every: int,
                           cohort: CohortSpec | None):
-    step_round = _round_step(algorithm, loss_fn, eval_fn, tau, eval_every, cohort)
+    step_round = _round_step(algorithm, local_fn, eval_fn, eval_every, cohort)
 
     def run_one(w0, key, client_batches, eta_l, ts):
         keys = _fold_round_keys(key, ts)
@@ -318,15 +330,15 @@ def _build_batched_run_fn(algorithm: ServerAlgorithm, loss_fn, eval_fn,
 _cached_batched_run_fn = functools.lru_cache(maxsize=32)(_build_batched_run_fn)
 
 
-def _build_sharded_batched_run_fn(algorithm: ServerAlgorithm, loss_fn, eval_fn,
-                                  tau: int, tail_n: int, batched_w0: bool,
+def _build_sharded_batched_run_fn(algorithm: ServerAlgorithm, local_fn, eval_fn,
+                                  tail_n: int, batched_w0: bool,
                                   batched_data: bool, mesh, axis: str,
                                   batch_treedef, leaf_ndims, mask_len: int,
                                   m_true: int, eval_every: int,
                                   cohort: CohortSpec | None):
     """Seeds vmapped INSIDE shard_map: every device runs all S seeds over its
     own client slice, so one program serves the whole sweep sharded."""
-    step_round = _sharded_round_step(algorithm, loss_fn, eval_fn, tau, axis,
+    step_round = _sharded_round_step(algorithm, local_fn, eval_fn, axis,
                                      m_true, mask_len, eval_every, cohort)
     rules = client_axis_rules(mesh, axis=axis)
     # with batched_data the seed axis leads and `clients` moves to axis 1
@@ -362,43 +374,43 @@ _cached_sharded_batched_run_fn = (
     functools.lru_cache(maxsize=32)(_build_sharded_batched_run_fn))
 
 
-def _batched_run_fn(algorithm: ServerAlgorithm, loss_fn, eval_fn, tau: int,
+def _batched_run_fn(algorithm: ServerAlgorithm, local_fn, eval_fn,
                     tail_n: int, batched_w0: bool, batched_data: bool,
                     eval_every: int = 1, cohort: CohortSpec | None = None):
     """vmapped-over-seeds full run (single scan, no chunking); cached with
     the same hashability fallback as `_scan_chunk_fn`."""
     try:
-        return _cached_batched_run_fn(algorithm, loss_fn, eval_fn, tau,
+        return _cached_batched_run_fn(algorithm, local_fn, eval_fn,
                                       tail_n, batched_w0, batched_data,
                                       eval_every, cohort)
     except TypeError:
-        return _build_batched_run_fn(algorithm, loss_fn, eval_fn, tau,
+        return _build_batched_run_fn(algorithm, local_fn, eval_fn,
                                      tail_n, batched_w0, batched_data,
                                      eval_every, cohort)
 
 
-def _sharded_batched_fn(algorithm, loss_fn, eval_fn, tau, tail_n, batched_w0,
+def _sharded_batched_fn(algorithm, local_fn, eval_fn, tail_n, batched_w0,
                         batched_data, mesh, axis, batch_treedef, leaf_ndims,
                         mask_len, m_true, eval_every: int = 1,
                         cohort: CohortSpec | None = None):
     try:
         return _cached_sharded_batched_run_fn(
-            algorithm, loss_fn, eval_fn, tau, tail_n, batched_w0, batched_data,
+            algorithm, local_fn, eval_fn, tail_n, batched_w0, batched_data,
             mesh, axis, batch_treedef, leaf_ndims, mask_len, m_true,
             eval_every, cohort)
     except TypeError:
         return _build_sharded_batched_run_fn(
-            algorithm, loss_fn, eval_fn, tau, tail_n, batched_w0, batched_data,
+            algorithm, local_fn, eval_fn, tail_n, batched_w0, batched_data,
             mesh, axis, batch_treedef, leaf_ndims, mask_len, m_true,
             eval_every, cohort)
 
 
-def _run_eager(algorithm, loss_fn, w0, client_batches, *, rounds, tau, eta_l,
+def _run_eager(algorithm, local_fn, w0, client_batches, *, rounds, eta_l,
                key, eval_fn, avg_last, eval_every: int = 1,
                cohort: CohortSpec | None = None):
     """Legacy engine: one jitted XLA program per round, dispatched from a
     Python loop (re-traced per call — kept as the e7 throughput baseline)."""
-    step_round = _round_step(algorithm, loss_fn, eval_fn, tau, eval_every, cohort)
+    step_round = _round_step(algorithm, local_fn, eval_fn, eval_every, cohort)
 
     def one_round(w, opt_state, round_key, t):
         return step_round(w, opt_state, round_key, t, client_batches, eta_l)

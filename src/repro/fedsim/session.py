@@ -6,6 +6,7 @@ four frozen specs and owns the compiled chunk program:
     session = FederatedSession(
         algorithm, loss_fn, params, client_batches,
         train=TrainSpec(rounds=50, tau=20, eta_l=0.1),
+        local=LocalSpec(batch_size=8),      # minibatch local SGD (§11)
         cohort=CohortSpec(q=0.25),          # per-round Poisson sampling
         eval_fn=eval_fn)
     result = session.run(jax.random.PRNGKey(0))
@@ -47,9 +48,9 @@ from repro.core import accounting
 from repro.core.fedexp import ServerAlgorithm
 from repro.fedsim import server as _srv
 from repro.fedsim.flat import flatten_model
-from repro.fedsim.local import pad_cohort
+from repro.fedsim.local import build_cohort_local_fn, pad_cohort
 from repro.fedsim.server import RunResult
-from repro.fedsim.specs import CohortSpec, EngineSpec, ShardSpec, TrainSpec
+from repro.fedsim.specs import CohortSpec, EngineSpec, LocalSpec, ShardSpec, TrainSpec
 
 __all__ = ["FederatedSession"]
 
@@ -71,6 +72,7 @@ class FederatedSession:
 
     def __init__(self, algorithm: ServerAlgorithm, loss_fn: Callable,
                  w0: Any, client_batches, *, train: TrainSpec,
+                 local: LocalSpec = LocalSpec(),
                  engine: EngineSpec = EngineSpec(),
                  shard: ShardSpec = ShardSpec(),
                  cohort: CohortSpec = CohortSpec(),
@@ -78,6 +80,7 @@ class FederatedSession:
                  num_clients: int | None = None):
         self.algorithm = algorithm
         self.train = train
+        self.local = local
         self.engine = engine
         self.shard = shard
         # normalize full participation to None so unsampled sessions share
@@ -105,6 +108,11 @@ class FederatedSession:
             self.loss_fn = lambda wf, batch: loss_fn(unravel(wf), batch)
             self.eval_fn = (None if eval_fn is None
                             else (lambda wf: eval_fn(unravel(wf))))
+        # the LocalTrainer closure (DESIGN.md §11): binds loss, LocalSpec and
+        # tau once — its identity keys the engine's compile cache, and the
+        # default spec reproduces the pre-LocalSpec program bit-for-bit
+        self._local_fn = build_cohort_local_fn(self.loss_fn, self.local,
+                                               int(train.tau))
 
     # -- helpers -----------------------------------------------------------
 
@@ -114,6 +122,14 @@ class FederatedSession:
             raise ValueError(
                 f"CohortSpec.size={self.cohort.size} exceeds the "
                 f"{m}-client cohort (without replacement)")
+        agg = getattr(self.algorithm, "aggregation", None)
+        if agg is not None and getattr(agg, "is_weighted", False) \
+                and len(agg.weights) != m:
+            raise ValueError(
+                f"WeightedAggregation carries {len(agg.weights)} weights for "
+                f"a {m}-client cohort; weights are indexed by global client "
+                "index and must match exactly (a short tuple would silently "
+                "zero-weight the tail clients)")
 
     @property
     def dim(self) -> int:
@@ -142,13 +158,13 @@ class FederatedSession:
                                        s.mesh.shape[s.client_axis])
             leaves, treedef = jax.tree_util.tree_flatten(batches)
             fn = _srv._sharded_chunk_fn(
-                self.algorithm, self.loss_fn, self.eval_fn, int(t.tau), donate,
+                self.algorithm, self._local_fn, self.eval_fn, donate,
                 e.scan_unroll, s.mesh, s.client_axis, treedef,
                 tuple(x.ndim for x in leaves), mask.shape[0], m_true,
                 t.eval_every, self.cohort)
             return fn, batches, (mask,)
-        fn = _srv._scan_chunk_fn(self.algorithm, self.loss_fn, self.eval_fn,
-                                 int(t.tau), donate, e.scan_unroll,
+        fn = _srv._scan_chunk_fn(self.algorithm, self._local_fn, self.eval_fn,
+                                 donate, e.scan_unroll,
                                  t.eval_every, self.cohort)
         return fn, self.client_batches, ()
 
@@ -221,8 +237,8 @@ class FederatedSession:
                 raise ValueError("checkpointing requires engine='scan'")
             t = self.train
             out = _srv._run_eager(
-                self.algorithm, self.loss_fn, self._w0, self.client_batches,
-                rounds=t.rounds, tau=t.tau, eta_l=t.eta_l, key=key,
+                self.algorithm, self._local_fn, self._w0, self.client_batches,
+                rounds=t.rounds, eta_l=t.eta_l, key=key,
                 eval_fn=self.eval_fn, avg_last=t.avg_last,
                 eval_every=t.eval_every, cohort=self.cohort)
             out.final_w = self._restore_params(out.final_w)
@@ -283,7 +299,7 @@ class FederatedSession:
                                        axis=client_axis_pos)
             leaves, treedef = jax.tree_util.tree_flatten(batches)
             fn = _srv._sharded_batched_fn(
-                self.algorithm, self.loss_fn, self.eval_fn, int(t.tau), tail_n,
+                self.algorithm, self._local_fn, self.eval_fn, tail_n,
                 bool(batched_w0), bool(batched_data), s.mesh, s.client_axis,
                 treedef, tuple(x.ndim for x in leaves), mask.shape[0], m_true,
                 t.eval_every, self.cohort)
@@ -291,7 +307,7 @@ class FederatedSession:
                 self._w0, keys, batches, mask, eta_l, ts)
         else:
             fn = _srv._batched_run_fn(
-                self.algorithm, self.loss_fn, self.eval_fn, int(t.tau), tail_n,
+                self.algorithm, self._local_fn, self.eval_fn, tail_n,
                 bool(batched_w0), bool(batched_data), t.eval_every, self.cohort)
             final_w, last_w, etas, metrics, naives, targets = fn(
                 self._w0, keys, self.client_batches, eta_l, ts)
@@ -315,6 +331,12 @@ class FederatedSession:
         """
         alg = self.algorithm
         q = 1.0 if self.cohort is None else self.cohort.sampling_rate(self.num_clients)
+        if hasattr(alg, "budget"):
+            # composed algorithms (DESIGN.md §11): the mechanism owns its
+            # accounting; the hook reproduces the name-dispatch below exactly
+            # for every legacy registry name (pinned by tests/test_session.py)
+            return alg.budget(delta, rounds=self.train.rounds, dim=self.dim,
+                              sampling_q=q)
         name = alg.name
         if name in ("dp-fedavg-ldp-gauss", "ldp-fedexp-gauss"):
             return accounting.ldp_gaussian_budget(alg.clip_norm, alg.sigma, delta)
@@ -331,20 +353,13 @@ class FederatedSession:
                                          alg.num_clients, self.train.rounds,
                                          delta, sampling_q=q)
         if name == "cdp-fedexp-adaptive-clip":
-            # noise std tracks z*C, so the C/sigma ratio — all the budget
-            # sees — is the constant 1/z; stated in C=1 units, the numerator
-            # release's sigma_xi = d(zC)^2/M follows the same normalization.
-            # Unlike the fixed-sigma CDP family, this algorithm's server
-            # noise scales with the REALIZED cohort (sigma/sqrt(|S_t|)), so
-            # the conditional per-round mu is 2/(z*sqrt(qM)) — a 1/sqrt(q)
-            # inflation; feeding cdp_budget the effective count M/q composes
-            # exactly that (its internal inflation is 1/q against
-            # 1/sqrt(m)).  The bit release adds adaptive_clip_rho,
-            # negligible by construction (sigma_b ~ 10).
-            return accounting.cdp_budget(
-                1.0, alg.z_mult, alg.num_clients / q, self.train.rounds,
-                delta, sigma_xi=self.dim * alg.z_mult**2 / alg.num_clients,
-                sampling_q=q)
+            # single source of truth for the z-tracking accounting (the
+            # 1/sqrt(q) realized-cohort inflation) lives on the mechanism
+            from repro.core.compose import CentralGaussian
+            return CentralGaussian(z_mult=alg.z_mult,
+                                   num_clients=alg.num_clients).budget(
+                delta, rounds=self.train.rounds, dim=self.dim,
+                sampling_q=q, with_numerator=True)
         raise ValueError(f"{name!r} is not a private algorithm")
 
     # -- scan-engine internals --------------------------------------------

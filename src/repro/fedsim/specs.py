@@ -6,12 +6,15 @@ axis of a run:
 
     TrainSpec   what to train: rounds, local steps, client LR, iterate
                 averaging, eval cadence
+    LocalSpec   how clients train locally: full-batch GD (default) or
+                minibatch SGD with local epochs, plus FedProx proximal pull
+                and client momentum (DESIGN.md §11)
     EngineSpec  how to compile it: scan vs eager, chunking, unroll, donation
     ShardSpec   where it runs: optional ``clients`` mesh (DESIGN.md §9)
     CohortSpec  who participates: per-round client sampling (Bernoulli or
                 fixed-size, with/without replacement)
 
-All four are FROZEN and HASHABLE, so a spec tuple slots directly into the
+All specs are FROZEN and HASHABLE, so a spec tuple slots directly into the
 engine's cross-call compile cache (``functools.lru_cache`` over the builder
 arguments): two sessions with equal specs share one compiled chunk program.
 
@@ -36,13 +39,20 @@ import dataclasses
 import jax
 import jax.numpy as jnp
 
-__all__ = ["TrainSpec", "EngineSpec", "ShardSpec", "CohortSpec", "SAMPLING_TAG"]
+__all__ = ["TrainSpec", "LocalSpec", "EngineSpec", "ShardSpec", "CohortSpec",
+           "SAMPLING_TAG", "LOCAL_TRAIN_TAG"]
 
 # fold_in tag deriving the per-round sampling key from the round key.  Client
 # randomization folds the GLOBAL CLIENT INDEX (0..M-1) into the same round
 # key, so the tag must sit outside any plausible cohort size: 2**31 - 1 is the
 # largest int32 and can never collide with a client index.
 SAMPLING_TAG = 2**31 - 1
+
+# fold_in tag deriving the per-round LOCAL-TRAINING key (minibatch shuffles)
+# from the round key; sits next to SAMPLING_TAG, far outside client indices.
+# Per-client local keys then fold in the GLOBAL client index, so shards
+# shuffle exactly as the single-device engine does.
+LOCAL_TRAIN_TAG = 2**31 - 2
 
 
 @dataclasses.dataclass(frozen=True)
@@ -64,6 +74,57 @@ class TrainSpec:
             raise ValueError(f"avg_last must be >= 1, got {self.avg_last}")
         if self.eval_every < 1:
             raise ValueError(f"eval_every must be >= 1, got {self.eval_every}")
+
+
+@dataclasses.dataclass(frozen=True)
+class LocalSpec:
+    """How each client trains locally (the LocalTrainer layer, DESIGN.md §11).
+
+    The default (all fields at rest) is the historical full-batch GD of
+    Algorithm 3 — ``tau`` steps on the whole client batch — and routes
+    through the identical code path bit-for-bit.  Any non-default field
+    switches to the pytree-native spec trainer (``repro.fedsim.local``):
+
+    * ``batch_size`` enables minibatch SGD: every leaf of one client's batch
+      must carry a leading per-sample axis; each of ``epochs`` local epochs
+      visits ``n // batch_size`` full minibatches of a fresh per-epoch
+      shuffle (remainder samples are dropped that epoch, standard SGD
+      practice).  ``TrainSpec.tau`` is ignored when set — the step count is
+      ``epochs * (n // batch_size)``.
+    * ``prox_mu`` adds the FedProx proximal pull ``mu * (w - w_global)`` to
+      every local gradient (Li et al. 2020).
+    * ``momentum`` runs classical client momentum over the local steps
+      (velocity reset each round — no cross-round client state leaks into
+      the DP release).
+
+    Minibatch shuffles draw from ``fold_in(round_key, LOCAL_TRAIN_TAG)``
+    folded with the GLOBAL client index, so they are reproducible, resumable
+    and identical on every engine (scan / eager / sharded / batched).
+    """
+
+    batch_size: int | None = None   # None = full batch (legacy path)
+    epochs: int = 1                 # local epochs when batch_size is set
+    prox_mu: float = 0.0            # FedProx proximal coefficient
+    momentum: float = 0.0           # client momentum over the local steps
+
+    def __post_init__(self):
+        if self.batch_size is not None and self.batch_size < 1:
+            raise ValueError(f"batch_size must be >= 1, got {self.batch_size}")
+        if self.epochs < 1:
+            raise ValueError(f"epochs must be >= 1, got {self.epochs}")
+        if self.epochs > 1 and self.batch_size is None:
+            raise ValueError("epochs > 1 requires batch_size (full-batch GD "
+                             "counts steps with TrainSpec.tau)")
+        if self.prox_mu < 0.0:
+            raise ValueError(f"prox_mu must be >= 0, got {self.prox_mu}")
+        if not 0.0 <= self.momentum < 1.0:
+            raise ValueError(f"momentum must be in [0, 1), got {self.momentum}")
+
+    @property
+    def is_default(self) -> bool:
+        """True when this spec is exactly the historical full-batch GD."""
+        return (self.batch_size is None and self.epochs == 1
+                and self.prox_mu == 0.0 and self.momentum == 0.0)
 
 
 @dataclasses.dataclass(frozen=True)

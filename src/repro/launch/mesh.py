@@ -9,7 +9,15 @@ from __future__ import annotations
 import jax
 
 __all__ = ["make_production_mesh", "make_test_mesh", "make_client_mesh",
-           "client_shard_spec"]
+           "auto_shard_count", "client_shard_spec"]
+
+# Minimum clients per shard for the "auto" shard-count heuristic.  Measured
+# on the e7 quick geometry (M=96, 8 forced host devices): 8 shards put only
+# 12 clients on each device and throughput COLLAPSED to ~0.37x of the
+# 4-shard mesh (BENCH_engine.json history) — per-round shard_map/psum
+# overhead dominates once the per-device slice is that thin.  24 clients per
+# shard is the knee of that curve (4 shards at M=96).
+MIN_CLIENTS_PER_SHARD = 24
 
 
 def make_production_mesh(*, multi_pod: bool = False):
@@ -36,14 +44,40 @@ def make_client_mesh(n_shards: int | None = None, *, axis: str = "clients"):
     return jax.make_mesh((n,), (axis,))
 
 
-def client_shard_spec(n_shards: int | None = None, *, axis: str = "clients"):
+def auto_shard_count(num_clients: int, *, n_devices: int | None = None,
+                     min_clients_per_shard: int = MIN_CLIENTS_PER_SHARD) -> int:
+    """Shard count capped so every shard holds >= ``min_clients_per_shard``.
+
+    Using every visible device is NOT always fastest: past the point where a
+    device's cohort slice is thin, per-round shard_map/psum overhead eats the
+    parallelism (the 8-shard collapse recorded in BENCH_engine.json — see
+    ``MIN_CLIENTS_PER_SHARD``).  This caps the mesh at
+    ``num_clients // min_clients_per_shard`` shards, floored at 1.
+    """
+    n_dev = n_devices if n_devices is not None else len(jax.devices())
+    return max(1, min(n_dev, num_clients // min_clients_per_shard))
+
+
+def client_shard_spec(n_shards: int | str | None = None, *,
+                      axis: str = "clients",
+                      num_clients: int | None = None):
     """A ready ``ShardSpec`` for the session API over a fresh client mesh:
 
         FederatedSession(..., shard=client_shard_spec())
 
     is the one-liner for "shard the cohort over every visible device"
-    (DESIGN.md §10).  Imported lazily so this module still never touches
-    fedsim at import time.
+    (DESIGN.md §10), and
+
+        client_shard_spec("auto", num_clients=M)
+
+    applies the ``auto_shard_count`` heuristic — every device, but never so
+    many that a shard's cohort slice drops below the measured efficiency
+    floor.  Imported lazily so this module still never touches fedsim at
+    import time.
     """
+    if n_shards == "auto":
+        if num_clients is None:
+            raise ValueError("client_shard_spec('auto') requires num_clients=")
+        n_shards = auto_shard_count(num_clients)
     from repro.fedsim.specs import ShardSpec
     return ShardSpec(mesh=make_client_mesh(n_shards, axis=axis), client_axis=axis)

@@ -22,7 +22,8 @@ import jax.numpy as jnp
 
 from repro.fedsim.flat import flatten_model
 
-__all__ = ["CNNModel", "make_cnn", "masked_xent_loss", "accuracy_fn"]
+__all__ = ["CNNModel", "make_cnn", "make_cnn_params", "masked_xent_loss",
+           "pytree_xent_loss", "accuracy_fn", "pytree_accuracy_fn"]
 
 
 def _conv(x, w, b, stride):
@@ -51,40 +52,64 @@ class CNNModel:
         return _forward(self.unravel(w_flat), x)
 
 
-def make_cnn(key: jax.Array, variant: str = "cdp") -> CNNModel:
-    """variant: 'cdp' (4/8 filters + hidden FC) or 'ldp' (2/1 filters)."""
+def make_cnn_params(key: jax.Array, variant: str = "cdp") -> dict:
+    """The raw parameter PYTREE of the paper's CNNs (He-init convs + FCs).
+
+    The pytree is a first-class model for the session API: pass it straight
+    to ``FederatedSession`` with ``pytree_xent_loss()`` and the session
+    ravels at the clip/aggregate boundary (DESIGN.md §10/§11).  ``make_cnn``
+    wraps it into the historical flat-vector ``CNNModel``.
+    """
     ks = jax.random.split(key, 6)
     he = lambda k, shape, fan_in: jax.random.normal(k, shape) * jnp.sqrt(2.0 / fan_in)
     if variant == "cdp":
-        params = {
+        return {
             "c1_w": he(ks[0], (4, 4, 1, 4), 16), "c1_b": jnp.zeros(4),
             "c2_w": he(ks[1], (4, 4, 4, 8), 64), "c2_b": jnp.zeros(8),
             "f1_w": he(ks[2], (128, 32), 128), "f1_b": jnp.zeros(32),
             "out_w": he(ks[3], (32, 10), 32), "out_b": jnp.zeros(10),
         }
-    elif variant == "ldp":
-        params = {
+    if variant == "ldp":
+        return {
             "c1_w": he(ks[0], (4, 4, 1, 2), 16), "c1_b": jnp.zeros(2),
             "c2_w": he(ks[1], (4, 4, 2, 1), 32), "c2_b": jnp.zeros(1),
             "out_w": he(ks[2], (16, 10), 16), "out_b": jnp.zeros(10),
         }
-    else:
-        raise ValueError(f"unknown CNN variant {variant!r}")
+    raise ValueError(f"unknown CNN variant {variant!r}")
+
+
+def make_cnn(key: jax.Array, variant: str = "cdp") -> CNNModel:
+    """variant: 'cdp' (4/8 filters + hidden FC) or 'ldp' (2/1 filters)."""
+    params = make_cnn_params(key, variant)
     flat, unravel = flatten_model(params)
     return CNNModel(init_flat=flat, unravel=unravel, dim=flat.shape[0])
 
 
+def _masked_xent(logits, batch):
+    logp = jax.nn.log_softmax(logits)
+    nll = -jnp.take_along_axis(logp, batch["y"][:, None], axis=-1)[:, 0]
+    mask = batch.get("mask")
+    if mask is None:
+        return jnp.mean(nll)
+    return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+
+
 def masked_xent_loss(model: CNNModel):
-    """Client loss: mask-weighted mean softmax cross-entropy."""
+    """Client loss on the flat model: mask-weighted mean softmax xent."""
 
     def loss(w_flat, batch):
-        logits = model.apply(w_flat, batch["x"])
-        logp = jax.nn.log_softmax(logits)
-        nll = -jnp.take_along_axis(logp, batch["y"][:, None], axis=-1)[:, 0]
-        mask = batch.get("mask")
-        if mask is None:
-            return jnp.mean(nll)
-        return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+        return _masked_xent(model.apply(w_flat, batch["x"]), batch)
+
+    return loss
+
+
+def pytree_xent_loss():
+    """Client loss on the raw parameter pytree (``make_cnn_params``) — what a
+    ``LocalSpec`` minibatch session trains without any hand-written flat
+    wrapper."""
+
+    def loss(params, batch):
+        return _masked_xent(_forward(params, batch["x"]), batch)
 
     return loss
 
@@ -97,6 +122,20 @@ def accuracy_fn(model: CNNModel, x: jax.Array, y: jax.Array, chunk: int = 1000):
         correct = 0.0
         for s in range(0, n, chunk):
             logits = model.apply(w_flat, jax.lax.dynamic_slice_in_dim(x, s, min(chunk, n - s)))
+            correct += jnp.sum(jnp.argmax(logits, -1) == jax.lax.dynamic_slice_in_dim(y, s, min(chunk, n - s)))
+        return correct / n
+
+    return fn
+
+
+def pytree_accuracy_fn(x: jax.Array, y: jax.Array, chunk: int = 1000):
+    """``accuracy_fn`` for raw parameter pytrees (``make_cnn_params``)."""
+
+    def fn(params):
+        n = x.shape[0]
+        correct = 0.0
+        for s in range(0, n, chunk):
+            logits = _forward(params, jax.lax.dynamic_slice_in_dim(x, s, min(chunk, n - s)))
             correct += jnp.sum(jnp.argmax(logits, -1) == jax.lax.dynamic_slice_in_dim(y, s, min(chunk, n - s)))
         return correct / n
 

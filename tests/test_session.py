@@ -323,10 +323,21 @@ class TestCheckpointPackage:
 
 
 class TestRegistry:
+    # the 10 paper-era names, pinned bit-for-bit against their monolithic
+    # classes by tests/test_compose.py; the registry also carries the newer
+    # cross-product compositions (ldp-gauss-fedadam, ...)
+    LEGACY_NAMES = {
+        "fedavg", "fedexp", "dp-fedavg-ldp-gauss", "ldp-fedexp-gauss",
+        "dp-fedavg-privunit", "ldp-fedexp-privunit", "dp-fedavg-cdp",
+        "cdp-fedexp", "dp-fedadam-cdp", "cdp-fedexp-adaptive-clip",
+    }
+
     def test_list_algorithms(self):
         names = list_algorithms()
-        assert len(names) == 10 and names == sorted(names)
-        assert "cdp-fedexp" in names
+        assert names == sorted(names) and len(names) == len(set(names))
+        assert self.LEGACY_NAMES <= set(names)
+        assert {"ldp-gauss-fedadam", "cdp-fedmom",
+                "privunit-fedexp-adaptive-clip"} <= set(names)
 
     def test_unknown_name_enumerates(self):
         with pytest.raises(KeyError, match="cdp-fedexp"):

@@ -31,7 +31,7 @@ from repro.data.synthetic import distance_to_opt, linreg_loss, make_synthetic_li
 from repro.fedsim import EngineSpec, FederatedSession, ShardSpec, TrainSpec
 from repro.fedsim.local import pad_cohort
 from repro.kernels.dp_aggregate.ops import dp_aggregate, dp_aggregate_sums
-from repro.launch.mesh import make_client_mesh
+from repro.launch.mesh import auto_shard_count, client_shard_spec, make_client_mesh
 
 # M deliberately NOT divisible by 8 (nor by 2/4): every multi-device CI leg
 # exercises the zero-weight padding path.
@@ -215,6 +215,21 @@ class TestMomentPrimitives:
         np.testing.assert_allclose(float(mom.sum_sq), float(ref.sum_sq), rtol=1e-6)
         assert float(mom.count) == 20.0
 
+    def test_row_weights_weight_released_rows(self):
+        """row_weights (the weighted-aggregation layer) multiplies each
+        RELEASED row and the count — exact weighted-mean moments."""
+        u = jax.random.normal(jax.random.PRNGKey(21), (6, 16))
+        mask = jnp.asarray([1.0, 1.0, 0.0, 1.0, 0.0, 1.0])
+        v = jnp.asarray([2.0, 1.0, 7.0, 0.5, 7.0, 1.0])
+        mom = partial_clip_moments(u, 1e9, weight_mask=mask, row_weights=v,
+                                   backend="jnp")
+        np.testing.assert_allclose(np.asarray(mom.sum_c),
+                                   np.asarray((mask * v) @ u), rtol=1e-6)
+        np.testing.assert_allclose(
+            float(mom.sum_sq),
+            float((mask * v) @ jnp.sum(jnp.square(u), axis=-1)), rtol=1e-6)
+        assert float(mom.count) == pytest.approx(4.5)
+
     def test_kernel_sums_match_jnp_sums(self):
         u = jax.random.normal(jax.random.PRNGKey(13), (24, 300))
         noise = 0.3 * jax.random.normal(jax.random.PRNGKey(14), (24, 300))
@@ -239,6 +254,22 @@ class TestMomentPrimitives:
         full = materialize_ldp_noise(key, 12, 64, 0.9)
         shard = materialize_ldp_noise(key, 4, 64, 0.9, start=8)
         np.testing.assert_array_equal(np.asarray(full[8:]), np.asarray(shard))
+
+
+class TestAutoShardCount:
+    def test_caps_at_min_cohort_slice(self):
+        """The heuristic never leaves a shard with < 24 clients (the measured
+        collapse regime of the committed bench history)."""
+        assert auto_shard_count(96, n_devices=8) == 4
+        assert auto_shard_count(300, n_devices=8) == 8
+        assert auto_shard_count(10, n_devices=8) == 1
+        assert auto_shard_count(48, n_devices=2) == 2
+
+    def test_auto_spec_builds_capped_mesh(self):
+        spec = client_shard_spec("auto", num_clients=10_000)
+        assert spec.mesh.shape["clients"] == min(N_DEV, 10_000 // 24)
+        with pytest.raises(ValueError, match="num_clients"):
+            client_shard_spec("auto")
 
 
 class TestE7ShardedPath:
