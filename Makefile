@@ -5,7 +5,7 @@ export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 # always sets it; local runs without ruff keep working).
 LINT_STRICT ?=
 
-.PHONY: test bench-quick bench bench-check lint
+.PHONY: test bench-quick bench bench-check lint docs-check
 
 test:                      ## tier-1 test suite
 	$(PYTHON) -m pytest -x -q
@@ -20,9 +20,12 @@ bench-check:               ## e7 quick run + regression gate vs committed BENCH_
 	$(PYTHON) -m benchmarks.run --quick --json --only e7
 	$(PYTHON) benchmarks/check_regression.py
 
+docs-check:                ## verify README/DESIGN/docs cross-references resolve
+	$(PYTHON) tools/check_docs.py
+
 lint:                      ## ruff (config in pyproject.toml); LINT_STRICT=1 to require ruff
 	@if command -v ruff >/dev/null 2>&1; then \
-		ruff check src tests benchmarks examples; \
+		ruff check src tests benchmarks examples tools; \
 	elif [ -n "$(LINT_STRICT)" ]; then \
 		echo "ERROR: ruff not installed but LINT_STRICT=1 (pip install ruff)" >&2; \
 		exit 1; \

@@ -42,6 +42,7 @@ RATIO_KEYS = (
     ("speedup_single_seed",),
     ("sampled_cohort", "relative_to_full"),
     ("local_sgd", "relative_to_full"),
+    ("streaming", "relative_to_dense"),
 )
 # gated only when the run configs match: absolute throughputs
 ABS_KEYS = (
@@ -49,6 +50,7 @@ ABS_KEYS = (
     ("rounds_per_sec", "scan_single_seed"),
     ("sampled_cohort", "rounds_per_sec"),
     ("local_sgd", "rounds_per_sec"),
+    ("streaming", "rounds_per_sec"),
 )
 
 

@@ -47,6 +47,14 @@ def main(argv=None) -> int:
         for n, rps in sorted(sharded.get("rounds_per_sec_by_shards", {}).items(),
                              key=lambda kv: int(kv[0])):
             print(f"| {n} | {rps:.0f} |")
+
+    st = rep.get("streaming")
+    if st:
+        print(f"\n**Streaming cohort engine** (M={st.get('clients')}, "
+              f"c={st.get('chunk_clients')}): {st.get('rounds_per_sec', 0):.1f} r/s "
+              f"vs {st.get('rounds_per_sec_dense', 0):.1f} dense "
+              f"({st.get('relative_to_dense', 0):.2f}x), update matrix "
+              f"{st.get('memory_reduction_x', 0):.0f}x smaller")
     return 0
 
 

@@ -41,6 +41,15 @@ the simulation hot path.  Three comparisons (DESIGN.md §8):
      per-step gradient over b of n samples, the ratio typically lands > 1
      (the committed baseline records ~1.2) and the gate catches
      engine-level regressions of the minibatch path, not local-math cost.
+  7. Streaming cohort engine (DESIGN.md §12): a LARGE-M workload (50k
+     clients — beyond what the paper experiments stage densely) run with
+     engine="stream" at a fixed ``chunk_clients``, vs the dense scan engine
+     on the identical geometry.  Streaming trades one fused (M, d) sweep
+     for ceil(M/c) sequential chunk steps, so its r/s ratio to dense is the
+     per-chunk loop overhead the regression gate watches; the report also
+     records the MODELED peak update-matrix bytes — chunk_clients*d*4 for
+     the stream engine vs M*d*4 dense, the O(M·d) → O(c·d) memory model
+     that makes cohorts bigger than device memory feasible at all.
 
 The sharded scaling curve records ``auto_shards`` — the shard count the
 ``auto_shard_count`` heuristic would pick for this geometry (it caps shards
@@ -63,7 +72,14 @@ import jax.numpy as jnp
 from benchmarks.common import RESULTS_DIR, print_table, write_csv
 from repro.core.aggregation import fused_clip_aggregate
 from repro.core.fedexp import make_algorithm
-from repro.fedsim import CohortSpec, EngineSpec, FederatedSession, LocalSpec, TrainSpec
+from repro.fedsim import (
+    CohortSpec,
+    EngineSpec,
+    FederatedSession,
+    LocalSpec,
+    StreamSpec,
+    TrainSpec,
+)
 from repro.launch.mesh import auto_shard_count, client_shard_spec
 
 FLOAT_BYTES = 4
@@ -251,6 +267,36 @@ def _local_sgd_rows(key, rounds, *, clients, dim, n_samples=32, batch=8,
             for (label, _), secs in zip(cases, best)]
 
 
+def _stream_rows(key, rounds, *, clients, dim, chunk_clients,
+                 algorithm="ldp-fedexp-gauss",
+                 alg_kwargs=(("clip_norm", 0.3), ("sigma", 0.21))):
+    """Rounds/sec of the streaming cohort engine at large M vs the dense
+    scan engine on the same geometry (DESIGN.md §12).
+
+    M is deliberately past the paper-experiment scale (the ROADMAP
+    north-star is millions of clients): the streamed session's peak
+    update-matrix footprint is chunk_clients*d floats regardless of M, the
+    dense comparator stages all M rows.  Same interleaved timing as the
+    other paired workloads — the r/s RATIO (inner-chunk-loop overhead) is
+    the machine-relative number the regression gate watches.
+    """
+    alg = make_algorithm(algorithm, **dict(alg_kwargs))
+    targets = jax.random.normal(jax.random.fold_in(key, 9), (clients, dim))
+    w0 = jnp.zeros(dim)
+    train = TrainSpec(rounds=rounds, tau=1, eta_l=0.5)
+    cases = [
+        ("dense", {}),
+        (f"stream c={chunk_clients}",
+         dict(engine=EngineSpec(engine="stream"),
+              stream=StreamSpec(chunk_clients=chunk_clients))),
+    ]
+    sessions = [FederatedSession(alg, _quad_loss, w0, targets, train=train,
+                                 **kw) for _, kw in cases]
+    best = _interleaved_best(sessions, key)
+    return [[label, rounds / secs]
+            for (label, _), secs in zip(cases, best)]
+
+
 def _backend_rows(m, d, key):
     u = jax.random.normal(key, (m, d))
     noise = 0.21 * jax.random.normal(jax.random.fold_in(key, 1), (m, d))
@@ -293,6 +339,12 @@ def main(*, clients: int = 300, dim: int = 4096, rounds: int = 50,
     local_rows = _local_sgd_rows(key, rounds, clients=clients,
                                  dim=min(dim, 1024), n_samples=local_samples,
                                  batch=local_batch, epochs=local_epochs)
+    # large-M streaming workload: M stays >= 50k even in --quick (the whole
+    # point is cohort-size scalability); d and T shrink instead
+    s_clients, s_dim, s_chunk = 50_000, 64, 2048
+    s_rounds = 5 if quick else 10
+    stream_rows = _stream_rows(key, s_rounds, clients=s_clients, dim=s_dim,
+                               chunk_clients=s_chunk)
 
     print_table(
         f"E7 engine throughput (M={clients}, d={dim}, T={rounds}, S={seeds})",
@@ -308,6 +360,9 @@ def main(*, clients: int = 300, dim: int = 4096, rounds: int = 50,
     print_table(f"E7 local-SGD clients (M={clients}, d={min(dim, 1024)}, "
                 f"n={local_samples})",
                 ["local trainer", "rounds/sec"], local_rows)
+    print_table(f"E7 streaming cohort engine (M={s_clients}, d={s_dim}, "
+                f"T={s_rounds})",
+                ["engine", "rounds/sec"], stream_rows)
 
     write_csv("e7_engine_throughput.csv",
               ["algorithm", "batched_rps", "scan_rps", "eager_rps",
@@ -377,6 +432,23 @@ def main(*, clients: int = 300, dim: int = 4096, rounds: int = 50,
             "rounds_per_sec_fullbatch": local_rows[0][1],
             "relative_to_full": local_rows[1][1] / local_rows[0][1],
         },
+        # streaming cohort engine at M >= 50k (DESIGN.md §12): the
+        # machine-relative ratio to the dense engine is always gated;
+        # peak_update_matrix_bytes is the O(c*d) memory model — the dense
+        # comparator stages dense_update_matrix_bytes = M*d*4 instead
+        "streaming": {
+            "clients": s_clients,
+            "dim": s_dim,
+            "chunk_clients": s_chunk,
+            "rounds": s_rounds,
+            "algorithm": "ldp-fedexp-gauss",
+            "rounds_per_sec": stream_rows[1][1],
+            "rounds_per_sec_dense": stream_rows[0][1],
+            "relative_to_dense": stream_rows[1][1] / stream_rows[0][1],
+            "peak_update_matrix_bytes": s_chunk * s_dim * FLOAT_BYTES,
+            "dense_update_matrix_bytes": s_clients * s_dim * FLOAT_BYTES,
+            "memory_reduction_x": s_clients / s_chunk,
+        },
         "hbm_bytes_per_round_model": bytes_by,
         "fused_noise_fewer_bytes_than_materialized": (
             bytes_by["kernel_fused_noise"] < bytes_by["kernel_materialized"]
@@ -408,6 +480,13 @@ def main(*, clients: int = 300, dim: int = 4096, rounds: int = 50,
           f"{ls['rounds_per_sec']:.0f} r/s vs {ls['rounds_per_sec_fullbatch']:.0f} "
           f"r/s full-batch ({ls['relative_to_full']:.2f}x); auto shard pick "
           f"for M={clients}: {report['config']['auto_shards']}")
+    st = report["streaming"]
+    print(f"OK  streaming engine (M={st['clients']}, c={st['chunk_clients']}): "
+          f"{st['rounds_per_sec']:.1f} r/s vs {st['rounds_per_sec_dense']:.1f} "
+          f"r/s dense ({st['relative_to_dense']:.2f}x); peak update matrix "
+          f"{st['peak_update_matrix_bytes']/2**20:.1f} MiB vs "
+          f"{st['dense_update_matrix_bytes']/2**20:.1f} MiB dense "
+          f"({st['memory_reduction_x']:.0f}x smaller)")
     return engine_rows
 
 

@@ -143,6 +143,7 @@ def subsampled_gdp_mu(mu_round: float, q: float, rounds: int) -> float:
 
 @dataclasses.dataclass(frozen=True)
 class PrivacyReport:
+    """Privacy budget of one algorithm/run: numerical (GDP) and RDP epsilons at delta."""
     setting: str
     eps_numerical: float      # tight (GDP/analytic) — comparable to Table 1
     eps_rdp: float            # the paper's stated RDP bound (Props. 4.1/4.2)

@@ -34,6 +34,7 @@ __all__ = ["AdaptiveClipConfig", "AdaptiveClipState", "init_state", "update_clip
 
 @dataclasses.dataclass(frozen=True)
 class AdaptiveClipConfig:
+    """Quantile-tracking knobs (Andrew et al. 2021): target gamma, geometric lr, bit noise."""
     gamma: float = 0.5        # target quantile of update norms
     lr: float = 0.2           # geometric-update learning rate
     sigma_b: float = 10.0     # std of the noise on the bit SUM (CDP; Andrew et al. use ~M/20)
@@ -44,10 +45,12 @@ class AdaptiveClipConfig:
 @jax.tree_util.register_dataclass
 @dataclasses.dataclass
 class AdaptiveClipState:
+    """Carry of the adaptive-clip tracker: the current threshold C (traced scalar)."""
     clip: jax.Array           # current threshold C (scalar)
 
 
 def init_state(c0: float) -> AdaptiveClipState:
+    """Fresh tracker state at threshold ``c0``."""
     return AdaptiveClipState(clip=jnp.float32(c0))
 
 

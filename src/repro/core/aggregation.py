@@ -36,6 +36,13 @@ over clients, so they decompose over any partition of the cohort:
 normalizes them into the same ``RoundStats`` the step-size rules consume.
 A ``weight_mask`` row weight (0.0 for padding clients when M % n_shards != 0)
 keeps padded rows out of every sum, including the client count.
+
+Streaming (DESIGN.md §12).  The same additivity lets the reductions run in
+ROW CHUNKS: ``streamed_clip_moments`` accumulates per-chunk
+``partial_clip_moments`` in a ``lax.scan`` carry, bounding the working set
+by the chunk size — the in-core form of the decomposition the streaming
+cohort engine applies one level higher (per-chunk local training, so the
+full (M, d) matrix never materializes at all).
 """
 from __future__ import annotations
 
@@ -50,6 +57,7 @@ __all__ = [
     "aggregate_stats",
     "fused_clip_aggregate",
     "partial_clip_moments",
+    "streamed_clip_moments",
     "raw_moments",
     "materialize_ldp_noise",
     "resolve_backend",
@@ -314,6 +322,90 @@ def partial_clip_moments(
     ones = jnp.ones((released.shape[0],), jnp.float32)
     return RoundMoments(sum_c=ones @ released, sum_sq=sum_sq,
                         sum_sq_clipped=sum_sq_clipped, count=count)
+
+
+def streamed_clip_moments(
+    raw_updates: jax.Array,
+    clip_norm,
+    noise: jax.Array | None = None,
+    *,
+    chunk_clients: int,
+    weight_mask: jax.Array | None = None,
+    row_weights: jax.Array | None = None,
+    backend: str = "auto",
+    interpret: bool | None = None,
+    block_m: int | None = None,
+) -> RoundMoments:
+    """``partial_clip_moments`` streamed over row chunks (DESIGN.md §12).
+
+    Splits the (M, d) update matrix into ceil(M / chunk_clients) row chunks,
+    reduces each chunk with the identical clip/noise math, and accumulates
+    the additive ``RoundMoments`` in a ``lax.scan`` carry — the reference
+    formulation of the streaming engine's inner loop for callers that hold a
+    dense matrix but want the chunk-grid numerics (testing, or bounding a
+    kernel launch's working set).  The engine itself streams one level
+    higher (per-chunk LOCAL TRAINING, so the (M, d) matrix never exists);
+    this entry point only re-associates the reductions at chunk boundaries
+    — all values, including the materialized noise rows, are the dense
+    path's (rtol ~1e-6; exact when ``chunk_clients >= M``).
+
+    Args:
+      raw_updates: (M, d) raw client updates.
+      clip_norm: clip threshold C (python float or traced scalar).
+      noise: optional (M, d) pre-materialized per-client noise.
+      chunk_clients: rows reduced per scan step (>= 1).
+      weight_mask: optional (M,) float {0., 1.} row gate (padding/sampling).
+      row_weights: optional (M,) per-client aggregation weights (§11).
+      backend: per-chunk reduction backend, as ``partial_clip_moments``.
+      interpret / block_m: kernel knobs, forwarded per chunk.
+
+    Returns:
+      The cohort's ``RoundMoments`` partial SUMS, count included —
+      ``sum(weight_mask)`` (or the weight sum) exactly as the un-streamed
+      entry computes it.
+    """
+    if chunk_clients < 1:
+        raise ValueError(f"chunk_clients must be >= 1, got {chunk_clients}")
+    m = raw_updates.shape[0]
+    c = min(chunk_clients, m)
+    pad = (-m) % c
+    n_chunks = (m + pad) // c
+
+    mask = (jnp.ones((m,), jnp.float32) if weight_mask is None
+            else weight_mask.astype(jnp.float32))
+    had_mask = weight_mask is not None
+
+    def grid(x, fill=0.0):
+        """Pad the trailing rows and lay a leaf on the (n_chunks, c, ...) grid."""
+        if pad:
+            widths = [(0, pad)] + [(0, 0)] * (x.ndim - 1)
+            x = jnp.pad(x, widths, constant_values=fill)
+        return x.reshape((n_chunks, c) + x.shape[1:])
+
+    xs = {"u": grid(raw_updates), "mask": grid(mask)}
+    if noise is not None:
+        xs["noise"] = grid(noise)
+    if row_weights is not None:
+        xs["w"] = grid(row_weights.astype(jnp.float32))
+
+    def body(acc, chunk):
+        """Scan body: accumulate one chunk's additive moments into the carry."""
+        mom = partial_clip_moments(
+            chunk["u"], clip_norm, chunk.get("noise"),
+            weight_mask=chunk["mask"], row_weights=chunk.get("w"),
+            backend=backend, interpret=interpret, block_m=block_m)
+        return jax.tree_util.tree_map(jnp.add, acc, mom), None
+
+    zero = RoundMoments(sum_c=jnp.zeros(raw_updates.shape[1:], jnp.float32),
+                        sum_sq=jnp.float32(0.0),
+                        sum_sq_clipped=jnp.float32(0.0),
+                        count=jnp.float32(0.0))
+    moments, _ = jax.lax.scan(body, zero, xs)
+    if not had_mask and row_weights is None and pad == 0:
+        # mirror the un-streamed entry's static-count constant when no mask
+        # gates rows (each chunk's count is the static chunk size anyway)
+        moments = dataclasses.replace(moments, count=jnp.float32(m))
+    return moments
 
 
 def raw_moments(deltas: jax.Array, mask: jax.Array,

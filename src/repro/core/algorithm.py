@@ -31,6 +31,7 @@ def _map_moments(moments, fix):
     """Apply ``fix`` to every RoundMoments in an algorithm's moments pytree
     (a bare RoundMoments or a (RoundMoments, extras) tuple)."""
     def one(x):
+        """Apply ``fix`` when the element is a RoundMoments, else pass through."""
         return fix(x) if isinstance(x, RoundMoments) else x
 
     if isinstance(moments, tuple):
@@ -127,12 +128,15 @@ class ServerAlgorithm:
     supports_static_count: bool = True
 
     def apply_round(self, key: jax.Array, w: jax.Array, raw_deltas: jax.Array):
+        """One dense server round: ``(key, w, (M, d) raw deltas) -> (w_next, RoundAux)``."""
         raise NotImplementedError
 
     def init_state(self, w: jax.Array):
+        """Initial optimizer/clip carry for a run starting from ``w``."""
         return ()
 
     def apply_round_stateful(self, key, w, raw_deltas, state):
+        """Stateful dense round: ``apply_round`` threading the optimizer/clip carry."""
         w_next, aux = self.apply_round(key, w, raw_deltas)
         return w_next, aux, state
 

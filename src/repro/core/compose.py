@@ -130,18 +130,23 @@ class PrivacyMechanism:
         return getattr(self, "clip_norm", None) if clip is None else clip
 
     def release(self, key, deltas, clip, m):
+        """Dense release: clip + randomize + reduce M rows to ``(RoundStats, extras)``."""
         raise NotImplementedError
 
     def moments(self, key, deltas, mask, start, clip, row_weights=None):
+        """Shard-local partial SUMS of the release over masked rows at global ``start``."""
         raise NotImplementedError
 
     def finalize(self, key, mom, extras, clip, m_eff):
+        """Globally reduced moments -> the ``RoundStats`` the step layer consumes."""
         return mom.stats(), {}
 
     def extrapolation(self, k_xi, stats, extras, dim, clip, m_eff):
+        """This mechanism's debiased step size: ``(eta_g, eta_naive, eta_target)``."""
         raise NotImplementedError
 
     def budget(self, delta, *, rounds, dim, sampling_q, with_numerator):
+        """Privacy budget of a ``rounds``-round run of this release (``PrivacyReport``)."""
         raise ValueError(f"{type(self).__name__} is not a private mechanism")
 
 
@@ -152,12 +157,15 @@ class NoPrivacy(PrivacyMechanism):
     is_private = False
 
     def release(self, key, deltas, clip, m):
+        """Dense release: clip + randomize + reduce M rows to ``(RoundStats, extras)``."""
         return aggregate_stats(deltas), {}
 
     def moments(self, key, deltas, mask, start, clip, row_weights=None):
+        """Shard-local partial SUMS of the release over masked rows at global ``start``."""
         return raw_moments(deltas, mask, row_weights), {}
 
     def extrapolation(self, k_xi, stats, extras, dim, clip, m_eff):
+        """This mechanism's debiased step size: ``(eta_g, eta_naive, eta_target)``."""
         return stepsize.fedexp(stats.mean_sq, stats.agg_sq), None, None
 
 
@@ -176,11 +184,13 @@ class GaussianLDP(PrivacyMechanism):
     backend: str = "auto"
 
     def release(self, key, deltas, clip, m):
+        """Dense release: clip + randomize + reduce M rows to ``(RoundStats, extras)``."""
         return fused_clip_aggregate(deltas, self._clip(clip), noise_key=key,
                                     noise_sigma=self.sigma,
                                     backend=self.backend), {}
 
     def moments(self, key, deltas, mask, start, clip, row_weights=None):
+        """Shard-local partial SUMS of the release over masked rows at global ``start``."""
         noise = materialize_ldp_noise(key, *deltas.shape, self.sigma,
                                       deltas.dtype, start=start)
         return partial_clip_moments(deltas, self._clip(clip), noise,
@@ -188,6 +198,7 @@ class GaussianLDP(PrivacyMechanism):
                                     backend=self.backend), {}
 
     def extrapolation(self, k_xi, stats, extras, dim, clip, m_eff):
+        """This mechanism's debiased step size: ``(eta_g, eta_naive, eta_target)``."""
         eta = stepsize.ldp_gaussian(stats.mean_sq, stats.agg_sq, dim, self.sigma)
         return (eta,
                 stepsize.naive_noisy(stats.mean_sq, stats.agg_sq),
@@ -197,6 +208,7 @@ class GaussianLDP(PrivacyMechanism):
         # per-release local guarantee (Prop. 4.1): identical for FedAvg /
         # FedEXP / FedOpt steps — the step size is computed server-side from
         # already-released updates — and unamplified by central subsampling
+        """Privacy budget of a ``rounds``-round run of this release (``PrivacyReport``)."""
         return accounting.ldp_gaussian_budget(self.clip_norm, self.sigma, delta)
 
 
@@ -223,6 +235,7 @@ class PrivUnitLDP(PrivacyMechanism):
 
     @property
     def clip_independent_budget(self) -> bool:
+        """True when the guarantee does not move with the clip threshold."""
         return True  # pure (eps0+eps1+eps2)-LDP at ANY clip threshold
 
     def _randomize(self, key, deltas, start, clip):
@@ -251,6 +264,7 @@ class PrivUnitLDP(PrivacyMechanism):
         return est(released * to_ref) / jnp.square(to_ref)
 
     def release(self, key, deltas, clip, m):
+        """Dense release: clip + randomize + reduce M rows to ``(RoundStats, extras)``."""
         released, clipped = self._randomize(key, deltas, 0, clip)
         stats = aggregate_stats(released)
         stats.mean_sq_clipped = (
@@ -258,6 +272,7 @@ class PrivUnitLDP(PrivacyMechanism):
         return stats, {"mean_s_hat": jnp.sum(self._s_hat(released, clip)) / m}
 
     def moments(self, key, deltas, mask, start, clip, row_weights=None):
+        """Shard-local partial SUMS of the release over masked rows at global ``start``."""
         released, clipped = self._randomize(key, deltas, start, clip)
         # where-zero BOTH row sets (released and pre-noise clipped): the
         # engine zeroes masked deltas at the source, but a garbage row must
@@ -276,15 +291,18 @@ class PrivUnitLDP(PrivacyMechanism):
         return mom, {"sum_s_hat": v @ self._s_hat(released, clip)}
 
     def finalize(self, key, mom, extras, clip, m_eff):
+        """Globally reduced moments -> the ``RoundStats`` the step layer consumes."""
         return mom.stats(), {"mean_s_hat": extras["sum_s_hat"] / mom.count}
 
     def extrapolation(self, k_xi, stats, extras, dim, clip, m_eff):
+        """This mechanism's debiased step size: ``(eta_g, eta_naive, eta_target)``."""
         eta = stepsize.ldp_privunit(extras["mean_s_hat"], stats.agg_sq)
         return (eta,
                 stepsize.naive_noisy(stats.mean_sq, stats.agg_sq),
                 stepsize.target(stats.mean_sq_clipped, stats.agg_sq))
 
     def budget(self, delta, *, rounds, dim, sampling_q, with_numerator):
+        """Privacy budget of a ``rounds``-round run of this release (``PrivacyReport``)."""
         return accounting.privunit_budget(self.eps0, self.eps1, self.eps2)
 
 
@@ -322,6 +340,7 @@ class CentralGaussian(PrivacyMechanism):
 
     @property
     def clip_independent_budget(self) -> bool:
+        """True when the guarantee does not move with the clip threshold."""
         return self.z_mult is not None  # noise tracks z*C => C cancels
 
     def _sigma(self, clip):
@@ -344,6 +363,7 @@ class CentralGaussian(PrivacyMechanism):
         return cbar + noise
 
     def release(self, key, deltas, clip, m):
+        """Dense release: clip + randomize + reduce M rows to ``(RoundStats, extras)``."""
         stats = fused_clip_aggregate(deltas, self._clip(clip), None,
                                      backend=self.backend)
         cbar = self._noised(key, stats.cbar, clip, m)
@@ -352,17 +372,20 @@ class CentralGaussian(PrivacyMechanism):
                           mean_sq_clipped=stats.mean_sq_clipped), {}
 
     def moments(self, key, deltas, mask, start, clip, row_weights=None):
+        """Shard-local partial SUMS of the release over masked rows at global ``start``."""
         return partial_clip_moments(deltas, self._clip(clip), None,
                                     weight_mask=mask, row_weights=row_weights,
                                     backend=self.backend), {}
 
     def finalize(self, key, mom, extras, clip, m_eff):
+        """Globally reduced moments -> the ``RoundStats`` the step layer consumes."""
         cbar = self._noised(key, mom.sum_c / mom.count, clip, m_eff)
         return RoundStats(cbar=cbar, mean_sq=mom.sum_sq / mom.count,
                           agg_sq=jnp.sum(jnp.square(cbar)),
                           mean_sq_clipped=mom.sum_sq_clipped / mom.count), {}
 
     def extrapolation(self, k_xi, stats, extras, dim, clip, m_eff):
+        """This mechanism's debiased step size: ``(eta_g, eta_naive, eta_target)``."""
         sigma = self._sigma(clip)
         sigma_xi = (self.sigma_xi if self.sigma_xi is not None
                     else dim * sigma**2 / self._m_noise(m_eff))
@@ -371,6 +394,7 @@ class CentralGaussian(PrivacyMechanism):
         return eta, None, stepsize.target(stats.mean_sq_clipped, stats.agg_sq)
 
     def budget(self, delta, *, rounds, dim, sampling_q, with_numerator):
+        """Privacy budget of a ``rounds``-round run of this release (``PrivacyReport``)."""
         q = sampling_q
         if self.z_mult is not None:
             # noise std tracks z*C, so the C/sigma ratio — all the budget
@@ -404,6 +428,7 @@ class Aggregation:
     is_weighted: bool = False
 
     def row_weights(self, start, m_local):
+        """Per-client aggregation weights for the rows [start, start + m_local)."""
         return None
 
 
@@ -439,6 +464,7 @@ class WeightedAggregation(Aggregation):
             raise ValueError("weights must be nonnegative with positive sum")
 
     def row_weights(self, start, m_local):
+        """Per-client aggregation weights for the rows [start, start + m_local)."""
         w = jnp.asarray(self.weights, jnp.float32)
         if isinstance(start, int) and start == 0 and m_local == len(self.weights):
             return w
@@ -466,15 +492,19 @@ class GlobalStep:
     uses_extrapolation: bool = False
 
     def n_extra_keys(self, mechanism) -> int:
+        """PRNG streams beyond the mechanism's to split off the round key."""
         return 0
 
     def clip_override(self, state):
+        """Traced per-round clip threshold from the carry; None = mechanism's static."""
         return None
 
     def init(self, w):
+        """Initial step-owned carry state (optimizer moments / clip threshold)."""
         return ()
 
     def apply(self, extra_keys, w, stats, extras, mechanism, clip, m_eff, state):
+        """Apply this server-update policy to the released round statistics."""
         raise NotImplementedError
 
 
@@ -485,6 +515,7 @@ class FixedEta(GlobalStep):
     eta: float = 1.0
 
     def apply(self, extra_keys, w, stats, extras, mechanism, clip, m_eff, state):
+        """Apply this server-update policy to the released round statistics."""
         w_next = w + stats.cbar if self.eta == 1.0 else w + self.eta * stats.cbar
         return w_next, RoundAux(eta_g=jnp.float32(self.eta)), state
 
@@ -502,9 +533,11 @@ class FedEXPStep(GlobalStep):
     uses_extrapolation = True
 
     def n_extra_keys(self, mechanism):
+        """PRNG streams beyond the mechanism's to split off the round key."""
         return 1 if mechanism.needs_xi_key else 0
 
     def apply(self, extra_keys, w, stats, extras, mechanism, clip, m_eff, state):
+        """Apply this server-update policy to the released round statistics."""
         k_xi = extra_keys[0] if extra_keys else None
         eta, naive, target = mechanism.extrapolation(
             k_xi, stats, extras, w.shape[-1], clip,
@@ -540,9 +573,11 @@ class ServerOpt(GlobalStep):
         object.__setattr__(self, "_opt", opt)
 
     def init(self, w):
+        """Initial step-owned carry state (optimizer moments / clip threshold)."""
         return self._opt.init(w)
 
     def apply(self, extra_keys, w, stats, extras, mechanism, clip, m_eff, state):
+        """Apply this server-update policy to the released round statistics."""
         step, state = self._opt.update(stats.cbar, state)
         return w + step, RoundAux(eta_g=jnp.float32(self.lr)), state
 
@@ -567,16 +602,20 @@ class AdaptiveClipStep(GlobalStep):
     uses_extrapolation = True
 
     def n_extra_keys(self, mechanism):
+        """PRNG streams beyond the mechanism's to split off the round key."""
         return (1 if mechanism.needs_xi_key else 0) + 1
 
     def clip_override(self, state):
+        """Traced per-round clip threshold from the carry; None = mechanism's static."""
         return state.clip
 
     def init(self, w):
+        """Initial step-owned carry state (optimizer moments / clip threshold)."""
         from repro.core import adaptive_clip as ac
         return ac.init_state(self.c0)
 
     def apply(self, extra_keys, w, stats, extras, mechanism, clip, m_eff, state):
+        """Apply this server-update policy to the released round statistics."""
         from repro.core import adaptive_clip as ac
         if len(extra_keys) == 2:
             k_xi, k_bit = extra_keys
@@ -621,10 +660,12 @@ class ComposedAlgorithm(ServerAlgorithm):
 
     @property
     def is_private(self):
+        """Whether the composed release carries a DP guarantee (the mechanism's)."""
         return self.mechanism.is_private
 
     @property
     def supports_static_count(self):
+        """False for weighted aggregation: the moment count is a weight sum, not M."""
         return not self.aggregation.is_weighted
 
     def __getattr__(self, item):
@@ -652,9 +693,11 @@ class ComposedAlgorithm(ServerAlgorithm):
     # -- engine interface --------------------------------------------------
 
     def init_state(self, w):
+        """Initial optimizer/clip carry for a run starting from ``w``."""
         return self.step.init(w)
 
     def apply_round_stateful(self, key, w, raw_deltas, state):
+        """Stateful dense round: ``apply_round`` threading the optimizer/clip carry."""
         clip = self.step.clip_override(state)
         k_mech, extra = self._split_keys(key)
         m = raw_deltas.shape[0]
@@ -673,12 +716,14 @@ class ComposedAlgorithm(ServerAlgorithm):
                                float(m), state)
 
     def apply_round(self, key, w, raw_deltas):
+        """One dense server round: ``(key, w, (M, d) raw deltas) -> (w_next, RoundAux)``."""
         if self.step.stateful:
             raise TypeError(f"{self.name} is stateful; use apply_round_stateful")
         w_next, aux, _ = self.apply_round_stateful(key, w, raw_deltas, ())
         return w_next, aux
 
     def local_moments(self, key, w, deltas, mask, start, state):
+        """Shard/chunk-local partial sums of this algorithm's release (SUMS, psum-able)."""
         clip = self.step.clip_override(state)
         weights = self.aggregation.row_weights(start, deltas.shape[0])
         # split exactly as the dense path does, so per-client randomness
@@ -702,6 +747,7 @@ class ComposedAlgorithm(ServerAlgorithm):
         return mom, extras
 
     def apply_from_moments(self, key, w, moments, state):
+        """Server update from the globally reduced moments (replicated math)."""
         mom, extras = moments
         clip = self.step.clip_override(state)
         k_mech, extra = self._split_keys(key)

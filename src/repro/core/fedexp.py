@@ -87,18 +87,22 @@ __all__ = [
 
 @dataclasses.dataclass(frozen=True)
 class FedAvg(ServerAlgorithm):
+    """Non-private FedAvg: ``w <- w + mean_i Delta_i`` (McMahan et al. 2017)."""
     name: str = "fedavg"
     is_private: bool = False
 
     def apply_round(self, key, w, raw_deltas):
+        """One dense server round: ``(key, w, (M, d) raw deltas) -> (w_next, RoundAux)``."""
         stats = aggregate_stats(raw_deltas)
         w_next = w + stats.cbar
         return w_next, RoundAux(eta_g=jnp.float32(1.0), update_norm=jnp.linalg.norm(stats.cbar))
 
     def local_moments(self, key, w, deltas, mask, start, state):
+        """Shard/chunk-local partial sums of this algorithm's release (SUMS, psum-able)."""
         return _raw_moments(deltas, mask)
 
     def apply_from_moments(self, key, w, moments, state):
+        """Server update from the globally reduced moments (replicated math)."""
         cbar = moments.sum_c / moments.count
         aux = RoundAux(eta_g=jnp.float32(1.0), update_norm=jnp.linalg.norm(cbar))
         return w + cbar, aux, state
@@ -106,18 +110,22 @@ class FedAvg(ServerAlgorithm):
 
 @dataclasses.dataclass(frozen=True)
 class FedEXP(ServerAlgorithm):
+    """Non-private FedEXP: the adaptive extrapolated step size of Eq. (2)."""
     name: str = "fedexp"
     is_private: bool = False
 
     def apply_round(self, key, w, raw_deltas):
+        """One dense server round: ``(key, w, (M, d) raw deltas) -> (w_next, RoundAux)``."""
         stats = aggregate_stats(raw_deltas)
         eta = stepsize.fedexp(stats.mean_sq, stats.agg_sq)
         return w + eta * stats.cbar, RoundAux(eta_g=eta, update_norm=eta * jnp.linalg.norm(stats.cbar))
 
     def local_moments(self, key, w, deltas, mask, start, state):
+        """Shard/chunk-local partial sums of this algorithm's release (SUMS, psum-able)."""
         return _raw_moments(deltas, mask)
 
     def apply_from_moments(self, key, w, moments, state):
+        """Server update from the globally reduced moments (replicated math)."""
         stats = moments.stats()
         eta = stepsize.fedexp(stats.mean_sq, stats.agg_sq)
         aux = RoundAux(eta_g=eta, update_norm=eta * jnp.linalg.norm(stats.cbar))
@@ -130,6 +138,7 @@ class FedEXP(ServerAlgorithm):
 
 @dataclasses.dataclass(frozen=True)
 class DPFedAvgLDPGaussian(ServerAlgorithm):
+    """DP-FedAvg under the Gaussian LDP randomizer: per-client clip + noise, eta_g = 1."""
     clip_norm: float
     sigma: float
     name: str = "dp-fedavg-ldp-gauss"
@@ -141,6 +150,7 @@ class DPFedAvgLDPGaussian(ServerAlgorithm):
                                     backend=self.backend)
 
     def apply_round(self, key, w, raw_deltas):
+        """One dense server round: ``(key, w, (M, d) raw deltas) -> (w_next, RoundAux)``."""
         stats = self._release(key, raw_deltas)
         return w + stats.cbar, RoundAux(eta_g=jnp.float32(1.0))
 
@@ -152,12 +162,14 @@ class DPFedAvgLDPGaussian(ServerAlgorithm):
         # stream is shard-oblivious (every shard would repeat the same
         # block), so the sharded path always materializes and the TPU-auto
         # comparison is distributional, not bitwise (DESIGN.md §9).
+        """Shard/chunk-local partial sums of this algorithm's release (SUMS, psum-able)."""
         noise = materialize_ldp_noise(key, *deltas.shape, self.sigma,
                                       deltas.dtype, start=start)
         return partial_clip_moments(deltas, self.clip_norm, noise,
                                     weight_mask=mask, backend=self.backend)
 
     def apply_from_moments(self, key, w, moments, state):
+        """Server update from the globally reduced moments (replicated math)."""
         return w + moments.sum_c / moments.count, RoundAux(eta_g=jnp.float32(1.0)), state
 
 
@@ -178,9 +190,11 @@ class LDPFedEXPGaussian(DPFedAvgLDPGaussian):
         return w + eta * stats.cbar, aux
 
     def apply_round(self, key, w, raw_deltas):
+        """One dense server round: ``(key, w, (M, d) raw deltas) -> (w_next, RoundAux)``."""
         return self._stepped(w, self._release(key, raw_deltas))
 
     def apply_from_moments(self, key, w, moments, state):
+        """Server update from the globally reduced moments (replicated math)."""
         w_next, aux = self._stepped(w, moments.stats())
         return w_next, aux, state
 
@@ -191,6 +205,7 @@ class LDPFedEXPGaussian(DPFedAvgLDPGaussian):
 
 @dataclasses.dataclass(frozen=True)
 class DPFedAvgPrivUnit(ServerAlgorithm):
+    """DP-FedAvg under PrivUnit (direction) x ScalarDP (magnitude), eta_g = 1."""
     clip_norm: float
     eps0: float
     eps1: float
@@ -233,14 +248,17 @@ class DPFedAvgPrivUnit(ServerAlgorithm):
         return released, mom
 
     def local_moments(self, key, w, deltas, mask, start, state):
+        """Shard/chunk-local partial sums of this algorithm's release (SUMS, psum-able)."""
         _, mom = self._released_moments(key, deltas, mask, start)
         return mom
 
     def apply_round(self, key, w, raw_deltas):
+        """One dense server round: ``(key, w, (M, d) raw deltas) -> (w_next, RoundAux)``."""
         _, stats = self._release(key, raw_deltas)
         return w + stats.cbar, RoundAux(eta_g=jnp.float32(1.0))
 
     def apply_from_moments(self, key, w, moments, state):
+        """Server update from the globally reduced moments (replicated math)."""
         return w + moments.sum_c / moments.count, RoundAux(eta_g=jnp.float32(1.0)), state
 
 
@@ -260,16 +278,19 @@ class LDPFedEXPPrivUnit(DPFedAvgPrivUnit):
         return w + eta * stats.cbar, aux
 
     def apply_round(self, key, w, raw_deltas):
+        """One dense server round: ``(key, w, (M, d) raw deltas) -> (w_next, RoundAux)``."""
         released, stats = self._release(key, raw_deltas)
         s_hat = jax.vmap(lambda c: mech.estimate_norm_sq(c, self.pu, self.sc))(released)
         return self._stepped(w, stats, jnp.sum(s_hat) / raw_deltas.shape[0])
 
     def local_moments(self, key, w, deltas, mask, start, state):
+        """Shard/chunk-local partial sums of this algorithm's release (SUMS, psum-able)."""
         released, mom = self._released_moments(key, deltas, mask, start)
         s_hat = jax.vmap(lambda c: mech.estimate_norm_sq(c, self.pu, self.sc))(released)
         return mom, {"sum_s_hat": mask @ s_hat}
 
     def apply_from_moments(self, key, w, moments, state):
+        """Server update from the globally reduced moments (replicated math)."""
         mom, extras = moments
         w_next, aux = self._stepped(w, mom.stats(), extras["sum_s_hat"] / mom.count)
         return w_next, aux, state
@@ -281,6 +302,7 @@ class LDPFedEXPPrivUnit(DPFedAvgPrivUnit):
 
 @dataclasses.dataclass(frozen=True)
 class DPFedAvgCDP(ServerAlgorithm):
+    """DP-FedAvg under central DP: clip-only clients + server noise on the mean."""
     clip_norm: float
     sigma: float           # paper's sigma; server noise std is sigma/sqrt(M)
     num_clients: int
@@ -301,14 +323,17 @@ class DPFedAvgCDP(ServerAlgorithm):
         return stats, self._noised_cbar(key, stats.cbar)
 
     def apply_round(self, key, w, raw_deltas):
+        """One dense server round: ``(key, w, (M, d) raw deltas) -> (w_next, RoundAux)``."""
         _, cbar = self._release(key, raw_deltas)
         return w + cbar, RoundAux(eta_g=jnp.float32(1.0))
 
     def local_moments(self, key, w, deltas, mask, start, state):
+        """Shard/chunk-local partial sums of this algorithm's release (SUMS, psum-able)."""
         return partial_clip_moments(deltas, self.clip_norm, None,
                                     weight_mask=mask, backend=self.backend)
 
     def apply_from_moments(self, key, w, moments, state):
+        """Server update from the globally reduced moments (replicated math)."""
         cbar = self._noised_cbar(key, moments.sum_c / moments.count)
         return w + cbar, RoundAux(eta_g=jnp.float32(1.0)), state
 
@@ -336,11 +361,13 @@ class CDPFedEXP(DPFedAvgCDP):
         return w + eta * cbar, aux
 
     def apply_round(self, key, w, raw_deltas):
+        """One dense server round: ``(key, w, (M, d) raw deltas) -> (w_next, RoundAux)``."""
         k_noise, k_xi = jax.random.split(key)
         stats, cbar = self._release(k_noise, raw_deltas)
         return self._stepped(k_xi, w, cbar, stats.mean_sq_clipped)
 
     def apply_from_moments(self, key, w, moments, state):
+        """Server update from the globally reduced moments (replicated math)."""
         k_noise, k_xi = jax.random.split(key)
         cbar = self._noised_cbar(k_noise, moments.sum_c / moments.count)
         w_next, aux = self._stepped(k_xi, w, cbar, moments.sum_sq_clipped / moments.count)
@@ -378,6 +405,7 @@ class CDPFedEXPAdaptiveClip(ServerAlgorithm):
     backend: str = "auto"
 
     def init_state(self, w):
+        """Initial optimizer/clip carry for a run starting from ``w``."""
         from repro.core import adaptive_clip as ac
         return ac.init_state(self.c0)
 
@@ -403,6 +431,7 @@ class CDPFedEXPAdaptiveClip(ServerAlgorithm):
         return w + eta * cbar, aux, state
 
     def apply_round_stateful(self, key, w, raw_deltas, state):
+        """Stateful dense round: ``apply_round`` threading the optimizer/clip carry."""
         m = raw_deltas.shape[0]
         stats = fused_clip_aggregate(raw_deltas, state.clip, None, backend=self.backend)
         norms = jnp.linalg.norm(raw_deltas, axis=-1)
@@ -411,6 +440,7 @@ class CDPFedEXPAdaptiveClip(ServerAlgorithm):
                            count_below, float(m), state)
 
     def local_moments(self, key, w, deltas, mask, start, state):
+        """Shard/chunk-local partial sums of this algorithm's release (SUMS, psum-able)."""
         mom = partial_clip_moments(deltas, state.clip, None,
                                    weight_mask=mask, backend=self.backend)
         norms = jnp.linalg.norm(deltas, axis=-1)
@@ -418,12 +448,14 @@ class CDPFedEXPAdaptiveClip(ServerAlgorithm):
         return mom, {"count_below": below}
 
     def apply_from_moments(self, key, w, moments, state):
+        """Server update from the globally reduced moments (replicated math)."""
         mom, extras = moments
         return self._serve(key, w, mom.sum_c / mom.count,
                            mom.sum_sq_clipped / mom.count,
                            extras["count_below"], mom.count, state)
 
     def apply_round(self, key, w, raw_deltas):
+        """One dense server round: ``(key, w, (M, d) raw deltas) -> (w_next, RoundAux)``."""
         raise TypeError("stateful algorithm; use apply_round_stateful")
 
 
@@ -451,19 +483,23 @@ class DPFedAdamCDP(DPFedAvgCDP):
         object.__setattr__(self, "_opt", optim.adam(lr=self.server_lr))
 
     def init_state(self, w):
+        """Initial optimizer/clip carry for a run starting from ``w``."""
         return self._opt.init(w)
 
     def apply_round_stateful(self, key, w, raw_deltas, state):
+        """Stateful dense round: ``apply_round`` threading the optimizer/clip carry."""
         _, cbar = self._release(key, raw_deltas)
         step, state = self._opt.update(cbar, state)
         return w + step, RoundAux(eta_g=jnp.float32(self.server_lr)), state
 
     def apply_from_moments(self, key, w, moments, state):
+        """Server update from the globally reduced moments (replicated math)."""
         cbar = self._noised_cbar(key, moments.sum_c / moments.count)
         step, state = self._opt.update(cbar, state)
         return w + step, RoundAux(eta_g=jnp.float32(self.server_lr)), state
 
     def apply_round(self, key, w, raw_deltas):  # stateless misuse guard
+        """One dense server round: ``(key, w, (M, d) raw deltas) -> (w_next, RoundAux)``."""
         raise TypeError("DPFedAdamCDP is stateful; use apply_round_stateful")
 
 
@@ -555,6 +591,20 @@ def list_algorithms() -> list[str]:
 
 
 def make_algorithm(name: str, **kwargs) -> ServerAlgorithm:
+    """Build a registered server algorithm by name.
+
+    Args:
+      name: one of ``list_algorithms()`` (unknown names raise KeyError
+        enumerating the registry).
+      **kwargs: the composition's knobs (``clip_norm``, ``sigma``,
+        ``num_clients``, ``eps0/1/2``, ``dim``, ``z_mult``, ``server_lr``,
+        ... — see the README registry table).
+
+    Returns:
+      A frozen, hashable ``ServerAlgorithm`` (a ``ComposedAlgorithm``)
+      pinned bit-for-bit against the monolithic classes for the first ten
+      names.
+    """
     if name not in _FACTORIES:
         raise KeyError(f"unknown algorithm {name!r}; valid names: "
                        f"{', '.join(list_algorithms())}")

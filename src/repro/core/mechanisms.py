@@ -138,9 +138,11 @@ class GaussianCDPConfig:
 
     @property
     def mean_noise_std(self) -> float:
+        """Server-side noise std on the released mean: ``sigma / sqrt(M)``."""
         return self.sigma / math.sqrt(self.num_clients)
 
     def sigma_xi(self, dim: int) -> float:
+        """Hyperparameter-free numerator noise scale ``d sigma^2 / M`` (Eq. 8, §3.2 of the paper)."""
         return dim * self.sigma**2 / self.num_clients
 
 
@@ -185,6 +187,7 @@ def _gamma_from_eps1(d: int, eps1: float) -> float:
     gamma_a = (math.expm1(eps1) / (math.exp(eps1) + 1.0)) * math.sqrt(math.pi / (2.0 * (d - 1)))
 
     def rhs(g: float) -> float:
+        """Condition (B)'s right-hand side as a function of gamma."""
         return 0.5 * math.log(d) + math.log(6.0) - 0.5 * (d - 1) * math.log1p(-g * g) + math.log(g)
 
     g_lo = math.sqrt(2.0 / d)
@@ -206,6 +209,13 @@ def _gamma_from_eps1(d: int, eps1: float) -> float:
 
 
 def make_privunit_params(dim: int, eps0: float, eps1: float) -> PrivUnitParams:
+    """PrivUnit parameters for dimension ``dim`` at budgets (eps0, eps1).
+
+    Derives the cap probability p from eps0, the cap width gamma from eps1
+    (the larger of the two admissible regimes), and the debiasing
+    normalizer m; raises when the configuration admits no positive finite
+    normalizer (increase eps0).
+    """
     if dim < 2:
         raise ValueError("PrivUnit requires d >= 2")
     p = math.exp(eps0) / (1.0 + math.exp(eps0))
@@ -234,6 +244,7 @@ def _betainc_inv_bisect(alpha: float, y: jax.Array, iters: int = 60) -> jax.Arra
     """Invert x -> I_x(alpha, alpha) by bisection (jittable)."""
 
     def body(_, state):
+        """One bisection step narrowing [lo, hi] around the target quantile."""
         lo, hi = state
         mid = 0.5 * (lo + hi)
         val = jax.scipy.special.betainc(alpha, alpha, mid)
@@ -291,6 +302,11 @@ class ScalarDPParams:
 
 
 def make_scalardp_params(eps2: float, r_max: float) -> ScalarDPParams:
+    """ScalarDP magnitude-release lattice for budget eps2 on [0, r_max].
+
+    k = ceil(e^{eps2/3}) lattice points with the debias transform (a, b)
+    and the variance-bound constants (c1, c2, c3) of Algorithm 4.
+    """
     k = int(math.ceil(math.exp(eps2 / 3.0)))
     e = math.exp(eps2)
     a = ((e + k) / (e - 1.0)) * (r_max / k)

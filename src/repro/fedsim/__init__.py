@@ -1,12 +1,16 @@
 """Vectorized federated-learning simulation engine (paper experiments).
 
-Entry point: ``FederatedSession`` + the four specs (DESIGN.md §10).  The
+Entry point: ``FederatedSession`` + the declarative specs (DESIGN.md §10):
+TrainSpec / LocalSpec / EngineSpec / StreamSpec / ShardSpec / CohortSpec.
+``EngineSpec(engine="stream")`` + ``StreamSpec(chunk_clients=c)`` run each
+round in client chunks with O(c·d) peak update memory (§12).  The
 kwargs-style ``run_federated`` / ``run_federated_batched`` are deprecated
 shims over a one-shot session.
 """
 
 from repro.fedsim.flat import flatten_model
 from repro.fedsim.local import (
+    chunk_cohort,
     cohort_updates,
     cohort_updates_spec,
     local_update,
@@ -20,14 +24,15 @@ from repro.fedsim.specs import (
     EngineSpec,
     LocalSpec,
     ShardSpec,
+    StreamSpec,
     TrainSpec,
 )
 
 __all__ = [
     "flatten_model", "local_update", "cohort_updates",
-    "local_update_spec", "cohort_updates_spec",
+    "local_update_spec", "cohort_updates_spec", "chunk_cohort",
     "FederatedSession", "TrainSpec", "LocalSpec", "EngineSpec", "ShardSpec",
-    "CohortSpec",
+    "StreamSpec", "CohortSpec",
     "run_federated", "run_federated_batched", "RunResult",
     "DPScaffoldConfig", "run_dp_scaffold",
 ]

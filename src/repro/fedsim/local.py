@@ -48,6 +48,7 @@ __all__ = [
     "masked_cohort_updates",
     "mask_rows",
     "pad_cohort",
+    "chunk_cohort",
 ]
 
 
@@ -55,6 +56,7 @@ def local_update(loss_fn: Callable, w0: jax.Array, client_batch, tau: int, eta_l
     """tau steps of (full-batch) GD on one client's data; returns the update."""
 
     def step(w, _):
+        """One full-batch gradient-descent step on this client's data."""
         g = jax.grad(loss_fn)(w, client_batch)
         return w - eta_l * g, None
 
@@ -91,6 +93,7 @@ def local_update_spec(loss_fn: Callable, w0, client_batch, key: jax.Array,
     grad_fn = jax.grad(loss_fn)
 
     def gd_step(carry, batch):
+        """One local gradient step (FedProx pull and momentum per the spec)."""
         w, v = carry
         g = grad_fn(w, batch)
         if spec.prox_mu:
@@ -138,6 +141,7 @@ def local_update_spec(loss_fn: Callable, w0, client_batch, key: jax.Array,
           for x, ok in zip(leaves, sliceable) if ok]
 
     def batch_step(carry, mb_leaves):
+        """One minibatch step over the pre-gathered minibatch leaves."""
         mb = list(mb_leaves)
         merged = [mb.pop(0) if ok else x for x, ok in zip(leaves, sliceable)]
         return gd_step(carry, jax.tree_util.tree_unflatten(treedef, merged))
@@ -171,10 +175,12 @@ def cohort_updates_spec(loss_fn: Callable, w, client_batches, spec: LocalSpec,
 def _build_cohort_local_fn(loss_fn: Callable, spec: LocalSpec | None, tau: int):
     if spec is None or spec.is_default:
         def local_fn(w, client_batches, eta_l, round_key, start):
+            """The engine's local-training closure: cohort deltas for one round."""
             return cohort_updates(loss_fn, w, client_batches, tau, eta_l)
         return local_fn
 
     def local_fn(w, client_batches, eta_l, round_key, start):
+        """The engine's local-training closure: cohort deltas for one round."""
         return cohort_updates_spec(loss_fn, w, client_batches, spec, tau,
                                    eta_l, round_key, start)
     return local_fn
@@ -242,8 +248,43 @@ def pad_cohort(client_batches, n_shards: int, *, axis: int = 0):
         return client_batches, mask
 
     def pad_leaf(x):
+        """Append ``pad`` copies of row 0 along the client axis of one leaf."""
         first = jax.lax.slice_in_dim(x, 0, 1, axis=axis)
         shape = x.shape[:axis] + (pad,) + x.shape[axis + 1:]
         return jnp.concatenate([x, jnp.broadcast_to(first, shape)], axis=axis)
 
     return jax.tree_util.tree_map(pad_leaf, client_batches), mask
+
+
+def chunk_cohort(client_batches, chunk_clients: int, *, n_shards: int = 1):
+    """Lay the cohort on the streaming engine's chunk grid (DESIGN.md §12).
+
+    Pads M to a multiple of ``chunk_clients * n_shards`` (zero-weight
+    clients, exactly as ``pad_cohort``) and reshapes every client-batch leaf
+    from (m_pad, ...) to (n_chunks, chunk_clients, ...); the weight mask
+    comes back as (n_chunks, chunk_clients).  Chunk j holds the clients with
+    global indices [j*c, (j+1)*c), so contiguous chunk blocks are contiguous
+    client blocks — under §9 sharding the leading CHUNK axis shards over the
+    ``clients`` mesh and every device receives the same client rows the
+    dense sharded engine would.
+
+    Args:
+      client_batches: pytree of per-client leaves, client axis leading.
+      chunk_clients: clients per chunk (``StreamSpec.chunk_clients``).
+      n_shards: client-mesh size the chunk grid must also divide by.
+
+    Returns:
+      ``(chunk_batches, chunk_mask)`` — the reshaped pytree and the float
+      {1., 0.} weight mask on the same grid.
+    """
+    if chunk_clients < 1:
+        raise ValueError(f"chunk_clients must be >= 1, got {chunk_clients}")
+    batches, mask = pad_cohort(client_batches, chunk_clients * n_shards)
+    n_chunks = mask.shape[0] // chunk_clients
+
+    def to_grid(x):
+        """Reshape one padded leaf onto the (n_chunks, chunk_clients, ...) grid."""
+        return x.reshape((n_chunks, chunk_clients) + x.shape[1:])
+
+    return (jax.tree_util.tree_map(to_grid, batches),
+            mask.reshape(n_chunks, chunk_clients))

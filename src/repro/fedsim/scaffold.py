@@ -30,6 +30,7 @@ __all__ = ["DPScaffoldConfig", "run_dp_scaffold"]
 
 @dataclasses.dataclass(frozen=True)
 class DPScaffoldConfig:
+    """DP-SCAFFOLD knobs: clip, noise scale, central vs local noising, cohort size."""
     clip_norm: float
     sigma: float                 # baseline noise scale (as for DP-FedAvg)
     central: bool                # True: CDP (noise std sigma*sqrt(2)/sqrt(M) on means)
@@ -49,12 +50,20 @@ def run_dp_scaffold(
     eval_fn: Callable | None = None,
     avg_last: int = 2,
 ) -> RunResult:
+    """Run T rounds of DP-SCAFFOLD (two clipped+noised releases per round).
+
+    Same calling convention as the deprecated ``run_federated``: flat (d,)
+    ``w0``, per-client batches on leaf axis 0, fold_in(key, t) round keys.
+    Returns a ``RunResult`` with eta_history pinned to 1.
+    """
     m = cfg.num_clients
     d = w0.shape[0]
     variate_scale = 1.0 / (tau * eta_l)
 
     def local_update(w, c, c_i, batch):
+        """One client's SCAFFOLD local solve: returns (dy, variate update)."""
         def step(y, _):
+            """One local step with the SCAFFOLD control-variate correction."""
             g = jax.grad(loss_fn)(y, batch)
             return y - eta_l * (g - c_i + c), None
 
@@ -64,6 +73,7 @@ def run_dp_scaffold(
         return dy, c_i_new - c_i
 
     def one_round(state, round_key):
+        """One jitted round dispatched from the Python loop."""
         w, c, c_is = state
         k_dy, k_dc = jax.random.split(round_key)
         dy, dc = jax.vmap(lambda ci, b: local_update(w, c, ci, b))(c_is, client_batches)

@@ -35,6 +35,20 @@ so the release is mathematically the sampled-cohort release.  The sampling
 mask is derived from the replicated round key, so sharded and single-device
 sampled runs see the identical cohort.
 
+Streaming cohorts (DESIGN.md §12): ``engine="stream"`` iterates each round's
+cohort in ``StreamSpec.chunk_clients``-sized chunks via an INNER ``lax.scan``
+nested in the round scan: every chunk runs local training + the per-client
+release on its (c, d) block and only the additive ``RoundMoments`` (plus the
+PrivUnit / adaptive-clip extras, all SUMS) accumulate in the inner carry, so
+peak update-matrix memory is O(chunk_clients * d) instead of O(M * d).  All
+per-client randomness keys by GLOBAL client index, so the streamed release
+draws exactly the dense engine's randomization; the chunk-boundary
+re-association of the sums is the only difference (rtol 1e-5, bit-exact when
+one chunk covers the cohort).  Composes with sampling (the full mask is
+derived from the replicated round key and sliced per chunk) and with §9
+sharding (each shard streams its own cohort slice; one O(d) psum per round,
+after the inner scan).
+
 Following §5 of the paper, the returned final model is the average of the
 last two iterates ("to mitigate the oscillating behaviour of DP-FedEXP").
 """
@@ -52,7 +66,7 @@ from jax.sharding import PartitionSpec as P
 
 from repro.core.fedexp import ServerAlgorithm, clamp_moment_counts, set_moment_count
 from repro.fedsim.local import mask_rows
-from repro.fedsim.specs import CohortSpec
+from repro.fedsim.specs import CohortSpec, StreamSpec
 from repro.models.sharding import client_axis_rules, logical_to_pspec
 
 __all__ = ["RunResult", "run_federated", "run_federated_batched"]
@@ -60,6 +74,7 @@ __all__ = ["RunResult", "run_federated", "run_federated_batched"]
 
 @dataclasses.dataclass
 class RunResult:
+    """Outputs of a federated run: final/last weights + per-round histories."""
     final_w: Any                  # average of the last `avg_last` iterates
     last_w: Any                   # pytree-shaped when the session got a pytree
     eta_history: jax.Array        # (T,)
@@ -121,6 +136,7 @@ def _round_step(algorithm, local_fn, eval_fn, eval_every: int = 1,
     sampled = cohort is not None and cohort.is_sampled
 
     def step(w, opt_state, round_key, t, client_batches, eta_l):
+        """One server round inside the compiled scan body."""
         if not sampled:
             deltas = local_fn(w, client_batches, eta_l, round_key, 0)
             w_next, aux, opt_state = algorithm.apply_round_stateful(
@@ -160,6 +176,7 @@ def _sharded_round_step(algorithm, local_fn, eval_fn, axis, m_true,
     sampled = cohort is not None and cohort.is_sampled
 
     def step(w, opt_state, round_key, t, batches_and_mask, eta_l):
+        """One server round inside the compiled scan body."""
         local_batches, pad_mask = batches_and_mask
         m_local = pad_mask.shape[0]
         start = jax.lax.axis_index(axis) * m_local
@@ -188,6 +205,198 @@ def _sharded_round_step(algorithm, local_fn, eval_fn, axis, m_true,
     return step
 
 
+def _stream_round_step(algorithm, local_fn, eval_fn,
+                       m_true: int, m_pad: int, eval_every: int = 1,
+                       cohort: CohortSpec | None = None, axis: str | None = None):
+    """One server round streamed over client chunks (DESIGN.md §12).
+
+    The cohort arrives pre-chunked: every client-batch leaf is
+    (n_chunks, chunk_clients, ...) and the weight mask (n_chunks,
+    chunk_clients), zero on the rows that pad M up to the chunk grid.  An
+    inner ``lax.scan`` walks the chunks; chunk j computes its clients' local
+    updates and ``algorithm.local_moments`` on global client indices
+    [start + j*c, start + (j+1)*c) and adds the resulting moments pytree
+    (SUMS, plus any additive extras — the PrivUnit Σŝ, the adaptive-clip
+    below-threshold bit count) into a zero-initialized running carry.  Only
+    that O(d) carry and one (c, d) update block are ever live, which is the
+    engine's whole point: peak update memory is chunk-sized, not
+    cohort-sized.
+
+    ``axis`` is the §9 ``clients`` mesh axis when each SHARD streams its
+    slice (``m_pad`` stays the GLOBAL padded cohort so every device derives
+    the identical full sampling mask); the accumulated shard moments cross
+    devices in the same single post-scan psum the dense sharded engine
+    performs.  Count resolution matches the engine the stream replaces:
+    sampled rounds go through ``_resolve_sampled_count``, full-participation
+    rounds substitute the static true client count (``set_moment_count``)
+    exactly as ``apply_round_sharded`` does.
+    """
+    sampled = cohort is not None and cohort.is_sampled
+
+    def step(w, opt_state, round_key, t, batches_and_mask, eta_l):
+        """One server round inside the compiled scan body."""
+        chunk_batches, chunk_mask = batches_and_mask
+        n_chunks, c = chunk_mask.shape
+        if axis is None:
+            shard_start = 0
+        else:
+            shard_start = jax.lax.axis_index(axis) * (n_chunks * c)
+        if sampled:
+            # full participation mask from the replicated round key — the
+            # SAME draw as the dense/sharded engines — padded with zeros and
+            # sliced to this shard's rows, then laid on the chunk grid
+            full = cohort.round_mask(round_key, m_true)
+            full = jnp.concatenate(
+                [full, jnp.zeros((m_pad - m_true,), jnp.float32)])
+            local = jax.lax.dynamic_slice(full, (shard_start,), (n_chunks * c,))
+            chunk_mask = chunk_mask * local.reshape(n_chunks, c)
+
+        def chunk_moments(j, batches_j, mask_j):
+            """Local training + release moments for chunk ``j`` of the cohort."""
+            start = shard_start + j * c
+            deltas = mask_rows(local_fn(w, batches_j, eta_l, round_key, start),
+                               mask_j)
+            return algorithm.local_moments(round_key, w, deltas, mask_j,
+                                           start, opt_state)
+
+        # zero-initialize the running moments from the chunk computation's
+        # abstract shape (no FLOPs traced): every field is an additive SUM,
+        # so zeros is the correct identity for the accumulation
+        shapes = jax.eval_shape(
+            chunk_moments, jax.ShapeDtypeStruct((), jnp.int32),
+            jax.tree_util.tree_map(
+                lambda x: jax.ShapeDtypeStruct(x.shape[1:], x.dtype),
+                chunk_batches),
+            jax.ShapeDtypeStruct((c,), chunk_mask.dtype))
+        acc0 = jax.tree_util.tree_map(
+            lambda s: jnp.zeros(s.shape, s.dtype), shapes)
+
+        def body(acc, xs):
+            """Scan body: accumulate one chunk's additive moments into the carry."""
+            j, batches_j, mask_j = xs
+            mom = chunk_moments(j, batches_j, mask_j)
+            return jax.tree_util.tree_map(jnp.add, acc, mom), None
+
+        js = jnp.arange(n_chunks, dtype=jnp.int32)
+        moments, _ = jax.lax.scan(body, acc0, (js, chunk_batches, chunk_mask))
+        if axis is not None:
+            moments = jax.lax.psum(moments, axis)
+        if sampled:
+            moments = _resolve_sampled_count(moments, cohort, algorithm)
+        elif getattr(algorithm, "supports_static_count", True):
+            # full participation: the accumulated count is exactly m_true;
+            # substituting the static constant folds the 1/M normalizations
+            # as the dense engine does (same trick as apply_round_sharded)
+            moments = set_moment_count(moments, m_true)
+        else:
+            # weighted aggregation: the count is a weight sum — keep the
+            # accumulated traced value, only guard an (impossible here)
+            # zero count
+            moments = clamp_moment_counts(moments, floor=1e-12)
+        w_next, aux, opt_state = algorithm.apply_from_moments(
+            round_key, w, moments, opt_state)
+        metric = _eval_metric(eval_fn, eval_every, w_next, t)
+        outs = (aux.eta_g, metric, aux.eta_naive, aux.eta_target)
+        return w_next, opt_state, outs
+
+    return step
+
+
+def _build_stream_chunk_fn(algorithm: ServerAlgorithm, local_fn, eval_fn,
+                           donate: bool, unroll: int, stream: StreamSpec,
+                           m_true: int, m_pad: int,
+                           eval_every: int, cohort: CohortSpec | None):
+    step_round = _stream_round_step(algorithm, local_fn, eval_fn,
+                                    m_true, m_pad, eval_every, cohort)
+
+    def chunk(carry, key, ts, chunk_batches, chunk_mask, eta_l):
+        """Compiled scan over one chunk of rounds."""
+        keys = _fold_round_keys(key, ts)
+        body = _scan_body(step_round, (chunk_batches, chunk_mask), eta_l)
+        return jax.lax.scan(body, carry, (keys, ts), unroll=min(unroll, len(ts)))
+
+    return jax.jit(chunk, donate_argnums=(0,) if donate else ())
+
+
+_cached_stream_chunk_fn = functools.lru_cache(maxsize=32)(_build_stream_chunk_fn)
+
+
+def _stream_chunk_fn(algorithm: ServerAlgorithm, local_fn, eval_fn,
+                     donate: bool, unroll: int, stream: StreamSpec,
+                     m_true: int, m_pad: int, eval_every: int = 1,
+                     cohort: CohortSpec | None = None):
+    """Compiled streaming scan chunk, cached like ``_scan_chunk_fn`` (the
+    StreamSpec and padded-cohort geometry join the key; same
+    unhashable-algorithm fallback)."""
+    try:
+        return _cached_stream_chunk_fn(algorithm, local_fn, eval_fn, donate,
+                                       unroll, stream, m_true, m_pad,
+                                       eval_every, cohort)
+    except TypeError:
+        return _build_stream_chunk_fn(algorithm, local_fn, eval_fn, donate,
+                                      unroll, stream, m_true, m_pad,
+                                      eval_every, cohort)
+
+
+def _build_sharded_stream_chunk_fn(algorithm: ServerAlgorithm, local_fn,
+                                   eval_fn, donate: bool, unroll: int,
+                                   stream: StreamSpec, mesh, axis: str,
+                                   batch_treedef, leaf_ndims,
+                                   n_chunks: int, m_true: int, m_pad: int,
+                                   eval_every: int, cohort: CohortSpec | None):
+    """Each shard streams its own slice of the chunk grid (DESIGN.md §12).
+
+    The pre-chunked leaves are (n_chunks_total, c, ...) with chunks laid out
+    so contiguous chunk blocks are contiguous client blocks; sharding the
+    leading CHUNK axis over the ``clients`` mesh therefore hands each device
+    the same client rows the dense sharded engine would, and the inner
+    scan's shard-local moments cross devices in one psum per round.
+    """
+    step_round = _stream_round_step(algorithm, local_fn, eval_fn,
+                                    m_true, m_pad, eval_every, cohort,
+                                    axis=axis)
+    rules = client_axis_rules(mesh, axis=axis)
+    specs = [logical_to_pspec(("clients",) + (None,) * (nd - 1), rules)
+             for nd in leaf_ndims]
+    batch_specs = jax.tree_util.tree_unflatten(batch_treedef, specs)
+    mask_spec = logical_to_pspec(("clients", None), rules,
+                                 dims=(n_chunks, stream.chunk_clients))
+
+    def chunk(carry, key, ts, chunk_batches, chunk_mask, eta_l):
+        """Compiled scan over one chunk of rounds."""
+        keys = _fold_round_keys(key, ts)
+        body = _scan_body(step_round, (chunk_batches, chunk_mask), eta_l)
+        return jax.lax.scan(body, carry, (keys, ts), unroll=min(unroll, len(ts)))
+
+    sharded = shard_map(
+        chunk, mesh=mesh,
+        in_specs=(P(), P(), P(), batch_specs, mask_spec, P()),
+        out_specs=P(),
+        check_rep=False)  # psum-then-replicated-update, as the dense engine
+    return jax.jit(sharded, donate_argnums=(0,) if donate else ())
+
+
+_cached_sharded_stream_chunk_fn = (
+    functools.lru_cache(maxsize=32)(_build_sharded_stream_chunk_fn))
+
+
+def _sharded_stream_chunk_fn(algorithm, local_fn, eval_fn, donate, unroll,
+                             stream, mesh, axis, batch_treedef, leaf_ndims,
+                             n_chunks, m_true, m_pad, eval_every: int = 1,
+                             cohort: CohortSpec | None = None):
+    """Compiled sharded+streamed scan chunk, cached like ``_scan_chunk_fn``."""
+    try:
+        return _cached_sharded_stream_chunk_fn(
+            algorithm, local_fn, eval_fn, donate, unroll, stream, mesh, axis,
+            batch_treedef, leaf_ndims, n_chunks, m_true, m_pad, eval_every,
+            cohort)
+    except TypeError:
+        return _build_sharded_stream_chunk_fn(
+            algorithm, local_fn, eval_fn, donate, unroll, stream, mesh, axis,
+            batch_treedef, leaf_ndims, n_chunks, m_true, m_pad, eval_every,
+            cohort)
+
+
 def _client_batch_specs(treedef, leaf_ndims, mask_len, rules):
     """PartitionSpecs for the (padded) client-batch pytree + mask, derived
     through the logical-axis layer: every leaf is ("clients", None, ...)."""
@@ -208,6 +417,7 @@ def _scan_body(step_round, client_batches, eta_l):
     round index rides along for eval cadence and diagnostics."""
 
     def body(carry, key_t):
+        """Round-scan body: one server round, w_next appended to the iterate tail."""
         round_key, t = key_t
         w, opt_state, tail = carry
         w_next, opt_state, outs = step_round(
@@ -224,6 +434,7 @@ def _build_scan_chunk_fn(algorithm: ServerAlgorithm, local_fn, eval_fn,
     step_round = _round_step(algorithm, local_fn, eval_fn, eval_every, cohort)
 
     def chunk(carry, key, ts, client_batches, eta_l):
+        """Compiled scan over one chunk of rounds."""
         keys = _fold_round_keys(key, ts)
         body = _scan_body(step_round, client_batches, eta_l)
         return jax.lax.scan(body, carry, (keys, ts), unroll=min(unroll, len(ts)))
@@ -275,6 +486,7 @@ def _build_sharded_chunk_fn(algorithm: ServerAlgorithm, local_fn, eval_fn,
                                                  mask_len, rules)
 
     def chunk(carry, key, ts, local_batches, mask, eta_l):
+        """Compiled scan over one chunk of rounds."""
         keys = _fold_round_keys(key, ts)
         body = _scan_body(step_round, (local_batches, mask), eta_l)
         return jax.lax.scan(body, carry, (keys, ts), unroll=min(unroll, len(ts)))
@@ -315,6 +527,7 @@ def _build_batched_run_fn(algorithm: ServerAlgorithm, local_fn, eval_fn,
     step_round = _round_step(algorithm, local_fn, eval_fn, eval_every, cohort)
 
     def run_one(w0, key, client_batches, eta_l, ts):
+        """Full single-seed run: scan all rounds and average the iterate tail."""
         keys = _fold_round_keys(key, ts)
         carry = (w0, algorithm.init_state(w0),
                  jnp.zeros((tail_n,) + w0.shape, w0.dtype))
@@ -349,6 +562,7 @@ def _build_sharded_batched_run_fn(algorithm: ServerAlgorithm, local_fn, eval_fn,
     mask_spec = logical_to_pspec(("clients",), rules, dims=(mask_len,))
 
     def run_one(w0, key, local_batches, mask, eta_l, ts):
+        """Full single-seed run: scan all rounds and average the iterate tail."""
         keys = _fold_round_keys(key, ts)
         carry = (w0, algorithm.init_state(w0),
                  jnp.zeros((tail_n,) + w0.shape, w0.dtype))
@@ -357,6 +571,7 @@ def _build_sharded_batched_run_fn(algorithm: ServerAlgorithm, local_fn, eval_fn,
         return (jnp.mean(tail, axis=0), w) + outs
 
     def batched(w0, keys, local_batches, mask, eta_l, ts):
+        """Vmap ``run_one`` over the seed axis inside the shard."""
         in_axes = (0 if batched_w0 else None, 0, 0 if batched_data else None,
                    None, None, None)
         return jax.vmap(run_one, in_axes=in_axes)(
@@ -413,6 +628,7 @@ def _run_eager(algorithm, local_fn, w0, client_batches, *, rounds, eta_l,
     step_round = _round_step(algorithm, local_fn, eval_fn, eval_every, cohort)
 
     def one_round(w, opt_state, round_key, t):
+        """One jitted round dispatched from the Python loop."""
         return step_round(w, opt_state, round_key, t, client_batches, eta_l)
 
     round_jit = jax.jit(one_round)

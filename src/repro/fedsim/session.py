@@ -48,9 +48,16 @@ from repro.core import accounting
 from repro.core.fedexp import ServerAlgorithm
 from repro.fedsim import server as _srv
 from repro.fedsim.flat import flatten_model
-from repro.fedsim.local import build_cohort_local_fn, pad_cohort
+from repro.fedsim.local import build_cohort_local_fn, chunk_cohort, pad_cohort
 from repro.fedsim.server import RunResult
-from repro.fedsim.specs import CohortSpec, EngineSpec, LocalSpec, ShardSpec, TrainSpec
+from repro.fedsim.specs import (
+    CohortSpec,
+    EngineSpec,
+    LocalSpec,
+    ShardSpec,
+    StreamSpec,
+    TrainSpec,
+)
 
 __all__ = ["FederatedSession"]
 
@@ -76,13 +83,43 @@ class FederatedSession:
                  engine: EngineSpec = EngineSpec(),
                  shard: ShardSpec = ShardSpec(),
                  cohort: CohortSpec = CohortSpec(),
+                 stream: StreamSpec = StreamSpec(),
                  eval_fn: Callable | None = None,
                  num_clients: int | None = None):
+        """Bind (algorithm, loss, model, client data) to declarative specs.
+
+        Args:
+          algorithm: a ``ServerAlgorithm`` (typically ``make_algorithm(...)``
+            or a ``compose_algorithm(...)`` composition).
+          loss_fn: per-client loss ``loss_fn(params, client_batch) -> scalar``
+            on the caller's parameter structure.
+          w0: initial model — any parameter pytree, or a flat (d,) vector
+            (passes through unwrapped).
+          client_batches: pytree of per-client data; every leaf carries the
+            client axis leading (axis 1 for ``run_batched(batched_data=True)``).
+          train: what to train (rounds, tau, eta_l, averaging, eval cadence).
+          local: how clients train locally (DESIGN.md §11).
+          engine: how the round loop compiles — scan / eager / stream (§8, §12).
+          shard: optional ``clients`` mesh the cohort shards over (§9).
+          cohort: per-round client sampling (§10).
+          stream: client-chunk grid of the streaming engine (§12); only
+            consulted when ``engine="stream"`` (a non-default spec under any
+            other engine raises, rather than being silently ignored).
+          eval_fn: optional metric closure ``eval_fn(params) -> scalar``.
+          num_clients: explicit cohort size, required only when the client
+            axis is not leaf axis 0 (``run_batched(batched_data=True)``).
+        """
         self.algorithm = algorithm
         self.train = train
         self.local = local
         self.engine = engine
         self.shard = shard
+        self.stream = stream
+        if engine.engine != "stream" and stream != StreamSpec():
+            raise ValueError(
+                "a non-default StreamSpec requires engine='stream' "
+                "(EngineSpec(engine='stream')); it would be silently "
+                f"ignored under engine={engine.engine!r}")
         # normalize full participation to None so unsampled sessions share
         # compile-cache entries with pre-cohort callers (and with each other
         # regardless of how "no sampling" was spelled)
@@ -133,6 +170,7 @@ class FederatedSession:
 
     @property
     def dim(self) -> int:
+        """Flat model dimension d (after any pytree ravel)."""
         return self._w0.shape[-1]
 
     def _tail_n(self) -> int:
@@ -152,6 +190,32 @@ class FederatedSession:
     def _chunk_callable(self, donate: bool):
         """The compiled chunk program + the extra positional args it takes."""
         t, e, s = self.train, self.engine, self.shard
+        if e.engine == "stream":
+            n_shards = 1 if s.mesh is None else s.mesh.shape[s.client_axis]
+            # cap the chunk at the cohort size: chunk >= M is the one-chunk
+            # degenerate grid either way, and normalizing the spec keeps a
+            # small cohort from being padded up to a large default chunk
+            # (and lets all such sessions share one compiled program)
+            stream = StreamSpec(chunk_clients=min(self.stream.chunk_clients,
+                                                  max(1, self.num_clients)))
+            batches, mask = chunk_cohort(self.client_batches,
+                                         stream.chunk_clients,
+                                         n_shards=n_shards)
+            n_chunks = mask.shape[0]
+            m_pad = n_chunks * stream.chunk_clients
+            if s.mesh is None:
+                fn = _srv._stream_chunk_fn(
+                    self.algorithm, self._local_fn, self.eval_fn, donate,
+                    e.scan_unroll, stream, self.num_clients, m_pad,
+                    t.eval_every, self.cohort)
+                return fn, batches, (mask,)
+            leaves, treedef = jax.tree_util.tree_flatten(batches)
+            fn = _srv._sharded_stream_chunk_fn(
+                self.algorithm, self._local_fn, self.eval_fn, donate,
+                e.scan_unroll, stream, s.mesh, s.client_axis, treedef,
+                tuple(x.ndim for x in leaves), n_chunks, self.num_clients,
+                m_pad, t.eval_every, self.cohort)
+            return fn, batches, (mask,)
         if s.mesh is not None:
             m_true = self.num_clients
             batches, mask = pad_cohort(self.client_batches,
@@ -275,9 +339,12 @@ class FederatedSession:
         is always one full-length scan program (``chunk_rounds`` /
         ``scan_unroll`` do not apply); it has no eager counterpart.
         """
-        if self.engine.engine == "eager":
-            raise ValueError("run_batched has no eager engine; use "
-                             "engine='scan' (the default) or loop run()")
+        if self.engine.engine != "scan":
+            raise ValueError(
+                f"run_batched has no {self.engine.engine!r} engine; use "
+                "engine='scan' (the default) or loop run() — the streaming "
+                "engine targets large M, where a seed sweep belongs in the "
+                "outer loop anyway")
         if batched_w0 and self._unravel is not None:
             raise ValueError(
                 "batched_w0 with a pytree model is ambiguous (the seed axis "

@@ -9,7 +9,10 @@ axis of a run:
     LocalSpec   how clients train locally: full-batch GD (default) or
                 minibatch SGD with local epochs, plus FedProx proximal pull
                 and client momentum (DESIGN.md §11)
-    EngineSpec  how to compile it: scan vs eager, chunking, unroll, donation
+    EngineSpec  how to compile it: scan vs eager vs stream, chunking,
+                unroll, donation
+    StreamSpec  how big a client chunk the streaming engine materializes at
+                once (DESIGN.md §12)
     ShardSpec   where it runs: optional ``clients`` mesh (DESIGN.md §9)
     CohortSpec  who participates: per-round client sampling (Bernoulli or
                 fixed-size, with/without replacement)
@@ -39,8 +42,8 @@ import dataclasses
 import jax
 import jax.numpy as jnp
 
-__all__ = ["TrainSpec", "LocalSpec", "EngineSpec", "ShardSpec", "CohortSpec",
-           "SAMPLING_TAG", "LOCAL_TRAIN_TAG"]
+__all__ = ["TrainSpec", "LocalSpec", "EngineSpec", "StreamSpec", "ShardSpec",
+           "CohortSpec", "SAMPLING_TAG", "LOCAL_TRAIN_TAG"]
 
 # fold_in tag deriving the per-round sampling key from the round key.  Client
 # randomization folds the GLOBAL CLIENT INDEX (0..M-1) into the same round
@@ -129,20 +132,65 @@ class LocalSpec:
 
 @dataclasses.dataclass(frozen=True)
 class EngineSpec:
-    """How to compile the round loop (DESIGN.md §8)."""
+    """How to compile the round loop (DESIGN.md §8, §12).
 
-    engine: str = "scan"            # "scan" (chunked lax.scan) | "eager"
+    ``engine`` selects one of three round-loop compilations:
+
+    * ``"scan"`` — the default: T rounds as chunked ``jax.lax.scan``
+      programs, every client's update materialized at once (O(M·d) peak).
+    * ``"eager"`` — one jitted XLA program per round, dispatched from a
+      Python loop (the legacy baseline).
+    * ``"stream"`` — the §12 streaming cohort engine: inside each round an
+      inner ``lax.scan`` iterates the cohort in ``StreamSpec.chunk_clients``
+      sized chunks and accumulates the additive ``RoundMoments`` carry, so
+      peak update memory is O(chunk_clients·d) instead of O(M·d).
+    """
+
+    engine: str = "scan"            # "scan" | "eager" | "stream" (§12)
     chunk_rounds: int | None = None  # rounds per compiled chunk (None = all)
     scan_unroll: int = 2            # rounds unrolled per scan-loop trip
     donate: bool | None = None      # donate the carry; None = auto (tpu/gpu)
 
     def __post_init__(self):
-        if self.engine not in ("scan", "eager"):
-            raise ValueError(f"unknown engine {self.engine!r}; use 'scan' or 'eager'")
+        if self.engine not in ("scan", "eager", "stream"):
+            raise ValueError(f"unknown engine {self.engine!r}; "
+                             "use 'scan', 'eager', or 'stream'")
         if self.chunk_rounds is not None and self.chunk_rounds < 1:
             raise ValueError(f"chunk_rounds must be >= 1, got {self.chunk_rounds}")
         if self.scan_unroll < 1:
             raise ValueError(f"scan_unroll must be >= 1, got {self.scan_unroll}")
+
+
+@dataclasses.dataclass(frozen=True)
+class StreamSpec:
+    """Client-chunk grid of the streaming cohort engine (DESIGN.md §12).
+
+    With ``EngineSpec(engine="stream")`` each round iterates the cohort in
+    ``chunk_clients``-sized chunks via an inner ``lax.scan``: local training
+    and the per-client release see one (chunk_clients, d) block at a time,
+    and only the O(d) additive ``RoundMoments`` (plus the PrivUnit /
+    adaptive-clip extras) accumulate across chunks.  Peak update-matrix
+    memory is ``chunk_clients * d`` floats — independent of the cohort size
+    M, which is what makes million-client rounds fit on one device.
+
+    The cohort is padded to a multiple of ``chunk_clients`` (times the shard
+    count under §9 sharding) with zero-weight clients; all per-client
+    randomness is keyed by GLOBAL client index, so the streamed release is
+    the same randomization the dense engine draws.  ``chunk_clients >= M``
+    degenerates to a single chunk — the dense moments computation exactly.
+
+    Attributes:
+      chunk_clients: clients materialized per inner-scan step (>= 1).  Pick
+        the largest chunk whose (chunk_clients, d) update block fits memory;
+        see docs/scaling.md for the sizing playbook.
+    """
+
+    chunk_clients: int = 1024
+
+    def __post_init__(self):
+        if self.chunk_clients < 1:
+            raise ValueError(
+                f"chunk_clients must be >= 1, got {self.chunk_clients}")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -184,6 +232,7 @@ class CohortSpec:
 
     @property
     def is_sampled(self) -> bool:
+        """True when this spec actually subsamples (q < 1 or fixed size)."""
         return self.q < 1.0 or self.size is not None
 
     def sampling_rate(self, num_clients: int) -> float:

@@ -20,7 +20,8 @@ from repro.kernels.dp_aggregate.kernel import (
 )
 from repro.kernels.dp_aggregate.ref import dp_aggregate_ref
 
-__all__ = ["dp_aggregate", "dp_aggregate_sums", "generate_ldp_noise", "pick_block_m"]
+__all__ = ["dp_aggregate", "dp_aggregate_sums", "dp_aggregate_sums_chunked",
+           "generate_ldp_noise", "pick_block_m"]
 
 # VMEM budget per input tile on TPU (bytes); conservative vs the ~16 MB arena
 # since the kernel holds the tile plus a handful of same-shape temporaries.
@@ -160,6 +161,70 @@ def dp_aggregate_sums(
     return _impl(updates, noise, jnp.asarray(clip_norm, jnp.float32),
                  jnp.float32(0.0), jnp.int32(0), use_ref, interpret,
                  block_m, False)
+
+
+def dp_aggregate_sums_chunked(
+    updates: jax.Array,
+    clip_norm,
+    noise: jax.Array | None = None,
+    *,
+    chunk_m: int,
+    use_ref: bool = False,
+    interpret: bool | None = None,
+    block_m: int | None = None,
+) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """``dp_aggregate_sums`` accumulated over row chunks (DESIGN.md §12).
+
+    Reduces the (M, d) update matrix ``chunk_m`` rows at a time — one kernel
+    launch per chunk inside a ``lax.scan`` — and adds the three partial sums
+    into an O(d) carry.  The kernel's working set (its padded input copy and
+    VMEM tiles) is bounded by ``chunk_m * d`` instead of ``M * d``, which is
+    what the streaming cohort engine needs from the kernel layer when a
+    round's cohort is too large to stage densely.  In-kernel noise
+    generation is excluded exactly as in ``dp_aggregate_sums``: the kernel
+    seed derivation is chunk-oblivious, so every chunk would repeat the same
+    noise block — materialize per-client rows keyed by global index instead
+    (``repro.core.aggregation.materialize_ldp_noise``).
+
+    Args:
+      updates: (M, d) raw client updates; M must be a multiple of
+        ``chunk_m`` (the engine's chunk grid guarantees this — pad with
+        zero-weight rows otherwise).
+      clip_norm: clip threshold C (python float or traced scalar).
+      noise: optional (M, d) pre-materialized per-client noise.
+      chunk_m: rows per kernel launch (>= 1).
+      use_ref / interpret / block_m: forwarded to each chunk's reduction.
+
+    Returns:
+      ``(sum_c, sum_sq_released, sum_sq_clipped)`` raw SUMS over all M rows
+      — the dense entry's values re-associated at chunk boundaries only.
+    """
+    m, d = updates.shape
+    if chunk_m < 1:
+        raise ValueError(f"chunk_m must be >= 1, got {chunk_m}")
+    chunk_m = min(chunk_m, m)
+    if m % chunk_m:
+        raise ValueError(
+            f"M={m} is not a multiple of chunk_m={chunk_m}; pad the cohort "
+            "to the chunk grid first (zero-weight rows contribute nothing)")
+    n_chunks = m // chunk_m
+    interpret, block_m = _resolve_defaults(chunk_m, d, interpret, block_m)
+    clip = jnp.asarray(clip_norm, jnp.float32)
+
+    xs = {"u": updates.reshape(n_chunks, chunk_m, d)}
+    if noise is not None:
+        xs["noise"] = noise.reshape(n_chunks, chunk_m, d)
+
+    def body(acc, chunk):
+        s, sq_rel, sq_clip = _impl(
+            chunk["u"], chunk.get("noise"), clip, jnp.float32(0.0),
+            jnp.int32(0), use_ref, interpret, block_m, False)
+        a_s, a_rel, a_clip = acc
+        return (a_s + s, a_rel + sq_rel, a_clip + sq_clip), None
+
+    zero = (jnp.zeros((d,), jnp.float32), jnp.float32(0.0), jnp.float32(0.0))
+    (s, sq_rel, sq_clip), _ = jax.lax.scan(body, zero, xs)
+    return s, sq_rel, sq_clip
 
 
 def generate_ldp_noise(

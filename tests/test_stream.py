@@ -1,0 +1,384 @@
+"""Streaming cohort engine equivalence (DESIGN.md §12).
+
+``engine="stream"`` must be the SAME algorithm as the dense scan engine for
+every registered algorithm: the inner chunk scan re-associates the additive
+moment sums at chunk boundaries (allclose, rtol 1e-5; bit-exact when one
+chunk covers the cohort, because the computation degenerates to the dense
+moments path), but all randomness — per-client LDP noise rows and PrivUnit
+keys (global-index fold_in), the sampling mask, post-reduction CDP noise and
+xi (replicated round key), adaptive-clip bit noise — derives identically.
+
+Coverage demanded by the §12 contract: all registry algorithms plus the §11
+cross-products, M % chunk_clients != 0 (ragged grid → zero-weight padding),
+sampled cohorts whose chunks can be entirely empty, sharded+streamed (each
+shard streams its slice; runs 1- and 8-device under the CI matrix), and
+kill/resume mid-run through the checkpoint machinery.
+"""
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.aggregation import (
+    materialize_ldp_noise,
+    partial_clip_moments,
+    streamed_clip_moments,
+)
+from repro.core.compose import (
+    FedEXPStep,
+    GaussianLDP,
+    WeightedAggregation,
+    compose_algorithm,
+)
+from repro.core.fedexp import make_algorithm
+from repro.data.synthetic import linreg_loss, make_synthetic_linreg
+from repro.fedsim import (
+    CohortSpec,
+    EngineSpec,
+    FederatedSession,
+    LocalSpec,
+    ShardSpec,
+    StreamSpec,
+    TrainSpec,
+    chunk_cohort,
+)
+from repro.kernels.dp_aggregate.ops import (
+    dp_aggregate_sums,
+    dp_aggregate_sums_chunked,
+)
+from repro.launch.mesh import make_client_mesh
+
+# M deliberately not divisible by the 16-client chunk (44 % 16 = 12): every
+# parity test exercises the ragged tail of the chunk grid.
+M, D, TAU, ETA_L, ROUNDS, CHUNK = 44, 24, 2, 0.1, 4, 16
+
+ALG_KWARGS = {
+    "fedavg": {},
+    "fedexp": {},
+    "dp-fedavg-ldp-gauss": dict(clip_norm=0.3, sigma=0.21),
+    "ldp-fedexp-gauss": dict(clip_norm=0.3, sigma=0.21),
+    "dp-fedavg-privunit": dict(clip_norm=0.3, eps0=2.0, eps1=2.0, eps2=2.0, dim=D),
+    "ldp-fedexp-privunit": dict(clip_norm=0.3, eps0=2.0, eps1=2.0, eps2=2.0, dim=D),
+    "dp-fedavg-cdp": dict(clip_norm=0.3, sigma=0.2, num_clients=M),
+    "cdp-fedexp": dict(clip_norm=0.3, sigma=0.2, num_clients=M),
+    "dp-fedadam-cdp": dict(clip_norm=0.3, sigma=0.2, num_clients=M, server_lr=0.05),
+    "cdp-fedexp-adaptive-clip": dict(z_mult=0.5, num_clients=M, dim=D),
+    # §11 cross-products (no monolithic counterpart)
+    "ldp-gauss-fedadam": dict(clip_norm=0.3, sigma=0.21, server_lr=0.05),
+    "cdp-fedmom": dict(clip_norm=0.3, sigma=0.2, num_clients=M),
+    "privunit-fedexp-adaptive-clip": dict(eps0=2.0, eps1=2.0, eps2=2.0, dim=D,
+                                          c0=0.5),
+}
+
+KEY = jax.random.PRNGKey(11)
+
+
+@pytest.fixture(scope="module")
+def problem():
+    data = make_synthetic_linreg(jax.random.PRNGKey(3), M, D)
+    return data.client_batches(), jnp.zeros(D)
+
+
+def _session(problem, name, *, engine=None, stream=None, cohort=None,
+             shard=None, local=None, rounds=ROUNDS):
+    batches, w0 = problem
+    kw = {}
+    if engine is not None:
+        kw["engine"] = engine
+    if stream is not None:
+        kw["stream"] = stream
+    if cohort is not None:
+        kw["cohort"] = cohort
+    if shard is not None:
+        kw["shard"] = shard
+    if local is not None:
+        kw["local"] = local
+    alg = make_algorithm(name, **ALG_KWARGS[name])
+    return FederatedSession(alg, linreg_loss, w0, batches,
+                            train=TrainSpec(rounds=rounds, tau=TAU, eta_l=ETA_L),
+                            **kw)
+
+
+def _stream_spec(chunk=CHUNK):
+    return dict(engine=EngineSpec(engine="stream"),
+                stream=StreamSpec(chunk_clients=chunk))
+
+
+def _assert_runs_close(a, b, rtol=1e-5, atol=1e-6):
+    np.testing.assert_allclose(np.asarray(a.final_w), np.asarray(b.final_w),
+                               rtol=rtol, atol=atol)
+    np.testing.assert_allclose(np.asarray(a.last_w), np.asarray(b.last_w),
+                               rtol=rtol, atol=atol)
+    np.testing.assert_allclose(np.asarray(a.eta_history),
+                               np.asarray(b.eta_history),
+                               rtol=rtol, atol=atol)
+
+
+class TestStreamEquivalence:
+    @pytest.mark.parametrize("name", sorted(ALG_KWARGS))
+    def test_stream_matches_dense(self, problem, name):
+        """All registry algorithms + §11 cross-products, ragged chunk grid."""
+        dense = _session(problem, name).run(KEY)
+        stream = _session(problem, name, **_stream_spec()).run(KEY)
+        _assert_runs_close(stream, dense)
+
+    def test_single_chunk_is_bit_exact_on_moments_path(self, problem):
+        """chunk_clients >= M degenerates to ONE chunk: on the sampled round
+        path (dense also routes through local_moments there) the streamed
+        computation is the identical program — bit-for-bit, not just close."""
+        cohort = CohortSpec(size=9)
+        dense = _session(problem, "ldp-fedexp-gauss", cohort=cohort).run(KEY)
+        stream = _session(problem, "ldp-fedexp-gauss", cohort=cohort,
+                          **_stream_spec(chunk=64)).run(KEY)
+        np.testing.assert_array_equal(np.asarray(stream.final_w),
+                                      np.asarray(dense.final_w))
+        np.testing.assert_array_equal(np.asarray(stream.eta_history),
+                                      np.asarray(dense.eta_history))
+
+    def test_weighted_aggregation_streams(self, problem):
+        """Per-client weights slice by GLOBAL index inside every chunk, and
+        the weight-sum count stays traced (no static substitution)."""
+        batches, w0 = problem
+        alg = compose_algorithm(
+            GaussianLDP(0.3, 0.21), FedEXPStep(),
+            WeightedAggregation(weights=tuple(float(i % 3 + 1)
+                                              for i in range(M))))
+        train = TrainSpec(rounds=ROUNDS, tau=TAU, eta_l=ETA_L)
+        dense = FederatedSession(alg, linreg_loss, w0, batches,
+                                 train=train).run(KEY)
+        stream = FederatedSession(alg, linreg_loss, w0, batches, train=train,
+                                  **_stream_spec()).run(KEY)
+        _assert_runs_close(stream, dense)
+
+    def test_localspec_trainer_streams(self):
+        """Minibatch/momentum clients shuffle by GLOBAL client index, so the
+        spec trainer is chunk-position-independent."""
+        samples = jax.random.normal(jax.random.PRNGKey(7), (M, 16, D))
+
+        def sample_loss(w, b):
+            return 0.5 * jnp.mean(jnp.sum(jnp.square(w - b), -1))
+
+        w0 = jnp.zeros(D)
+        alg = make_algorithm("ldp-fedexp-gauss", clip_norm=0.3, sigma=0.21)
+        train = TrainSpec(rounds=ROUNDS, tau=TAU, eta_l=ETA_L)
+        local = LocalSpec(batch_size=4, epochs=2, momentum=0.5)
+        dense = FederatedSession(alg, sample_loss, w0, samples, train=train,
+                                 local=local).run(KEY)
+        stream = FederatedSession(alg, sample_loss, w0, samples, train=train,
+                                  local=local, **_stream_spec()).run(KEY)
+        _assert_runs_close(stream, dense)
+
+    def test_pytree_model_streams(self):
+        """Pytree params ravel once at the session boundary; the chunk grid
+        only ever sees the flat vectors."""
+        params = {"W": jnp.zeros((4, 3)), "b": jnp.zeros(3)}
+        batches = {"x": jax.random.normal(jax.random.PRNGKey(0), (M, 8, 4)),
+                   "y": jax.random.normal(jax.random.PRNGKey(1), (M, 8, 3))}
+
+        def loss(p, b):
+            err = b["x"] @ p["W"] + p["b"] - b["y"]
+            return 0.5 * jnp.mean(jnp.sum(err ** 2, -1))
+
+        alg = make_algorithm("cdp-fedexp", clip_norm=0.3, sigma=0.05,
+                             num_clients=M)
+        train = TrainSpec(rounds=ROUNDS, tau=TAU, eta_l=ETA_L)
+        dense = FederatedSession(alg, loss, params, batches, train=train).run(KEY)
+        stream = FederatedSession(alg, loss, params, batches, train=train,
+                                  **_stream_spec()).run(KEY)
+        np.testing.assert_allclose(np.asarray(stream.final_w["W"]),
+                                   np.asarray(dense.final_w["W"]),
+                                   rtol=1e-5, atol=1e-6)
+        np.testing.assert_allclose(np.asarray(stream.final_w["b"]),
+                                   np.asarray(dense.final_w["b"]),
+                                   rtol=1e-5, atol=1e-6)
+
+
+class TestStreamSampling:
+    @pytest.mark.parametrize("cohort", [
+        CohortSpec(q=0.3),                  # Bernoulli, can empty a chunk
+        CohortSpec(size=5),                 # 5 of 44: most chunks are empty
+        CohortSpec(size=5, replace=True),   # multiplicity-weighted
+    ], ids=["bernoulli", "fixed", "with-replacement"])
+    def test_sampled_stream_matches_dense(self, problem, cohort):
+        dense = _session(problem, "ldp-fedexp-gauss", cohort=cohort).run(KEY)
+        stream = _session(problem, "ldp-fedexp-gauss", cohort=cohort,
+                          **_stream_spec()).run(KEY)
+        _assert_runs_close(stream, dense)
+        assert np.all(np.isfinite(np.asarray(stream.final_w)))
+
+    def test_empty_round_is_finite(self, problem):
+        """A Bernoulli round that samples nobody leaves every chunk empty;
+        the clamped count turns the round into a no-op, never NaN."""
+        cohort = CohortSpec(q=0.01)
+        stream = _session(problem, "cdp-fedexp", cohort=cohort,
+                          **_stream_spec(), rounds=8).run(KEY)
+        assert np.all(np.isfinite(np.asarray(stream.final_w)))
+        assert np.all(np.isfinite(np.asarray(stream.eta_history)))
+
+
+class TestStreamSharded:
+    """Each shard streams its own slice (1 device locally, 8 on the CI leg)."""
+
+    @pytest.fixture(scope="class")
+    def mesh(self):
+        return make_client_mesh()
+
+    @pytest.mark.parametrize("name", ["ldp-fedexp-gauss", "cdp-fedexp",
+                                      "cdp-fedexp-adaptive-clip",
+                                      "ldp-fedexp-privunit"])
+    def test_sharded_stream_matches_dense(self, problem, mesh, name):
+        dense = _session(problem, name).run(KEY)
+        stream = _session(problem, name, shard=ShardSpec(mesh=mesh),
+                          **_stream_spec()).run(KEY)
+        _assert_runs_close(stream, dense)
+
+    def test_sharded_sampled_stream(self, problem, mesh):
+        """Sampling masks derive from the replicated round key: sharded,
+        streamed, AND sampled still sees the dense engine's exact cohort."""
+        cohort = CohortSpec(q=0.4)
+        dense = _session(problem, "ldp-fedexp-gauss", cohort=cohort).run(KEY)
+        stream = _session(problem, "ldp-fedexp-gauss", cohort=cohort,
+                          shard=ShardSpec(mesh=mesh), **_stream_spec()).run(KEY)
+        _assert_runs_close(stream, dense)
+
+
+class TestStreamResume:
+    def test_kill_resume_bit_exact(self, problem):
+        """Streamed runs checkpoint/resume through the same carry machinery:
+        resuming a killed run reproduces the uninterrupted run bit-for-bit
+        (same chunk grids, same fold_in(key, t) round keys)."""
+        batches, w0 = problem
+        alg = make_algorithm("cdp-fedexp-adaptive-clip", **ALG_KWARGS[
+            "cdp-fedexp-adaptive-clip"])
+
+        def session(rounds):
+            return FederatedSession(
+                alg, linreg_loss, w0, batches,
+                train=TrainSpec(rounds=rounds, tau=TAU, eta_l=ETA_L),
+                **_stream_spec())
+
+        with tempfile.TemporaryDirectory() as tmp:
+            full = session(ROUNDS).run(KEY, checkpoint_dir=tmp + "/full",
+                                       checkpoint_every=2)
+            session(2).run(KEY, checkpoint_dir=tmp + "/killed",
+                           checkpoint_every=2)  # "killed" after round 2
+            resumed = session(ROUNDS).resume(tmp + "/killed")
+        np.testing.assert_array_equal(np.asarray(resumed.final_w),
+                                      np.asarray(full.final_w))
+        np.testing.assert_array_equal(np.asarray(resumed.eta_history),
+                                      np.asarray(full.eta_history))
+
+
+class TestStreamSpecValidation:
+    def test_chunk_grid_shapes(self, problem):
+        batches, _ = problem
+        grid, mask = chunk_cohort(batches, CHUNK)
+        n_chunks = -(-M // CHUNK)
+        leaves = jax.tree_util.tree_leaves(grid)
+        assert mask.shape == (n_chunks, CHUNK)
+        assert all(x.shape[:2] == (n_chunks, CHUNK) for x in leaves)
+        assert float(jnp.sum(mask)) == M  # padding rows are zero-weight
+        flat = mask.reshape(-1)
+        np.testing.assert_array_equal(np.asarray(flat[:M]), 1.0)
+        np.testing.assert_array_equal(np.asarray(flat[M:]), 0.0)
+
+    def test_chunk_grid_divides_by_shards(self, problem):
+        batches, _ = problem
+        _, mask = chunk_cohort(batches, 16, n_shards=4)
+        assert mask.size % (16 * 4) == 0
+
+    def test_stream_spec_validates(self):
+        with pytest.raises(ValueError):
+            StreamSpec(chunk_clients=0)
+        with pytest.raises(ValueError):
+            EngineSpec(engine="streaming")  # only "stream" is the §12 engine
+
+    def test_non_stream_engine_rejects_stream_spec(self, problem):
+        batches, w0 = problem
+        alg = make_algorithm("fedavg")
+        with pytest.raises(ValueError, match="engine='stream'"):
+            FederatedSession(alg, linreg_loss, w0, batches,
+                             train=TrainSpec(rounds=2, tau=1, eta_l=0.1),
+                             stream=StreamSpec(chunk_clients=8))
+
+    def test_run_batched_rejects_stream(self, problem):
+        batches, w0 = problem
+        alg = make_algorithm("fedavg")
+        session = FederatedSession(alg, linreg_loss, w0, batches,
+                                   train=TrainSpec(rounds=2, tau=1, eta_l=0.1),
+                                   engine=EngineSpec(engine="stream"))
+        with pytest.raises(ValueError, match="run_batched"):
+            session.run_batched(jnp.stack([KEY, KEY]))
+
+
+class TestChunkedAggregation:
+    """The chunked reduction entry points under the engine (DESIGN.md §12)."""
+
+    def setup_method(self):
+        self.u = jax.random.normal(jax.random.PRNGKey(0), (M, D))
+        self.noise = materialize_ldp_noise(jax.random.PRNGKey(1), M, D, 0.2)
+        self.mask = jax.random.bernoulli(
+            jax.random.PRNGKey(2), 0.6, (M,)).astype(jnp.float32)
+
+    @pytest.mark.parametrize("chunk", [7, 16, M, 100])
+    def test_streamed_clip_moments_matches_dense(self, chunk):
+        dense = partial_clip_moments(self.u, 0.3, self.noise,
+                                     weight_mask=self.mask)
+        s = streamed_clip_moments(self.u, 0.3, self.noise,
+                                  chunk_clients=chunk, weight_mask=self.mask)
+        np.testing.assert_allclose(np.asarray(s.sum_c), np.asarray(dense.sum_c),
+                                   rtol=1e-5, atol=1e-6)
+        np.testing.assert_allclose(float(s.sum_sq), float(dense.sum_sq),
+                                   rtol=1e-5)
+        np.testing.assert_allclose(float(s.sum_sq_clipped),
+                                   float(dense.sum_sq_clipped), rtol=1e-5)
+        assert float(s.count) == float(dense.count)
+
+    def test_streamed_clip_moments_weighted(self):
+        w = jnp.arange(1.0, M + 1.0)
+        dense = partial_clip_moments(self.u, 0.3, None, weight_mask=self.mask,
+                                     row_weights=w)
+        s = streamed_clip_moments(self.u, 0.3, None, chunk_clients=10,
+                                  weight_mask=self.mask, row_weights=w)
+        np.testing.assert_allclose(np.asarray(s.sum_c), np.asarray(dense.sum_c),
+                                   rtol=1e-5, atol=1e-5)
+        np.testing.assert_allclose(float(s.count), float(dense.count),
+                                   rtol=1e-6)
+
+    def test_streamed_unmasked_static_count(self):
+        s = streamed_clip_moments(self.u, 0.3, None, chunk_clients=11)
+        assert float(s.count) == M
+
+    def test_kernel_sums_chunked_matches_dense(self):
+        dense = dp_aggregate_sums(self.u, 0.3, self.noise)
+        chunked = dp_aggregate_sums_chunked(self.u, 0.3, self.noise,
+                                            chunk_m=11)
+        for a, b in zip(chunked, dense):
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                       rtol=2e-5, atol=1e-6)
+
+    def test_kernel_sums_chunked_rejects_ragged(self):
+        with pytest.raises(ValueError, match="multiple of chunk_m"):
+            dp_aggregate_sums_chunked(self.u, 0.3, None, chunk_m=13)
+
+
+class TestStreamScalesPastDense:
+    def test_large_cohort_small_chunk(self):
+        """A cohort far bigger than the chunk completes with chunk-bounded
+        update memory and matches the dense engine on the same geometry."""
+        m, d, chunk = 3000, 32, 256
+        targets = jax.random.normal(jax.random.PRNGKey(5), (m, d))
+
+        def quad_loss(w, b):
+            return 0.5 * jnp.sum(jnp.square(w - b))
+
+        alg = make_algorithm("ldp-fedexp-gauss", clip_norm=0.3, sigma=0.21)
+        train = TrainSpec(rounds=2, tau=1, eta_l=0.5)
+        w0 = jnp.zeros(d)
+        dense = FederatedSession(alg, quad_loss, w0, targets,
+                                 train=train).run(KEY)
+        stream = FederatedSession(alg, quad_loss, w0, targets, train=train,
+                                  **_stream_spec(chunk=chunk)).run(KEY)
+        _assert_runs_close(stream, dense, rtol=1e-5, atol=1e-5)

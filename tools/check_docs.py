@@ -1,0 +1,81 @@
+"""Docs cross-reference checker: every link and §-reference must resolve.
+
+    python tools/check_docs.py          # from the repo root
+    make docs-check
+
+Scans the repo-root markdown files plus everything under ``docs/`` and
+fails (exit 1) when:
+
+* a relative markdown link ``[text](path)`` points at a file that does not
+  exist (external ``http(s)://`` / ``mailto:`` targets are skipped, and a
+  ``#fragment`` suffix is ignored for existence purposes);
+* a ``§N`` section reference (e.g. ``DESIGN.md §12``, ``§9 sharding``, the
+  range ``§1–§12``) names a section with no matching ``## §N`` heading in
+  DESIGN.md — the one file that owns § numbering.  Dotted paper-section
+  references like ``§3.2`` resolve through their integer part, which is how
+  the docs use them.
+
+Pure stdlib so it runs in every CI leg with zero extra dependencies.
+"""
+from __future__ import annotations
+
+import pathlib
+import re
+import sys
+
+# [text](target) — excluding images is unnecessary (we have none), but the
+# negative lookbehind keeps badge-style ![...](...) out just in case
+LINK_RE = re.compile(r"(?<!\!)\[[^\]]+\]\(([^)\s]+)\)")
+SECTION_RE = re.compile(r"§(\d+)")
+HEADING_RE = re.compile(r"^##\s+§(\d+)\b", re.MULTILINE)
+
+
+def _doc_files(root: pathlib.Path) -> list[pathlib.Path]:
+    files = sorted(root.glob("*.md"))
+    files += sorted((root / "docs").glob("**/*.md"))
+    return [f for f in files if f.is_file()]
+
+
+def check(root: pathlib.Path) -> list[str]:
+    """Return a list of human-readable failures (empty = all good)."""
+    failures: list[str] = []
+    design = root / "DESIGN.md"
+    headings: set[int] = set()
+    if design.is_file():
+        headings = {int(m) for m in HEADING_RE.findall(design.read_text())}
+    else:
+        failures.append("DESIGN.md missing — § references cannot resolve")
+
+    for f in _doc_files(root):
+        text = f.read_text()
+        rel = f.relative_to(root)
+        for target in LINK_RE.findall(text):
+            if target.startswith(("http://", "https://", "mailto:", "#")):
+                continue
+            path = (f.parent / target.split("#", 1)[0]).resolve()
+            if not path.exists():
+                failures.append(f"{rel}: broken link -> {target}")
+        for sec in SECTION_RE.findall(text):
+            if int(sec) not in headings:
+                failures.append(
+                    f"{rel}: §{sec} has no '## §{sec}' heading in DESIGN.md")
+    return failures
+
+
+def main() -> int:
+    """CLI entry point: check the repo this script lives in."""
+    root = pathlib.Path(__file__).resolve().parent.parent
+    failures = check(root)
+    for msg in failures:
+        print(f"FAIL {msg}")
+    if failures:
+        print(f"FAIL docs link check: {len(failures)} unresolved reference(s)")
+        return 1
+    n = len(_doc_files(root))
+    print(f"OK  docs link check: {n} markdown files, all links and "
+          "§ references resolve")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
