@@ -23,6 +23,11 @@ itself such a shift: per-device slice size flipped the sharding ratio), so
 on a config mismatch the ratio threshold relaxes to 2x the configured one —
 strict within a machine class, tolerant across classes, never ungated.
 
+A PARTIAL fresh run (``e7 --only <workload> ...``) emits only the sections
+that ran; the gate checks whatever metrics are present in both files and
+SKIPs the rest, so a targeted single-workload rerun can still be gated
+without re-benching everything.
+
 The committed baseline should be refreshed (copy a CI artifact or rerun
 ``make bench-quick`` on the reference box) whenever a PR intentionally
 changes engine throughput.
@@ -43,6 +48,7 @@ RATIO_KEYS = (
     ("sampled_cohort", "relative_to_full"),
     ("local_sgd", "relative_to_full"),
     ("streaming", "relative_to_dense"),
+    ("faults", "relative_to_clean"),
 )
 # gated only when the run configs match: absolute throughputs
 ABS_KEYS = (
@@ -51,6 +57,7 @@ ABS_KEYS = (
     ("sampled_cohort", "rounds_per_sec"),
     ("local_sgd", "rounds_per_sec"),
     ("streaming", "rounds_per_sec"),
+    ("faults", "rounds_per_sec"),
 )
 
 
@@ -107,12 +114,19 @@ def main(argv=None) -> int:
         print(f"NOTE config mismatch vs baseline ({base.get('config')} != "
               f"{fresh.get('config')}); gating ratio metrics only, at the "
               f"relaxed cross-machine-class threshold -{ratio_threshold:.0%}")
+    # a partial run (e7 --only <workload>) emits only the sections that ran;
+    # the missing metrics SKIP below rather than failing the gate
+    if fresh.get("partial"):
+        print(f"NOTE partial fresh run (workloads not run: "
+              f"{', '.join(fresh['partial'])}); gating present metrics only")
 
     failed = []
+    gated = 0
     for name, b, f in checks:
         if b is None or f is None or not isinstance(b, (int, float)) or b <= 0:
             print(f"SKIP {name}: missing/invalid in baseline or fresh run")
             continue
+        gated += 1
         is_ratio = tuple(name.split(".")) in RATIO_KEYS
         threshold = ratio_threshold if is_ratio else args.threshold
         drop = (b - f) / b
@@ -126,7 +140,12 @@ def main(argv=None) -> int:
         print(f"FAIL benchmark regression gate ({base_src}): {', '.join(failed)} "
               f"regressed more than {args.threshold:.0%}")
         return 1
-    print("OK  benchmark regression gate passed")
+    if gated == 0:
+        print("OK  benchmark regression gate passed vacuously (no metric "
+              "present in both baseline and fresh run — partial run against "
+              "an older baseline?)")
+        return 0
+    print(f"OK  benchmark regression gate passed ({gated} metric(s) gated)")
     return 0
 
 

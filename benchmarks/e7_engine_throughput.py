@@ -51,6 +51,17 @@ the simulation hot path.  Three comparisons (DESIGN.md §8):
      the stream engine vs M*d*4 dense, the O(M·d) → O(c·d) memory model
      that makes cohorts bigger than device memory feasible at all.
 
+  8. Fault injection (DESIGN.md §13): rounds/sec of a faulty round (30%
+     dropout + 20% stragglers + 2% corrupted updates through the
+     masked-moment fault path) vs the clean engine at the same geometry —
+     the cheap fault-injection smoke workload; the ratio is gated and the
+     faulty run's final params are checked finite.
+
+Each comparison is a named WORKLOAD; ``--only <workload> ...`` (also
+``main(only=[...])``) runs a subset, and the emitted BENCH_engine.json then
+carries only the sections that ran plus a ``partial`` marker —
+``check_regression.py`` gates whatever metrics are present.
+
 The sharded scaling curve records ``auto_shards`` — the shard count the
 ``auto_shard_count`` heuristic would pick for this geometry (it caps shards
 so each holds >= a minimum cohort slice, avoiding the 8-shard collapse this
@@ -75,6 +86,7 @@ from repro.core.fedexp import make_algorithm
 from repro.fedsim import (
     CohortSpec,
     EngineSpec,
+    FaultSpec,
     FederatedSession,
     LocalSpec,
     StreamSpec,
@@ -83,6 +95,11 @@ from repro.fedsim import (
 from repro.launch.mesh import auto_shard_count, client_shard_spec
 
 FLOAT_BYTES = 4
+
+# --only selects a subset of these; the emitted BENCH_engine.json then only
+# carries the sections that ran and check_regression gates what is present
+WORKLOADS = ("engine", "backends", "sharded", "sampled", "local", "stream",
+             "faults")
 
 
 def _quad_loss(w, b):
@@ -297,6 +314,32 @@ def _stream_rows(key, rounds, *, clients, dim, chunk_clients,
             for (label, _), secs in zip(cases, best)]
 
 
+def _fault_rows(targets, w0, key, rounds, *, algorithm="ldp-fedexp-gauss",
+                alg_kwargs=(("clip_norm", 0.3), ("sigma", 0.21))):
+    """Rounds/sec of a faulty round (30% dropout + 20% stragglers + 2%
+    corrupted updates, DESIGN.md §13) vs the clean engine on the same
+    geometry — the cheap fault-injection smoke workload.
+
+    The masked-moment fault path adds a per-round fault draw, straggler step
+    resolution and the server-side finite screen, all inside the compiled
+    scan body (never a retrace), so the overhead should be a small constant
+    factor; the ratio is the machine-relative number the regression gate
+    watches.  The faulty run's final params are also checked finite — a
+    throughput number from a NaN-poisoned run would be meaningless.
+    """
+    alg = make_algorithm(algorithm, **dict(alg_kwargs))
+    train = TrainSpec(rounds=rounds, tau=3, eta_l=0.2)
+    fault = FaultSpec(dropout=0.3, straggler=0.2, straggler_steps=1,
+                      corrupt=0.02)
+    cases = [("clean", FaultSpec()), ("d=0.3 s=0.2 c=0.02", fault)]
+    sessions = [FederatedSession(alg, _quad_loss, w0, targets, train=train,
+                                 fault=f) for _, f in cases]
+    best = _interleaved_best(sessions, key)
+    finite = bool(jnp.all(jnp.isfinite(sessions[1].run(key).last_w)))
+    return ([[label, rounds / secs]
+             for (label, _), secs in zip(cases, best)], finite)
+
+
 def _backend_rows(m, d, key):
     u = jax.random.normal(key, (m, d))
     noise = 0.21 * jax.random.normal(jax.random.fold_in(key, 1), (m, d))
@@ -317,9 +360,17 @@ def _backend_rows(m, d, key):
 
 
 def main(*, clients: int = 300, dim: int = 4096, rounds: int = 50,
-         seeds: int = 4, quick: bool = False):
+         seeds: int = 4, quick: bool = False, only=None):
     """Defaults are the acceptance geometry (M=300, d=4096, T=50); --quick
-    shrinks everything for CI interpret mode."""
+    shrinks everything for CI interpret mode.  ``only`` restricts the run to
+    a subset of ``WORKLOADS``; the emitted BENCH_engine.json then carries
+    only the sections that ran (plus a ``partial`` marker) and
+    ``check_regression.py`` gates the metrics that are present."""
+    sel = set(only) if only else set(WORKLOADS)
+    unknown = sel - set(WORKLOADS)
+    if unknown:
+        raise SystemExit(f"unknown e7 workload(s) {sorted(unknown)}; "
+                         f"choose from: {' '.join(WORKLOADS)}")
     if quick:
         clients, dim, rounds, seeds = 96, 1024, 12, 2
 
@@ -327,52 +378,6 @@ def main(*, clients: int = 300, dim: int = 4096, rounds: int = 50,
     targets = jax.random.normal(key, (clients, dim))
     w0 = jnp.zeros(dim)
 
-    engine_rows = _engine_rows(targets, w0, key, rounds, seeds, [
-        ("fedavg", {}),
-        ("fedexp", {}),
-        ("ldp-fedexp-gauss", dict(clip_norm=0.3, sigma=0.21)),
-    ])
-    backend_rows = _backend_rows(clients, dim, key)
-    sharded_rows = _sharded_rows(targets, w0, key, rounds)
-    sampled_rows = _sampled_rows(targets, w0, key, rounds)
-    local_batch, local_epochs, local_samples = 8, 1, 32
-    local_rows = _local_sgd_rows(key, rounds, clients=clients,
-                                 dim=min(dim, 1024), n_samples=local_samples,
-                                 batch=local_batch, epochs=local_epochs)
-    # large-M streaming workload: M stays >= 50k even in --quick (the whole
-    # point is cohort-size scalability); d and T shrink instead
-    s_clients, s_dim, s_chunk = 50_000, 64, 2048
-    s_rounds = 5 if quick else 10
-    stream_rows = _stream_rows(key, s_rounds, clients=s_clients, dim=s_dim,
-                               chunk_clients=s_chunk)
-
-    print_table(
-        f"E7 engine throughput (M={clients}, d={dim}, T={rounds}, S={seeds})",
-        ["algorithm", "batched r/s", "scan-1 r/s", "eager r/s",
-         "workload speedup", "1-seed speedup"], engine_rows)
-    print_table(f"E7 aggregation backends (M={clients}, d={dim})",
-                ["backend", "ms/round", "modeled HBM bytes/round"], backend_rows)
-    print_table(f"E7 client-sharded engine (M={clients}, d={dim}, "
-                f"{len(jax.devices())} devices)",
-                ["client shards", "rounds/sec"], sharded_rows)
-    print_table(f"E7 sampled-cohort engine (M={clients}, d={dim})",
-                ["cohort", "rounds/sec"], sampled_rows)
-    print_table(f"E7 local-SGD clients (M={clients}, d={min(dim, 1024)}, "
-                f"n={local_samples})",
-                ["local trainer", "rounds/sec"], local_rows)
-    print_table(f"E7 streaming cohort engine (M={s_clients}, d={s_dim}, "
-                f"T={s_rounds})",
-                ["engine", "rounds/sec"], stream_rows)
-
-    write_csv("e7_engine_throughput.csv",
-              ["algorithm", "batched_rps", "scan_rps", "eager_rps",
-               "workload_speedup", "single_seed_speedup"], engine_rows)
-
-    # headline: the better of the two non-private engine probes (fedavg /
-    # fedexp) — both isolate engine overhead; taking the max de-noises the
-    # shared-vCPU timing swings that hit one measurement window or the other
-    headline = max(engine_rows[:2], key=lambda r: r[4])
-    bytes_by = {r[0]: r[2] for r in backend_rows}
     report = {
         "config": {"clients": clients, "dim": dim, "rounds": rounds,
                    "seeds": seeds, "quick": quick,
@@ -387,7 +392,32 @@ def main(*, clients: int = 300, dim: int = 4096, rounds: int = 50,
                    # the shard count auto_shard_count picks for this
                    # geometry (satellite of the 8-shard collapse fix)
                    "auto_shards": auto_shard_count(clients)},
-        "rounds_per_sec": {
+    }
+    # workload selection stays OUT of the config identity: a partial rerun at
+    # the full geometry should still gate its absolute numbers against the
+    # committed full baseline
+    if sel != set(WORKLOADS):
+        report["partial"] = sorted(set(WORKLOADS) - sel)
+
+    engine_rows = None
+    if "engine" in sel:
+        engine_rows = _engine_rows(targets, w0, key, rounds, seeds, [
+            ("fedavg", {}),
+            ("fedexp", {}),
+            ("ldp-fedexp-gauss", dict(clip_norm=0.3, sigma=0.21)),
+        ])
+        print_table(
+            f"E7 engine throughput (M={clients}, d={dim}, T={rounds}, S={seeds})",
+            ["algorithm", "batched r/s", "scan-1 r/s", "eager r/s",
+             "workload speedup", "1-seed speedup"], engine_rows)
+        write_csv("e7_engine_throughput.csv",
+                  ["algorithm", "batched_rps", "scan_rps", "eager_rps",
+                   "workload_speedup", "single_seed_speedup"], engine_rows)
+        # headline: the better of the two non-private engine probes (fedavg /
+        # fedexp) — both isolate engine overhead; taking the max de-noises the
+        # shared-vCPU timing swings that hit one measurement window or the other
+        headline = max(engine_rows[:2], key=lambda r: r[4])
+        report["rounds_per_sec"] = {
             "scan_batched_workload": headline[1],
             "scan_single_seed": headline[2],
             "eager_dispatch": headline[3],
@@ -395,35 +425,69 @@ def main(*, clients: int = 300, dim: int = 4096, rounds: int = 50,
                                      "eager": r[3], "workload_speedup": r[4],
                                      "single_seed_speedup": r[5]}
                               for r in engine_rows},
-        },
+        }
         # headline: the S-seed evaluation workload (what e1/e2 actually run)
         # on the vmapped scan engine vs seeds-sequential per-round dispatch
-        "speedup_scan_vs_eager": headline[4],
-        "speedup_single_seed": headline[5],
+        report["speedup_scan_vs_eager"] = headline[4]
+        report["speedup_single_seed"] = headline[5]
+
+    if "backends" in sel:
+        backend_rows = _backend_rows(clients, dim, key)
+        print_table(f"E7 aggregation backends (M={clients}, d={dim})",
+                    ["backend", "ms/round", "modeled HBM bytes/round"],
+                    backend_rows)
+        bytes_by = {r[0]: r[2] for r in backend_rows}
+        report["hbm_bytes_per_round_model"] = bytes_by
+        report["fused_noise_fewer_bytes_than_materialized"] = (
+            bytes_by["kernel_fused_noise"] < bytes_by["kernel_materialized"]
+            < bytes_by["jnp_materialized"])
+        report["backend_ms_per_round"] = {r[0]: r[1] for r in backend_rows}
+
+    if "sharded" in sel:
+        sharded_rows = _sharded_rows(targets, w0, key, rounds)
+        print_table(f"E7 client-sharded engine (M={clients}, d={dim}, "
+                    f"{len(jax.devices())} devices)",
+                    ["client shards", "rounds/sec"], sharded_rows)
         # rounds/sec of the shard_map engine per client-shard count; forced
         # host devices share cores, so this tracks sharding OVERHEAD (see
         # module docstring), keyed by device count for apples-to-apples
         # regression comparisons
-        "sharded": {
+        report["sharded"] = {
             "devices": len(jax.devices()),
             "algorithm": "ldp-fedexp-gauss",
             "auto_shards": auto_shard_count(clients),
-            "rounds_per_sec_by_shards": {str(r[0]): r[1] for r in sharded_rows},
-        },
+            "rounds_per_sec_by_shards": {str(r[0]): r[1]
+                                         for r in sharded_rows},
+        }
+
+    if "sampled" in sel:
+        sampled_rows = _sampled_rows(targets, w0, key, rounds)
+        print_table(f"E7 sampled-cohort engine (M={clients}, d={dim})",
+                    ["cohort", "rounds/sec"], sampled_rows)
         # sampled-cohort workload (CohortSpec(q=0.25) vs full participation,
         # same geometry): relative_to_full is the machine-relative sampling
         # overhead check_regression always gates; absolute r/s gates only on
         # config-matched runs like every other absolute metric
-        "sampled_cohort": {
+        report["sampled_cohort"] = {
             "q": 0.25,
             "algorithm": "ldp-fedexp-gauss",
             "rounds_per_sec": sampled_rows[1][1],
             "rounds_per_sec_full": sampled_rows[0][1],
             "relative_to_full": sampled_rows[1][1] / sampled_rows[0][1],
-        },
+        }
+
+    if "local" in sel:
+        local_batch, local_epochs, local_samples = 8, 1, 32
+        local_rows = _local_sgd_rows(key, rounds, clients=clients,
+                                     dim=min(dim, 1024),
+                                     n_samples=local_samples,
+                                     batch=local_batch, epochs=local_epochs)
+        print_table(f"E7 local-SGD clients (M={clients}, d={min(dim, 1024)}, "
+                    f"n={local_samples})",
+                    ["local trainer", "rounds/sec"], local_rows)
         # minibatch LocalSpec clients vs full-batch GD at the same geometry
         # (DESIGN.md §11): the ratio is machine-relative and always gated
-        "local_sgd": {
+        report["local_sgd"] = {
             "batch_size": local_batch,
             "epochs": local_epochs,
             "n_samples": local_samples,
@@ -431,12 +495,23 @@ def main(*, clients: int = 300, dim: int = 4096, rounds: int = 50,
             "rounds_per_sec": local_rows[1][1],
             "rounds_per_sec_fullbatch": local_rows[0][1],
             "relative_to_full": local_rows[1][1] / local_rows[0][1],
-        },
+        }
+
+    if "stream" in sel:
+        # large-M streaming workload: M stays >= 50k even in --quick (the
+        # whole point is cohort-size scalability); d and T shrink instead
+        s_clients, s_dim, s_chunk = 50_000, 64, 2048
+        s_rounds = 5 if quick else 10
+        stream_rows = _stream_rows(key, s_rounds, clients=s_clients,
+                                   dim=s_dim, chunk_clients=s_chunk)
+        print_table(f"E7 streaming cohort engine (M={s_clients}, d={s_dim}, "
+                    f"T={s_rounds})",
+                    ["engine", "rounds/sec"], stream_rows)
         # streaming cohort engine at M >= 50k (DESIGN.md §12): the
         # machine-relative ratio to the dense engine is always gated;
         # peak_update_matrix_bytes is the O(c*d) memory model — the dense
         # comparator stages dense_update_matrix_bytes = M*d*4 instead
-        "streaming": {
+        report["streaming"] = {
             "clients": s_clients,
             "dim": s_dim,
             "chunk_clients": s_chunk,
@@ -448,45 +523,74 @@ def main(*, clients: int = 300, dim: int = 4096, rounds: int = 50,
             "peak_update_matrix_bytes": s_chunk * s_dim * FLOAT_BYTES,
             "dense_update_matrix_bytes": s_clients * s_dim * FLOAT_BYTES,
             "memory_reduction_x": s_clients / s_chunk,
-        },
-        "hbm_bytes_per_round_model": bytes_by,
-        "fused_noise_fewer_bytes_than_materialized": (
-            bytes_by["kernel_fused_noise"] < bytes_by["kernel_materialized"]
-            < bytes_by["jnp_materialized"]),
-        "backend_ms_per_round": {r[0]: r[1] for r in backend_rows},
-    }
+        }
+
+    if "faults" in sel:
+        fault_rows, fault_finite = _fault_rows(targets, w0, key, rounds)
+        print_table(f"E7 fault-injection engine (M={clients}, d={dim})",
+                    ["round", "rounds/sec"], fault_rows)
+        # faulty round (DESIGN.md §13) vs clean engine: relative_to_clean is
+        # the machine-relative fault-path overhead the regression gate
+        # watches; final_params_finite pins graceful degradation
+        report["faults"] = {
+            "dropout": 0.3,
+            "straggler": 0.2,
+            "corrupt": 0.02,
+            "algorithm": "ldp-fedexp-gauss",
+            "rounds_per_sec": fault_rows[1][1],
+            "rounds_per_sec_clean": fault_rows[0][1],
+            "relative_to_clean": fault_rows[1][1] / fault_rows[0][1],
+            "final_params_finite": fault_finite,
+        }
+
     os.makedirs(RESULTS_DIR, exist_ok=True)
     for path in (os.path.join(RESULTS_DIR, "BENCH_engine.json"),
                  "BENCH_engine.json"):
         with open(path, "w") as f:
             json.dump(report, f, indent=2)
-    tag = "OK " if report["speedup_scan_vs_eager"] >= 5.0 else "WARN"
-    print(f"{tag} scan engine {report['speedup_scan_vs_eager']:.1f}x over the "
-          f"per-round-dispatch loop on the {seeds}-seed workload "
-          f"({report['speedup_single_seed']:.1f}x single-seed)")
-    print(f"OK  fused-noise kernel models {bytes_by['kernel_fused_noise']/2**20:.1f} MiB/round "
-          f"vs {bytes_by['jnp_materialized']/2**20:.1f} MiB (jnp 3-pass + materialized noise)")
-    shard_rps = {r[0]: r[1] for r in sharded_rows}
-    top = max(shard_rps)
-    print(f"OK  client-sharded engine: {shard_rps[1]:.0f} r/s on a 1-shard mesh, "
-          f"{shard_rps[top]:.0f} r/s on {top} shard(s) "
-          f"({len(jax.devices())} visible devices)")
-    sc = report["sampled_cohort"]
-    print(f"OK  sampled-cohort engine (q={sc['q']}): {sc['rounds_per_sec']:.0f} r/s "
-          f"vs {sc['rounds_per_sec_full']:.0f} r/s full participation "
-          f"({sc['relative_to_full']:.2f}x)")
-    ls = report["local_sgd"]
-    print(f"OK  local-SGD clients (b={ls['batch_size']}, e={ls['epochs']}): "
-          f"{ls['rounds_per_sec']:.0f} r/s vs {ls['rounds_per_sec_fullbatch']:.0f} "
-          f"r/s full-batch ({ls['relative_to_full']:.2f}x); auto shard pick "
-          f"for M={clients}: {report['config']['auto_shards']}")
-    st = report["streaming"]
-    print(f"OK  streaming engine (M={st['clients']}, c={st['chunk_clients']}): "
-          f"{st['rounds_per_sec']:.1f} r/s vs {st['rounds_per_sec_dense']:.1f} "
-          f"r/s dense ({st['relative_to_dense']:.2f}x); peak update matrix "
-          f"{st['peak_update_matrix_bytes']/2**20:.1f} MiB vs "
-          f"{st['dense_update_matrix_bytes']/2**20:.1f} MiB dense "
-          f"({st['memory_reduction_x']:.0f}x smaller)")
+
+    if "engine" in sel:
+        tag = "OK " if report["speedup_scan_vs_eager"] >= 5.0 else "WARN"
+        print(f"{tag} scan engine {report['speedup_scan_vs_eager']:.1f}x over the "
+              f"per-round-dispatch loop on the {seeds}-seed workload "
+              f"({report['speedup_single_seed']:.1f}x single-seed)")
+    if "backends" in sel:
+        print(f"OK  fused-noise kernel models {bytes_by['kernel_fused_noise']/2**20:.1f} MiB/round "
+              f"vs {bytes_by['jnp_materialized']/2**20:.1f} MiB (jnp 3-pass + materialized noise)")
+    if "sharded" in sel:
+        shard_rps = {r[0]: r[1] for r in sharded_rows}
+        top = max(shard_rps)
+        print(f"OK  client-sharded engine: {shard_rps[1]:.0f} r/s on a 1-shard mesh, "
+              f"{shard_rps[top]:.0f} r/s on {top} shard(s) "
+              f"({len(jax.devices())} visible devices)")
+    if "sampled" in sel:
+        sc = report["sampled_cohort"]
+        print(f"OK  sampled-cohort engine (q={sc['q']}): {sc['rounds_per_sec']:.0f} r/s "
+              f"vs {sc['rounds_per_sec_full']:.0f} r/s full participation "
+              f"({sc['relative_to_full']:.2f}x)")
+    if "local" in sel:
+        ls = report["local_sgd"]
+        print(f"OK  local-SGD clients (b={ls['batch_size']}, e={ls['epochs']}): "
+              f"{ls['rounds_per_sec']:.0f} r/s vs {ls['rounds_per_sec_fullbatch']:.0f} "
+              f"r/s full-batch ({ls['relative_to_full']:.2f}x); auto shard pick "
+              f"for M={clients}: {report['config']['auto_shards']}")
+    if "stream" in sel:
+        st = report["streaming"]
+        print(f"OK  streaming engine (M={st['clients']}, c={st['chunk_clients']}): "
+              f"{st['rounds_per_sec']:.1f} r/s vs {st['rounds_per_sec_dense']:.1f} "
+              f"r/s dense ({st['relative_to_dense']:.2f}x); peak update matrix "
+              f"{st['peak_update_matrix_bytes']/2**20:.1f} MiB vs "
+              f"{st['dense_update_matrix_bytes']/2**20:.1f} MiB dense "
+              f"({st['memory_reduction_x']:.0f}x smaller)")
+    if "faults" in sel:
+        fr = report["faults"]
+        status = "OK " if fr["final_params_finite"] else "FAIL"
+        print(f"{status} fault-injection engine (d={fr['dropout']}, "
+              f"s={fr['straggler']}, c={fr['corrupt']}): "
+              f"{fr['rounds_per_sec']:.0f} r/s vs "
+              f"{fr['rounds_per_sec_clean']:.0f} r/s clean "
+              f"({fr['relative_to_clean']:.2f}x); final params finite: "
+              f"{fr['final_params_finite']}")
     return engine_rows
 
 
@@ -494,5 +598,7 @@ if __name__ == "__main__":
     import argparse
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--only", nargs="*", default=None, metavar="WORKLOAD",
+                    help=f"subset of: {' '.join(WORKLOADS)}")
     args = ap.parse_args()
-    main(quick=args.quick)
+    main(quick=args.quick, only=args.only)

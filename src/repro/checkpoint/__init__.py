@@ -13,18 +13,34 @@ FIRST and the ``.npz`` last: a checkpoint only becomes discoverable
 (``latest_step`` keys on the ``.npz`` listing) once both halves are durable,
 so a kill at any point mid-save leaves at worst a harmless orphan sidecar or
 tmp file, never a latest step that cannot be loaded.
+
+Corruption hardening (DESIGN.md §13): the sidecar records the ``.npz``'s
+sha256, verified on load; ANY unreadable half (truncated archive, garbage
+bytes, mangled json, checksum mismatch) surfaces as a ``ValueError`` naming
+the file — never a zipfile/pickle traceback.  ``load_checkpoint`` retries
+transient ``OSError`` with linear backoff, and ``load_latest_intact`` walks
+the step listing newest-first past corrupt checkpoints to the newest one
+that loads cleanly — the rollback target of auto-recovering runs.
 """
 from __future__ import annotations
 
+import hashlib
 import json
 import os
 import re
-from typing import Any
+import time
+from typing import Any, Callable
 
 import jax
 import numpy as np
 
-__all__ = ["save_checkpoint", "load_checkpoint", "latest_step"]
+__all__ = [
+    "save_checkpoint",
+    "load_checkpoint",
+    "load_latest_intact",
+    "latest_step",
+    "checkpoint_steps",
+]
 
 _SEP = "/"
 
@@ -57,29 +73,60 @@ def _atomic_json_dump(obj: Any, path: str) -> None:
     os.replace(tmp, path)
 
 
+def _sha256(path: str) -> str:
+    h = hashlib.sha256()
+    with open(path, "rb") as f:
+        for block in iter(lambda: f.read(1 << 20), b""):
+            h.update(block)
+    return h.hexdigest()
+
+
 def save_checkpoint(directory: str, step: int, params, extra: dict | None = None) -> str:
     """Write ``<dir>/ckpt_<step>.npz`` (+ meta json). Returns the path."""
     os.makedirs(directory, exist_ok=True)
     path = os.path.join(directory, f"ckpt_{step:08d}.npz")
-    # sidecar FIRST, npz last: latest_step keys on the npz listing, so the
+    # npz to a tmp file first (so its sha256 can ride the sidecar), sidecar
+    # second, npz rename LAST: latest_step keys on the npz listing, so the
     # step only becomes visible once both halves exist — a crash between the
-    # writes leaves a harmless orphan sidecar, never a latest checkpoint
-    # whose load raises FileNotFoundError
-    meta = {"step": step, **(extra or {})}
-    _atomic_json_dump(meta, path.replace(".npz", ".json"))
+    # writes leaves a harmless orphan sidecar or tmp file, never a latest
+    # checkpoint whose load raises FileNotFoundError
     tmp = path + ".tmp.npz"
     np.savez(tmp, **_flatten(params))
+    meta = {"step": step, "npz_sha256": _sha256(tmp), **(extra or {})}
+    _atomic_json_dump(meta, path.replace(".npz", ".json"))
     os.replace(tmp, path)
     return path
 
 
-def load_checkpoint(directory: str, template, step: int | None = None):
-    """Restore into the structure of ``template``. Returns (params, meta)."""
-    step = step if step is not None else latest_step(directory)
-    if step is None:
-        raise FileNotFoundError(f"no checkpoints in {directory}")
+def _read_meta(path: str) -> dict:
+    """The sidecar as a dict; mangled json is a corrupt checkpoint, not a
+    JSONDecodeError traceback."""
+    meta_path = path.replace(".npz", ".json")
+    try:
+        with open(meta_path) as f:
+            return json.load(f)
+    except FileNotFoundError:
+        raise
+    except (json.JSONDecodeError, UnicodeDecodeError, ValueError) as exc:
+        raise ValueError(
+            f"corrupt checkpoint sidecar {meta_path}: {exc}") from exc
+
+
+def _load_once(directory: str, template, step: int):
+    """One load attempt — every corruption mode resolves to ValueError."""
     path = os.path.join(directory, f"ckpt_{step:08d}.npz")
-    data = np.load(path)
+    meta = _read_meta(path)
+    recorded = meta.get("npz_sha256")
+    if recorded is not None and _sha256(path) != recorded:
+        raise ValueError(
+            f"corrupt checkpoint {path}: sha256 mismatch with sidecar "
+            "(truncated or modified archive)")
+    try:
+        data = np.load(path, allow_pickle=False)
+    except FileNotFoundError:
+        raise
+    except Exception as exc:  # zipfile.BadZipFile, OSError on garbage, ...
+        raise ValueError(f"corrupt checkpoint {path}: {exc}") from exc
     paths, treedef = jax.tree_util.tree_flatten_with_path(template)
     leaves = []
     for p, leaf in paths:
@@ -88,21 +135,81 @@ def load_checkpoint(directory: str, template, step: int | None = None):
             raise ValueError(
                 f"checkpoint {path} is missing leaf {key!r} required by the "
                 f"template (have: {sorted(data.files)[:10]}...)")
-        arr = data[key]
+        try:
+            arr = data[key]
+        except Exception as exc:  # truncated member in a pre-sha archive
+            raise ValueError(
+                f"corrupt checkpoint {path}: leaf {key!r} unreadable: "
+                f"{exc}") from exc
         if arr.shape != tuple(leaf.shape):
             raise ValueError(
                 f"checkpoint leaf {key!r} has shape {arr.shape}, template "
                 f"expects {tuple(leaf.shape)} — checkpoint and session "
                 "configuration (model dim, avg_last, optimizer) must match")
         leaves.append(arr.astype(leaf.dtype) if hasattr(leaf, "dtype") else arr)
-    with open(path.replace(".npz", ".json")) as f:
-        meta = json.load(f)
     return jax.tree_util.tree_unflatten(treedef, leaves), meta
 
 
-def latest_step(directory: str) -> int | None:
+def load_checkpoint(directory: str, template, step: int | None = None,
+                    retries: int = 0, backoff: float = 0.0):
+    """Restore into the structure of ``template``. Returns (params, meta).
+
+    ``retries`` re-attempts the read after a transient ``OSError`` (NFS blip,
+    EBUSY), sleeping ``backoff * attempt`` seconds between tries.  A missing
+    checkpoint (FileNotFoundError) and a corrupt one (ValueError) are
+    permanent and never retried.
+    """
+    step = step if step is not None else latest_step(directory)
+    if step is None:
+        raise FileNotFoundError(f"no checkpoints in {directory}")
+    for attempt in range(max(0, int(retries)) + 1):
+        try:
+            return _load_once(directory, template, step)
+        except (FileNotFoundError, ValueError):
+            raise
+        except OSError:
+            if attempt >= retries:
+                raise
+            if backoff > 0.0:
+                time.sleep(backoff * (attempt + 1))
+
+
+def load_latest_intact(directory: str, template, retries: int = 0,
+                       backoff: float = 0.0):
+    """Newest checkpoint that loads cleanly: ``(step, params, meta)``.
+
+    Walks the step listing newest-first; a corrupt or unreadable checkpoint
+    is skipped (this is the fallback path of auto-recovering runs —
+    DESIGN.md §13).  ``template`` may be a pytree or a callable
+    ``step -> pytree`` when the template's shapes depend on the step (e.g.
+    per-round history arrays).  Raises ``FileNotFoundError`` when the
+    directory holds no checkpoints at all, ``ValueError`` (listing every
+    per-step failure) when none of them is intact.
+    """
+    steps = sorted(checkpoint_steps(directory), reverse=True)
+    if not steps:
+        raise FileNotFoundError(f"no checkpoints in {directory}")
+    failures = []
+    for step in steps:
+        tpl = template(step) if callable(template) else template
+        try:
+            params, meta = load_checkpoint(directory, tpl, step=step,
+                                           retries=retries, backoff=backoff)
+            return step, params, meta
+        except (ValueError, OSError) as exc:
+            failures.append(f"step {step}: {exc}")
+    raise ValueError(
+        f"no intact checkpoint in {directory}; " + "; ".join(failures))
+
+
+def checkpoint_steps(directory: str) -> list[int]:
+    """All discoverable checkpoint steps (ascending; [] when none)."""
     if not os.path.isdir(directory):
-        return None
-    steps = [int(m.group(1)) for f in os.listdir(directory)
-             if (m := re.match(r"ckpt_(\d+)\.npz$", f))]
+        return []
+    return sorted(int(m.group(1)) for f in os.listdir(directory)
+                  if (m := re.match(r"ckpt_(\d+)\.npz$", f)))
+
+
+def latest_step(directory: str) -> int | None:
+    steps = checkpoint_steps(directory)
     return max(steps) if steps else None

@@ -32,11 +32,30 @@ __all__ = [
     "gdp_epsilon",
     "gdp_delta",
     "subsampled_gdp_mu",
+    "realized_participation",
     "ldp_gaussian_budget",
     "cdp_budget",
     "privunit_budget",
     "PrivacyReport",
 ]
+
+
+def realized_participation(sampling_q: float, dropout: float = 0.0) -> float:
+    """Per-round participation rate the accountant should compose with.
+
+    Under the §13 fault model a sampled client DROPS OUT independently with
+    probability ``dropout`` before contributing, so the realized per-round
+    participation is q * (1 - dropout) — a client's data enters round t's
+    release only if it is both sampled AND alive, two independent Bernoulli
+    events.  Budgets must compose against this realized rate, not the
+    nominal q: the dropped clients' updates never touch the release, so
+    amplification-by-subsampling applies at the realized rate (and the
+    conditional-sensitivity inflation of ``cdp_budget`` inflates by the same
+    realized rate — accounting stays honest in both directions).
+    """
+    if not 0.0 <= dropout < 1.0:
+        raise ValueError(f"dropout must be in [0, 1), got {dropout}")
+    return sampling_q * (1.0 - dropout)
 
 
 def _phi(x: float) -> float:

@@ -18,10 +18,11 @@ from repro.fedsim.local import (
 )
 from repro.fedsim.scaffold import DPScaffoldConfig, run_dp_scaffold
 from repro.fedsim.server import RunResult, run_federated, run_federated_batched
-from repro.fedsim.session import FederatedSession
+from repro.fedsim.session import FederatedSession, RecoveryPolicy
 from repro.fedsim.specs import (
     CohortSpec,
     EngineSpec,
+    FaultSpec,
     LocalSpec,
     ShardSpec,
     StreamSpec,
@@ -31,8 +32,8 @@ from repro.fedsim.specs import (
 __all__ = [
     "flatten_model", "local_update", "cohort_updates",
     "local_update_spec", "cohort_updates_spec", "chunk_cohort",
-    "FederatedSession", "TrainSpec", "LocalSpec", "EngineSpec", "ShardSpec",
-    "StreamSpec", "CohortSpec",
+    "FederatedSession", "RecoveryPolicy", "TrainSpec", "LocalSpec",
+    "EngineSpec", "ShardSpec", "StreamSpec", "CohortSpec", "FaultSpec",
     "run_federated", "run_federated_batched", "RunResult",
     "DPScaffoldConfig", "run_dp_scaffold",
 ]

@@ -1,0 +1,122 @@
+"""Deterministic per-round fault injection + degradation helpers (DESIGN.md §13).
+
+Production federated rounds are defined by failure: clients drop out,
+stragglers miss the deadline with partial local training, and devices return
+corrupted (non-finite) updates.  ``FaultSpec`` declares the fault model;
+this module owns the draws and the degradation plumbing the engines share:
+
+* **Draw discipline.**  All fault randomness for round t derives from
+  ``fold_in(round_key, FAULT_TAG)`` — one substream per fault class — and
+  every vector is drawn FULL-COHORT from the replicated round key, indexed
+  by GLOBAL client index.  Shards and stream chunks slice their rows of the
+  one replicated draw (the §9/§10 full-mask-then-slice pattern), so a
+  faulty run is bit-reproducible across the scan / eager / sharded / stream
+  engines and across checkpoint resumes.
+
+* **Degradation discipline.**  A failed client becomes a ZERO-WEIGHT row in
+  the existing masked-moment protocol: the effective participation mask is
+  the product of the sampling/padding mask, the dropout survival mask, and
+  a server-side finite screen (``finite_rows``) that catches injected NaN
+  rows and genuinely diverged clients alike.  Rows are where-zeroed at the
+  source (``mask_rows``), never multiplied, so a non-finite update can
+  never poison a reduction as ``0 * nan``.  The realized (not nominal)
+  count then flows through the clamped-count resolution — an all-failed
+  round is a zero-update no-op, never NaN.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.fedsim.local import mask_rows
+from repro.fedsim.specs import FAULT_TAG, FaultSpec
+
+__all__ = [
+    "fault_masks",
+    "resolve_steps",
+    "inject_corruption",
+    "finite_rows",
+    "apply_faults",
+    "sanitize_moments",
+]
+
+# substream tags under the round's FAULT_TAG key, one per fault class
+_DROPOUT_SUB, _STRAGGLER_SUB, _CORRUPT_SUB = 0, 1, 2
+
+
+def fault_masks(fault: FaultSpec, round_key: jax.Array, num_clients: int):
+    """One round's full-cohort fault draws from the replicated round key.
+
+    Returns ``(alive, straggler, corrupt)`` — each a (num_clients,) float32
+    {0., 1.} vector, or ``None`` when that fault class is disabled (so the
+    inactive classes add nothing to the compiled program).  Position i is
+    GLOBAL client index i; callers slice shard/chunk rows out of the full
+    vectors exactly as they slice the sampling mask.
+    """
+    k = jax.random.fold_in(round_key, FAULT_TAG)
+
+    def draw(sub: int, rate: float):
+        """Bernoulli(rate) over the cohort from substream ``sub``; None if off."""
+        if rate <= 0.0:
+            return None
+        kk = jax.random.fold_in(k, sub)
+        return jax.random.bernoulli(kk, rate, (num_clients,)).astype(jnp.float32)
+
+    dropped = draw(_DROPOUT_SUB, fault.dropout)
+    alive = None if dropped is None else 1.0 - dropped
+    return alive, draw(_STRAGGLER_SUB, fault.straggler), draw(_CORRUPT_SUB, fault.corrupt)
+
+
+def resolve_steps(fault: FaultSpec, straggler: jax.Array, tau: int) -> jax.Array:
+    """Per-client local step counts: ``straggler_steps`` for flagged clients
+    (capped at tau — a straggler never trains MORE), ``tau`` otherwise."""
+    cut = min(int(fault.straggler_steps), int(tau))
+    return jnp.where(straggler > 0, jnp.int32(cut), jnp.int32(tau))
+
+
+def inject_corruption(deltas: jax.Array, corrupt: jax.Array) -> jax.Array:
+    """Replace flagged rows of an (m, d) delta block with NaN — the update a
+    corrupted device would return.  The server's finite screen must catch
+    these downstream; injecting real NaN (not a sentinel) exercises exactly
+    that degradation path."""
+    return jnp.where(corrupt[:, None] > 0, jnp.float32(jnp.nan), deltas)
+
+
+def finite_rows(deltas: jax.Array) -> jax.Array:
+    """(m,) float32 {0., 1.} server-side finite screen: 1 for rows whose
+    every coordinate is finite.  Catches injected corruption and genuinely
+    diverged clients alike."""
+    return jnp.all(jnp.isfinite(deltas), axis=-1).astype(jnp.float32)
+
+
+def apply_faults(deltas: jax.Array, mask: jax.Array,
+                 alive: jax.Array | None, corrupt: jax.Array | None):
+    """Apply one round's faults to a shard/chunk's delta rows.
+
+    ``mask`` is the block's existing participation mask (sampling x padding);
+    ``alive`` / ``corrupt`` are this block's rows of the full-cohort draws
+    (or None when that class is off).  Returns ``(deltas, eff_mask)`` with
+    failed rows where-zeroed at the source and the effective mask carrying
+    the REALIZED participation — the count every downstream normalization
+    must use (DESIGN.md §13).
+    """
+    if corrupt is not None:
+        deltas = inject_corruption(deltas, corrupt)
+    eff = mask if alive is None else mask * alive
+    # the finite screen runs whenever faults are active: corruption is the
+    # injected cause, but a genuinely diverged client degrades identically
+    eff = eff * finite_rows(deltas)
+    return mask_rows(deltas, eff), eff
+
+
+def sanitize_moments(moments):
+    """Belt-and-braces guard on an accumulated moments pytree: any non-finite
+    field (an Inf that survived clipping, an overflowed square) is zeroed so
+    the FedEXP numerator and the adaptive-clip carry stay finite.  Finite
+    moments pass through untouched (``where`` is the identity on them)."""
+    def clean(x):
+        x = jnp.asarray(x)
+        if not jnp.issubdtype(x.dtype, jnp.floating):
+            return x
+        return jnp.where(jnp.isfinite(x), x, jnp.zeros_like(x))
+    return jax.tree_util.tree_map(clean, moments)

@@ -52,8 +52,16 @@ __all__ = [
 ]
 
 
-def local_update(loss_fn: Callable, w0: jax.Array, client_batch, tau: int, eta_l: float) -> jax.Array:
-    """tau steps of (full-batch) GD on one client's data; returns the update."""
+def local_update(loss_fn: Callable, w0: jax.Array, client_batch, tau: int,
+                 eta_l: float, steps: jax.Array | None = None) -> jax.Array:
+    """tau steps of (full-batch) GD on one client's data; returns the update.
+
+    ``steps`` (optional traced int32 scalar) is the straggler cutoff
+    (DESIGN.md §13): the client commits only its first ``steps`` of the
+    ``tau`` local steps — the partial update a deadline-missing device
+    uploads.  Shapes stay static (all tau steps are traced; later ones are
+    where-frozen), and ``steps=None`` is the historical path, bit-for-bit.
+    """
 
     def step(w, _):
         """One full-batch gradient-descent step on this client's data."""
@@ -65,7 +73,17 @@ def local_update(loss_fn: Callable, w0: jax.Array, client_batch, tau: int, eta_l
     # when the whole round lives inside the scan engine's loop body; larger
     # tau keeps the loop — unrolling it multiplies compile time for heavy
     # per-step graphs (e.g. CNN grads) with no measured runtime win.
-    w_tau, _ = jax.lax.scan(step, w0, None, length=tau,
+    if steps is None:
+        w_tau, _ = jax.lax.scan(step, w0, None, length=tau,
+                                unroll=tau if tau <= 2 else 1)
+        return w_tau - w0
+
+    def gated(w, i):
+        """Step i, committed only while i < steps (straggler cutoff)."""
+        w_new, _ = step(w, None)
+        return jnp.where(i < steps, w_new, w), None
+
+    w_tau, _ = jax.lax.scan(gated, w0, jnp.arange(tau, dtype=jnp.int32),
                             unroll=tau if tau <= 2 else 1)
     return w_tau - w0
 
@@ -75,7 +93,8 @@ def _tmap(f, *trees):
 
 
 def local_update_spec(loss_fn: Callable, w0, client_batch, key: jax.Array,
-                      spec: LocalSpec, tau: int, eta_l):
+                      spec: LocalSpec, tau: int, eta_l,
+                      steps: jax.Array | None = None):
     """Spec-driven local training for ONE client; returns the update pytree.
 
     ``w0`` may be any parameter pytree (a flat (d,) vector is the one-leaf
@@ -106,11 +125,21 @@ def local_update_spec(loss_fn: Callable, w0, client_batch, key: jax.Array,
         w = _tmap(lambda ww, dd: ww - eta_l * dd, w, d)
         return (w, v), None
 
+    def gate(i, new, old):
+        """Commit a (w, v) carry update only while i < steps (§13 cutoff)."""
+        return _tmap(lambda a, b: jnp.where(i < steps, a, b), new, old)
+
     carry0 = (w0, _tmap(jnp.zeros_like, w0))
     if spec.batch_size is None:
-        (w_tau, _), _ = jax.lax.scan(lambda c, _: gd_step(c, client_batch),
-                                     carry0, None, length=tau,
-                                     unroll=tau if tau <= 2 else 1)
+        if steps is None:
+            (w_tau, _), _ = jax.lax.scan(lambda c, _: gd_step(c, client_batch),
+                                         carry0, None, length=tau,
+                                         unroll=tau if tau <= 2 else 1)
+        else:
+            (w_tau, _), _ = jax.lax.scan(
+                lambda c, i: (gate(i, gd_step(c, client_batch)[0], c), None),
+                carry0, jnp.arange(tau, dtype=jnp.int32),
+                unroll=tau if tau <= 2 else 1)
         return _tmap(lambda a, c: a - c, w_tau, w0)
 
     leaves, treedef = jax.tree_util.tree_flatten(client_batch)
@@ -146,33 +175,68 @@ def local_update_spec(loss_fn: Callable, w0, client_batch, key: jax.Array,
         merged = [mb.pop(0) if ok else x for x, ok in zip(leaves, sliceable)]
         return gd_step(carry, jax.tree_util.tree_unflatten(treedef, merged))
 
-    (w_tau, _), _ = jax.lax.scan(batch_step, carry0, tuple(xs))
+    if steps is None:
+        (w_tau, _), _ = jax.lax.scan(batch_step, carry0, tuple(xs))
+    else:
+        n_steps = spec.epochs * n_batches
+        (w_tau, _), _ = jax.lax.scan(
+            lambda c, x: (gate(x[1], batch_step(c, x[0])[0], c), None),
+            carry0, (tuple(xs), jnp.arange(n_steps, dtype=jnp.int32)))
     return _tmap(lambda a, c: a - c, w_tau, w0)
 
 
-def cohort_updates(loss_fn: Callable, w: jax.Array, client_batches, tau: int, eta_l: float) -> jax.Array:
-    """(M, d) matrix of raw local updates for the full cohort (vmapped)."""
-    fn = lambda batch: local_update(loss_fn, w, batch, tau, eta_l)
-    return jax.vmap(fn)(client_batches)
+def cohort_updates(loss_fn: Callable, w: jax.Array, client_batches, tau: int,
+                   eta_l: float, steps: jax.Array | None = None) -> jax.Array:
+    """(M, d) matrix of raw local updates for the full cohort (vmapped).
+
+    ``steps`` (optional (M,) int32) is the per-client straggler cutoff
+    (§13); None is the historical all-tau path, bit-for-bit.
+    """
+    if steps is None:
+        fn = lambda batch: local_update(loss_fn, w, batch, tau, eta_l)
+        return jax.vmap(fn)(client_batches)
+    fn = lambda batch, s: local_update(loss_fn, w, batch, tau, eta_l, steps=s)
+    return jax.vmap(fn)(client_batches, steps)
 
 
 def cohort_updates_spec(loss_fn: Callable, w, client_batches, spec: LocalSpec,
                         tau: int, eta_l, round_key: jax.Array,
-                        start: int | jax.Array = 0):
+                        start: int | jax.Array = 0,
+                        steps: jax.Array | None = None):
     """Spec-driven cohort updates, vmapped with per-client local PRNG keys.
 
     Client ``i`` of the shard draws its minibatch shuffles from
     ``fold_in(fold_in(round_key, LOCAL_TRAIN_TAG), start + i)`` — keyed by
     GLOBAL index so sharded and single-device engines shuffle identically.
+    ``steps`` (optional (M,) int32) is the per-client straggler cutoff (§13).
     """
     m = jax.tree_util.tree_leaves(client_batches)[0].shape[0]
     base = jax.random.fold_in(round_key, LOCAL_TRAIN_TAG)
     keys = jax.vmap(lambda i: jax.random.fold_in(base, i))(start + jnp.arange(m))
-    fn = lambda batch, k: local_update_spec(loss_fn, w, batch, k, spec, tau, eta_l)
-    return jax.vmap(fn)(client_batches, keys)
+    if steps is None:
+        fn = lambda batch, k: local_update_spec(loss_fn, w, batch, k, spec, tau, eta_l)
+        return jax.vmap(fn)(client_batches, keys)
+    fn = lambda batch, k, s: local_update_spec(loss_fn, w, batch, k, spec,
+                                               tau, eta_l, steps=s)
+    return jax.vmap(fn)(client_batches, keys, steps)
 
 
-def _build_cohort_local_fn(loss_fn: Callable, spec: LocalSpec | None, tau: int):
+def _build_cohort_local_fn(loss_fn: Callable, spec: LocalSpec | None, tau: int,
+                           with_steps: bool = False):
+    if with_steps:
+        if spec is None or spec.is_default:
+            def local_fn(w, client_batches, eta_l, round_key, start, steps):
+                """Local-training closure with per-client straggler cutoffs (§13)."""
+                return cohort_updates(loss_fn, w, client_batches, tau, eta_l,
+                                      steps=steps)
+            return local_fn
+
+        def local_fn(w, client_batches, eta_l, round_key, start, steps):
+            """Local-training closure with per-client straggler cutoffs (§13)."""
+            return cohort_updates_spec(loss_fn, w, client_batches, spec, tau,
+                                       eta_l, round_key, start, steps=steps)
+        return local_fn
+
     if spec is None or spec.is_default:
         def local_fn(w, client_batches, eta_l, round_key, start):
             """The engine's local-training closure: cohort deltas for one round."""
@@ -189,7 +253,8 @@ def _build_cohort_local_fn(loss_fn: Callable, spec: LocalSpec | None, tau: int):
 _cached_cohort_local_fn = functools.lru_cache(maxsize=64)(_build_cohort_local_fn)
 
 
-def build_cohort_local_fn(loss_fn: Callable, spec: LocalSpec | None, tau: int):
+def build_cohort_local_fn(loss_fn: Callable, spec: LocalSpec | None, tau: int,
+                          with_steps: bool = False):
     """Bind (loss, LocalSpec, tau) into the engine's local-training closure:
 
         local_fn(w, client_batches, eta_l, round_key, start) -> (M, d) deltas
@@ -203,11 +268,18 @@ def build_cohort_local_fn(loss_fn: Callable, spec: LocalSpec | None, tau: int):
     ``loss_fn`` directly.  An unhashable loss falls back to an uncached
     build (a per-session retrace — the cost the engine's builder fallback
     already documents, never an error).
+
+    ``with_steps=True`` (straggler faults, §13) returns the variant closure
+
+        local_fn(w, client_batches, eta_l, round_key, start, steps)
+
+    taking a per-client (m,) int32 step-count vector; it keys the memo
+    separately, so fault-free sessions keep sharing the historical closure.
     """
     try:
-        return _cached_cohort_local_fn(loss_fn, spec, tau)
+        return _cached_cohort_local_fn(loss_fn, spec, tau, with_steps)
     except TypeError:
-        return _build_cohort_local_fn(loss_fn, spec, tau)
+        return _build_cohort_local_fn(loss_fn, spec, tau, with_steps)
 
 
 def mask_rows(deltas: jax.Array, mask: jax.Array) -> jax.Array:

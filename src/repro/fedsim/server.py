@@ -65,8 +65,9 @@ from jax.experimental.shard_map import shard_map
 from jax.sharding import PartitionSpec as P
 
 from repro.core.fedexp import ServerAlgorithm, clamp_moment_counts, set_moment_count
+from repro.fedsim.faults import apply_faults, fault_masks, resolve_steps, sanitize_moments
 from repro.fedsim.local import mask_rows
-from repro.fedsim.specs import CohortSpec, StreamSpec
+from repro.fedsim.specs import CohortSpec, FaultSpec, StreamSpec
 from repro.models.sharding import client_axis_rules, logical_to_pspec
 
 __all__ = ["RunResult", "run_federated", "run_federated_batched"]
@@ -82,6 +83,7 @@ class RunResult:
     #                               eval_fn or the round is off cadence)
     eta_naive_history: jax.Array | None = None
     eta_target_history: jax.Array | None = None
+    fault_round: int | None = None  # watchdog: first diverged round (§13)
 
 
 def _eval_metric(eval_fn, eval_every: int, w_next, t):
@@ -120,8 +122,54 @@ def _resolve_sampled_count(moments, cohort: CohortSpec, algorithm):
     return clamp_moment_counts(moments, floor=1e-12)
 
 
+def _resolve_realized_count(moments, algorithm):
+    """Count resolution for fault-active rounds (DESIGN.md §13).
+
+    Under injected faults the realized participation is traced and strictly
+    below the nominal cohort, so the static-count substitution of
+    ``_resolve_sampled_count`` never applies — always clamp instead, so an
+    all-failed round resolves as a zero update, never NaN.
+    """
+    if getattr(algorithm, "supports_static_count", True):
+        return clamp_moment_counts(moments)
+    return clamp_moment_counts(moments, floor=1e-12)
+
+
+def _local_caller(local_fn, fault: FaultSpec | None, tau: int):
+    """Adapter calling the LocalTrainer with or without per-client steps.
+
+    When the fault model cuts stragglers short, the session built the
+    ``with_steps`` LocalTrainer variant (arity +1) and every engine resolves
+    the per-client step counts from the straggler draw; otherwise the
+    historical closure is called untouched (bit-identical program).
+    """
+    straggling = fault is not None and fault.straggler > 0.0
+
+    def call(w, batches, eta_l, round_key, start, straggler_rows):
+        if straggling:
+            steps = resolve_steps(fault, straggler_rows, tau)
+            return local_fn(w, batches, eta_l, round_key, start, steps)
+        return local_fn(w, batches, eta_l, round_key, start)
+
+    return call
+
+
+def _pad_slice(v, m_pad: int, start, m_local: int):
+    """Zero-pad a full-cohort fault vector to the padded grid and slice this
+    shard/chunk's rows — the §9/§10 full-mask-then-slice pattern.  Zero is
+    the inert pad for every fault class (dead / on-time / uncorrupted); pad
+    rows are masked out regardless."""
+    if v is None:
+        return None
+    if m_pad > v.shape[0]:
+        v = jnp.concatenate(
+            [v, jnp.zeros((m_pad - v.shape[0],), v.dtype)])
+    return jax.lax.dynamic_slice(v, (start,), (m_local,))
+
+
 def _round_step(algorithm, local_fn, eval_fn, eval_every: int = 1,
-                cohort: CohortSpec | None = None):
+                cohort: CohortSpec | None = None,
+                fault: FaultSpec | None = None, tau: int = 1):
     """One server round; identical computation for scan and eager engines.
 
     ``local_fn`` is the LocalTrainer closure built by
@@ -132,23 +180,41 @@ def _round_step(algorithm, local_fn, eval_fn, eval_every: int = 1,
     still compute local updates (static shapes), the participation mask
     zero-weights non-participants, and the algorithm consumes mask-weighted
     moments exactly as on a client shard.
+
+    An injecting ``FaultSpec`` reroutes even full-participation rounds
+    through the same masked protocol: the round's fault draws turn failed
+    clients into zero-weight rows (``apply_faults``) and the REALIZED count
+    flows through the clamped resolution (DESIGN.md §13).
     """
     sampled = cohort is not None and cohort.is_sampled
+    injecting = fault is not None and fault.injects
+    local = _local_caller(local_fn, fault, tau)
 
     def step(w, opt_state, round_key, t, client_batches, eta_l):
         """One server round inside the compiled scan body."""
-        if not sampled:
+        if not sampled and not injecting:
             deltas = local_fn(w, client_batches, eta_l, round_key, 0)
             w_next, aux, opt_state = algorithm.apply_round_stateful(
                 round_key, w, deltas, opt_state)
         else:
             m = jax.tree_util.tree_leaves(client_batches)[0].shape[0]
-            mask = cohort.round_mask(round_key, m)
-            deltas = mask_rows(local_fn(w, client_batches, eta_l, round_key, 0),
-                               mask)
+            mask = (cohort.round_mask(round_key, m) if sampled
+                    else jnp.ones((m,), jnp.float32))
+            if injecting:
+                alive, straggler, corrupt = fault_masks(fault, round_key, m)
+                deltas = local(w, client_batches, eta_l, round_key, 0,
+                               straggler)
+                deltas, mask = apply_faults(deltas, mask, alive, corrupt)
+            else:
+                deltas = mask_rows(
+                    local_fn(w, client_batches, eta_l, round_key, 0), mask)
             moments = algorithm.local_moments(round_key, w, deltas, mask, 0,
                                               opt_state)
-            moments = _resolve_sampled_count(moments, cohort, algorithm)
+            if injecting:
+                moments = sanitize_moments(moments)
+                moments = _resolve_realized_count(moments, algorithm)
+            else:
+                moments = _resolve_sampled_count(moments, cohort, algorithm)
             w_next, aux, opt_state = algorithm.apply_from_moments(
                 round_key, w, moments, opt_state)
         metric = _eval_metric(eval_fn, eval_every, w_next, t)
@@ -160,7 +226,8 @@ def _round_step(algorithm, local_fn, eval_fn, eval_every: int = 1,
 
 def _sharded_round_step(algorithm, local_fn, eval_fn, axis, m_true,
                         m_pad: int | None = None, eval_every: int = 1,
-                        cohort: CohortSpec | None = None):
+                        cohort: CohortSpec | None = None,
+                        fault: FaultSpec | None = None, tau: int = 1):
     """One round on a client shard; runs inside ``shard_map`` over ``axis``.
 
     Same round semantics as ``_round_step``, but local training and the
@@ -171,31 +238,51 @@ def _sharded_round_step(algorithm, local_fn, eval_fn, axis, m_true,
     shuffle exactly as the single-device engine.  With cohort sampling,
     every device derives the FULL participation mask from the replicated
     round key and slices its own rows, so the sampled cohort is identical to
-    the single-device engine's.
+    the single-device engine's.  Fault draws follow the same full-cohort-
+    then-slice pattern (DESIGN.md §13), so a faulty sharded run degrades
+    exactly as its single-device reference.
     """
     sampled = cohort is not None and cohort.is_sampled
+    injecting = fault is not None and fault.injects
+    local = _local_caller(local_fn, fault, tau)
 
     def step(w, opt_state, round_key, t, batches_and_mask, eta_l):
         """One server round inside the compiled scan body."""
         local_batches, pad_mask = batches_and_mask
         m_local = pad_mask.shape[0]
         start = jax.lax.axis_index(axis) * m_local
-        if not sampled:
+        if not sampled and not injecting:
             deltas = mask_rows(
                 local_fn(w, local_batches, eta_l, round_key, start), pad_mask)
             w_next, aux, opt_state = algorithm.apply_round_sharded(
                 round_key, w, deltas, pad_mask, opt_state, axis, m_total=m_true)
         else:
-            full = cohort.round_mask(round_key, m_true)
-            full = jnp.concatenate(
-                [full, jnp.zeros((m_pad - m_true,), jnp.float32)])
-            mask = jax.lax.dynamic_slice(full, (start,), (m_local,)) * pad_mask
-            deltas = mask_rows(
-                local_fn(w, local_batches, eta_l, round_key, start), mask)
+            if sampled:
+                full = cohort.round_mask(round_key, m_true)
+                full = jnp.concatenate(
+                    [full, jnp.zeros((m_pad - m_true,), jnp.float32)])
+                mask = jax.lax.dynamic_slice(full, (start,),
+                                             (m_local,)) * pad_mask
+            else:
+                mask = pad_mask
+            if injecting:
+                alive, straggler, corrupt = (
+                    _pad_slice(v, m_pad, start, m_local)
+                    for v in fault_masks(fault, round_key, m_true))
+                deltas = local(w, local_batches, eta_l, round_key, start,
+                               straggler)
+                deltas, mask = apply_faults(deltas, mask, alive, corrupt)
+            else:
+                deltas = mask_rows(
+                    local_fn(w, local_batches, eta_l, round_key, start), mask)
             moments = algorithm.local_moments(round_key, w, deltas, mask,
                                               start, opt_state)
             moments = jax.lax.psum(moments, axis)
-            moments = _resolve_sampled_count(moments, cohort, algorithm)
+            if injecting:
+                moments = sanitize_moments(moments)
+                moments = _resolve_realized_count(moments, algorithm)
+            else:
+                moments = _resolve_sampled_count(moments, cohort, algorithm)
             w_next, aux, opt_state = algorithm.apply_from_moments(
                 round_key, w, moments, opt_state)
         metric = _eval_metric(eval_fn, eval_every, w_next, t)
@@ -207,7 +294,8 @@ def _sharded_round_step(algorithm, local_fn, eval_fn, axis, m_true,
 
 def _stream_round_step(algorithm, local_fn, eval_fn,
                        m_true: int, m_pad: int, eval_every: int = 1,
-                       cohort: CohortSpec | None = None, axis: str | None = None):
+                       cohort: CohortSpec | None = None, axis: str | None = None,
+                       fault: FaultSpec | None = None, tau: int = 1):
     """One server round streamed over client chunks (DESIGN.md §12).
 
     The cohort arrives pre-chunked: every client-batch leaf is
@@ -232,6 +320,8 @@ def _stream_round_step(algorithm, local_fn, eval_fn,
     exactly as ``apply_round_sharded`` does.
     """
     sampled = cohort is not None and cohort.is_sampled
+    injecting = fault is not None and fault.injects
+    local_call = _local_caller(local_fn, fault, tau)
 
     def step(w, opt_state, round_key, t, batches_and_mask, eta_l):
         """One server round inside the compiled scan body."""
@@ -250,38 +340,70 @@ def _stream_round_step(algorithm, local_fn, eval_fn,
                 [full, jnp.zeros((m_pad - m_true,), jnp.float32)])
             local = jax.lax.dynamic_slice(full, (shard_start,), (n_chunks * c,))
             chunk_mask = chunk_mask * local.reshape(n_chunks, c)
+        if injecting:
+            # fault draws: same full-cohort-then-slice pattern as the
+            # sampling mask, laid on this shard's chunk grid so they can
+            # ride the inner scan's xs (inactive classes materialize their
+            # inert value — the grid rides the scan either way)
+            alive_f, strag_f, corr_f = fault_masks(fault, round_key, m_true)
+            grid_len = n_chunks * c
 
-        def chunk_moments(j, batches_j, mask_j):
+            def grid(v, default: float):
+                if v is None:
+                    v = jnp.full((m_true,), default, jnp.float32)
+                v = jnp.concatenate(
+                    [v, jnp.zeros((m_pad - m_true,), jnp.float32)])
+                v = jax.lax.dynamic_slice(v, (shard_start,), (grid_len,))
+                return v.reshape(n_chunks, c)
+
+            fault_grid = (grid(alive_f, 1.0), grid(strag_f, 0.0),
+                          grid(corr_f, 0.0))
+        else:
+            fault_grid = ()
+
+        def chunk_moments(j, batches_j, mask_j, fault_j):
             """Local training + release moments for chunk ``j`` of the cohort."""
             start = shard_start + j * c
-            deltas = mask_rows(local_fn(w, batches_j, eta_l, round_key, start),
-                               mask_j)
+            if injecting:
+                alive_j, strag_j, corr_j = fault_j
+                deltas = local_call(w, batches_j, eta_l, round_key, start,
+                                    strag_j)
+                deltas, mask_j = apply_faults(deltas, mask_j, alive_j, corr_j)
+            else:
+                deltas = mask_rows(
+                    local_fn(w, batches_j, eta_l, round_key, start), mask_j)
             return algorithm.local_moments(round_key, w, deltas, mask_j,
                                            start, opt_state)
 
         # zero-initialize the running moments from the chunk computation's
         # abstract shape (no FLOPs traced): every field is an additive SUM,
         # so zeros is the correct identity for the accumulation
+        row_sds = jax.ShapeDtypeStruct((c,), jnp.float32)
         shapes = jax.eval_shape(
             chunk_moments, jax.ShapeDtypeStruct((), jnp.int32),
             jax.tree_util.tree_map(
                 lambda x: jax.ShapeDtypeStruct(x.shape[1:], x.dtype),
                 chunk_batches),
-            jax.ShapeDtypeStruct((c,), chunk_mask.dtype))
+            jax.ShapeDtypeStruct((c,), chunk_mask.dtype),
+            (row_sds,) * 3 if injecting else ())
         acc0 = jax.tree_util.tree_map(
             lambda s: jnp.zeros(s.shape, s.dtype), shapes)
 
         def body(acc, xs):
             """Scan body: accumulate one chunk's additive moments into the carry."""
-            j, batches_j, mask_j = xs
-            mom = chunk_moments(j, batches_j, mask_j)
+            j, batches_j, mask_j, fault_j = xs
+            mom = chunk_moments(j, batches_j, mask_j, fault_j)
             return jax.tree_util.tree_map(jnp.add, acc, mom), None
 
         js = jnp.arange(n_chunks, dtype=jnp.int32)
-        moments, _ = jax.lax.scan(body, acc0, (js, chunk_batches, chunk_mask))
+        moments, _ = jax.lax.scan(
+            body, acc0, (js, chunk_batches, chunk_mask, fault_grid))
         if axis is not None:
             moments = jax.lax.psum(moments, axis)
-        if sampled:
+        if injecting:
+            moments = sanitize_moments(moments)
+            moments = _resolve_realized_count(moments, algorithm)
+        elif sampled:
             moments = _resolve_sampled_count(moments, cohort, algorithm)
         elif getattr(algorithm, "supports_static_count", True):
             # full participation: the accumulated count is exactly m_true;
@@ -305,14 +427,17 @@ def _stream_round_step(algorithm, local_fn, eval_fn,
 def _build_stream_chunk_fn(algorithm: ServerAlgorithm, local_fn, eval_fn,
                            donate: bool, unroll: int, stream: StreamSpec,
                            m_true: int, m_pad: int,
-                           eval_every: int, cohort: CohortSpec | None):
+                           eval_every: int, cohort: CohortSpec | None,
+                           fault: FaultSpec | None, tau: int):
     step_round = _stream_round_step(algorithm, local_fn, eval_fn,
-                                    m_true, m_pad, eval_every, cohort)
+                                    m_true, m_pad, eval_every, cohort,
+                                    fault=fault, tau=tau)
 
     def chunk(carry, key, ts, chunk_batches, chunk_mask, eta_l):
         """Compiled scan over one chunk of rounds."""
         keys = _fold_round_keys(key, ts)
-        body = _scan_body(step_round, (chunk_batches, chunk_mask), eta_l)
+        body = _scan_body(step_round, (chunk_batches, chunk_mask), eta_l,
+                          fault)
         return jax.lax.scan(body, carry, (keys, ts), unroll=min(unroll, len(ts)))
 
     return jax.jit(chunk, donate_argnums=(0,) if donate else ())
@@ -324,18 +449,19 @@ _cached_stream_chunk_fn = functools.lru_cache(maxsize=32)(_build_stream_chunk_fn
 def _stream_chunk_fn(algorithm: ServerAlgorithm, local_fn, eval_fn,
                      donate: bool, unroll: int, stream: StreamSpec,
                      m_true: int, m_pad: int, eval_every: int = 1,
-                     cohort: CohortSpec | None = None):
+                     cohort: CohortSpec | None = None,
+                     fault: FaultSpec | None = None, tau: int = 1):
     """Compiled streaming scan chunk, cached like ``_scan_chunk_fn`` (the
     StreamSpec and padded-cohort geometry join the key; same
     unhashable-algorithm fallback)."""
     try:
         return _cached_stream_chunk_fn(algorithm, local_fn, eval_fn, donate,
                                        unroll, stream, m_true, m_pad,
-                                       eval_every, cohort)
+                                       eval_every, cohort, fault, tau)
     except TypeError:
         return _build_stream_chunk_fn(algorithm, local_fn, eval_fn, donate,
                                       unroll, stream, m_true, m_pad,
-                                      eval_every, cohort)
+                                      eval_every, cohort, fault, tau)
 
 
 def _build_sharded_stream_chunk_fn(algorithm: ServerAlgorithm, local_fn,
@@ -343,7 +469,8 @@ def _build_sharded_stream_chunk_fn(algorithm: ServerAlgorithm, local_fn,
                                    stream: StreamSpec, mesh, axis: str,
                                    batch_treedef, leaf_ndims,
                                    n_chunks: int, m_true: int, m_pad: int,
-                                   eval_every: int, cohort: CohortSpec | None):
+                                   eval_every: int, cohort: CohortSpec | None,
+                                   fault: FaultSpec | None, tau: int):
     """Each shard streams its own slice of the chunk grid (DESIGN.md §12).
 
     The pre-chunked leaves are (n_chunks_total, c, ...) with chunks laid out
@@ -354,7 +481,7 @@ def _build_sharded_stream_chunk_fn(algorithm: ServerAlgorithm, local_fn,
     """
     step_round = _stream_round_step(algorithm, local_fn, eval_fn,
                                     m_true, m_pad, eval_every, cohort,
-                                    axis=axis)
+                                    axis=axis, fault=fault, tau=tau)
     rules = client_axis_rules(mesh, axis=axis)
     specs = [logical_to_pspec(("clients",) + (None,) * (nd - 1), rules)
              for nd in leaf_ndims]
@@ -365,7 +492,8 @@ def _build_sharded_stream_chunk_fn(algorithm: ServerAlgorithm, local_fn,
     def chunk(carry, key, ts, chunk_batches, chunk_mask, eta_l):
         """Compiled scan over one chunk of rounds."""
         keys = _fold_round_keys(key, ts)
-        body = _scan_body(step_round, (chunk_batches, chunk_mask), eta_l)
+        body = _scan_body(step_round, (chunk_batches, chunk_mask), eta_l,
+                          fault)
         return jax.lax.scan(body, carry, (keys, ts), unroll=min(unroll, len(ts)))
 
     sharded = shard_map(
@@ -383,18 +511,19 @@ _cached_sharded_stream_chunk_fn = (
 def _sharded_stream_chunk_fn(algorithm, local_fn, eval_fn, donate, unroll,
                              stream, mesh, axis, batch_treedef, leaf_ndims,
                              n_chunks, m_true, m_pad, eval_every: int = 1,
-                             cohort: CohortSpec | None = None):
+                             cohort: CohortSpec | None = None,
+                             fault: FaultSpec | None = None, tau: int = 1):
     """Compiled sharded+streamed scan chunk, cached like ``_scan_chunk_fn``."""
     try:
         return _cached_sharded_stream_chunk_fn(
             algorithm, local_fn, eval_fn, donate, unroll, stream, mesh, axis,
             batch_treedef, leaf_ndims, n_chunks, m_true, m_pad, eval_every,
-            cohort)
+            cohort, fault, tau)
     except TypeError:
         return _build_sharded_stream_chunk_fn(
             algorithm, local_fn, eval_fn, donate, unroll, stream, mesh, axis,
             batch_treedef, leaf_ndims, n_chunks, m_true, m_pad, eval_every,
-            cohort)
+            cohort, fault, tau)
 
 
 def _client_batch_specs(treedef, leaf_ndims, mask_len, rules):
@@ -411,32 +540,80 @@ def _fold_round_keys(key, ts):
     return jax.vmap(lambda t: jax.random.fold_in(key, t))(ts)
 
 
-def _scan_body(step_round, client_batches, eta_l):
+def _scan_body(step_round, client_batches, eta_l,
+               fault: FaultSpec | None = None):
     """The one scan body every engine compiles — the tail-carry and key
     semantics the bit-exactness tests pin down.  xs is (round_keys, ts): the
-    round index rides along for eval cadence and diagnostics."""
+    round index rides along for eval cadence and diagnostics.
+
+    With an armed watchdog (``FaultSpec(watchdog=True)``, DESIGN.md §13) the
+    carry grows a fourth element ``fault_t`` (int32, -1 while healthy): after
+    each round the body checks the global model for non-finite coordinates
+    and the step size for NaN / explosion past ``eta_max``; a tripped round
+    is NOT committed (the carry rolls back to the pre-round state, so
+    recovery resumes from the last healthy iterate), ``fault_t`` records the
+    faulting GLOBAL round index, and every remaining round in the chunk is
+    frozen behind ``lax.cond`` — no local training, NaN histories.
+    """
+    watchdog = fault is not None and fault.watchdog
 
     def body(carry, key_t):
         """Round-scan body: one server round, w_next appended to the iterate tail."""
         round_key, t = key_t
-        w, opt_state, tail = carry
-        w_next, opt_state, outs = step_round(
-            w, opt_state, round_key, t, client_batches, eta_l)
-        tail = jnp.concatenate([tail[1:], w_next[None]], axis=0)
-        return (w_next, opt_state, tail), outs
+        if not watchdog:
+            w, opt_state, tail = carry
+            w_next, opt_state, outs = step_round(
+                w, opt_state, round_key, t, client_batches, eta_l)
+            tail = jnp.concatenate([tail[1:], w_next[None]], axis=0)
+            return (w_next, opt_state, tail), outs
+
+        w, opt_state, tail, fault_t = carry
+        tripped = fault_t >= 0
+
+        def frozen(operand):
+            """Post-trip round: carry passes through, histories record NaN."""
+            w, opt_state, tail = operand
+            nanf = jnp.float32(jnp.nan)
+            return w, opt_state, tail, (nanf, nanf, nanf, nanf)
+
+        def live(operand):
+            """Healthy round: the exact computation the unwatched body runs."""
+            w, opt_state, tail = operand
+            w_next, opt_next, outs = step_round(
+                w, opt_state, round_key, t, client_batches, eta_l)
+            tail_next = jnp.concatenate([tail[1:], w_next[None]], axis=0)
+            return w_next, opt_next, tail_next, outs
+
+        w_next, opt_next, tail_next, outs = jax.lax.cond(
+            tripped, frozen, live, (w, opt_state, tail))
+        eta = outs[0]
+        healthy = (jnp.all(jnp.isfinite(w_next))
+                   & jnp.isfinite(eta)
+                   & (eta <= jnp.float32(fault.eta_max)))
+        bad = jnp.logical_and(~tripped, ~healthy)
+        # the faulting round's update is NOT committed — roll this round's
+        # carry back so recovery resumes from the last healthy iterate
+        w_next = jnp.where(bad, w, w_next)
+        opt_next = jax.tree_util.tree_map(
+            lambda a, b: jnp.where(bad, a, b), opt_state, opt_next)
+        tail_next = jnp.where(bad, tail, tail_next)
+        fault_t = jnp.where(bad, t, fault_t)
+        return (w_next, opt_next, tail_next, fault_t), outs
 
     return body
 
 
 def _build_scan_chunk_fn(algorithm: ServerAlgorithm, local_fn, eval_fn,
                          donate: bool, unroll: int,
-                         eval_every: int, cohort: CohortSpec | None):
-    step_round = _round_step(algorithm, local_fn, eval_fn, eval_every, cohort)
+                         eval_every: int, cohort: CohortSpec | None,
+                         fault: FaultSpec | None, tau: int):
+    step_round = _round_step(algorithm, local_fn, eval_fn, eval_every, cohort,
+                             fault, tau)
 
     def chunk(carry, key, ts, client_batches, eta_l):
         """Compiled scan over one chunk of rounds."""
         keys = _fold_round_keys(key, ts)
-        body = _scan_body(step_round, client_batches, eta_l)
+        body = _scan_body(step_round, client_batches, eta_l, fault)
         return jax.lax.scan(body, carry, (keys, ts), unroll=min(unroll, len(ts)))
 
     return jax.jit(chunk, donate_argnums=(0,) if donate else ())
@@ -447,7 +624,8 @@ _cached_scan_chunk_fn = functools.lru_cache(maxsize=32)(_build_scan_chunk_fn)
 
 def _scan_chunk_fn(algorithm: ServerAlgorithm, local_fn, eval_fn,
                    donate: bool, unroll: int, eval_every: int = 1,
-                   cohort: CohortSpec | None = None):
+                   cohort: CohortSpec | None = None,
+                   fault: FaultSpec | None = None, tau: int = 1):
     """Compiled scan over a chunk of rounds, cached by configuration.
 
     The cache key is (algorithm config, local-trainer/eval *identity*,
@@ -468,19 +646,23 @@ def _scan_chunk_fn(algorithm: ServerAlgorithm, local_fn, eval_fn,
     """
     try:
         return _cached_scan_chunk_fn(algorithm, local_fn, eval_fn,
-                                     donate, unroll, eval_every, cohort)
+                                     donate, unroll, eval_every, cohort,
+                                     fault, tau)
     except TypeError:
         return _build_scan_chunk_fn(algorithm, local_fn, eval_fn,
-                                    donate, unroll, eval_every, cohort)
+                                    donate, unroll, eval_every, cohort,
+                                    fault, tau)
 
 
 def _build_sharded_chunk_fn(algorithm: ServerAlgorithm, local_fn, eval_fn,
                             donate: bool, unroll: int,
                             mesh, axis: str, batch_treedef, leaf_ndims,
                             mask_len: int, m_true: int,
-                            eval_every: int, cohort: CohortSpec | None):
+                            eval_every: int, cohort: CohortSpec | None,
+                            fault: FaultSpec | None, tau: int):
     step_round = _sharded_round_step(algorithm, local_fn, eval_fn, axis,
-                                     m_true, mask_len, eval_every, cohort)
+                                     m_true, mask_len, eval_every, cohort,
+                                     fault, tau)
     rules = client_axis_rules(mesh, axis=axis)
     batch_specs, mask_spec = _client_batch_specs(batch_treedef, leaf_ndims,
                                                  mask_len, rules)
@@ -488,7 +670,7 @@ def _build_sharded_chunk_fn(algorithm: ServerAlgorithm, local_fn, eval_fn,
     def chunk(carry, key, ts, local_batches, mask, eta_l):
         """Compiled scan over one chunk of rounds."""
         keys = _fold_round_keys(key, ts)
-        body = _scan_body(step_round, (local_batches, mask), eta_l)
+        body = _scan_body(step_round, (local_batches, mask), eta_l, fault)
         return jax.lax.scan(body, carry, (keys, ts), unroll=min(unroll, len(ts)))
 
     sharded = shard_map(
@@ -504,7 +686,8 @@ _cached_sharded_chunk_fn = functools.lru_cache(maxsize=32)(_build_sharded_chunk_
 
 def _sharded_chunk_fn(algorithm, local_fn, eval_fn, donate, unroll,
                       mesh, axis, batch_treedef, leaf_ndims, mask_len, m_true,
-                      eval_every: int = 1, cohort: CohortSpec | None = None):
+                      eval_every: int = 1, cohort: CohortSpec | None = None,
+                      fault: FaultSpec | None = None, tau: int = 1):
     """Compiled shard_mapped scan chunk, cached like `_scan_chunk_fn` (the
     mesh, client-batch treedef and leaf ranks join the key; same unhashable-
     algorithm fallback)."""
@@ -512,12 +695,14 @@ def _sharded_chunk_fn(algorithm, local_fn, eval_fn, donate, unroll,
         return _cached_sharded_chunk_fn(algorithm, local_fn, eval_fn,
                                         donate, unroll, mesh, axis,
                                         batch_treedef, leaf_ndims, mask_len,
-                                        m_true, eval_every, cohort)
+                                        m_true, eval_every, cohort,
+                                        fault, tau)
     except TypeError:
         return _build_sharded_chunk_fn(algorithm, local_fn, eval_fn,
                                        donate, unroll, mesh, axis,
                                        batch_treedef, leaf_ndims, mask_len,
-                                       m_true, eval_every, cohort)
+                                       m_true, eval_every, cohort,
+                                       fault, tau)
 
 
 def _build_batched_run_fn(algorithm: ServerAlgorithm, local_fn, eval_fn,
@@ -622,10 +807,20 @@ def _sharded_batched_fn(algorithm, local_fn, eval_fn, tail_n, batched_w0,
 
 def _run_eager(algorithm, local_fn, w0, client_batches, *, rounds, eta_l,
                key, eval_fn, avg_last, eval_every: int = 1,
-               cohort: CohortSpec | None = None):
+               cohort: CohortSpec | None = None,
+               fault: FaultSpec | None = None, tau: int = 1):
     """Legacy engine: one jitted XLA program per round, dispatched from a
-    Python loop (re-traced per call — kept as the e7 throughput baseline)."""
-    step_round = _round_step(algorithm, local_fn, eval_fn, eval_every, cohort)
+    Python loop (re-traced per call — kept as the e7 throughput baseline).
+
+    The divergence watchdog runs HOST-side here (the loop is already on the
+    host): a tripped round is not committed, the remaining rounds are
+    skipped with NaN histories, and ``RunResult.fault_round`` records the
+    faulting round — the same semantics the compiled scan's in-carry
+    watchdog produces (DESIGN.md §13).
+    """
+    step_round = _round_step(algorithm, local_fn, eval_fn, eval_every, cohort,
+                             fault, tau)
+    watchdog = fault is not None and fault.watchdog
 
     def one_round(w, opt_state, round_key, t):
         """One jitted round dispatched from the Python loop."""
@@ -637,17 +832,35 @@ def _run_eager(algorithm, local_fn, w0, client_batches, *, rounds, eta_l,
     opt_state = algorithm.init_state(w0)
     tail: list[jax.Array] = []
     etas, metrics, naives, targets = [], [], [], []
+    fault_round = None
     for t in range(rounds):
-        w, opt_state, (eta, metric, naive, target) = round_jit(
+        w_next, opt_next, (eta, metric, naive, target) = round_jit(
             w, opt_state, jax.random.fold_in(key, t), jnp.int32(t))
         etas.append(eta)
         metrics.append(metric)
         naives.append(naive)
         targets.append(target)
+        if watchdog:
+            eta_host = float(jax.device_get(eta))
+            healthy = (bool(jax.device_get(jnp.all(jnp.isfinite(w_next))))
+                       and eta_host == eta_host  # not NaN
+                       and eta_host <= fault.eta_max)
+            if not healthy:
+                fault_round = t
+                nanf = jnp.float32(jnp.nan)
+                for _ in range(rounds - t - 1):
+                    etas.append(nanf)
+                    metrics.append(nanf)
+                    naives.append(nanf)
+                    targets.append(nanf)
+                break
+        w, opt_state = w_next, opt_next
         tail.append(w)
         if len(tail) > avg_last:
             tail.pop(0)
 
+    if not tail:  # watchdog tripped on round 0: w0 is the last healthy iterate
+        tail = [w]
     final_w = jnp.mean(jnp.stack(tail), axis=0)
     return RunResult(
         final_w=final_w,
@@ -656,6 +869,7 @@ def _run_eager(algorithm, local_fn, w0, client_batches, *, rounds, eta_l,
         metric_history=jnp.stack(metrics),
         eta_naive_history=jnp.stack(naives),
         eta_target_history=jnp.stack(targets),
+        fault_round=fault_round,
     )
 
 

@@ -38,6 +38,8 @@ every ``run``/``resume``/``run_batched`` after the first.
 """
 from __future__ import annotations
 
+import dataclasses
+import time
 from typing import Any, Callable
 
 import jax
@@ -53,13 +55,38 @@ from repro.fedsim.server import RunResult
 from repro.fedsim.specs import (
     CohortSpec,
     EngineSpec,
+    FaultSpec,
     LocalSpec,
     ShardSpec,
     StreamSpec,
     TrainSpec,
 )
 
-__all__ = ["FederatedSession"]
+__all__ = ["FederatedSession", "RecoveryPolicy"]
+
+
+@dataclasses.dataclass(frozen=True)
+class RecoveryPolicy:
+    """Auto-recovery for watchdog-tripped runs (DESIGN.md §13).
+
+    ``run(key, checkpoint_dir=..., on_divergence=RecoveryPolicy(...))`` rolls
+    a tripped run back to the newest intact checkpoint, sleeps
+    ``backoff * attempt`` seconds (0 disables), and re-runs — at most
+    ``max_retries`` times, after which the fault is surfaced in
+    ``RunResult.fault_round`` instead.  Every rolled-back round was still
+    EXECUTED against client data, so retried rounds join the privacy
+    composition (``FederatedSession.privacy_report``).
+    """
+    max_retries: int = 3
+    backoff: float = 0.0
+
+    def __post_init__(self):
+        if self.max_retries < 1:
+            raise ValueError(
+                f"max_retries must be >= 1, got {self.max_retries} "
+                "(omit on_divergence to disable recovery)")
+        if self.backoff < 0.0:
+            raise ValueError(f"backoff must be >= 0, got {self.backoff}")
 
 
 def _is_flat_params(w0) -> bool:
@@ -84,6 +111,7 @@ class FederatedSession:
                  shard: ShardSpec = ShardSpec(),
                  cohort: CohortSpec = CohortSpec(),
                  stream: StreamSpec = StreamSpec(),
+                 fault: FaultSpec = FaultSpec(),
                  eval_fn: Callable | None = None,
                  num_clients: int | None = None):
         """Bind (algorithm, loss, model, client data) to declarative specs.
@@ -105,6 +133,9 @@ class FederatedSession:
           stream: client-chunk grid of the streaming engine (§12); only
             consulted when ``engine="stream"`` (a non-default spec under any
             other engine raises, rather than being silently ignored).
+          fault: deterministic fault injection + divergence watchdog (§13);
+            the default (no faults, watchdog off) is normalized away and
+            reproduces the fault-free program bit-for-bit.
           eval_fn: optional metric closure ``eval_fn(params) -> scalar``.
           num_clients: explicit cohort size, required only when the client
             axis is not leaf axis 0 (``run_batched(batched_data=True)``).
@@ -124,6 +155,18 @@ class FederatedSession:
         # compile-cache entries with pre-cohort callers (and with each other
         # regardless of how "no sampling" was spelled)
         self.cohort = cohort if cohort.is_sampled else None
+        # same normalization for the fault model: FaultSpec() is structurally
+        # the fault-free engine — identical compile-cache key, identical
+        # program, bit-exact with pre-fault sessions (DESIGN.md §13)
+        self.fault = fault if fault.is_active else None
+        # privacy compositions consumed by rolled-back rounds (recovery);
+        # privacy_report folds these into the round count
+        self._rounds_retried = 0
+        # test hook: callable (carry, attempt) -> carry applied before the
+        # first chunk of each recovery attempt — lets tests inject a
+        # TRANSIENT divergence (poison attempt 0 only) so the retried run is
+        # bit-exact with an unkilled reference
+        self._inject_divergence = None
         self.client_batches = client_batches
         # leaf axis 0 is the client axis EXCEPT for run_batched(batched_data=
         # True), where a seed axis leads — pass num_clients= explicitly there
@@ -147,9 +190,12 @@ class FederatedSession:
                             else (lambda wf: eval_fn(unravel(wf))))
         # the LocalTrainer closure (DESIGN.md §11): binds loss, LocalSpec and
         # tau once — its identity keys the engine's compile cache, and the
-        # default spec reproduces the pre-LocalSpec program bit-for-bit
+        # default spec reproduces the pre-LocalSpec program bit-for-bit.
+        # Straggler cutoffs need the with_steps variant (arity +1, §13).
+        with_steps = self.fault is not None and self.fault.straggler > 0.0
         self._local_fn = build_cohort_local_fn(self.loss_fn, self.local,
-                                               int(train.tau))
+                                               int(train.tau),
+                                               with_steps=with_steps)
 
     # -- helpers -----------------------------------------------------------
 
@@ -184,6 +230,10 @@ class FederatedSession:
     def _restore_params(self, w):
         return w if self._unravel is None else self._unravel(w)
 
+    @property
+    def _watchdog(self) -> bool:
+        return self.fault is not None and self.fault.watchdog
+
     def _restore_batched(self, w):
         return w if self._unravel is None else jax.vmap(self._unravel)(w)
 
@@ -207,14 +257,14 @@ class FederatedSession:
                 fn = _srv._stream_chunk_fn(
                     self.algorithm, self._local_fn, self.eval_fn, donate,
                     e.scan_unroll, stream, self.num_clients, m_pad,
-                    t.eval_every, self.cohort)
+                    t.eval_every, self.cohort, self.fault, int(t.tau))
                 return fn, batches, (mask,)
             leaves, treedef = jax.tree_util.tree_flatten(batches)
             fn = _srv._sharded_stream_chunk_fn(
                 self.algorithm, self._local_fn, self.eval_fn, donate,
                 e.scan_unroll, stream, s.mesh, s.client_axis, treedef,
                 tuple(x.ndim for x in leaves), n_chunks, self.num_clients,
-                m_pad, t.eval_every, self.cohort)
+                m_pad, t.eval_every, self.cohort, self.fault, int(t.tau))
             return fn, batches, (mask,)
         if s.mesh is not None:
             m_true = self.num_clients
@@ -225,11 +275,12 @@ class FederatedSession:
                 self.algorithm, self._local_fn, self.eval_fn, donate,
                 e.scan_unroll, s.mesh, s.client_axis, treedef,
                 tuple(x.ndim for x in leaves), mask.shape[0], m_true,
-                t.eval_every, self.cohort)
+                t.eval_every, self.cohort, self.fault, int(t.tau))
             return fn, batches, (mask,)
         fn = _srv._scan_chunk_fn(self.algorithm, self._local_fn, self.eval_fn,
                                  donate, e.scan_unroll,
-                                 t.eval_every, self.cohort)
+                                 t.eval_every, self.cohort, self.fault,
+                                 int(t.tau))
         return fn, self.client_batches, ()
 
     @staticmethod
@@ -259,18 +310,29 @@ class FederatedSession:
                    "algorithm": self.algorithm.name,
                    "rounds_total": self.train.rounds})
 
-    def _load(self, directory: str):
-        step = ckpt.latest_step(directory)
-        if step is None:
-            raise FileNotFoundError(f"no checkpoints in {directory}")
+    def _carry_template(self):
+        """Zero carry matching this session's structure (+ watchdog slot)."""
         w = jnp.asarray(self._w0)
-        tail_n = self._tail_n()
-        template = {
-            "carry": (w, self.algorithm.init_state(w),
-                      jnp.zeros((tail_n,) + w.shape, w.dtype)),
-            "hist": tuple(jnp.zeros((step,), jnp.float32) for _ in range(4)),
-        }
-        payload, meta = ckpt.load_checkpoint(directory, template, step=step)
+        carry = (w, self.algorithm.init_state(w),
+                 jnp.zeros((self._tail_n(),) + w.shape, w.dtype))
+        if self._watchdog:
+            carry = carry + (jnp.int32(-1),)
+        return carry
+
+    def _load(self, directory: str, *, retries: int = 0, backoff: float = 0.0):
+        """Newest INTACT checkpoint (corrupt ones are skipped — §13), with
+        optional transient-I/O retries; raises FileNotFoundError when the
+        directory holds no checkpoints at all."""
+
+        def template(step):
+            return {
+                "carry": self._carry_template(),
+                "hist": tuple(jnp.zeros((step,), jnp.float32)
+                              for _ in range(4)),
+            }
+
+        step, payload, meta = ckpt.load_latest_intact(
+            directory, template, retries=retries, backoff=backoff)
         carry = jax.tree_util.tree_map(jnp.asarray, payload["carry"])
         hist = tuple(jnp.asarray(h) for h in payload["hist"])
         key = _key_restore(meta["key"], meta.get("key_typed", False))
@@ -283,17 +345,32 @@ class FederatedSession:
     # -- entry points ------------------------------------------------------
 
     def run(self, key: jax.Array, *, checkpoint_dir: str | None = None,
-            checkpoint_every: int | None = None) -> RunResult:
+            checkpoint_every: int | None = None,
+            on_divergence: RecoveryPolicy | None = None) -> RunResult:
         """Run all ``train.rounds`` rounds from round 0.
 
         ``checkpoint_dir`` saves the full resumable state (carry + histories
         + RNG key + round counter) every ``checkpoint_every`` rounds (plus
         once at the end); ``resume`` picks it up bit-exactly.
+
+        ``on_divergence`` (requires ``checkpoint_dir`` and an armed
+        ``FaultSpec(watchdog=True)``) auto-recovers a watchdog-tripped run:
+        roll back to the newest intact checkpoint, back off, re-run — see
+        ``RecoveryPolicy`` and DESIGN.md §13.  Retried rounds join the
+        privacy composition reported by ``privacy_report``.
         """
         self._validate_cohort(self.num_clients)
         if checkpoint_every is not None and checkpoint_dir is None:
             raise ValueError("checkpoint_every requires checkpoint_dir "
                              "(nothing would be saved)")
+        if on_divergence is not None:
+            if not self._watchdog:
+                raise ValueError(
+                    "on_divergence requires FaultSpec(watchdog=True) — "
+                    "without the watchdog a diverged run never trips")
+            if checkpoint_dir is None:
+                raise ValueError("on_divergence requires checkpoint_dir "
+                                 "(rollback needs a checkpoint target)")
         if self.engine.engine == "eager":
             if self.shard.mesh is not None:
                 raise ValueError("client sharding requires engine='scan'")
@@ -304,13 +381,15 @@ class FederatedSession:
                 self.algorithm, self._local_fn, self._w0, self.client_batches,
                 rounds=t.rounds, eta_l=t.eta_l, key=key,
                 eval_fn=self.eval_fn, avg_last=t.avg_last,
-                eval_every=t.eval_every, cohort=self.cohort)
+                eval_every=t.eval_every, cohort=self.cohort,
+                fault=self.fault, tau=int(t.tau))
             out.final_w = self._restore_params(out.final_w)
             out.last_w = self._restore_params(out.last_w)
             return out
         return self._run_scan(key, start=0, carry=None, hist=[],
                               checkpoint_dir=checkpoint_dir,
-                              checkpoint_every=checkpoint_every)
+                              checkpoint_every=checkpoint_every,
+                              on_divergence=on_divergence)
 
     def resume(self, checkpoint_dir: str, *,
                checkpoint_every: int | None = None) -> RunResult:
@@ -339,6 +418,11 @@ class FederatedSession:
         is always one full-length scan program (``chunk_rounds`` /
         ``scan_unroll`` do not apply); it has no eager counterpart.
         """
+        if self.fault is not None:
+            raise ValueError(
+                "run_batched has no fault-injection/watchdog support; run "
+                "seeds through run() when a FaultSpec is active (a silently "
+                "fault-free sweep would misreport the fault model)")
         if self.engine.engine != "scan":
             raise ValueError(
                 f"run_batched has no {self.engine.engine!r} engine; use "
@@ -395,14 +479,24 @@ class FederatedSession:
         The sampling rate uses ``self.num_clients`` — construct the session
         with an explicit ``num_clients=`` when client data carries a leading
         seed axis (``run_batched(batched_data=True)``).
+
+        Faults enter the accounting in both directions (DESIGN.md §13): the
+        per-round rate is the REALIZED participation q * (1 - dropout) (a
+        dropped client's data never touches the release), and every round
+        re-executed by ``run(on_divergence=...)`` recovery joins the
+        composition — call after ``run`` to fold that run's retries in.
         """
         alg = self.algorithm
         q = 1.0 if self.cohort is None else self.cohort.sampling_rate(self.num_clients)
+        dropout = (self.fault.dropout
+                   if self.fault is not None and self.fault.injects else 0.0)
+        q = accounting.realized_participation(q, dropout)
+        rounds = self.train.rounds + self._rounds_retried
         if hasattr(alg, "budget"):
             # composed algorithms (DESIGN.md §11): the mechanism owns its
             # accounting; the hook reproduces the name-dispatch below exactly
             # for every legacy registry name (pinned by tests/test_session.py)
-            return alg.budget(delta, rounds=self.train.rounds, dim=self.dim,
+            return alg.budget(delta, rounds=rounds, dim=self.dim,
                               sampling_q=q)
         name = alg.name
         if name in ("dp-fedavg-ldp-gauss", "ldp-fedexp-gauss"):
@@ -413,11 +507,11 @@ class FederatedSession:
             sigma_xi = (alg.sigma_xi if alg.sigma_xi is not None
                         else self.dim * alg.sigma**2 / alg.num_clients)
             return accounting.cdp_budget(alg.clip_norm, alg.sigma,
-                                         alg.num_clients, self.train.rounds,
+                                         alg.num_clients, rounds,
                                          delta, sigma_xi=sigma_xi, sampling_q=q)
         if name in ("dp-fedavg-cdp", "dp-fedadam-cdp"):
             return accounting.cdp_budget(alg.clip_norm, alg.sigma,
-                                         alg.num_clients, self.train.rounds,
+                                         alg.num_clients, rounds,
                                          delta, sampling_q=q)
         if name == "cdp-fedexp-adaptive-clip":
             # single source of truth for the z-tracking accounting (the
@@ -425,17 +519,29 @@ class FederatedSession:
             from repro.core.compose import CentralGaussian
             return CentralGaussian(z_mult=alg.z_mult,
                                    num_clients=alg.num_clients).budget(
-                delta, rounds=self.train.rounds, dim=self.dim,
+                delta, rounds=rounds, dim=self.dim,
                 sampling_q=q, with_numerator=True)
         raise ValueError(f"{name!r} is not a private algorithm")
 
     # -- scan-engine internals --------------------------------------------
 
-    def _assemble(self, carry, outs) -> RunResult:
-        etas, metrics, naives, targets = (
+    @staticmethod
+    def _cat_hist(outs):
+        """Concatenate per-chunk history tuples (length-0 arrays when empty)."""
+        return tuple(
             jnp.concatenate([jnp.asarray(o[i]) for o in outs])
+            if outs else jnp.zeros((0,), jnp.float32)
             for i in range(4))
-        w_last, _, tail = carry
+
+    def _assemble(self, carry, outs) -> RunResult:
+        etas, metrics, naives, targets = self._cat_hist(outs)
+        if len(carry) == 4:  # watchdog carry (§13)
+            w_last, _, tail, fault_t = carry
+            ft = int(jax.device_get(fault_t))
+            fault_round = ft if ft >= 0 else None
+        else:
+            w_last, _, tail = carry
+            fault_round = None
         return RunResult(
             final_w=self._restore_params(jnp.mean(tail, axis=0)),
             last_w=self._restore_params(w_last),
@@ -443,12 +549,16 @@ class FederatedSession:
             metric_history=metrics,
             eta_naive_history=naives,
             eta_target_history=targets,
+            fault_round=fault_round,
         )
 
     def _run_scan(self, key, *, start: int, carry, hist,
                   checkpoint_dir: str | None,
-                  checkpoint_every: int | None) -> RunResult:
+                  checkpoint_every: int | None,
+                  on_divergence: RecoveryPolicy | None = None) -> RunResult:
         t = self.train
+        policy = on_divergence
+        watchdog = self._watchdog
         donate = self._donate()
         if carry is None:
             # Donation would consume the caller's w0 buffer; hand a copy.
@@ -456,23 +566,57 @@ class FederatedSession:
                  else jnp.asarray(self._w0))
             carry = (w, self.algorithm.init_state(w),
                      jnp.zeros((self._tail_n(),) + w.shape, w.dtype))
+        if watchdog and len(carry) == 3:
+            carry = carry + (jnp.int32(-1),)
         fn, batches, extra = self._chunk_callable(donate)
         eta_l = jnp.float32(t.eta_l)
 
         outs = list(hist)  # resumed histories (if any) lead the concat
-        for s, e in self._chunk_bounds(start, t.rounds, self.engine.chunk_rounds,
-                                       checkpoint_every):
+        if policy is not None and ckpt.latest_step(checkpoint_dir) is None:
+            # a rollback target must exist before any round runs
+            self._save(checkpoint_dir, start, key, carry, self._cat_hist(outs))
+        bounds = self._chunk_bounds(start, t.rounds, self.engine.chunk_rounds,
+                                    checkpoint_every)
+        retries = 0
+        inject_pending = self._inject_divergence is not None
+        idx = 0
+        while idx < len(bounds):
+            s, e = bounds[idx]
+            if inject_pending:
+                carry = self._inject_divergence(carry, retries)
+                inject_pending = False
             carry, chunk_outs = fn(carry, key,
                                    jnp.arange(s, e, dtype=jnp.int32),
                                    batches, *extra, eta_l)
+            fault_t = int(jax.device_get(carry[3])) if watchdog else -1
+            if fault_t >= 0 and policy is not None \
+                    and retries < policy.max_retries:
+                # rollback: newest intact checkpoint, backoff, re-run.  The
+                # rounds past the rollback step were EXECUTED (their releases
+                # happened) and will re-run — they join the privacy
+                # composition (privacy_report)
+                retries += 1
+                if policy.backoff > 0.0:
+                    time.sleep(policy.backoff * retries)
+                step, key, carry, restored = self._load(
+                    checkpoint_dir, retries=2, backoff=policy.backoff)
+                self._rounds_retried += fault_t + 1 - step
+                outs = [restored]
+                bounds = self._chunk_bounds(step, t.rounds,
+                                            self.engine.chunk_rounds,
+                                            checkpoint_every)
+                idx = 0
+                inject_pending = self._inject_divergence is not None
+                continue
             outs.append(chunk_outs)
-            if checkpoint_dir is not None and (
+            # never persist a tripped carry — the rollback target must stay
+            # the last HEALTHY state
+            if checkpoint_dir is not None and fault_t < 0 and (
                     e == t.rounds
                     or (checkpoint_every and e % checkpoint_every == 0)):
                 self._save(checkpoint_dir, e, key, carry,
-                           tuple(jnp.concatenate([jnp.asarray(o[i])
-                                                  for o in outs])
-                                 for i in range(4)))
+                           self._cat_hist(outs))
+            idx += 1
         return self._assemble(carry, outs)
 
 

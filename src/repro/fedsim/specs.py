@@ -43,7 +43,8 @@ import jax
 import jax.numpy as jnp
 
 __all__ = ["TrainSpec", "LocalSpec", "EngineSpec", "StreamSpec", "ShardSpec",
-           "CohortSpec", "SAMPLING_TAG", "LOCAL_TRAIN_TAG"]
+           "CohortSpec", "FaultSpec", "SAMPLING_TAG", "LOCAL_TRAIN_TAG",
+           "FAULT_TAG"]
 
 # fold_in tag deriving the per-round sampling key from the round key.  Client
 # randomization folds the GLOBAL CLIENT INDEX (0..M-1) into the same round
@@ -56,6 +57,12 @@ SAMPLING_TAG = 2**31 - 1
 # Per-client local keys then fold in the GLOBAL client index, so shards
 # shuffle exactly as the single-device engine does.
 LOCAL_TRAIN_TAG = 2**31 - 2
+
+# fold_in tag deriving the per-round FAULT-INJECTION key (dropouts,
+# straggler cutoffs, corrupted updates — DESIGN.md §13) from the round key;
+# next to the other tags, far outside any client index, so fault draws never
+# collide with sampling, local-training, or client-randomizer streams.
+FAULT_TAG = 2**31 - 3
 
 
 @dataclasses.dataclass(frozen=True)
@@ -259,3 +266,68 @@ class CohortSpec:
             perm = jax.random.permutation(k, num_clients)
             return (perm < self.size).astype(jnp.float32)
         return jax.random.bernoulli(k, self.q, (num_clients,)).astype(jnp.float32)
+
+
+@dataclasses.dataclass(frozen=True)
+class FaultSpec:
+    """What goes wrong each round: deterministic fault injection + detection
+    (DESIGN.md §13).
+
+    The default (all fields at rest) is a FAULT-FREE run and normalizes to
+    the unfaulted engine path — bit-for-bit today's behavior, exactly like
+    ``CohortSpec()``'s full-participation normalization.  Any non-default
+    field routes rounds through the masked-moment protocol with a per-round
+    fault draw keyed by ``fold_in(round_key, FAULT_TAG)`` and GLOBAL client
+    index, so faulty runs are bit-reproducible across the scan / eager /
+    sharded / stream engines and across resumes.
+
+    Injection fields (per-round, per-client, independent):
+
+    * ``dropout`` — probability a client silently drops out of the round:
+      its update becomes a zero-weight row (the §9/§10 mask machinery), and
+      the realized cohort count shrinks accordingly.
+    * ``straggler`` + ``straggler_steps`` — probability a client misses the
+      round deadline having completed only ``straggler_steps`` of the
+      configured ``tau`` local steps; its (partial) update still aggregates.
+    * ``corrupt`` — probability a surviving client returns a corrupted
+      (non-finite) update.  The engine injects NaN rows and the server-side
+      finite screen zero-weights them — exercising exactly the degradation
+      path a real corrupted device would hit.
+
+    Detection fields (the divergence watchdog, §13):
+
+    * ``watchdog`` — arm the in-scan divergence watchdog: a non-finite
+      global model or a step size above ``eta_max`` freezes the remaining
+      rounds of the chunk (``lax.cond``) and surfaces the faulting round
+      index as ``RunResult.fault_round``; ``session.run(on_divergence=...)``
+      turns that into rollback-and-retry.
+    """
+
+    dropout: float = 0.0        # P(client drops out of a round)
+    straggler: float = 0.0      # P(client misses the deadline)
+    straggler_steps: int = 1    # local steps a straggler completes (< tau)
+    corrupt: float = 0.0        # P(surviving client returns non-finite rows)
+    watchdog: bool = False      # arm the in-scan divergence watchdog
+    eta_max: float = 1e6        # watchdog: eta_g above this = divergence
+
+    def __post_init__(self):
+        for field in ("dropout", "straggler", "corrupt"):
+            v = getattr(self, field)
+            if not 0.0 <= v < 1.0:
+                raise ValueError(f"{field} must be in [0, 1), got {v}")
+        if self.straggler_steps < 1:
+            raise ValueError(
+                f"straggler_steps must be >= 1, got {self.straggler_steps}")
+        if not self.eta_max > 0.0:
+            raise ValueError(f"eta_max must be > 0, got {self.eta_max}")
+
+    @property
+    def injects(self) -> bool:
+        """True when this spec actually perturbs rounds (any nonzero rate)."""
+        return self.dropout > 0.0 or self.straggler > 0.0 or self.corrupt > 0.0
+
+    @property
+    def is_active(self) -> bool:
+        """True when the engine must deviate from the unfaulted program
+        (injection or watchdog); ``FaultSpec()`` normalizes to None."""
+        return self.injects or self.watchdog

@@ -15,7 +15,8 @@ Usage:
 
 Per combo it writes ``<out>/<arch>__<shape>__<mesh>.json`` with:
   memory_analysis (bytes per device), cost_analysis (flops/bytes), collective
-  bytes by kind, the roofline terms, MODEL_FLOPS and the useful-compute ratio.
+  bytes by kind, the roofline terms, MODEL_FLOPS, the useful-compute ratio
+  and, for train shapes, the registry-resolved federated algorithm.
 """
 import argparse
 import json
@@ -93,6 +94,12 @@ def lower_one(arch: str, shape_name: str, *, multi_pod: bool,
             bshapes, blogical = specs_mod.train_input_specs(cfg, shape, fed, mesh, rules)
             bshard = specs_mod.tree_input_shardings(mesh, bshapes, blogical, rules)
             trainer = FederatedTrainer(model, fed, n_params)
+            # resolve through the fedsim registry up front: an unsupported
+            # algorithm fails here with a clear message, not deep in lowering
+            alg = trainer.server_algorithm(k * fed.virtual_clients)
+            fed_info = {"algorithm": alg.name, "is_private": alg.is_private,
+                        "cohort_k": k, "tau": trainer.train.tau,
+                        "eta_l": trainer.train.eta_l}
             step = trainer.make_train_step(cohort_k=k)
             jitted = jax.jit(step, in_shardings=(pshard, bshard, kshard),
                              out_shardings=(pshard, None))
@@ -134,7 +141,8 @@ def lower_one(arch: str, shape_name: str, *, multi_pod: bool,
                 tokens = shape.global_batch * shape.seq_len
 
     return lowered, dict(cfg=cfg, model=model, n_params=n_params, chips=chips,
-                         tokens=tokens, kind=shape.kind, rules=rules)
+                         tokens=tokens, kind=shape.kind, rules=rules,
+                         fed_info=fed_info if shape.kind == "train" else None)
 
 
 def run_one(arch: str, shape_name: str, *, multi_pod: bool, out_dir: str,
@@ -173,6 +181,7 @@ def run_one(arch: str, shape_name: str, *, multi_pod: bool, out_dir: str,
         "mesh": mesh_name,
         "chips": info["chips"],
         "kind": info["kind"],
+        "fed": info["fed_info"],
         "num_params": info["n_params"],
         "tokens_per_step": info["tokens"],
         "lower_s": round(t_lower, 1),

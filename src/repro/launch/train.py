@@ -7,11 +7,21 @@ the paper) for a cohort of K clients laid out on the client mesh axes:
      token microbatches (zero cross-client communication by construction;
      tensor-parallel collectives run *inside* each client),
   2. per-client global-norm clipping of the parameter-update pytrees,
-  3. (LDP) per-client Gaussian randomization / (CDP) server noise on the mean,
+  3. the mechanism's randomization (per-client Gaussian for LDP, server noise
+     on the mean for CDP), applied leaf-wise to the update pytrees,
   4. the FedEXP statistics — mean ||c_i||^2, ||cbar||^2 — which GSPMD lowers
      to scalar all-reduces over the client axes (the paper's O(1)-overhead
      claim, checked structurally in EXPERIMENTS.md §Roofline),
   5. the adaptive global step size (Eqs. 6/8) and the model update.
+
+The server rule is NOT hand-rolled here: ``FederatedConfig.algorithm`` is
+resolved through ``repro.core.fedexp.make_algorithm`` — the same registry the
+``fedsim`` engines use — and the composed ``mechanism x step`` layers supply
+the clip threshold, the noise placement/scale, the round-key splits, and the
+extrapolation rule (``mechanism.extrapolation``).  This module only owns the
+pytree plumbing the flat (M, d) engines cannot: model-parallel local training
+and leaf-wise clip/noise/mean over parameter trees.  The local phase is
+declared by the session-era ``TrainSpec`` (``trainer.train``).
 
 Supports sequential "virtual clients" per mesh slot (scan) to reach
 realistic cohort sizes M >> K without extra memory.
@@ -19,17 +29,24 @@ realistic cohort sizes M >> K without extra memory.
 from __future__ import annotations
 
 import dataclasses
-import functools
 import math
 from typing import Any
 
 import jax
 import jax.numpy as jnp
 
-from repro.configs.base import FederatedConfig, ModelConfig
-from repro.core import stepsize
+from repro.configs.base import FederatedConfig
+from repro.core.aggregation import RoundStats
+from repro.core.compose import CentralGaussian, ComposedAlgorithm, GaussianLDP, NoPrivacy
+from repro.core.fedexp import make_algorithm
+from repro.fedsim.specs import TrainSpec
 
 __all__ = ["FederatedTrainer"]
+
+# mechanisms with a leaf-wise (pytree) release: clip + Gaussian noise commute
+# with flattening, so the flat-engine semantics transfer exactly.  PrivUnit
+# does not (its cap sampler needs the whole flat vector) and stays flat-only.
+_PYTREE_MECHANISMS = (NoPrivacy, GaussianLDP, CentralGaussian)
 
 
 def _tree_sq_norm(tree, axes_are_client: bool = False):
@@ -49,11 +66,46 @@ def _tree_noise(key, tree, std):
     return jax.tree_util.tree_unflatten(treedef, noise)
 
 
+def _tree_client_mean(tree):
+    return jax.tree_util.tree_map(lambda l: jnp.mean(l, axis=0), tree)
+
+
 @dataclasses.dataclass
 class FederatedTrainer:
     model: Any                      # DecoderLM | EncDecLM
     fed: FederatedConfig
     num_params: int                 # d, for the hyperparameter-free sigma_xi
+
+    def __post_init__(self):
+        # session-era declaration of the local phase: one train_step is one
+        # round of tau local SGD steps at eta_l (TrainSpec validates both)
+        self.train = TrainSpec(rounds=1, tau=self.fed.local_steps,
+                               eta_l=self.fed.local_lr)
+
+    # ------------------------------------------------------------------
+
+    def server_algorithm(self, m_total: int) -> ComposedAlgorithm:
+        """Resolve ``fed.algorithm`` to the composed ``ServerAlgorithm`` for a
+        cohort of ``m_total`` clients — the same registry the fedsim engines
+        use, restricted to what a stateless pytree train_step can execute."""
+        fed = self.fed
+        try:
+            alg = make_algorithm(fed.algorithm, clip_norm=fed.clip_norm,
+                                 sigma=fed.noise_sigma, num_clients=m_total)
+        except KeyError as e:
+            raise ValueError(
+                f"unsupported datacenter algorithm {fed.algorithm!r}: {e}") from e
+        if alg.step.stateful:
+            raise ValueError(
+                f"{fed.algorithm!r} carries server state (FedOpt moments / "
+                "adaptive clip); the stateless datacenter train_step supports "
+                "fixed-eta and FedEXP steps only — use the fedsim engines")
+        if not isinstance(alg.mechanism, _PYTREE_MECHANISMS):
+            raise ValueError(
+                f"{fed.algorithm!r} uses {type(alg.mechanism).__name__}, which "
+                "has no leaf-wise pytree release; the datacenter path supports "
+                "NoPrivacy, GaussianLDP and CentralGaussian mechanisms")
+        return alg
 
     # ------------------------------------------------------------------
 
@@ -65,7 +117,7 @@ class FederatedTrainer:
 
     def _local_train(self, params, client_batch):
         """tau local SGD steps (Algorithm 3). client_batch leaves: (tau, b, ...)."""
-        eta_l = self.fed.local_lr
+        eta_l = self.train.eta_l
 
         def sgd(p, step_batch):
             loss, g = jax.value_and_grad(self._local_loss)(p, step_batch)
@@ -79,13 +131,13 @@ class FederatedTrainer:
     # ------------------------------------------------------------------
 
     def make_train_step(self, cohort_k: int):
-        fed = self.fed
-        alg = fed.algorithm
-        c = fed.clip_norm
-        sigma = fed.noise_sigma
-        m_total = cohort_k * fed.virtual_clients
+        m_total = cohort_k * self.fed.virtual_clients
+        alg = self.server_algorithm(m_total)
+        mech = alg.mechanism
         d = self.num_params
-        sigma_xi = d * sigma**2 / m_total
+        # the mechanism owns the clipping regime: None (NoPrivacy) = no clip,
+        # exactly the flat engines' semantics for the same registry name
+        clip = getattr(mech, "clip_norm", None)
 
         def train_step(params, batch, key):
             # batch leaves: (K, tau, b, ...) — vmap over the client axis.
@@ -94,46 +146,52 @@ class FederatedTrainer:
             # --- clip (per-client global L2 over the update pytree) ---
             sq = _tree_sq_norm(deltas, axes_are_client=True)          # (K,)
             norms = jnp.sqrt(jnp.maximum(sq, 1e-24))
-            scale = jnp.minimum(1.0, c / norms)                       # (K,)
+            if clip is None:
+                clipped = deltas
+                mean_sq_clipped = jnp.mean(sq)
+            else:
+                scale = jnp.minimum(1.0, clip / norms)                # (K,)
 
-            def bcast(s, leaf):
-                return s.reshape((-1,) + (1,) * (leaf.ndim - 1)).astype(jnp.float32)
+                def bcast(s, leaf):
+                    return s.reshape((-1,) + (1,) * (leaf.ndim - 1)).astype(jnp.float32)
 
-            clipped = jax.tree_util.tree_map(
-                lambda l: (l.astype(jnp.float32) * bcast(scale, l)).astype(l.dtype), deltas)
-            clipped_sq = jnp.square(jnp.minimum(norms, c))            # (K,)
-            mean_sq_clipped = jnp.mean(clipped_sq)
+                clipped = jax.tree_util.tree_map(
+                    lambda l: (l.astype(jnp.float32) * bcast(scale, l)).astype(l.dtype),
+                    deltas)
+                mean_sq_clipped = jnp.mean(jnp.square(jnp.minimum(norms, clip)))
 
-            k_noise, k_xi = jax.random.split(key)
+            # --- the composed algorithm's round-key discipline ---
+            k_mech, extra_keys = alg._split_keys(key)
+            k_xi = extra_keys[0] if extra_keys else None
 
-            if alg in ("ldp-fedexp-gauss", "dp-fedavg-ldp-gauss"):
-                noise = _tree_noise(k_noise, clipped, sigma)          # per-client (K, ...)
+            # --- mechanism release, leaf-wise over the update pytrees ---
+            if isinstance(mech, GaussianLDP):
+                noise = _tree_noise(k_mech, clipped, mech.sigma)      # per-client (K, ...)
                 released = jax.tree_util.tree_map(jnp.add, clipped, noise)
                 mean_sq = jnp.mean(_tree_sq_norm(released, axes_are_client=True))
-                cbar = jax.tree_util.tree_map(lambda l: jnp.mean(l, axis=0), released)
-                agg_sq = _tree_sq_norm(cbar)
-                if alg == "ldp-fedexp-gauss":
-                    eta = stepsize.ldp_gaussian(mean_sq, agg_sq, d, sigma)
-                else:
-                    eta = jnp.float32(1.0)
-            elif alg in ("cdp-fedexp", "dp-fedavg-cdp"):
-                cbar = jax.tree_util.tree_map(lambda l: jnp.mean(l, axis=0), clipped)
-                server_std = sigma / math.sqrt(m_total)
-                noise = _tree_noise(k_noise, cbar, server_std)
-                cbar = jax.tree_util.tree_map(jnp.add, cbar, noise)
-                agg_sq = _tree_sq_norm(cbar)
-                if alg == "cdp-fedexp":
-                    xi = sigma_xi * jax.random.normal(k_xi, ())
-                    eta = stepsize.cdp(mean_sq_clipped, xi, agg_sq)
-                else:
-                    eta = jnp.float32(1.0)
-            elif alg in ("fedexp", "fedavg"):
-                cbar = jax.tree_util.tree_map(lambda l: jnp.mean(l, axis=0), clipped)
-                agg_sq = _tree_sq_norm(cbar)
-                eta = stepsize.fedexp(mean_sq_clipped, agg_sq) if alg == "fedexp" \
-                    else jnp.float32(1.0)
+                cbar = _tree_client_mean(released)
+            elif isinstance(mech, CentralGaussian):
+                cbar = _tree_client_mean(clipped)
+                server_std = mech.sigma / math.sqrt(mech.num_clients)
+                cbar = jax.tree_util.tree_map(
+                    jnp.add, cbar, _tree_noise(k_mech, cbar, server_std))
+                mean_sq = mean_sq_clipped
+            else:                                                     # NoPrivacy
+                cbar = _tree_client_mean(clipped)
+                mean_sq = mean_sq_clipped
+            agg_sq = _tree_sq_norm(cbar)
+
+            # --- step size: the mechanism's debiased extrapolation rule ---
+            if alg.step.uses_extrapolation:
+                # extrapolation reads only the scalar moments; the pytree
+                # cbar is applied below, so the stats row slot is a dummy
+                stats = RoundStats(cbar=jnp.zeros(()), mean_sq=mean_sq,
+                                   agg_sq=agg_sq,
+                                   mean_sq_clipped=mean_sq_clipped)
+                eta, _, _ = mech.extrapolation(k_xi, stats, {}, d, None,
+                                               float(m_total))
             else:
-                raise ValueError(f"unknown datacenter algorithm {alg!r}")
+                eta = jnp.float32(alg.step.eta)
 
             new_params = jax.tree_util.tree_map(
                 lambda p, u: (p.astype(jnp.float32) + eta * u.astype(jnp.float32)).astype(p.dtype),

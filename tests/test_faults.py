@@ -1,0 +1,665 @@
+"""Fault-tolerant rounds (FaultSpec, DESIGN.md §13).
+
+Four layers of evidence:
+  1. ``FaultSpec()`` IS the unfaulted engine — bit-for-bit for every
+     registry algorithm (the all-at-rest spec normalizes to None, so the
+     session compiles the identical program as before this feature existed).
+  2. Faulty runs are the same computation on every engine: 30% dropout +
+     20% stragglers + 2% corrupted updates agree bit-exactly between scan
+     and eager, and to reduction-reorder tolerance on the streaming and
+     client-sharded engines (8 forced host devices under the CI leg) —
+     while staying finite end to end.
+  3. The divergence watchdog + auto-recovery: a seeded divergence trips
+     the in-scan watchdog (and its eager twin), surfaces the faulting
+     round, and ``run(on_divergence=RecoveryPolicy(...))`` rolls back to
+     the newest intact checkpoint and resumes BIT-EXACTLY what an unkilled
+     run produces; retried rounds join the privacy composition.
+  4. Checkpoint corruption: truncated / garbage archives and mangled
+     sidecars surface as ``ValueError`` naming the file, transient OSErrors
+     retry with backoff, and ``load_latest_intact`` falls back past corrupt
+     steps to the newest checkpoint that loads cleanly.
+"""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import checkpoint as ckpt
+from repro.core import accounting
+from repro.core.fedexp import list_algorithms, make_algorithm
+from repro.data.synthetic import distance_to_opt, linreg_loss, make_synthetic_linreg
+from repro.fedsim import (
+    CohortSpec,
+    EngineSpec,
+    FaultSpec,
+    FederatedSession,
+    RecoveryPolicy,
+    ShardSpec,
+    StreamSpec,
+    TrainSpec,
+)
+from repro.fedsim.faults import (
+    apply_faults,
+    fault_masks,
+    finite_rows,
+    inject_corruption,
+    resolve_steps,
+    sanitize_moments,
+)
+from repro.launch.mesh import make_client_mesh
+
+# M not divisible by 8 (nor 2/4): the sharded legs exercise zero-weight
+# padding COMBINED with the fault masks
+M, D, TAU, ETA_L, ROUNDS = 44, 24, 3, 0.1, 5
+
+N_DEV = len(jax.devices())
+
+ALG_KWARGS = {
+    "fedavg": {},
+    "fedexp": {},
+    "dp-fedavg-ldp-gauss": dict(clip_norm=0.3, sigma=0.21),
+    "ldp-fedexp-gauss": dict(clip_norm=0.3, sigma=0.21),
+    "dp-fedavg-privunit": dict(clip_norm=0.3, eps0=2.0, eps1=2.0, eps2=2.0, dim=D),
+    "ldp-fedexp-privunit": dict(clip_norm=0.3, eps0=2.0, eps1=2.0, eps2=2.0, dim=D),
+    "dp-fedavg-cdp": dict(clip_norm=0.3, sigma=0.2, num_clients=M),
+    "cdp-fedexp": dict(clip_norm=0.3, sigma=0.2, num_clients=M),
+    "dp-fedadam-cdp": dict(clip_norm=0.3, sigma=0.2, num_clients=M, server_lr=0.05),
+    "cdp-fedexp-adaptive-clip": dict(z_mult=0.5, num_clients=M, dim=D),
+    "ldp-gauss-fedadam": dict(clip_norm=0.3, sigma=0.21, server_lr=0.05),
+    "cdp-fedmom": dict(clip_norm=0.3, sigma=0.2, num_clients=M, server_lr=0.5),
+    "privunit-fedexp-adaptive-clip": dict(eps0=2.0, eps1=2.0, eps2=2.0,
+                                          z_mult=0.5, num_clients=M, dim=D),
+}
+
+# the acceptance fault model: 30% dropout + stragglers cut to 1 of TAU local
+# steps + 2% corrupted (NaN) updates, every class active at once
+FAULT = FaultSpec(dropout=0.3, straggler=0.2, straggler_steps=1, corrupt=0.02)
+
+
+@pytest.fixture(scope="module")
+def problem():
+    data = make_synthetic_linreg(jax.random.PRNGKey(3), M, D)
+    return data, jnp.zeros(D)
+
+
+def _session(problem, name, *, fault=FAULT, rounds=ROUNDS, mesh=None,
+             **spec_kw):
+    data, w0 = problem
+    alg = make_algorithm(name, **ALG_KWARGS[name])
+    return FederatedSession(
+        alg, linreg_loss, w0, data.client_batches(),
+        train=spec_kw.pop("train", TrainSpec(rounds=rounds, tau=TAU, eta_l=ETA_L)),
+        shard=ShardSpec(mesh=mesh), fault=fault,
+        eval_fn=distance_to_opt(data.w_star), **spec_kw)
+
+
+class TestSpecValidation:
+    def test_registry_is_covered(self):
+        """Every registered algorithm appears in this file's kwargs table —
+        a new registration must add itself to the fault parity matrix."""
+        assert sorted(ALG_KWARGS) == list_algorithms()
+
+    def test_rates_validated(self):
+        for field in ("dropout", "straggler", "corrupt"):
+            with pytest.raises(ValueError, match=field):
+                FaultSpec(**{field: 1.0})
+            with pytest.raises(ValueError, match=field):
+                FaultSpec(**{field: -0.1})
+        with pytest.raises(ValueError, match="straggler_steps"):
+            FaultSpec(straggler_steps=0)
+        with pytest.raises(ValueError, match="eta_max"):
+            FaultSpec(eta_max=0.0)
+
+    def test_activity_properties(self):
+        assert not FaultSpec().is_active and not FaultSpec().injects
+        assert FaultSpec(dropout=0.1).injects
+        assert FaultSpec(watchdog=True).is_active
+        assert not FaultSpec(watchdog=True).injects
+
+    def test_batched_engine_rejects_faults(self, problem):
+        sess = _session(problem, "fedavg", fault=FaultSpec(dropout=0.1))
+        with pytest.raises(ValueError, match="fault"):
+            sess.run_batched(jnp.stack([jax.random.PRNGKey(0)]))
+
+    def test_on_divergence_requires_watchdog_and_dir(self, problem, tmp_path):
+        policy = RecoveryPolicy(max_retries=1)
+        with pytest.raises(ValueError, match="watchdog"):
+            _session(problem, "fedavg", fault=FaultSpec()).run(
+                jax.random.PRNGKey(0), checkpoint_dir=str(tmp_path),
+                on_divergence=policy)
+        with pytest.raises(ValueError, match="checkpoint_dir"):
+            _session(problem, "fedavg", fault=FaultSpec(watchdog=True)).run(
+                jax.random.PRNGKey(0), on_divergence=policy)
+        with pytest.raises(ValueError, match="max_retries"):
+            RecoveryPolicy(max_retries=0)
+        with pytest.raises(ValueError, match="backoff"):
+            RecoveryPolicy(backoff=-1.0)
+
+
+class TestFaultFreeNormalization:
+    @pytest.mark.parametrize("name", sorted(ALG_KWARGS))
+    def test_default_spec_is_bit_exact_with_unfaulted(self, problem, name):
+        """FaultSpec() normalizes to the unfaulted engine path: the SAME
+        compiled program, so bit-exactness is structural — pinned for every
+        registry algorithm so the normalization never regresses."""
+        key = jax.random.PRNGKey(11)
+        r_f = _session(problem, name, fault=FaultSpec()).run(key)
+        r_u = FederatedSession(
+            make_algorithm(name, **ALG_KWARGS[name]), linreg_loss,
+            problem[1], problem[0].client_batches(),
+            train=TrainSpec(rounds=ROUNDS, tau=TAU, eta_l=ETA_L),
+            eval_fn=distance_to_opt(problem[0].w_star)).run(key)
+        for field in ("final_w", "last_w", "eta_history", "metric_history",
+                      "eta_naive_history", "eta_target_history"):
+            np.testing.assert_array_equal(
+                np.asarray(getattr(r_u, field)), np.asarray(getattr(r_f, field)),
+                err_msg=f"{name}.{field}")
+
+    def test_watchdog_only_spec_matches_unfaulted_values(self, problem):
+        """An armed watchdog on a healthy run changes the carry plumbing but
+        not one bit of the trajectory."""
+        key = jax.random.PRNGKey(11)
+        r_u = _session(problem, "cdp-fedexp", fault=FaultSpec()).run(key)
+        r_w = _session(problem, "cdp-fedexp",
+                       fault=FaultSpec(watchdog=True)).run(key)
+        assert r_w.fault_round is None
+        for field in ("final_w", "last_w", "eta_history", "metric_history"):
+            np.testing.assert_array_equal(
+                np.asarray(getattr(r_u, field)), np.asarray(getattr(r_w, field)),
+                err_msg=field)
+
+
+class TestFaultyEngineParity:
+    """The acceptance fault model on all four engines: same trajectory,
+    finite everywhere."""
+
+    @pytest.mark.parametrize("name", ["fedexp", "ldp-fedexp-gauss",
+                                      "cdp-fedexp", "dp-fedadam-cdp",
+                                      "cdp-fedexp-adaptive-clip"])
+    def test_scan_matches_eager_bit_exact(self, problem, name):
+        key = jax.random.PRNGKey(7)
+        r_s = _session(problem, name).run(key)
+        r_e = _session(problem, name,
+                       engine=EngineSpec(engine="eager")).run(key)
+        for field in ("final_w", "last_w", "eta_history", "metric_history"):
+            np.testing.assert_array_equal(
+                np.asarray(getattr(r_s, field)), np.asarray(getattr(r_e, field)),
+                err_msg=f"{name}.{field}")
+        assert np.all(np.isfinite(np.asarray(r_s.final_w)))
+
+    @pytest.mark.parametrize("name", ["ldp-fedexp-gauss", "cdp-fedexp"])
+    def test_scan_matches_stream(self, problem, name):
+        key = jax.random.PRNGKey(7)
+        r_d = _session(problem, name).run(key)
+        r_t = _session(problem, name, engine=EngineSpec(engine="stream"),
+                       stream=StreamSpec(chunk_clients=16)).run(key)
+        for field in ("final_w", "last_w", "metric_history"):
+            np.testing.assert_allclose(
+                np.asarray(getattr(r_d, field)), np.asarray(getattr(r_t, field)),
+                rtol=1e-5, atol=1e-5, err_msg=f"{name}.{field}")
+        assert np.all(np.isfinite(np.asarray(r_t.final_w)))
+
+    @pytest.mark.parametrize("name", ["ldp-fedexp-gauss", "cdp-fedexp",
+                                      "cdp-fedexp-adaptive-clip"])
+    def test_sharded_matches_single_device(self, problem, name):
+        """Fault draws derive from the replicated round key and slice per
+        shard, so the sharded faulty run is the single-device faulty run
+        (8 forced host devices under the CI leg; 1 device = 1-shard mesh)."""
+        key = jax.random.PRNGKey(7)
+        r_1 = _session(problem, name).run(key)
+        r_m = _session(problem, name, mesh=make_client_mesh()).run(key)
+        for field in ("final_w", "last_w", "metric_history"):
+            np.testing.assert_allclose(
+                np.asarray(getattr(r_1, field)), np.asarray(getattr(r_m, field)),
+                rtol=1e-5, atol=1e-5, err_msg=f"{name}.{field}")
+        np.testing.assert_allclose(np.asarray(r_1.eta_history),
+                                   np.asarray(r_m.eta_history),
+                                   rtol=1e-4, atol=1e-5)
+
+    def test_sharded_stream_matches_single_device(self, problem):
+        key = jax.random.PRNGKey(7)
+        r_1 = _session(problem, "cdp-fedexp").run(key)
+        r_m = _session(problem, "cdp-fedexp", mesh=make_client_mesh(),
+                       engine=EngineSpec(engine="stream"),
+                       stream=StreamSpec(chunk_clients=8)).run(key)
+        np.testing.assert_allclose(np.asarray(r_1.final_w),
+                                   np.asarray(r_m.final_w),
+                                   rtol=1e-5, atol=1e-5)
+
+    def test_faulty_run_is_deterministic_and_differs_from_clean(self, problem):
+        key = jax.random.PRNGKey(9)
+        r_f1 = _session(problem, "cdp-fedexp").run(key)
+        r_f2 = _session(problem, "cdp-fedexp").run(key)
+        r_clean = _session(problem, "cdp-fedexp", fault=FaultSpec()).run(key)
+        np.testing.assert_array_equal(np.asarray(r_f1.final_w),
+                                      np.asarray(r_f2.final_w))
+        assert not np.allclose(np.asarray(r_f1.final_w),
+                               np.asarray(r_clean.final_w))
+
+    def test_faults_compose_with_sampling(self, problem):
+        """Dropout stacks on a sampled cohort: the effective mask is the
+        product, the run stays finite, and scan == eager still holds."""
+        key = jax.random.PRNGKey(5)
+        kw = dict(cohort=CohortSpec(q=0.6))
+        r_s = _session(problem, "cdp-fedexp", **kw).run(key)
+        r_e = _session(problem, "cdp-fedexp",
+                       engine=EngineSpec(engine="eager"), **kw).run(key)
+        np.testing.assert_array_equal(np.asarray(r_s.final_w),
+                                      np.asarray(r_e.final_w))
+        assert np.all(np.isfinite(np.asarray(r_s.final_w)))
+
+    def test_faulty_run_resumes_bit_exact(self, problem, tmp_path):
+        """Fault draws derive from fold_in(round key, FAULT_TAG): resume
+        redraws the identical faults."""
+        key = jax.random.PRNGKey(11)
+        half = ROUNDS // 2
+        r_full = _session(problem, "cdp-fedexp",
+                          engine=EngineSpec(chunk_rounds=half)).run(key)
+        _session(problem, "cdp-fedexp", rounds=half).run(
+            key, checkpoint_dir=str(tmp_path))
+        r_res = _session(problem, "cdp-fedexp").resume(str(tmp_path))
+        for field in ("final_w", "last_w", "eta_history", "metric_history"):
+            np.testing.assert_array_equal(
+                np.asarray(getattr(r_full, field)),
+                np.asarray(getattr(r_res, field)), err_msg=field)
+
+    def test_near_total_dropout_stays_finite(self, problem):
+        """dropout=0.99 over M=44 clients makes empty rounds likely: the
+        clamped realized count turns them into zero-update no-ops, never
+        NaN.  The key is pinned so at least one round IS fully empty."""
+        key = jax.random.PRNGKey(0)
+        fault = FaultSpec(dropout=0.99)
+        sess = _session(problem, "fedavg", fault=fault, rounds=8,
+                        train=TrainSpec(rounds=8, tau=1, eta_l=ETA_L))
+        empty = []
+        for t in range(8):
+            alive, _, _ = fault_masks(fault, jax.random.fold_in(key, t), M)
+            empty.append(float(jnp.sum(alive)) == 0.0)
+        assert any(empty), "pin a key that actually draws an empty round"
+        r = sess.run(key)
+        assert np.all(np.isfinite(np.asarray(r.final_w)))
+        assert np.all(np.isfinite(np.asarray(r.eta_history)))
+
+
+class TestFaultDraws:
+    def test_masks_deterministic_and_round_keyed(self):
+        fault = FaultSpec(dropout=0.3, straggler=0.2, corrupt=0.1)
+        k0, k1 = jax.random.PRNGKey(0), jax.random.PRNGKey(1)
+        a0, s0, c0 = fault_masks(fault, k0, 64)
+        a0b, s0b, c0b = fault_masks(fault, k0, 64)
+        a1, _, _ = fault_masks(fault, k1, 64)
+        for x, y in ((a0, a0b), (s0, s0b), (c0, c0b)):
+            np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+        assert not np.array_equal(np.asarray(a0), np.asarray(a1))
+
+    def test_disabled_classes_draw_nothing(self):
+        alive, strag, corrupt = fault_masks(FaultSpec(dropout=0.5),
+                                            jax.random.PRNGKey(0), 32)
+        assert strag is None and corrupt is None
+        assert set(np.unique(np.asarray(alive))) <= {0.0, 1.0}
+
+    def test_dropout_rate_statistic(self):
+        fault = FaultSpec(dropout=0.3)
+        draws = np.stack([
+            np.asarray(fault_masks(fault, jax.random.PRNGKey(s), 400)[0])
+            for s in range(32)])
+        alive_rate = draws.mean()
+        assert abs(alive_rate - 0.7) < 5 * np.sqrt(0.3 * 0.7 / draws.size)
+
+    def test_resolve_steps_caps_at_tau(self):
+        fault = FaultSpec(straggler=0.5, straggler_steps=7)
+        strag = jnp.array([1.0, 0.0, 1.0])
+        steps = np.asarray(resolve_steps(fault, strag, 3))
+        np.testing.assert_array_equal(steps, [3, 3, 3])  # capped at tau
+        fault = FaultSpec(straggler=0.5, straggler_steps=1)
+        steps = np.asarray(resolve_steps(fault, strag, 3))
+        np.testing.assert_array_equal(steps, [1, 3, 1])
+
+    def test_apply_faults_zero_weights_bad_rows(self):
+        deltas = jnp.ones((4, 3))
+        corrupt = jnp.array([0.0, 1.0, 0.0, 0.0])
+        alive = jnp.array([1.0, 1.0, 0.0, 1.0])
+        out, eff = apply_faults(deltas, jnp.ones(4), alive, corrupt)
+        np.testing.assert_array_equal(np.asarray(eff), [1.0, 0.0, 0.0, 1.0])
+        # failed rows are where-zeroed at the source: no NaN survives
+        assert np.all(np.isfinite(np.asarray(out)))
+        np.testing.assert_array_equal(np.asarray(out[1]), np.zeros(3))
+        np.testing.assert_array_equal(np.asarray(out[2]), np.zeros(3))
+
+    def test_finite_screen_catches_organic_divergence(self):
+        """A genuinely diverged client (Inf it produced itself, no injection)
+        degrades identically to an injected corruption."""
+        deltas = jnp.ones((3, 2)).at[1, 0].set(jnp.inf)
+        out, eff = apply_faults(deltas, jnp.ones(3), None, None)
+        np.testing.assert_array_equal(np.asarray(eff), [1.0, 0.0, 1.0])
+        assert np.all(np.isfinite(np.asarray(out)))
+
+    def test_inject_corruption_and_finite_rows(self):
+        deltas = inject_corruption(jnp.ones((3, 2)), jnp.array([0.0, 1.0, 0.0]))
+        np.testing.assert_array_equal(np.asarray(finite_rows(deltas)),
+                                      [1.0, 0.0, 1.0])
+
+    def test_sanitize_moments_zeroes_nonfinite(self):
+        moments = {"a": jnp.array([1.0, jnp.nan, jnp.inf]),
+                   "n": jnp.int32(3)}
+        clean = sanitize_moments(moments)
+        np.testing.assert_array_equal(np.asarray(clean["a"]), [1.0, 0.0, 0.0])
+        assert int(clean["n"]) == 3
+
+
+def _poison(carry, attempt):
+    """Divergence seed for recovery tests: attempt 0 runs with an Inf model
+    coordinate (trips the watchdog at its first round), retries run clean."""
+    if attempt > 0:
+        return carry
+    w = carry[0].at[0].set(jnp.inf)
+    return (w,) + tuple(carry[1:])
+
+
+class TestWatchdog:
+    def test_eta_max_trips_scan_and_eager_identically(self, problem):
+        """fedexp's eta_g >= 1 always, so eta_max=0.5 trips at round 0 on
+        both engines — the compiled lax.cond watchdog and its host-side
+        eager twin surface the same faulting round."""
+        fault = FaultSpec(watchdog=True, eta_max=0.5)
+        key = jax.random.PRNGKey(3)
+        r_s = _session(problem, "fedexp", fault=fault).run(key)
+        r_e = _session(problem, "fedexp", fault=fault,
+                       engine=EngineSpec(engine="eager")).run(key)
+        assert r_s.fault_round == 0 and r_e.fault_round == 0
+        # the faulting round's update is NOT committed: params stay at w0
+        np.testing.assert_array_equal(np.asarray(r_s.last_w),
+                                      np.asarray(problem[1]))
+        # the faulting round records its real (offending) eta, frozen rounds
+        # emit NaN — identically on both engines
+        eta_s, eta_e = np.asarray(r_s.eta_history), np.asarray(r_e.eta_history)
+        np.testing.assert_array_equal(eta_s, eta_e)
+        assert np.isfinite(eta_s[0]) and eta_s[0] > 0.5
+        assert np.isnan(eta_s[1:]).all()
+
+    def test_mid_run_trip_freezes_remaining_rounds(self, problem, tmp_path):
+        """Poisoned carry at round 0 via the injection hook: the watchdog
+        freezes every round of the chunk and the pre-poison histories are
+        untouched."""
+        fault = FaultSpec(watchdog=True)
+        sess = _session(problem, "cdp-fedexp", fault=fault)
+        sess._inject_divergence = _poison
+        r = sess.run(jax.random.PRNGKey(11))
+        assert r.fault_round == 0
+        assert np.isnan(np.asarray(r.eta_history)[1:]).all()
+
+    def test_healthy_watchdog_run_reports_no_fault(self, problem):
+        r = _session(problem, "cdp-fedexp",
+                     fault=FaultSpec(watchdog=True)).run(jax.random.PRNGKey(0))
+        assert r.fault_round is None
+        assert np.all(np.isfinite(np.asarray(r.eta_history)))
+
+
+class TestRecovery:
+    def test_rollback_resume_is_bit_exact_with_unkilled_run(self, problem,
+                                                            tmp_path):
+        """The acceptance criterion: poison attempt 0, recover from the
+        initial checkpoint, and match the never-killed reference run
+        bit-exactly (same chunk boundaries)."""
+        fault = FaultSpec(watchdog=True)
+        key = jax.random.PRNGKey(11)
+        r_ref = _session(problem, "cdp-fedexp", fault=fault).run(key)
+
+        sess = _session(problem, "cdp-fedexp", fault=fault)
+        sess._inject_divergence = _poison
+        r_rec = sess.run(key, checkpoint_dir=str(tmp_path),
+                         checkpoint_every=2,
+                         on_divergence=RecoveryPolicy(max_retries=2))
+        assert r_rec.fault_round is None
+        assert sess._rounds_retried == 1  # tripped at round 0, replayed it
+        for field in ("final_w", "last_w", "eta_history", "metric_history"):
+            np.testing.assert_array_equal(
+                np.asarray(getattr(r_ref, field)),
+                np.asarray(getattr(r_rec, field)), err_msg=field)
+
+    def test_recovery_from_mid_run_checkpoint(self, problem, tmp_path):
+        """Poison every attempt until the retries run out — then exhaustion
+        surfaces the fault; with enough retries the run completes."""
+        fault = FaultSpec(watchdog=True)
+        key = jax.random.PRNGKey(11)
+
+        sess = _session(problem, "cdp-fedexp", fault=fault,
+                        engine=EngineSpec(chunk_rounds=2))
+        calls = []
+
+        def poison_twice(carry, attempt):
+            calls.append(attempt)
+            if attempt >= 2:
+                return carry
+            w = carry[0].at[0].set(jnp.nan)
+            return (w,) + tuple(carry[1:])
+
+        sess._inject_divergence = poison_twice
+        r = sess.run(key, checkpoint_dir=str(tmp_path), checkpoint_every=2,
+                     on_divergence=RecoveryPolicy(max_retries=3))
+        assert r.fault_round is None
+        assert calls == [0, 1, 2]
+        assert np.all(np.isfinite(np.asarray(r.final_w)))
+        r_ref = _session(problem, "cdp-fedexp", fault=fault,
+                         engine=EngineSpec(chunk_rounds=2)).run(key)
+        np.testing.assert_array_equal(np.asarray(r_ref.final_w),
+                                      np.asarray(r.final_w))
+
+    def test_retry_exhaustion_surfaces_fault(self, problem, tmp_path):
+        fault = FaultSpec(watchdog=True)
+        sess = _session(problem, "cdp-fedexp", fault=fault)
+
+        def always_poison(carry, attempt):
+            w = carry[0].at[0].set(jnp.inf)
+            return (w,) + tuple(carry[1:])
+
+        sess._inject_divergence = always_poison
+        r = sess.run(jax.random.PRNGKey(0), checkpoint_dir=str(tmp_path),
+                     checkpoint_every=2,
+                     on_divergence=RecoveryPolicy(max_retries=2))
+        assert r.fault_round is not None
+
+    def test_tripped_state_never_persisted(self, problem, tmp_path):
+        """A watchdog-tripped chunk must not write a checkpoint — a trip at
+        round 0 under per-round checkpointing leaves the directory empty."""
+        fault = FaultSpec(watchdog=True, eta_max=0.5)
+        _session(problem, "fedexp", fault=fault).run(
+            jax.random.PRNGKey(3), checkpoint_dir=str(tmp_path),
+            checkpoint_every=1)
+        assert ckpt.checkpoint_steps(str(tmp_path)) == []
+
+
+class TestPrivacyUnderFaults:
+    def test_realized_participation(self):
+        assert accounting.realized_participation(0.5) == 0.5
+        assert accounting.realized_participation(0.5, 0.2) == pytest.approx(0.4)
+        with pytest.raises(ValueError, match="dropout"):
+            accounting.realized_participation(0.5, 1.0)
+
+    def test_report_composes_retried_rounds(self, problem, tmp_path):
+        """Every executed round releases: after a rollback the replayed
+        rounds join the composition, so eps grows."""
+        fault = FaultSpec(watchdog=True)
+        sess = _session(problem, "cdp-fedexp", fault=fault)
+        base = sess.privacy_report(1e-5)
+        sess._inject_divergence = _poison
+        sess.run(jax.random.PRNGKey(11), checkpoint_dir=str(tmp_path),
+                 checkpoint_every=2, on_divergence=RecoveryPolicy(max_retries=2))
+        assert sess._rounds_retried >= 1
+        retried = sess.privacy_report(1e-5)
+        assert retried.eps_numerical > base.eps_numerical
+
+    def test_report_uses_realized_participation(self, problem):
+        """Dropout shrinks the realized per-round participation: the report
+        matches cdp_budget at q * (1 - dropout), not nominal q."""
+        q, dropout = 0.5, 0.3
+        samp = _session(problem, "cdp-fedexp", fault=FaultSpec(dropout=dropout),
+                        cohort=CohortSpec(q=q))
+        kw = ALG_KWARGS["cdp-fedexp"]
+        sigma_xi = D * kw["sigma"] ** 2 / M
+        want = accounting.cdp_budget(
+            kw["clip_norm"], kw["sigma"], M, ROUNDS, 1e-5, sigma_xi=sigma_xi,
+            sampling_q=accounting.realized_participation(q, dropout))
+        got = samp.privacy_report(1e-5)
+        assert got.eps_numerical == pytest.approx(want.eps_numerical)
+        assert got.mu == pytest.approx(want.mu)
+
+
+class TestCheckpointCorruption:
+    def _save(self, d, step, value=0.0):
+        ckpt.save_checkpoint(str(d), step, {"w": jnp.full(4, value)},
+                             extra={"k": "v"})
+
+    def test_truncated_npz_raises_value_error(self, tmp_path):
+        self._save(tmp_path, 1)
+        path = tmp_path / "ckpt_00000001.npz"
+        path.write_bytes(path.read_bytes()[:20])
+        with pytest.raises(ValueError, match="corrupt checkpoint"):
+            ckpt.load_checkpoint(str(tmp_path), {"w": jnp.zeros(4)})
+
+    def test_garbage_npz_raises_value_error(self, tmp_path):
+        self._save(tmp_path, 1)
+        (tmp_path / "ckpt_00000001.npz").write_bytes(b"not a zip archive")
+        with pytest.raises(ValueError, match="corrupt checkpoint"):
+            ckpt.load_checkpoint(str(tmp_path), {"w": jnp.zeros(4)})
+
+    def test_mangled_sidecar_raises_value_error(self, tmp_path):
+        self._save(tmp_path, 1)
+        (tmp_path / "ckpt_00000001.json").write_text("{not json")
+        with pytest.raises(ValueError, match="sidecar"):
+            ckpt.load_checkpoint(str(tmp_path), {"w": jnp.zeros(4)})
+
+    def test_checksum_mismatch_detected(self, tmp_path):
+        """Bit-rot INSIDE a structurally-valid archive: same length, flipped
+        byte — only the sha256 catches it."""
+        self._save(tmp_path, 1)
+        path = tmp_path / "ckpt_00000001.npz"
+        blob = bytearray(path.read_bytes())
+        blob[-1] ^= 0xFF
+        path.write_bytes(bytes(blob))
+        with pytest.raises(ValueError, match="sha256 mismatch"):
+            ckpt.load_checkpoint(str(tmp_path), {"w": jnp.zeros(4)})
+
+    def test_latest_intact_falls_back_past_corruption(self, tmp_path):
+        self._save(tmp_path, 2, value=2.0)
+        self._save(tmp_path, 4, value=4.0)
+        (tmp_path / "ckpt_00000004.npz").write_bytes(b"garbage")
+        step, params, meta = ckpt.load_latest_intact(
+            str(tmp_path), {"w": jnp.zeros(4)})
+        assert step == 2 and meta["step"] == 2
+        np.testing.assert_array_equal(np.asarray(params["w"]), np.full(4, 2.0))
+
+    def test_latest_intact_none_intact_lists_failures(self, tmp_path):
+        self._save(tmp_path, 1)
+        self._save(tmp_path, 2)
+        for f in os.listdir(tmp_path):
+            if f.endswith(".npz"):
+                (tmp_path / f).write_bytes(b"junk")
+        with pytest.raises(ValueError, match="no intact checkpoint"):
+            ckpt.load_latest_intact(str(tmp_path), {"w": jnp.zeros(4)})
+
+    def test_latest_intact_empty_dir(self, tmp_path):
+        with pytest.raises(FileNotFoundError):
+            ckpt.load_latest_intact(str(tmp_path), {"w": jnp.zeros(4)})
+
+    def test_callable_template(self, tmp_path):
+        self._save(tmp_path, 3)
+        step, params, _ = ckpt.load_latest_intact(
+            str(tmp_path), lambda s: {"w": jnp.zeros(4)})
+        assert step == 3
+
+    def test_transient_oserror_retried_with_backoff(self, tmp_path,
+                                                    monkeypatch):
+        self._save(tmp_path, 1)
+        attempts = []
+        real = ckpt._load_once
+
+        def flaky(directory, template, step):
+            attempts.append(step)
+            if len(attempts) < 3:
+                raise OSError("transient I/O blip")
+            return real(directory, template, step)
+
+        monkeypatch.setattr(ckpt, "_load_once", flaky)
+        sleeps = []
+        monkeypatch.setattr(ckpt.time, "sleep", sleeps.append)
+        params, meta = ckpt.load_checkpoint(str(tmp_path), {"w": jnp.zeros(4)},
+                                            retries=3, backoff=0.1)
+        assert len(attempts) == 3
+        assert sleeps == [pytest.approx(0.1), pytest.approx(0.2)]  # linear
+
+    def test_corruption_never_retried(self, tmp_path, monkeypatch):
+        self._save(tmp_path, 1)
+        (tmp_path / "ckpt_00000001.npz").write_bytes(b"junk")
+        attempts = []
+        real = ckpt._load_once
+
+        def counting(directory, template, step):
+            attempts.append(step)
+            return real(directory, template, step)
+
+        monkeypatch.setattr(ckpt, "_load_once", counting)
+        with pytest.raises(ValueError):
+            ckpt.load_checkpoint(str(tmp_path), {"w": jnp.zeros(4)}, retries=5)
+        assert len(attempts) == 1  # permanent failure: no retry loop
+
+    def test_session_resume_skips_corrupt_latest(self, problem, tmp_path):
+        """End-to-end fallback: corrupt the newest checkpoint of a periodic
+        run; resume rolls back to the previous intact one and still finishes
+        the full round count."""
+        key = jax.random.PRNGKey(11)
+        sess = _session(problem, "cdp-fedexp", fault=FaultSpec())
+        r_full = sess.run(key, checkpoint_dir=str(tmp_path), checkpoint_every=2)
+        steps = ckpt.checkpoint_steps(str(tmp_path))
+        newest = steps[-1]
+        (tmp_path / f"ckpt_{newest:08d}.npz").write_bytes(b"bit rot")
+        r_res = _session(problem, "cdp-fedexp",
+                         fault=FaultSpec()).resume(str(tmp_path))
+        np.testing.assert_array_equal(np.asarray(r_full.final_w),
+                                      np.asarray(r_res.final_w))
+
+
+class TestGarbageRowsDeterministic:
+    """Deterministic twin of tests/test_faults_property.py (which needs
+    hypothesis): hand-picked worst-case garbage blocks through the same
+    degradation contract, so the invariant is exercised even where
+    hypothesis is unavailable."""
+
+    def test_garbage_block_degrades_to_finite(self):
+        deltas = jnp.array([[1.0, 2.0],
+                            [jnp.nan, 0.0],
+                            [jnp.inf, -jnp.inf],
+                            [0.0, 1e38],
+                            [3.0, 4.0]])
+        mask = jnp.array([1.0, 1.0, 1.0, 0.0, 1.0])
+        alive = jnp.array([1.0, 1.0, 1.0, 1.0, 0.0])
+        out, eff = apply_faults(deltas, mask, alive, None)
+        out, eff = np.asarray(out), np.asarray(eff)
+        assert np.all(np.isfinite(out))
+        # NaN/Inf rows zero-weighted; masked-out and dropped rows stay out;
+        # the finite 1e38 row survives (it is garbage but not poison)
+        np.testing.assert_array_equal(eff, [1.0, 0.0, 0.0, 0.0, 0.0])
+        assert np.all(eff <= np.asarray(mask))
+
+    @pytest.mark.parametrize("engine", ["scan", "stream"])
+    def test_heavy_corruption_keeps_model_finite(self, problem, engine):
+        """50% corrupted + 60% dropout for every registry algorithm's
+        moment protocol representative set: global model and moments stay
+        finite on the dense and streaming engines."""
+        data, w0 = problem
+        for name in ("fedavg", "ldp-fedexp-gauss", "cdp-fedexp",
+                     "dp-fedadam-cdp", "cdp-fedexp-adaptive-clip",
+                     "privunit-fedexp-adaptive-clip"):
+            alg = make_algorithm(name, **ALG_KWARGS[name])
+            kw = dict(engine=EngineSpec(engine="stream"),
+                      stream=StreamSpec(chunk_clients=16)) \
+                if engine == "stream" else {}
+            sess = FederatedSession(
+                alg, linreg_loss, w0, data.client_batches(),
+                train=TrainSpec(rounds=2, tau=1, eta_l=ETA_L),
+                fault=FaultSpec(dropout=0.6, corrupt=0.5), **kw)
+            r = sess.run(jax.random.PRNGKey(17))
+            assert np.all(np.isfinite(np.asarray(r.final_w))), name
+            assert np.all(np.isfinite(np.asarray(r.eta_history))), name
