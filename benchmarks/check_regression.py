@@ -4,9 +4,10 @@
     make bench-check                                              # bench-quick + gate
 
 Compares the rounds/sec headline metrics of a fresh ``BENCH_engine.json``
-(written by ``make bench-quick`` / ``benchmarks.run --only e7``) against the
-committed baseline and exits non-zero when any gated metric regressed by more
-than ``--threshold`` (default 30%).
+(written by ``make bench-quick`` / ``benchmarks.run --only e7``; ``e8``
+MERGES its ``sparse_cohort`` / ``host_resident`` sections into the same
+file) against the committed baseline and exits non-zero when any gated
+metric regressed by more than ``--threshold`` (default 30%).
 
 Because ``bench-quick`` OVERWRITES the repo-root ``BENCH_engine.json``, the
 baseline defaults to ``git show HEAD:BENCH_engine.json`` — the file as
@@ -49,6 +50,9 @@ RATIO_KEYS = (
     ("local_sgd", "relative_to_full"),
     ("streaming", "relative_to_dense"),
     ("faults", "relative_to_clean"),
+    # e8 §14: sparse gather vs dense sampled at q=1e-3 — the acceptance
+    # headline (>= 5x by construction; the gate watches for erosion)
+    ("sparse_cohort", "relative_to_dense"),
 )
 # gated only when the run configs match: absolute throughputs
 ABS_KEYS = (
@@ -58,6 +62,8 @@ ABS_KEYS = (
     ("local_sgd", "rounds_per_sec"),
     ("streaming", "rounds_per_sec"),
     ("faults", "rounds_per_sec"),
+    ("sparse_cohort", "rounds_per_sec"),
+    ("host_resident", "rounds_per_sec"),
 )
 
 
@@ -105,15 +111,22 @@ def main(argv=None) -> int:
               "gate passes vacuously (first benchmarked commit)")
         return 0
 
-    configs_match = base.get("config") == fresh.get("config")
+    # e8 merges its sections + "e8_config" into e7's file; both identities
+    # must match before absolute numbers gate (the auto-resolved chunk size
+    # is part of e8_config — an auto pick that moves is a config change)
+    mismatched = [k for k in ("config", "e8_config")
+                  if base.get(k) != fresh.get(k)]
+    configs_match = not mismatched
     ratio_threshold = args.threshold if configs_match else 2.0 * args.threshold
     checks = [(".".join(k), _get(base, k), _get(fresh, k))
               for k in (list(RATIO_KEYS)
                         + (list(ABS_KEYS) if configs_match else []))]
     if not configs_match:
-        print(f"NOTE config mismatch vs baseline ({base.get('config')} != "
-              f"{fresh.get('config')}); gating ratio metrics only, at the "
-              f"relaxed cross-machine-class threshold -{ratio_threshold:.0%}")
+        print(f"NOTE {' + '.join(mismatched)} mismatch vs baseline "
+              f"({[base.get(k) for k in mismatched]} != "
+              f"{[fresh.get(k) for k in mismatched]}); gating ratio metrics "
+              f"only, at the relaxed cross-machine-class threshold "
+              f"-{ratio_threshold:.0%}")
     # a partial run (e7 --only <workload>) emits only the sections that ran;
     # the missing metrics SKIP below rather than failing the gate
     if fresh.get("partial"):

@@ -55,6 +55,25 @@ def main(argv=None) -> int:
               f"vs {st.get('rounds_per_sec_dense', 0):.1f} dense "
               f"({st.get('relative_to_dense', 0):.2f}x), update matrix "
               f"{st.get('memory_reduction_x', 0):.0f}x smaller")
+
+    sc = rep.get("sparse_cohort")
+    if sc:
+        print(f"\n**Sparse sampled cohort (e8)** (M={sc.get('clients')}, "
+              f"q={sc.get('q')}, cap={sc.get('cap')}): "
+              f"{sc.get('rounds_per_sec', 0):.1f} r/s vs "
+              f"{sc.get('rounds_per_sec_dense', 0):.2f} dense sampled "
+              f"({sc.get('relative_to_dense', 0):.0f}x), peak update matrix "
+              f"{sc.get('peak_update_matrix_bytes', 0)/2**20:.2f} MiB vs "
+              f"{sc.get('dense_update_matrix_bytes', 0)/2**20:.0f} MiB dense")
+
+    hr = rep.get("host_resident")
+    if hr:
+        print(f"\n**Host-resident clients (e8)** (M={hr.get('clients')}, "
+              f"q={hr.get('q')}, chunk={hr.get('chunk_clients')}, "
+              f"prefetch={hr.get('prefetch')}): "
+              f"{hr.get('rounds_per_sec', 0):.1f} r/s, modeled peak "
+              f"{hr.get('modeled_peak_update_bytes', 0)/2**20:.1f} MiB, "
+              f"measured RSS {hr.get('measured_peak_rss_bytes', 0)/2**20:.0f} MiB")
     return 0
 
 

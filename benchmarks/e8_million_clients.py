@@ -1,0 +1,267 @@
+"""E8 — million-client rounds: sparse sampled cohorts + host-resident data.
+
+The §14 scalability benchmark: M = 10**6 clients as a MEASURED number, not a
+memory model.  Two workloads (DESIGN.md §14):
+
+  1. ``sparse`` — a q = 1e-3 Bernoulli-sampled round on M = 10**6 device-
+     resident clients, run two ways on identical geometry: the dense sampled
+     engine (all M local updates computed, non-participants zero-weighted —
+     static shapes, O(M*d) per round) vs ``CohortSpec(gather=True)`` (the
+     sampled cohort packed into a dense (cap, ...) block via ``gather_slots``
+     and ONLY those rows trained — O(q*M*d) per round).  The gated headline
+     is ``sparse_cohort.relative_to_dense``: at q = 1e-3 the gather path must
+     beat the dense sampled engine by >= 5x rounds/sec (the acceptance
+     floor; in practice it lands orders of magnitude higher).  The dense
+     comparator is timed over fewer rounds — at O(M*d) per round it is the
+     slow side by construction, and rounds/sec normalizes the comparison.
+
+  2. ``host`` — the same M with NO device-resident copy at all: a
+     ``SyntheticSource`` serves client rows from the host on demand, the
+     session gathers the sampled cohort's GLOBAL indices and only ever
+     fetches ~cap rows per round, double-buffered ``DataSpec.prefetch``
+     chunks ahead of the §12 inner scan.  Records rounds/sec (gated as
+     ``host_resident.rounds_per_sec``), the MODELED peak update memory
+     (chunk_clients*d floats for the update block + the staged batch
+     window — the O(c*d) model that bounds M by host storage, not HBM), and
+     the MEASURED process peak RSS (``getrusage`` high-watermark; the host
+     workload runs first so the watermark is not inflated by the sparse
+     workload's deliberate M*d staging).
+
+Both workloads resolve ``StreamSpec(chunk_clients="auto")`` from the live
+device memory budget (docs/scaling.md sizing rule) and record the resolved
+value in the e8 config identity — an auto pick that lands somewhere new is a
+config mismatch, not a silent absolute-number regression.
+
+``--quick`` keeps M >= 10**5 (the CI floor — shrinking M below that would
+benchmark nothing this file exists to measure) and shrinks rounds instead.
+
+Unlike e7 (which owns BENCH_engine.json and overwrites it wholesale), e8
+MERGES its sections into the existing file — read-modify-write of
+``sparse_cohort``, ``host_resident`` and ``e8_config`` — so one committed
+baseline carries both benchmarks and ``check_regression.py`` gates whatever
+is present.
+"""
+from __future__ import annotations
+
+import json
+import os
+import resource
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import RESULTS_DIR, print_table
+from repro.core.fedexp import make_algorithm
+from repro.fedsim import (
+    CohortSpec,
+    DataSpec,
+    EngineSpec,
+    FederatedSession,
+    StreamSpec,
+    SyntheticSource,
+    TrainSpec,
+)
+
+FLOAT_BYTES = 4
+WORKLOADS = ("host", "sparse")  # host first: keeps its RSS watermark honest
+
+Q = 1e-3
+DIM = 32
+
+
+def _quad_loss(w, b):
+    return 0.5 * jnp.sum(jnp.square(w - b["t"]))
+
+
+def _make_source(clients: int, dim: int) -> SyntheticSource:
+    """Deterministic per-client rows generated on fetch — no M-sized array
+    ever exists; the host 'storage' here is a closed form of the index."""
+    mix = (np.arange(1, dim + 1, dtype=np.int64) * 2654435761) % (2**31)
+
+    def fetch(idx):
+        g = (np.asarray(idx, np.int64)[:, None] + 1) * mix[None, :]
+        return {"t": ((g % 2039) / 1019.5 - 1.0).astype(np.float32)}
+
+    return SyntheticSource(fetch, num_clients=clients)
+
+
+def _time_run(session, key, rounds):
+    def one():
+        r = session.run(key)
+        return (r.last_w, r.eta_history)
+
+    jax.block_until_ready(one())          # compile + first staging
+    best = float("inf")
+    for _ in range(2):
+        t0 = time.perf_counter()
+        out = one()
+        jax.block_until_ready(out)
+        best = min(best, time.perf_counter() - t0)
+    return rounds / best, out
+
+
+def _merge_report(sections: dict) -> None:
+    """Read-modify-write BENCH_engine.json: e7 owns the file and overwrites
+    it wholesale, so e8 folds its sections into whatever is committed."""
+    os.makedirs(RESULTS_DIR, exist_ok=True)
+    for path in (os.path.join(RESULTS_DIR, "BENCH_engine.json"),
+                 "BENCH_engine.json"):
+        try:
+            with open(path) as f:
+                report = json.load(f)
+        except (OSError, json.JSONDecodeError):
+            report = {}
+        report.update(sections)
+        with open(path, "w") as f:
+            json.dump(report, f, indent=2)
+
+
+def main(*, clients: int = 1_000_000, rounds: int = 20, quick: bool = False,
+         only=None):
+    sel = set(only) if only else set(WORKLOADS)
+    unknown = sel - set(WORKLOADS)
+    if unknown:
+        raise SystemExit(f"unknown e8 workload(s) {sorted(unknown)}; "
+                         f"choose from: {' '.join(WORKLOADS)}")
+    if quick:
+        # the CI floor: M never drops below 1e5 (a small-M run would not
+        # exercise the sparse/host machinery this benchmark gates)
+        clients, rounds = max(100_000, clients // 10), 6
+    dense_rounds = 2 if quick else 3
+
+    key = jax.random.PRNGKey(0)
+    w0 = jnp.zeros(DIM)
+    cohort_dense = CohortSpec(q=Q)
+    cohort_gather = CohortSpec(q=Q, gather=True)
+    cap = cohort_gather.resolved_cap(clients)
+    sections: dict = {}
+    chunk_auto = None
+
+    if "host" in sel:
+        train = TrainSpec(rounds=rounds, tau=1, eta_l=0.5)
+        source = _make_source(clients, DIM)
+        session = FederatedSession(
+            make_algorithm("ldp-fedexp-gauss", clip_norm=0.3, sigma=0.21),
+            _quad_loss, w0, source, train=train,
+            engine=EngineSpec(engine="stream"),
+            stream=StreamSpec(chunk_clients="auto"),
+            cohort=cohort_gather, data=DataSpec(kind="synthetic", prefetch=2))
+        chunk_auto = session.stream.chunk_clients
+        c = min(chunk_auto, cap)
+        rps, (last_w, _) = _time_run(session, key, rounds)
+        peak_rss = resource.getrusage(resource.RUSAGE_SELF).ru_maxrss * 1024
+        client_bytes = DIM * FLOAT_BYTES
+        modeled = (2 * c * DIM * FLOAT_BYTES            # batch + update block
+                   + 2 * c * client_bytes)              # double-buffer window
+        rows = [["host gather", rps, modeled / 2**20, peak_rss / 2**20]]
+        print_table(
+            f"E8 host-resident million-client rounds (M={clients}, d={DIM}, "
+            f"q={Q}, T={rounds})",
+            ["workload", "rounds/sec", "modeled peak MiB", "measured RSS MiB"],
+            rows)
+        sections["host_resident"] = {
+            "clients": clients,
+            "dim": DIM,
+            "q": Q,
+            "rounds": rounds,
+            "cap": cap,
+            "chunk_clients": chunk_auto,
+            "prefetch": 2,
+            "algorithm": "ldp-fedexp-gauss",
+            "rounds_per_sec": rps,
+            "modeled_peak_update_bytes": modeled,
+            "measured_peak_rss_bytes": peak_rss,
+            "final_params_finite": bool(jnp.all(jnp.isfinite(last_w))),
+        }
+
+    if "sparse" in sel:
+        # device-resident comparison: stage all M rows once (M*d*4 bytes —
+        # the cost the host workload exists to avoid), then time the gather
+        # engine vs the dense sampled engine on the identical geometry
+        targets = {"t": jax.block_until_ready(
+            jax.device_put(_make_source(clients, DIM).fetch(
+                np.arange(clients))["t"]))}
+        alg = "ldp-fedexp-gauss"
+
+        def session_for(cohort, n_rounds):
+            return FederatedSession(
+                make_algorithm(alg, clip_norm=0.3, sigma=0.21),
+                _quad_loss, w0, targets,
+                train=TrainSpec(rounds=n_rounds, tau=1, eta_l=0.5),
+                engine=EngineSpec(engine="stream"),
+                stream=StreamSpec(chunk_clients="auto"), cohort=cohort)
+
+        sparse_session = session_for(cohort_gather, rounds)
+        chunk_auto = sparse_session.stream.chunk_clients
+        sparse_rps, (last_w, _) = _time_run(sparse_session, key, rounds)
+        dense_rps, _ = _time_run(session_for(cohort_dense, dense_rounds),
+                                 key, dense_rounds)
+        ratio = sparse_rps / dense_rps
+        c = min(chunk_auto, cap)
+        rows = [["dense sampled", dense_rps, clients * DIM * FLOAT_BYTES / 2**20],
+                ["sparse gather", sparse_rps, c * DIM * FLOAT_BYTES / 2**20]]
+        print_table(
+            f"E8 sparse sampled cohort (M={clients}, d={DIM}, q={Q})",
+            ["engine", "rounds/sec", "peak update MiB"], rows)
+        sections["sparse_cohort"] = {
+            "clients": clients,
+            "dim": DIM,
+            "q": Q,
+            "rounds": rounds,
+            "dense_rounds": dense_rounds,
+            "cap": cap,
+            "chunk_clients": chunk_auto,
+            "algorithm": alg,
+            "rounds_per_sec": sparse_rps,
+            "rounds_per_sec_dense": dense_rps,
+            "relative_to_dense": ratio,
+            "peak_update_matrix_bytes": c * DIM * FLOAT_BYTES,
+            "dense_update_matrix_bytes": clients * DIM * FLOAT_BYTES,
+            "final_params_finite": bool(jnp.all(jnp.isfinite(last_w))),
+        }
+
+    # the e8 config identity: check_regression compares it alongside e7's
+    # before gating absolute rounds/sec; the auto-resolved chunk is part of
+    # it (an auto pick that moves is a config change, not a regression)
+    sections["e8_config"] = {
+        "clients": clients, "dim": DIM, "q": Q, "rounds": rounds,
+        "quick": quick, "chunk_clients_auto": chunk_auto,
+        "backend": jax.default_backend(), "devices": len(jax.devices()),
+        "host_cpus": os.cpu_count(),
+    }
+    if sel != set(WORKLOADS):
+        sections["e8_partial"] = sorted(set(WORKLOADS) - sel)
+    _merge_report(sections)
+
+    ok = True
+    if "host" in sel:
+        hr = sections["host_resident"]
+        print(f"OK  host-resident M={clients}: {hr['rounds_per_sec']:.2f} r/s, "
+              f"modeled peak {hr['modeled_peak_update_bytes']/2**20:.1f} MiB, "
+              f"measured RSS {hr['measured_peak_rss_bytes']/2**20:.0f} MiB "
+              f"(cap={cap}, chunk={hr['chunk_clients']})")
+    if "sparse" in sel:
+        sc = sections["sparse_cohort"]
+        ok = sc["relative_to_dense"] >= 5.0 and sc["final_params_finite"]
+        tag = "OK " if ok else "WARN"
+        print(f"{tag} sparse gather at q={Q}: {sc['rounds_per_sec']:.2f} r/s vs "
+              f"{sc['rounds_per_sec_dense']:.2f} r/s dense sampled "
+              f"({sc['relative_to_dense']:.0f}x; acceptance floor 5x); peak "
+              f"update matrix {sc['peak_update_matrix_bytes']/2**20:.2f} MiB "
+              f"vs {sc['dense_update_matrix_bytes']/2**20:.0f} MiB dense")
+    return [[k, v] for k, v in sections.items() if k != "e8_config"]
+
+
+if __name__ == "__main__":
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--clients", type=int, default=1_000_000)
+    ap.add_argument("--rounds", type=int, default=20)
+    ap.add_argument("--only", nargs="*", default=None, metavar="WORKLOAD",
+                    help=f"subset of: {' '.join(WORKLOADS)}")
+    args = ap.parse_args()
+    main(clients=args.clients, rounds=args.rounds, quick=args.quick,
+         only=args.only)

@@ -14,6 +14,8 @@ Benchmarks:
     e6  (beyond-paper) FedOpt server-lr sensitivity vs hyperparameter-free
     e7  engine throughput — scan engine vs per-round dispatch; always emits
         BENCH_engine.json (results/bench/ + repo root) for trajectory tracking
+    e8  million-client rounds — sparse sampled cohorts + host-resident data
+        (DESIGN.md §14); merges its sections into BENCH_engine.json
     roofline          — §Roofline tables (baseline + optimized) from dry-runs
 """
 from __future__ import annotations
@@ -21,7 +23,7 @@ from __future__ import annotations
 import argparse
 import time
 
-ALL = ("e1", "e2", "e3", "e4", "e5", "e6", "e7", "roofline")
+ALL = ("e1", "e2", "e3", "e4", "e5", "e6", "e7", "e8", "roofline")
 
 
 def main() -> None:
@@ -87,6 +89,10 @@ def main() -> None:
     if "e7" in which:
         from benchmarks import e7_engine_throughput
         record("e7_engine", e7_engine_throughput.main(quick=args.quick))
+    if "e8" in which:
+        # AFTER e7: e7 overwrites BENCH_engine.json wholesale, e8 merges
+        from benchmarks import e8_million_clients
+        record("e8_million_clients", e8_million_clients.main(quick=args.quick))
     if "roofline" in which:
         import os as _os
         from benchmarks import roofline_table

@@ -59,11 +59,29 @@ __all__ = [
     "partial_clip_moments",
     "streamed_clip_moments",
     "raw_moments",
+    "global_client_indices",
     "materialize_ldp_noise",
     "resolve_backend",
 ]
 
 _EPS = 1e-12
+
+
+def global_client_indices(start, m: int) -> jax.Array:
+    """(m,) GLOBAL client indices for a block of m cohort rows.
+
+    Every per-client randomness derivation (LDP noise rows, randomizer keys,
+    local-training shuffles) keys by global client index so that any
+    partition of the cohort — shards, stream chunks, or a sparse gathered
+    block — reproduces the dense single-device draw bit-for-bit.  ``start``
+    is either the scalar global index of row 0 (contiguous shard/chunk
+    slices: indices are ``start + arange(m)``) or already a (m,) vector of
+    global indices (the §14 sparse-gather path, where row j holds client
+    ``slots[j]``), which passes through unchanged.
+    """
+    if getattr(start, "ndim", 0) == 1:
+        return start
+    return start + jnp.arange(m)
 
 
 @dataclasses.dataclass
@@ -111,9 +129,11 @@ def materialize_ldp_noise(noise_key: jax.Array, m: int, d: int, sigma,
     shard s passes ``start = s * m_local`` and reproduces rows [start, start+m)
     of the single-device matrix bit-for-bit.  Mathematically this is clients
     randomizing locally with independent keys — the form in which the LDP
-    guarantee is stated.
+    guarantee is stated.  ``start`` may also be a (m,) vector of global
+    indices (the sparse-gather path, DESIGN.md §14): row j then draws client
+    ``start[j]``'s noise.
     """
-    idx = start + jnp.arange(m)
+    idx = global_client_indices(start, m)
     keys = jax.vmap(lambda i: jax.random.fold_in(noise_key, i))(idx)
     rows = jax.vmap(lambda k: jax.random.normal(k, (d,), dtype))(keys)
     return (sigma * rows).astype(dtype)

@@ -16,7 +16,7 @@ import dataclasses
 import jax
 import jax.numpy as jnp
 
-from repro.core.aggregation import RoundMoments
+from repro.core.aggregation import RoundMoments, global_client_indices
 
 __all__ = [
     "RoundAux",
@@ -71,9 +71,12 @@ def client_keys(key: jax.Array, m: int, start: int | jax.Array = 0) -> jax.Array
 
     Keyed by GLOBAL client index so a client shard derives exactly its own
     clients' keys (pass ``start = shard_index * m_local``) and the sharded
-    release reproduces the single-device randomization bit-for-bit.
+    release reproduces the single-device randomization bit-for-bit.  A (m,)
+    vector ``start`` names the global index of each row directly (the
+    sparse-gather path, DESIGN.md §14).
     """
-    return jax.vmap(lambda i: jax.random.fold_in(key, i))(start + jnp.arange(m))
+    idx = global_client_indices(start, m)
+    return jax.vmap(lambda i: jax.random.fold_in(key, i))(idx)
 
 
 @dataclasses.dataclass

@@ -464,8 +464,17 @@ class WeightedAggregation(Aggregation):
             raise ValueError("weights must be nonnegative with positive sum")
 
     def row_weights(self, start, m_local):
-        """Per-client aggregation weights for the rows [start, start + m_local)."""
+        """Per-client aggregation weights for the rows [start, start + m_local).
+
+        ``start`` is the scalar global index of row 0 (contiguous shard/chunk
+        slices) or a (m_local,) vector of global indices (the sparse-gather
+        path, DESIGN.md §14) — padding rows index past M and pick up zeros.
+        """
         w = jnp.asarray(self.weights, jnp.float32)
+        if getattr(start, "ndim", 0) == 1:
+            padded = jnp.concatenate([w, jnp.zeros((m_local,), jnp.float32)])
+            return jnp.take(padded, jnp.minimum(start, len(self.weights)),
+                            axis=0)
         if isinstance(start, int) and start == 0 and m_local == len(self.weights):
             return w
         # shard slice by (possibly traced) global start; zero-pad so padding

@@ -1,18 +1,30 @@
 """Vectorized federated-learning simulation engine (paper experiments).
 
 Entry point: ``FederatedSession`` + the declarative specs (DESIGN.md §10):
-TrainSpec / LocalSpec / EngineSpec / StreamSpec / ShardSpec / CohortSpec.
-``EngineSpec(engine="stream")`` + ``StreamSpec(chunk_clients=c)`` run each
-round in client chunks with O(c·d) peak update memory (§12).  The
-kwargs-style ``run_federated`` / ``run_federated_batched`` are deprecated
-shims over a one-shot session.
+TrainSpec / LocalSpec / EngineSpec / StreamSpec / ShardSpec / CohortSpec /
+FaultSpec / DataSpec.  ``EngineSpec(engine="stream")`` +
+``StreamSpec(chunk_clients=c)`` run each round in client chunks with O(c·d)
+peak update memory (§12); ``CohortSpec(gather=True)`` skips non-participants
+entirely, making a q-sampled round cost O(q·M·d) (§14); a
+``ClientDataSource`` (host / npz / synthetic) bounds M by host storage
+instead of HBM (§14).  The kwargs-style ``run_federated`` /
+``run_federated_batched`` are deprecated shims over a one-shot session.
 """
 
+from repro.fedsim.data import (
+    ArraySource,
+    ClientDataSource,
+    HostArraySource,
+    NpzSource,
+    SyntheticSource,
+)
 from repro.fedsim.flat import flatten_model
 from repro.fedsim.local import (
     chunk_cohort,
     cohort_updates,
     cohort_updates_spec,
+    gather_rows,
+    gather_slots,
     local_update,
     local_update_spec,
 )
@@ -21,6 +33,7 @@ from repro.fedsim.server import RunResult, run_federated, run_federated_batched
 from repro.fedsim.session import FederatedSession, RecoveryPolicy
 from repro.fedsim.specs import (
     CohortSpec,
+    DataSpec,
     EngineSpec,
     FaultSpec,
     LocalSpec,
@@ -32,8 +45,11 @@ from repro.fedsim.specs import (
 __all__ = [
     "flatten_model", "local_update", "cohort_updates",
     "local_update_spec", "cohort_updates_spec", "chunk_cohort",
+    "gather_slots", "gather_rows",
     "FederatedSession", "RecoveryPolicy", "TrainSpec", "LocalSpec",
     "EngineSpec", "ShardSpec", "StreamSpec", "CohortSpec", "FaultSpec",
+    "DataSpec", "ClientDataSource", "ArraySource", "HostArraySource",
+    "NpzSource", "SyntheticSource",
     "run_federated", "run_federated_batched", "RunResult",
     "DPScaffoldConfig", "run_dp_scaffold",
 ]

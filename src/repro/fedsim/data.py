@@ -1,0 +1,194 @@
+"""Client data sources: host- and disk-resident cohorts (DESIGN.md §14).
+
+The engines' client batches historically had to be device-resident jax
+arrays, which caps the cohort size M at HBM.  A ``ClientDataSource`` breaks
+that bound: it is anything that can serve *rows of clients by global index*
+from wherever the data actually lives — host NumPy arrays, an on-disk
+``.npz`` archive, or a pure generator function for synthetic cohorts.  The
+streaming engine (§12) then stages one chunk of clients at a time with
+``jax.device_put``, double-buffered ``DataSpec.prefetch`` chunks ahead of
+the inner scan, so M is bounded by host storage (or by nothing at all, for
+generated data) instead of device memory.
+
+Contract.  A source must provide:
+
+    num_clients          total cohort size M (property or attribute)
+    kind                 "device" | "host" | "npz" | "synthetic" — recorded
+                         in the session's DataSpec and compile-cache key
+    fetch(idx)           rows for the GLOBAL client indices ``idx`` (a
+                         1-D numpy int array, possibly non-monotone or with
+                         repeats — the §14 gather path fetches by slot):
+                         a pytree of numpy arrays with len(idx) leading
+
+``fetch`` must be deterministic: the same indices return the same rows on
+every call, which is what makes host-resident runs reproducible and
+checkpoint/resume exact.  Sources are plain Python — they are *not* traced;
+the session's host driver calls them between compiled chunk programs.
+
+``ArraySource`` wraps already-device-resident arrays and exists so
+``FederatedSession(batches=...)`` has one uniform entry: the session
+detects it and routes through the historical device-resident engine
+unchanged — bit-for-bit, no staging, no host copies.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable
+
+import jax
+import numpy as np
+
+__all__ = [
+    "ClientDataSource",
+    "ArraySource",
+    "HostArraySource",
+    "NpzSource",
+    "SyntheticSource",
+    "as_data_source",
+]
+
+
+def _leading_dim(tree) -> int:
+    leaves = [x for x in jax.tree_util.tree_leaves(tree)]
+    if not leaves:
+        raise ValueError("client batches have no array leaves")
+    m = leaves[0].shape[0]
+    for x in leaves:
+        if x.shape[0] != m:
+            raise ValueError("every client-batch leaf needs the same leading "
+                             f"(client) dimension; got {x.shape[0]} vs {m}")
+    return int(m)
+
+
+class ClientDataSource:
+    """Base class / protocol for index-addressable client data (§14)."""
+
+    kind: str = "host"
+
+    @property
+    def num_clients(self) -> int:
+        """Total cohort size M."""
+        raise NotImplementedError
+
+    def fetch(self, idx: np.ndarray):
+        """Rows for global client indices ``idx`` (pytree of numpy arrays)."""
+        raise NotImplementedError
+
+
+class ArraySource(ClientDataSource):
+    """Device-resident batches behind the source interface.
+
+    The bit-exact default: the session unwraps ``.batches`` and runs the
+    historical device-resident engine — identical program, identical
+    results.  ``fetch`` still works (via host transfer) so code written
+    against the protocol runs unchanged, just without the memory win.
+    """
+
+    kind = "device"
+
+    def __init__(self, batches):
+        self.batches = batches
+        self._m = _leading_dim(batches)
+
+    @property
+    def num_clients(self) -> int:
+        """Total cohort size M."""
+        return self._m
+
+    def fetch(self, idx: np.ndarray):
+        """Rows for global client indices ``idx`` (pytree of numpy arrays)."""
+        idx = np.asarray(idx)
+        return jax.tree_util.tree_map(
+            lambda x: np.asarray(x)[idx], self.batches)
+
+
+class HostArraySource(ClientDataSource):
+    """Host NumPy arrays: the cohort lives in host RAM, never wholly on
+    device.  ``fetch`` is a fancy-index copy of the requested rows."""
+
+    kind = "host"
+
+    def __init__(self, batches):
+        self.batches = jax.tree_util.tree_map(np.asarray, batches)
+        self._m = _leading_dim(self.batches)
+
+    @property
+    def num_clients(self) -> int:
+        """Total cohort size M."""
+        return self._m
+
+    def fetch(self, idx: np.ndarray):
+        """Rows for global client indices ``idx`` (pytree of numpy arrays)."""
+        idx = np.asarray(idx)
+        return jax.tree_util.tree_map(lambda x: x[idx], self.batches)
+
+
+class NpzSource(ClientDataSource):
+    """On-disk ``.npz`` archive of per-client arrays.
+
+    Each archive member is one client-batch leaf with the client axis
+    leading; members load lazily on first access (``np.load`` keeps the zip
+    handle open and decompresses per member), so startup cost is O(1) and
+    peak host memory is bounded by the members actually touched.  Leaf
+    structure is the flat dict of member names — save with
+    ``np.savez(path, x=..., y=...)`` and the session sees ``{"x": ..., "y":
+    ...}`` batches.
+    """
+
+    kind = "npz"
+
+    def __init__(self, path: str):
+        self.path = str(path)
+        self._npz = np.load(self.path)
+        self._cache: dict[str, np.ndarray] = {}
+        if not self._npz.files:
+            raise ValueError(f"{path!r} holds no arrays")
+        self._m = int(self._npz[self._npz.files[0]].shape[0])
+
+    @property
+    def num_clients(self) -> int:
+        """Total cohort size M."""
+        return self._m
+
+    def _leaf(self, name: str) -> np.ndarray:
+        if name not in self._cache:
+            self._cache[name] = self._npz[name]
+        return self._cache[name]
+
+    def fetch(self, idx: np.ndarray):
+        """Rows for global client indices ``idx`` (pytree of numpy arrays)."""
+        idx = np.asarray(idx)
+        return {name: self._leaf(name)[idx] for name in self._npz.files}
+
+
+class SyntheticSource(ClientDataSource):
+    """Generated client data: ``fn(idx) -> pytree`` of numpy rows.
+
+    No storage at all — the M=10⁶ benchmark regime.  ``fn`` MUST be a pure
+    function of the indices (derive any randomness from them, e.g. one
+    ``np.random.default_rng(seed + i)`` per client) so repeated fetches and
+    checkpoint resumes see identical data.
+    """
+
+    kind = "synthetic"
+
+    def __init__(self, fn: Callable[[np.ndarray], Any], num_clients: int):
+        if num_clients < 1:
+            raise ValueError(f"num_clients must be >= 1, got {num_clients}")
+        self._fn = fn
+        self._m = int(num_clients)
+
+    @property
+    def num_clients(self) -> int:
+        """Total cohort size M."""
+        return self._m
+
+    def fetch(self, idx: np.ndarray):
+        """Rows for global client indices ``idx`` (pytree of numpy arrays)."""
+        return self._fn(np.asarray(idx))
+
+
+def as_data_source(batches) -> ClientDataSource | None:
+    """The session's input normalization: ``ClientDataSource`` passes
+    through; arrays / pytrees-of-arrays return ``None`` (the historical
+    device-resident path — bit-for-bit, nothing wrapped)."""
+    return batches if isinstance(batches, ClientDataSource) else None

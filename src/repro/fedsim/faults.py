@@ -33,6 +33,7 @@ from repro.fedsim.specs import FAULT_TAG, FaultSpec
 
 __all__ = [
     "fault_masks",
+    "gather_fault_rows",
     "resolve_steps",
     "inject_corruption",
     "finite_rows",
@@ -65,6 +66,21 @@ def fault_masks(fault: FaultSpec, round_key: jax.Array, num_clients: int):
     dropped = draw(_DROPOUT_SUB, fault.dropout)
     alive = None if dropped is None else 1.0 - dropped
     return alive, draw(_STRAGGLER_SUB, fault.straggler), draw(_CORRUPT_SUB, fault.corrupt)
+
+
+def gather_fault_rows(slots: jax.Array, *vectors):
+    """Gather each (m,) fault vector's slot rows for a §14 gathered block.
+
+    Fault draws stay FULL-COHORT (position i is global client i — the same
+    discipline as ``fault_masks``); the sparse engines gather the sampled
+    clients' rows through the same slot table as their data, so a gathered
+    faulty round degrades exactly as its dense reference.  ``None`` entries
+    (disabled fault classes) pass through as ``None``; padding slots pick up
+    client 0's draw, which the zero slot mask already excludes from every
+    moment.
+    """
+    return tuple(None if v is None else jnp.take(v, slots, axis=0)
+                 for v in vectors)
 
 
 def resolve_steps(fault: FaultSpec, straggler: jax.Array, tau: int) -> jax.Array:

@@ -37,6 +37,7 @@ from typing import Callable
 import jax
 import jax.numpy as jnp
 
+from repro.core.aggregation import global_client_indices
 from repro.fedsim.specs import LOCAL_TRAIN_TAG, LocalSpec
 
 __all__ = [
@@ -49,6 +50,8 @@ __all__ = [
     "mask_rows",
     "pad_cohort",
     "chunk_cohort",
+    "gather_slots",
+    "gather_rows",
 ]
 
 
@@ -208,11 +211,14 @@ def cohort_updates_spec(loss_fn: Callable, w, client_batches, spec: LocalSpec,
     Client ``i`` of the shard draws its minibatch shuffles from
     ``fold_in(fold_in(round_key, LOCAL_TRAIN_TAG), start + i)`` — keyed by
     GLOBAL index so sharded and single-device engines shuffle identically.
-    ``steps`` (optional (M,) int32) is the per-client straggler cutoff (§13).
+    A (m,) vector ``start`` names each row's global index directly (the
+    sparse-gather path, DESIGN.md §14).  ``steps`` (optional (M,) int32) is
+    the per-client straggler cutoff (§13).
     """
     m = jax.tree_util.tree_leaves(client_batches)[0].shape[0]
     base = jax.random.fold_in(round_key, LOCAL_TRAIN_TAG)
-    keys = jax.vmap(lambda i: jax.random.fold_in(base, i))(start + jnp.arange(m))
+    idx = global_client_indices(start, m)
+    keys = jax.vmap(lambda i: jax.random.fold_in(base, i))(idx)
     if steps is None:
         fn = lambda batch, k: local_update_spec(loss_fn, w, batch, k, spec, tau, eta_l)
         return jax.vmap(fn)(client_batches, keys)
@@ -360,3 +366,48 @@ def chunk_cohort(client_batches, chunk_clients: int, *, n_shards: int = 1):
 
     return (jax.tree_util.tree_map(to_grid, batches),
             mask.reshape(n_chunks, chunk_clients))
+
+
+def gather_slots(mask: jax.Array, cap: int):
+    """Pack a sparse participation mask into a dense slot table (§14).
+
+    Given the (m,) per-round mask (0. = non-participant), returns
+
+        slots:       (cap,) int32 — slot j holds the global index of the
+                     j-th participant (in index order); padding slots hold 0
+        slot_mask:   (cap,) float32 — the participant's mask value in its
+                     slot (1., or the multiplicity weight), 0. on padding
+        overflow:    scalar float32 — how many participants did NOT fit in
+                     ``cap`` slots (0. when the cap held)
+
+    Pure jax with static shapes (mask → positions via cumsum, one scatter
+    with ``mode="drop"``), so it runs inside the scan body.  Padding slots
+    point at client 0 — REAL data, so padded rows' local training stays
+    finite for any loss — and carry a zero ``slot_mask``, which the §9/§13
+    masked-moment protocol already guarantees keeps them out of every sum.
+    Participants beyond ``cap`` are dropped from the round (their scatter
+    target falls off the table); ``overflow`` lets callers surface that.
+    """
+    m = mask.shape[0]
+    on = mask > 0
+    pos = jnp.cumsum(on.astype(jnp.int32)) - 1          # participant rank
+    target = jnp.where(on & (pos < cap), pos, cap)      # cap = off-table
+    slots = jnp.full((cap,), m, jnp.int32).at[target].set(
+        jnp.arange(m, dtype=jnp.int32), mode="drop")
+    valid = slots < m
+    slots = jnp.where(valid, slots, 0)
+    slot_mask = jnp.where(valid, jnp.take(mask, slots, axis=0), 0.0)
+    overflow = jnp.maximum(jnp.sum(on.astype(jnp.float32)) - float(cap), 0.0)
+    return slots, slot_mask.astype(jnp.float32), overflow
+
+
+def gather_rows(tree, slots: jax.Array, *, axis: int = 0):
+    """Gather the slot rows out of every leaf of a per-client pytree.
+
+    ``jnp.take`` along the client axis — the §14 pre-gather that shrinks a
+    (m, ...) cohort block to the (cap, ...) sampled block before local
+    training runs.  Slot indices are always in-range (``gather_slots`` clamps
+    padding to client 0), so no gather-mode games are needed.
+    """
+    return jax.tree_util.tree_map(
+        lambda x: jnp.take(x, slots, axis=axis), tree)

@@ -65,8 +65,8 @@ from jax.experimental.shard_map import shard_map
 from jax.sharding import PartitionSpec as P
 
 from repro.core.fedexp import ServerAlgorithm, clamp_moment_counts, set_moment_count
-from repro.fedsim.faults import apply_faults, fault_masks, resolve_steps, sanitize_moments
-from repro.fedsim.local import mask_rows
+from repro.fedsim.faults import apply_faults, fault_masks, gather_fault_rows, resolve_steps, sanitize_moments
+from repro.fedsim.local import gather_rows, gather_slots, mask_rows
 from repro.fedsim.specs import CohortSpec, FaultSpec, StreamSpec
 from repro.models.sharding import client_axis_rules, logical_to_pspec
 
@@ -185,8 +185,16 @@ def _round_step(algorithm, local_fn, eval_fn, eval_every: int = 1,
     through the same masked protocol: the round's fault draws turn failed
     clients into zero-weight rows (``apply_faults``) and the REALIZED count
     flows through the clamped resolution (DESIGN.md §13).
+
+    ``CohortSpec(gather=True)`` (DESIGN.md §14) replaces the all-M masked
+    round with the sparse fast path: the participation mask is packed into a
+    static (cap,) slot table, client batches (and fault rows) are gathered by
+    slot, local training runs on the gathered block only, and the moments are
+    keyed by the slots' GLOBAL indices — the identical release in O(q·M·d)
+    work.
     """
     sampled = cohort is not None and cohort.is_sampled
+    gathering = sampled and cohort.gather
     injecting = fault is not None and fault.injects
     local = _local_caller(local_fn, fault, tau)
 
@@ -200,16 +208,25 @@ def _round_step(algorithm, local_fn, eval_fn, eval_every: int = 1,
             m = jax.tree_util.tree_leaves(client_batches)[0].shape[0]
             mask = (cohort.round_mask(round_key, m) if sampled
                     else jnp.ones((m,), jnp.float32))
+            if gathering:
+                slots, mask, _ = gather_slots(mask, cohort.resolved_cap(m))
+                client_batches = gather_rows(client_batches, slots)
+                start = slots
+            else:
+                start = 0
             if injecting:
                 alive, straggler, corrupt = fault_masks(fault, round_key, m)
-                deltas = local(w, client_batches, eta_l, round_key, 0,
+                if gathering:
+                    alive, straggler, corrupt = gather_fault_rows(
+                        slots, alive, straggler, corrupt)
+                deltas = local(w, client_batches, eta_l, round_key, start,
                                straggler)
                 deltas, mask = apply_faults(deltas, mask, alive, corrupt)
             else:
                 deltas = mask_rows(
-                    local_fn(w, client_batches, eta_l, round_key, 0), mask)
-            moments = algorithm.local_moments(round_key, w, deltas, mask, 0,
-                                              opt_state)
+                    local_fn(w, client_batches, eta_l, round_key, start), mask)
+            moments = algorithm.local_moments(round_key, w, deltas, mask,
+                                              start, opt_state)
             if injecting:
                 moments = sanitize_moments(moments)
                 moments = _resolve_realized_count(moments, algorithm)
@@ -241,8 +258,15 @@ def _sharded_round_step(algorithm, local_fn, eval_fn, axis, m_true,
     the single-device engine's.  Fault draws follow the same full-cohort-
     then-slice pattern (DESIGN.md §13), so a faulty sharded run degrades
     exactly as its single-device reference.
+
+    With ``CohortSpec(gather=True)`` (§14) each shard packs ITS slice of the
+    participation mask into a per-shard slot table (static cap bounded by the
+    shard's client count) and trains only the gathered rows; the moments key
+    by ``shard_start + slot`` — the same global indices the dense engines
+    use — and cross shards in the identical single psum.
     """
     sampled = cohort is not None and cohort.is_sampled
+    gathering = sampled and cohort.gather
     injecting = fault is not None and fault.injects
     local = _local_caller(local_fn, fault, tau)
 
@@ -265,10 +289,19 @@ def _sharded_round_step(algorithm, local_fn, eval_fn, axis, m_true,
                                              (m_local,)) * pad_mask
             else:
                 mask = pad_mask
+            if gathering:
+                slots, mask, _ = gather_slots(mask,
+                                              cohort.resolved_cap(m_local))
+                local_batches = gather_rows(local_batches, slots)
+                start = start + slots   # (cap,) vector of GLOBAL indices
             if injecting:
                 alive, straggler, corrupt = (
-                    _pad_slice(v, m_pad, start, m_local)
+                    _pad_slice(v, m_pad, jax.lax.axis_index(axis) * m_local,
+                               m_local)
                     for v in fault_masks(fault, round_key, m_true))
+                if gathering:
+                    alive, straggler, corrupt = gather_fault_rows(
+                        slots, alive, straggler, corrupt)
                 deltas = local(w, local_batches, eta_l, round_key, start,
                                straggler)
                 deltas, mask = apply_faults(deltas, mask, alive, corrupt)
@@ -524,6 +557,297 @@ def _sharded_stream_chunk_fn(algorithm, local_fn, eval_fn, donate, unroll,
             algorithm, local_fn, eval_fn, donate, unroll, stream, mesh, axis,
             batch_treedef, leaf_ndims, n_chunks, m_true, m_pad, eval_every,
             cohort, fault, tau)
+
+
+def _gather_stream_round_step(algorithm, local_fn, eval_fn,
+                              m_true: int, m_pad: int, chunk_clients: int,
+                              eval_every: int = 1,
+                              cohort: CohortSpec | None = None,
+                              axis: str | None = None,
+                              fault: FaultSpec | None = None, tau: int = 1):
+    """One sampled round streamed over the GATHERED cohort (DESIGN.md §14).
+
+    The sparse × streaming composition: the cohort arrives UN-chunked (each
+    shard holds its (m_local, ...) slice plus the padding mask), the round
+    packs the participation mask into a static slot table as the dense-gather
+    engines do, and the §12 inner scan then walks the slot table — not the
+    cohort — in ``chunk_clients``-sized chunks, gathering each chunk's client
+    rows by slot right before its local training.  Peak update memory stays
+    O(chunk·d) AND the round's work is O(cap·d) instead of O(M·d): the inner
+    scan runs ceil(cap / c) steps, not ceil(M / c).
+
+    Moments key by the slots' GLOBAL indices (``shard_start + slot``), fault
+    rows gather through the same slots, and count resolution matches the
+    dense sampled engines — so gather × stream × shard × fault all reproduce
+    the dense sampled release at rtol 1e-5.
+    """
+    injecting = fault is not None and fault.injects
+    local_call = _local_caller(local_fn, fault, tau)
+
+    def step(w, opt_state, round_key, t, batches_and_mask, eta_l):
+        """One server round inside the compiled scan body."""
+        local_batches, pad_mask = batches_and_mask
+        m_local = pad_mask.shape[0]
+        shard_start = (0 if axis is None
+                       else jax.lax.axis_index(axis) * m_local)
+        full = cohort.round_mask(round_key, m_true)
+        full = jnp.concatenate(
+            [full, jnp.zeros((m_pad - m_true,), jnp.float32)])
+        mask = jax.lax.dynamic_slice(full, (shard_start,),
+                                     (m_local,)) * pad_mask
+        # static slot grid: cap rounded up to the chunk size, so the slot
+        # table reshapes onto the (n_chunks, c) inner-scan grid exactly as
+        # chunk_cohort lays out the dense stream's clients
+        cap = cohort.resolved_cap(m_local)
+        c = min(chunk_clients, cap)
+        n_chunks = -(-cap // c)
+        slots, slot_mask, _ = gather_slots(mask, n_chunks * c)
+        slot_grid = slots.reshape(n_chunks, c)
+        mask_grid = slot_mask.reshape(n_chunks, c)
+        if injecting:
+            alive_f, strag_f, corr_f = (
+                _pad_slice(v, m_pad, shard_start, m_local)
+                for v in fault_masks(fault, round_key, m_true))
+            alive_f, strag_f, corr_f = gather_fault_rows(
+                slots, alive_f, strag_f, corr_f)
+
+            def fgrid(v, default: float):
+                if v is None:
+                    v = jnp.full((slots.shape[0],), default, jnp.float32)
+                return v.reshape(n_chunks, c)
+
+            fault_grid = (fgrid(alive_f, 1.0), fgrid(strag_f, 0.0),
+                          fgrid(corr_f, 0.0))
+        else:
+            fault_grid = ()
+
+        def chunk_moments(slots_j, mask_j, fault_j):
+            """Gather + local training + release moments for one slot chunk."""
+            batches_j = gather_rows(local_batches, slots_j)
+            gidx = shard_start + slots_j
+            if injecting:
+                alive_j, strag_j, corr_j = fault_j
+                deltas = local_call(w, batches_j, eta_l, round_key, gidx,
+                                    strag_j)
+                deltas, mask_j = apply_faults(deltas, mask_j, alive_j, corr_j)
+            else:
+                deltas = mask_rows(
+                    local_fn(w, batches_j, eta_l, round_key, gidx), mask_j)
+            return algorithm.local_moments(round_key, w, deltas, mask_j,
+                                           gidx, opt_state)
+
+        row_sds = jax.ShapeDtypeStruct((c,), jnp.float32)
+        shapes = jax.eval_shape(
+            chunk_moments, jax.ShapeDtypeStruct((c,), jnp.int32),
+            jax.ShapeDtypeStruct((c,), jnp.float32),
+            (row_sds,) * 3 if injecting else ())
+        acc0 = jax.tree_util.tree_map(
+            lambda s: jnp.zeros(s.shape, s.dtype), shapes)
+
+        def body(acc, xs):
+            """Scan body: accumulate one chunk's additive moments into the carry."""
+            slots_j, mask_j, fault_j = xs
+            mom = chunk_moments(slots_j, mask_j, fault_j)
+            return jax.tree_util.tree_map(jnp.add, acc, mom), None
+
+        moments, _ = jax.lax.scan(body, acc0,
+                                  (slot_grid, mask_grid, fault_grid))
+        if axis is not None:
+            moments = jax.lax.psum(moments, axis)
+        if injecting:
+            moments = sanitize_moments(moments)
+            moments = _resolve_realized_count(moments, algorithm)
+        else:
+            moments = _resolve_sampled_count(moments, cohort, algorithm)
+        w_next, aux, opt_state = algorithm.apply_from_moments(
+            round_key, w, moments, opt_state)
+        metric = _eval_metric(eval_fn, eval_every, w_next, t)
+        outs = (aux.eta_g, metric, aux.eta_naive, aux.eta_target)
+        return w_next, opt_state, outs
+
+    return step
+
+
+def _build_gather_stream_chunk_fn(algorithm: ServerAlgorithm, local_fn,
+                                  eval_fn, donate: bool, unroll: int,
+                                  chunk_clients: int, m_true: int, m_pad: int,
+                                  eval_every: int, cohort: CohortSpec | None,
+                                  fault: FaultSpec | None, tau: int):
+    step_round = _gather_stream_round_step(algorithm, local_fn, eval_fn,
+                                           m_true, m_pad, chunk_clients,
+                                           eval_every, cohort,
+                                           fault=fault, tau=tau)
+
+    def chunk(carry, key, ts, local_batches, pad_mask, eta_l):
+        """Compiled scan over one chunk of rounds."""
+        keys = _fold_round_keys(key, ts)
+        body = _scan_body(step_round, (local_batches, pad_mask), eta_l, fault)
+        return jax.lax.scan(body, carry, (keys, ts), unroll=min(unroll, len(ts)))
+
+    return jax.jit(chunk, donate_argnums=(0,) if donate else ())
+
+
+_cached_gather_stream_chunk_fn = (
+    functools.lru_cache(maxsize=32)(_build_gather_stream_chunk_fn))
+
+
+def _gather_stream_chunk_fn(algorithm: ServerAlgorithm, local_fn, eval_fn,
+                            donate: bool, unroll: int, chunk_clients: int,
+                            m_true: int, m_pad: int, eval_every: int = 1,
+                            cohort: CohortSpec | None = None,
+                            fault: FaultSpec | None = None, tau: int = 1):
+    """Compiled gather-stream scan chunk, cached like ``_scan_chunk_fn``."""
+    try:
+        return _cached_gather_stream_chunk_fn(
+            algorithm, local_fn, eval_fn, donate, unroll, chunk_clients,
+            m_true, m_pad, eval_every, cohort, fault, tau)
+    except TypeError:
+        return _build_gather_stream_chunk_fn(
+            algorithm, local_fn, eval_fn, donate, unroll, chunk_clients,
+            m_true, m_pad, eval_every, cohort, fault, tau)
+
+
+def _build_sharded_gather_stream_chunk_fn(algorithm: ServerAlgorithm,
+                                          local_fn, eval_fn, donate: bool,
+                                          unroll: int, chunk_clients: int,
+                                          mesh, axis: str, batch_treedef,
+                                          leaf_ndims, mask_len: int,
+                                          m_true: int,
+                                          eval_every: int,
+                                          cohort: CohortSpec | None,
+                                          fault: FaultSpec | None, tau: int):
+    """Each shard gather-streams its own cohort slice (§9 × §14): the
+    UN-chunked client leaves shard over the ``clients`` mesh exactly as the
+    dense sharded engine's, each device packs its slice's slot table, and
+    the accumulated shard moments cross devices in one psum per round."""
+    step_round = _gather_stream_round_step(algorithm, local_fn, eval_fn,
+                                           m_true, mask_len, chunk_clients,
+                                           eval_every, cohort, axis=axis,
+                                           fault=fault, tau=tau)
+    rules = client_axis_rules(mesh, axis=axis)
+    batch_specs, mask_spec = _client_batch_specs(batch_treedef, leaf_ndims,
+                                                 mask_len, rules)
+
+    def chunk(carry, key, ts, local_batches, pad_mask, eta_l):
+        """Compiled scan over one chunk of rounds."""
+        keys = _fold_round_keys(key, ts)
+        body = _scan_body(step_round, (local_batches, pad_mask), eta_l, fault)
+        return jax.lax.scan(body, carry, (keys, ts), unroll=min(unroll, len(ts)))
+
+    sharded = shard_map(
+        chunk, mesh=mesh,
+        in_specs=(P(), P(), P(), batch_specs, mask_spec, P()),
+        out_specs=P(),
+        check_rep=False)  # psum-then-replicated-update, as the dense engine
+    return jax.jit(sharded, donate_argnums=(0,) if donate else ())
+
+
+_cached_sharded_gather_stream_chunk_fn = (
+    functools.lru_cache(maxsize=32)(_build_sharded_gather_stream_chunk_fn))
+
+
+def _sharded_gather_stream_chunk_fn(algorithm, local_fn, eval_fn, donate,
+                                    unroll, chunk_clients, mesh, axis,
+                                    batch_treedef, leaf_ndims, mask_len,
+                                    m_true, eval_every: int = 1,
+                                    cohort: CohortSpec | None = None,
+                                    fault: FaultSpec | None = None,
+                                    tau: int = 1):
+    """Compiled sharded gather-stream chunk, cached like ``_scan_chunk_fn``."""
+    try:
+        return _cached_sharded_gather_stream_chunk_fn(
+            algorithm, local_fn, eval_fn, donate, unroll, chunk_clients, mesh,
+            axis, batch_treedef, leaf_ndims, mask_len, m_true, eval_every,
+            cohort, fault, tau)
+    except TypeError:
+        return _build_sharded_gather_stream_chunk_fn(
+            algorithm, local_fn, eval_fn, donate, unroll, chunk_clients, mesh,
+            axis, batch_treedef, leaf_ndims, mask_len, m_true, eval_every,
+            cohort, fault, tau)
+
+
+def _build_host_moments_fn(algorithm: ServerAlgorithm, local_fn, data):
+    """Per-chunk moments program of the host-resident driver (DESIGN.md §14).
+
+    One compiled function per session, applied to every staged chunk of every
+    round: local training + release moments for the chunk's rows, keyed by
+    the chunk's GLOBAL client indices (a (c,) vector — slot indices on the
+    gather path, ``j*c + arange(c)`` on the dense path; both are exactly the
+    indices the device-resident stream engine derives, so the host-staged
+    release is the identical computation).  ``data`` (the frozen DataSpec) is
+    part of the compile-cache key, as for every other spec.
+    """
+    del data  # cache key only: the compiled program is data-location blind
+
+    def chunk_moments(w, opt_state, round_key, batches_j, mask_j, gidx_j,
+                      eta_l):
+        """Local training + release moments for one host-staged chunk."""
+        deltas = mask_rows(
+            local_fn(w, batches_j, eta_l, round_key, gidx_j), mask_j)
+        return algorithm.local_moments(round_key, w, deltas, mask_j,
+                                       gidx_j, opt_state)
+
+    return jax.jit(chunk_moments)
+
+
+_cached_host_moments_fn = functools.lru_cache(maxsize=32)(_build_host_moments_fn)
+
+
+def _host_moments_fn(algorithm: ServerAlgorithm, local_fn, data):
+    """Compiled host-driver chunk program, cached like ``_scan_chunk_fn``."""
+    try:
+        return _cached_host_moments_fn(algorithm, local_fn, data)
+    except TypeError:
+        return _build_host_moments_fn(algorithm, local_fn, data)
+
+
+def _build_host_finalize_fn(algorithm: ServerAlgorithm, eval_fn,
+                            eval_every: int, cohort: CohortSpec | None,
+                            m_true: int):
+    """Per-round tail of the host-resident driver: count resolution +
+    server update + eval + iterate-tail roll — exactly the post-inner-scan
+    logic of ``_stream_round_step`` and the tail semantics of ``_scan_body``,
+    so a host-staged run reproduces the device-resident stream engine."""
+    sampled = cohort is not None and cohort.is_sampled
+
+    def finalize(w, opt_state, tail, round_key, t, moments):
+        """Resolve counts, apply the server update, roll the iterate tail."""
+        if sampled:
+            moments = _resolve_sampled_count(moments, cohort, algorithm)
+        elif getattr(algorithm, "supports_static_count", True):
+            moments = set_moment_count(moments, m_true)
+        else:
+            moments = clamp_moment_counts(moments, floor=1e-12)
+        w_next, aux, opt_state = algorithm.apply_from_moments(
+            round_key, w, moments, opt_state)
+        metric = _eval_metric(eval_fn, eval_every, w_next, t)
+        tail = jnp.concatenate([tail[1:], w_next[None]], axis=0)
+        outs = (aux.eta_g, metric, aux.eta_naive, aux.eta_target)
+        return w_next, opt_state, tail, outs
+
+    return jax.jit(finalize)
+
+
+_cached_host_finalize_fn = (
+    functools.lru_cache(maxsize=32)(_build_host_finalize_fn))
+
+
+def _host_finalize_fn(algorithm: ServerAlgorithm, eval_fn,
+                      eval_every: int = 1, cohort: CohortSpec | None = None,
+                      m_true: int = 1):
+    """Compiled host-driver round finalizer, cached like ``_scan_chunk_fn``."""
+    try:
+        return _cached_host_finalize_fn(algorithm, eval_fn, eval_every,
+                                        cohort, m_true)
+    except TypeError:
+        return _build_host_finalize_fn(algorithm, eval_fn, eval_every,
+                                       cohort, m_true)
+
+
+@jax.jit
+def _host_add_moments(acc, mom):
+    """Accumulate one chunk's additive moments (the inner-scan ``jnp.add``)."""
+    return jax.tree_util.tree_map(jnp.add, acc, mom)
 
 
 def _client_batch_specs(treedef, leaf_ndims, mask_len, rules):

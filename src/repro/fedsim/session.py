@@ -38,22 +38,31 @@ every ``run``/``resume``/``run_batched`` after the first.
 """
 from __future__ import annotations
 
+import collections
 import dataclasses
 import time
 from typing import Any, Callable
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro import checkpoint as ckpt
 from repro.core import accounting
 from repro.core.fedexp import ServerAlgorithm
 from repro.fedsim import server as _srv
+from repro.fedsim.data import ClientDataSource, as_data_source
 from repro.fedsim.flat import flatten_model
-from repro.fedsim.local import build_cohort_local_fn, chunk_cohort, pad_cohort
+from repro.fedsim.local import (
+    build_cohort_local_fn,
+    chunk_cohort,
+    gather_slots,
+    pad_cohort,
+)
 from repro.fedsim.server import RunResult
 from repro.fedsim.specs import (
     CohortSpec,
+    DataSpec,
     EngineSpec,
     FaultSpec,
     LocalSpec,
@@ -112,6 +121,7 @@ class FederatedSession:
                  cohort: CohortSpec = CohortSpec(),
                  stream: StreamSpec = StreamSpec(),
                  fault: FaultSpec = FaultSpec(),
+                 data: DataSpec | None = None,
                  eval_fn: Callable | None = None,
                  num_clients: int | None = None):
         """Bind (algorithm, loss, model, client data) to declarative specs.
@@ -125,6 +135,10 @@ class FederatedSession:
             (passes through unwrapped).
           client_batches: pytree of per-client data; every leaf carries the
             client axis leading (axis 1 for ``run_batched(batched_data=True)``).
+            Also accepts a ``ClientDataSource`` (DESIGN.md §14): an
+            ``ArraySource`` unwraps to the historical device-resident engine
+            bit-for-bit; host/npz/synthetic sources stream chunk-staged data
+            through ``engine="stream"``, bounding M by host storage.
           train: what to train (rounds, tau, eta_l, averaging, eval cadence).
           local: how clients train locally (DESIGN.md §11).
           engine: how the round loop compiles — scan / eager / stream (§8, §12).
@@ -136,6 +150,10 @@ class FederatedSession:
           fault: deterministic fault injection + divergence watchdog (§13);
             the default (no faults, watchdog off) is normalized away and
             reproduces the fault-free program bit-for-bit.
+          data: where the client data lives + prefetch depth (§14).  Derived
+            from ``client_batches`` when omitted (the eighth spec — joins the
+            compile-cache key); passing one whose ``kind`` contradicts the
+            actual input raises rather than silently mis-staging.
           eval_fn: optional metric closure ``eval_fn(params) -> scalar``.
           num_clients: explicit cohort size, required only when the client
             axis is not leaf axis 0 (``run_batched(batched_data=True)``).
@@ -167,12 +185,49 @@ class FederatedSession:
         # TRANSIENT divergence (poison attempt 0 only) so the retried run is
         # bit-exact with an unkilled reference
         self._inject_divergence = None
+        # unified data entry (§14): a ClientDataSource of kind "device"
+        # unwraps to the historical device-resident path (bit-for-bit); other
+        # kinds stay behind the source and stream host-staged chunks
+        source = as_data_source(client_batches)
+        if source is not None and source.kind == "device":
+            client_batches, source = source.batches, None
+        self._source = source
+        kind = "device" if source is None else source.kind
+        if data is None:
+            data = DataSpec(kind=kind)
+        elif data.kind != kind:
+            raise ValueError(
+                f"DataSpec(kind={data.kind!r}) contradicts the client data "
+                f"actually passed ({kind!r}); drop data= (the kind is "
+                "derived) or pass the matching ClientDataSource")
+        self.data = data
+        if source is not None:
+            if engine.engine != "stream":
+                raise ValueError(
+                    f"a {kind!r} ClientDataSource requires engine='stream' "
+                    "(the scan/eager engines assume device-resident "
+                    "batches); pass EngineSpec(engine='stream') or stage the "
+                    "data yourself and pass device arrays")
+            if shard.mesh is not None:
+                raise ValueError(
+                    "host-resident sources stream on a single device (chunk "
+                    "staging does not compose with the clients mesh yet); "
+                    "drop ShardSpec or pass device-resident batches")
+            if self.fault is not None:
+                raise ValueError(
+                    "fault injection requires device-resident batches (the "
+                    "fault engines draw per-client faults inside the "
+                    "compiled round); drop FaultSpec or pass device arrays")
         self.client_batches = client_batches
         # leaf axis 0 is the client axis EXCEPT for run_batched(batched_data=
         # True), where a seed axis leads — pass num_clients= explicitly there
         # (run_batched re-derives it for its own masks either way)
-        self.num_clients = (num_clients if num_clients is not None else
-                            jax.tree_util.tree_leaves(client_batches)[0].shape[0])
+        if source is not None:
+            self.num_clients = source.num_clients
+        else:
+            self.num_clients = (num_clients if num_clients is not None else
+                                jax.tree_util.tree_leaves(
+                                    client_batches)[0].shape[0])
 
         if _is_flat_params(w0):
             self._w0 = jnp.asarray(w0)
@@ -188,6 +243,16 @@ class FederatedSession:
             self.loss_fn = lambda wf, batch: loss_fn(unravel(wf), batch)
             self.eval_fn = (None if eval_fn is None
                             else (lambda wf: eval_fn(unravel(wf))))
+        if engine.engine == "stream" and self.stream.is_auto:
+            # resolve chunk_clients="auto" from the live device budget (the
+            # docs/scaling.md sizing rule, mirroring auto_shard_count); the
+            # resolved value is recorded on self.stream so benchmarks can
+            # name it in their config identity
+            from repro.launch.mesh import auto_chunk_clients
+            n_shards = (1 if shard.mesh is None
+                        else shard.mesh.shape[shard.client_axis])
+            self.stream = StreamSpec(chunk_clients=auto_chunk_clients(
+                self.dim, self._client_bytes(), n_shards=n_shards))
         # the LocalTrainer closure (DESIGN.md §11): binds loss, LocalSpec and
         # tau once — its identity keys the engine's compile cache, and the
         # default spec reproduces the pre-LocalSpec program bit-for-bit.
@@ -219,6 +284,17 @@ class FederatedSession:
         """Flat model dimension d (after any pytree ravel)."""
         return self._w0.shape[-1]
 
+    def _client_bytes(self) -> int:
+        """Approximate bytes of ONE client's data (the auto-chunk sizing
+        term): one fetched row for a source, total-bytes / M for arrays."""
+        if self._source is not None:
+            rows = self._source.fetch(np.zeros((1,), np.int64))
+            return int(sum(np.asarray(x).nbytes
+                           for x in jax.tree_util.tree_leaves(rows)))
+        total = sum(x.nbytes
+                    for x in jax.tree_util.tree_leaves(self.client_batches))
+        return int(total // max(1, self.num_clients))
+
     def _tail_n(self) -> int:
         return max(1, min(self.train.avg_last, self.train.rounds))
 
@@ -248,6 +324,32 @@ class FederatedSession:
             # (and lets all such sessions share one compiled program)
             stream = StreamSpec(chunk_clients=min(self.stream.chunk_clients,
                                                   max(1, self.num_clients)))
+            if self._source is not None:
+                # host-resident driver (§14): chunk-staged fetch + prefetch,
+                # one compiled chunk program — the source rides the batches
+                # slot of the fn(carry, key, ts, batches, eta_l) contract
+                return (self._host_chunk_callable(stream.chunk_clients),
+                        self._source, ())
+            if self.cohort is not None and self.cohort.gather:
+                # gather-stream (§14): the cohort stays UN-chunked; the
+                # round packs its slot table and the inner scan walks slots
+                batches, mask = pad_cohort(self.client_batches, n_shards)
+                m_pad = mask.shape[0]
+                if s.mesh is None:
+                    fn = _srv._gather_stream_chunk_fn(
+                        self.algorithm, self._local_fn, self.eval_fn, donate,
+                        e.scan_unroll, stream.chunk_clients,
+                        self.num_clients, m_pad, t.eval_every, self.cohort,
+                        self.fault, int(t.tau))
+                    return fn, batches, (mask,)
+                leaves, treedef = jax.tree_util.tree_flatten(batches)
+                fn = _srv._sharded_gather_stream_chunk_fn(
+                    self.algorithm, self._local_fn, self.eval_fn, donate,
+                    e.scan_unroll, stream.chunk_clients, s.mesh,
+                    s.client_axis, treedef, tuple(x.ndim for x in leaves),
+                    m_pad, self.num_clients, t.eval_every, self.cohort,
+                    self.fault, int(t.tau))
+                return fn, batches, (mask,)
             batches, mask = chunk_cohort(self.client_batches,
                                          stream.chunk_clients,
                                          n_shards=n_shards)
@@ -282,6 +384,106 @@ class FederatedSession:
                                  t.eval_every, self.cohort, self.fault,
                                  int(t.tau))
         return fn, self.client_batches, ()
+
+    def _host_chunk_callable(self, chunk_clients: int):
+        """The host-resident stream driver (DESIGN.md §14).
+
+        Returns a callable with the engine contract ``fn(carry, key, ts,
+        batches, eta_l)`` — so ``_run_scan``'s chunking, checkpointing, and
+        resume machinery drive it unchanged — that loops rounds in Python:
+        per round it derives the round key and participation mask eagerly
+        (the same pure-jax draws the compiled engines trace), plans the
+        chunk grid, and pumps ``source.fetch`` + ``jax.device_put`` through
+        a ``DataSpec.prefetch``-deep staging deque so the next chunk's
+        host→device transfer overlaps the current chunk's compiled moments
+        program.  Chunks accumulate in the device-resident stream engine's
+        exact order and arithmetic, so host-staged results are bit-exact
+        with device-resident ones.
+        """
+        m = self.num_clients
+        cohort = self.cohort
+        gathering = cohort is not None and cohort.gather
+        if gathering:
+            cap = cohort.resolved_cap(m)
+            c = min(chunk_clients, cap)
+            n_chunks = -(-cap // c)
+        else:
+            c = chunk_clients
+            n_chunks = -(-m // c)
+        grid = n_chunks * c
+        depth = max(1, self.data.prefetch)
+        source = self._source
+        moments_fn = _srv._host_moments_fn(self.algorithm, self._local_fn,
+                                           self.data)
+        finalize = _srv._host_finalize_fn(self.algorithm, self.eval_fn,
+                                          self.train.eval_every, cohort, m)
+        if not gathering:
+            # dense grid: chunk j is global rows [j*c, (j+1)*c); rows past M
+            # fetch client 0 (pad_cohort's repeat-row-0 pad, zero-masked) but
+            # keep their padded-grid GLOBAL index for key-fold parity
+            dense_gidx = [jnp.arange(j * c, (j + 1) * c, dtype=jnp.int32)
+                          for j in range(n_chunks)]
+            dense_idx = [np.where(g < m, g, 0)
+                         for g in (np.arange(j * c, (j + 1) * c)
+                                   for j in range(n_chunks))]
+
+        def run_rounds(carry, key, ts, src, eta_l):
+            """Python round loop with prefetch-staged chunk programs."""
+            del src  # the engine contract's batches slot; == self._source
+            w, opt_state, tail = carry
+            cols = ([], [], [], [])
+            for t_host in np.asarray(ts):
+                t = jnp.int32(int(t_host))
+                rk = jax.random.fold_in(key, t)
+                if gathering:
+                    slots, slot_mask, _ = gather_slots(
+                        cohort.round_mask(rk, m), grid)
+                    slots_np = np.asarray(jax.device_get(slots))
+                    sgrid = slots.reshape(n_chunks, c)
+                    mgrid = slot_mask.reshape(n_chunks, c)
+                    plan = ((slots_np[j * c:(j + 1) * c], mgrid[j], sgrid[j])
+                            for j in range(n_chunks))
+                else:
+                    full = (cohort.round_mask(rk, m) if cohort is not None
+                            else jnp.ones((m,), jnp.float32))
+                    full = jnp.concatenate(
+                        [full, jnp.zeros((grid - m,), jnp.float32)])
+                    mgrid = full.reshape(n_chunks, c)
+                    plan = ((dense_idx[j], mgrid[j], dense_gidx[j])
+                            for j in range(n_chunks))
+
+                buf = collections.deque()
+
+                def stage(plan=plan, buf=buf):
+                    """Fetch + device_put the next planned chunk, if any."""
+                    p = next(plan, None)
+                    if p is None:
+                        return
+                    idx_np, mask_j, gidx_j = p
+                    buf.append((jax.device_put(source.fetch(idx_np)),
+                                mask_j, gidx_j))
+
+                for _ in range(depth):
+                    stage()
+                moments = None
+                while buf:
+                    batches_j, mask_j, gidx_j = buf.popleft()
+                    mom = moments_fn(w, opt_state, rk, batches_j, mask_j,
+                                     gidx_j, eta_l)
+                    # refill AFTER dispatch: the next fetch/transfer overlaps
+                    # the asynchronously executing chunk program
+                    stage()
+                    moments = (mom if moments is None
+                               else _srv._host_add_moments(moments, mom))
+                w, opt_state, tail, outs = finalize(w, opt_state, tail,
+                                                    rk, t, moments)
+                for col, v in zip(cols, outs):
+                    col.append(v)
+            hist = tuple(jnp.stack(col) if col
+                         else jnp.zeros((0,), jnp.float32) for col in cols)
+            return (w, opt_state, tail), hist
+
+        return run_rounds
 
     @staticmethod
     def _chunk_bounds(start: int, rounds: int, chunk_rounds: int | None,
@@ -423,12 +625,35 @@ class FederatedSession:
                 "run_batched has no fault-injection/watchdog support; run "
                 "seeds through run() when a FaultSpec is active (a silently "
                 "fault-free sweep would misreport the fault model)")
+        if self.engine.engine == "stream":
+            # streamed seed sweep: the seeds run SEQUENTIALLY through the one
+            # compiled stream program (this session's cache entry compiles on
+            # the first seed and hits on the rest) — a vmapped stream would
+            # multiply peak chunk memory by S, defeating the engine's point.
+            # Results match per-seed run() bit-for-bit by construction.
+            if batched_w0 or batched_data:
+                raise ValueError(
+                    "run_batched(engine='stream') sweeps seeds through one "
+                    "compiled stream program; per-seed w0/data axes are not "
+                    "supported — loop run() with per-seed sessions instead")
+            results = [self.run(k) for k in keys]
+
+            def stack(field: str):
+                vals = [getattr(r, field) for r in results]
+                return jax.tree_util.tree_map(
+                    lambda *xs: jnp.stack(xs), *vals)
+
+            return RunResult(final_w=stack("final_w"),
+                             last_w=stack("last_w"),
+                             eta_history=stack("eta_history"),
+                             metric_history=stack("metric_history"),
+                             eta_naive_history=stack("eta_naive_history"),
+                             eta_target_history=stack("eta_target_history"))
         if self.engine.engine != "scan":
             raise ValueError(
                 f"run_batched has no {self.engine.engine!r} engine; use "
-                "engine='scan' (the default) or loop run() — the streaming "
-                "engine targets large M, where a seed sweep belongs in the "
-                "outer loop anyway")
+                "engine='scan' (the default) or loop run() — a batched eager "
+                "loop is just a Python loop over run()")
         if batched_w0 and self._unravel is not None:
             raise ValueError(
                 "batched_w0 with a pytree model is ambiguous (the seed axis "

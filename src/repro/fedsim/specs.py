@@ -15,7 +15,10 @@ axis of a run:
                 once (DESIGN.md §12)
     ShardSpec   where it runs: optional ``clients`` mesh (DESIGN.md §9)
     CohortSpec  who participates: per-round client sampling (Bernoulli or
-                fixed-size, with/without replacement)
+                fixed-size, with/without replacement), optionally with the
+                §14 sparse gather fast path
+    DataSpec    where client data lives and how it is staged to the device
+                (derived from ``batches`` automatically; DESIGN.md §14)
 
 All specs are FROZEN and HASHABLE, so a spec tuple slots directly into the
 engine's cross-call compile cache (``functools.lru_cache`` over the builder
@@ -38,13 +41,14 @@ and identical between the sharded and single-device engines.
 from __future__ import annotations
 
 import dataclasses
+import math
 
 import jax
 import jax.numpy as jnp
 
 __all__ = ["TrainSpec", "LocalSpec", "EngineSpec", "StreamSpec", "ShardSpec",
-           "CohortSpec", "FaultSpec", "SAMPLING_TAG", "LOCAL_TRAIN_TAG",
-           "FAULT_TAG"]
+           "CohortSpec", "FaultSpec", "DataSpec", "SAMPLING_TAG",
+           "LOCAL_TRAIN_TAG", "FAULT_TAG"]
 
 # fold_in tag deriving the per-round sampling key from the round key.  Client
 # randomization folds the GLOBAL CLIENT INDEX (0..M-1) into the same round
@@ -187,17 +191,31 @@ class StreamSpec:
     degenerates to a single chunk — the dense moments computation exactly.
 
     Attributes:
-      chunk_clients: clients materialized per inner-scan step (>= 1).  Pick
-        the largest chunk whose (chunk_clients, d) update block fits memory;
+      chunk_clients: clients materialized per inner-scan step (>= 1), or the
+        string ``"auto"`` to derive the largest chunk that fits the live
+        device memory budget at session-build time (the docs/scaling.md
+        sizing rule, automated like ``auto_shard_count``; the session
+        records the resolved value as ``session.stream.chunk_clients``).  Pick the
+        largest chunk whose (chunk_clients, d) update block fits memory;
         see docs/scaling.md for the sizing playbook.
     """
 
-    chunk_clients: int = 1024
+    chunk_clients: int | str = 1024
 
     def __post_init__(self):
-        if self.chunk_clients < 1:
+        if isinstance(self.chunk_clients, str):
+            if self.chunk_clients != "auto":
+                raise ValueError(
+                    f"chunk_clients must be an int >= 1 or 'auto', "
+                    f"got {self.chunk_clients!r}")
+        elif self.chunk_clients < 1:
             raise ValueError(
                 f"chunk_clients must be >= 1, got {self.chunk_clients}")
+
+    @property
+    def is_auto(self) -> bool:
+        """True when the chunk size is derived from the device memory budget."""
+        return self.chunk_clients == "auto"
 
 
 @dataclasses.dataclass(frozen=True)
@@ -221,11 +239,24 @@ class CohortSpec:
     the unsampled engine path — bit-for-bit the pre-session behavior.
     ``q < 1`` is per-round Bernoulli (Poisson) sampling; ``size=k`` is a
     fixed-size uniform cohort, with multiplicity weights when ``replace``.
+
+    ``gather=True`` turns on the §14 sparse fast path: instead of computing
+    all M local updates and zero-weighting non-participants (static shapes,
+    O(M·d) per round), the engine packs the sampled cohort into a dense
+    ``(cap, ...)`` block via ``gather_slots`` and trains ONLY those rows —
+    O(q·M·d) per round.  ``cap`` is static: the fixed cohort ``size`` when
+    set, else ``gather_cap``, else a Bernoulli high-probability bound
+    (``resolved_cap``).  Per-client randomness still keys by GLOBAL client
+    index, so gathered rounds equal dense rounds at rtol 1e-5 on every
+    engine.  Participants beyond the cap are dropped from the round
+    (vanishingly rare at the default headroom; see DESIGN.md §14).
     """
 
     q: float = 1.0              # Bernoulli participation probability
     size: int | None = None     # fixed cohort size (mutually exclusive with q<1)
     replace: bool = False       # fixed-size sampling with replacement
+    gather: bool = False        # §14 sparse fast path: pre-gather participants
+    gather_cap: int | None = None  # static slot-table size; None = derived
 
     def __post_init__(self):
         if not (0.0 < self.q <= 1.0):
@@ -236,11 +267,40 @@ class CohortSpec:
             raise ValueError("specify q<1 (Bernoulli) OR size (fixed), not both")
         if self.replace and self.size is None:
             raise ValueError("replace=True requires a fixed cohort size")
+        if self.gather and not self.is_sampled:
+            raise ValueError("gather=True requires sampling (q < 1 or size=k); "
+                             "a full-participation round has nothing to skip")
+        if self.gather and self.replace:
+            # a with-replacement multiplicity mask is gate-only in the moment
+            # reductions (see partial_clip_moments); a gathered block would
+            # need true row duplication to stay exact, so refuse loudly
+            raise ValueError("gather=True does not support replace=True "
+                             "(multiplicity-weighted cohorts); drop gather or "
+                             "sample without replacement")
+        if self.gather_cap is not None:
+            if self.gather_cap < 1:
+                raise ValueError(f"gather_cap must be >= 1, got {self.gather_cap}")
+            if not self.gather:
+                raise ValueError("gather_cap requires gather=True")
 
     @property
     def is_sampled(self) -> bool:
         """True when this spec actually subsamples (q < 1 or fixed size)."""
         return self.q < 1.0 or self.size is not None
+
+    def resolved_cap(self, num_clients: int) -> int:
+        """Static slot-table size of the §14 gathered block for an M-client
+        cohort: the fixed cohort size when set (exact); ``gather_cap`` when
+        given; else a Bernoulli(q) high-probability bound
+        ``qM + 6·sqrt(qM) + 16`` (≈ 6-sigma headroom plus a small-M floor —
+        overflow odds far below any rtol-1e-5 test's flake budget), clamped
+        to M."""
+        if self.size is not None:
+            return min(self.size, num_clients)
+        if self.gather_cap is not None:
+            return min(self.gather_cap, num_clients)
+        qm = self.q * num_clients
+        return min(num_clients, int(math.ceil(qm + 6.0 * math.sqrt(qm) + 16.0)))
 
     def sampling_rate(self, num_clients: int) -> float:
         """Expected per-round participation fraction (for accounting)."""
@@ -331,3 +391,37 @@ class FaultSpec:
         """True when the engine must deviate from the unfaulted program
         (injection or watchdog); ``FaultSpec()`` normalizes to None."""
         return self.injects or self.watchdog
+
+
+@dataclasses.dataclass(frozen=True)
+class DataSpec:
+    """Where client data lives and how it reaches the device (DESIGN.md §14).
+
+    The eighth spec.  Sessions derive it automatically from what ``batches``
+    is — a device array / pytree yields ``kind="device"`` (the historical
+    path, bit-for-bit), a ``ClientDataSource`` yields its ``kind`` — so
+    existing callers never construct one.  Pass ``data=DataSpec(prefetch=...)``
+    to tune the host→device double-buffer depth of a host-resident run.
+
+    Frozen and hashable like every spec: ``kind`` and ``prefetch`` join the
+    engine's compile-cache key, so a host-resident session never silently
+    shares a compiled program whose input-staging assumptions differ.
+
+    Attributes:
+      kind: ``"device"`` (resident arrays, the default), ``"host"`` (NumPy
+        arrays on the host), ``"npz"`` (on-disk archive), ``"synthetic"``
+        (generated per fetch) — whatever the source reports.
+      prefetch: chunks kept in flight ahead of the §12 inner scan on the
+        host-resident path (>= 1; 2 = classic double buffering).  Ignored
+        for device-resident data.
+    """
+
+    kind: str = "device"
+    prefetch: int = 2
+
+    def __post_init__(self):
+        if self.kind not in ("device", "host", "npz", "synthetic"):
+            raise ValueError(f"unknown data kind {self.kind!r}; use 'device', "
+                             "'host', 'npz', or 'synthetic'")
+        if self.prefetch < 1:
+            raise ValueError(f"prefetch must be >= 1, got {self.prefetch}")

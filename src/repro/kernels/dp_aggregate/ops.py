@@ -169,11 +169,13 @@ def dp_aggregate_sums_chunked(
     noise: jax.Array | None = None,
     *,
     chunk_m: int,
+    slots: jax.Array | None = None,
+    slot_mask: jax.Array | None = None,
     use_ref: bool = False,
     interpret: bool | None = None,
     block_m: int | None = None,
 ) -> tuple[jax.Array, jax.Array, jax.Array]:
-    """``dp_aggregate_sums`` accumulated over row chunks (DESIGN.md §12).
+    """``dp_aggregate_sums`` accumulated over row chunks (DESIGN.md §12/§14).
 
     Reduces the (M, d) update matrix ``chunk_m`` rows at a time — one kernel
     launch per chunk inside a ``lax.scan`` — and adds the three partial sums
@@ -186,38 +188,77 @@ def dp_aggregate_sums_chunked(
     noise block — materialize per-client rows keyed by global index instead
     (``repro.core.aggregation.materialize_ldp_noise``).
 
+    ``slots`` is the §14 sparse-cohort entry: a (cap,) slot table (as packed
+    by ``fedsim.local.gather_slots``) restricts the reduction to the sampled
+    rows, gathered from ``updates`` one chunk at a time right before its
+    kernel launch — never a dense (cap, d) staging block — so a q-sampled
+    round's kernel work is O(cap·d).  Padding slots hold index 0 (client 0's
+    real row), so the accompanying ``slot_mask`` where-zeroes each gathered
+    chunk before the kernel sees it — the engines' ``mask_rows`` discipline,
+    applied here because only this layer ever materializes the gathered rows.
+    With ``slots``, ``noise`` must already be slot-aligned ((cap, d),
+    materialized for the GATHERED global indices, zero rows on padding
+    slots).
+
     Args:
-      updates: (M, d) raw client updates; M must be a multiple of
-        ``chunk_m`` (the engine's chunk grid guarantees this — pad with
-        zero-weight rows otherwise).
+      updates: (M, d) raw client updates; M (or ``cap`` when ``slots`` is
+        given) must be a multiple of ``chunk_m`` (the engine's chunk/slot
+        grids guarantee this — pad with zero-weight rows otherwise).
       clip_norm: clip threshold C (python float or traced scalar).
-      noise: optional (M, d) pre-materialized per-client noise.
+      noise: optional pre-materialized per-client noise — (M, d), or (cap, d)
+        slot-aligned when ``slots`` is given.
       chunk_m: rows per kernel launch (>= 1).
+      slots: optional (cap,) int32 slot table of sampled-row indices.
+      slot_mask: (cap,) float {0., 1.} validity of each slot; required with
+        ``slots`` (without it a padding slot would double-count client 0).
       use_ref / interpret / block_m: forwarded to each chunk's reduction.
 
     Returns:
-      ``(sum_c, sum_sq_released, sum_sq_clipped)`` raw SUMS over all M rows
-      — the dense entry's values re-associated at chunk boundaries only.
+      ``(sum_c, sum_sq_released, sum_sq_clipped)`` raw SUMS over the reduced
+      rows — the dense entry's values re-associated at chunk boundaries only.
     """
     m, d = updates.shape
+    rows = m if slots is None else slots.shape[0]
     if chunk_m < 1:
         raise ValueError(f"chunk_m must be >= 1, got {chunk_m}")
-    chunk_m = min(chunk_m, m)
-    if m % chunk_m:
+    chunk_m = min(chunk_m, rows)
+    if rows % chunk_m:
+        what = "M" if slots is None else "cap"
         raise ValueError(
-            f"M={m} is not a multiple of chunk_m={chunk_m}; pad the cohort "
-            "to the chunk grid first (zero-weight rows contribute nothing)")
-    n_chunks = m // chunk_m
+            f"{what}={rows} is not a multiple of chunk_m={chunk_m}; pad the "
+            "cohort to the chunk grid first (zero-weight rows contribute "
+            "nothing)")
+    n_chunks = rows // chunk_m
     interpret, block_m = _resolve_defaults(chunk_m, d, interpret, block_m)
     clip = jnp.asarray(clip_norm, jnp.float32)
 
-    xs = {"u": updates.reshape(n_chunks, chunk_m, d)}
-    if noise is not None:
-        xs["noise"] = noise.reshape(n_chunks, chunk_m, d)
+    if slots is None:
+        xs = {"u": updates.reshape(n_chunks, chunk_m, d)}
+        if noise is not None:
+            xs["noise"] = noise.reshape(n_chunks, chunk_m, d)
+    else:
+        if slot_mask is None:
+            raise ValueError(
+                "slots requires slot_mask (padding slots hold index 0; an "
+                "unmasked gather would double-count client 0's update)")
+        xs = {"slots": slots.reshape(n_chunks, chunk_m),
+              "mask": slot_mask.reshape(n_chunks, chunk_m)}
+        if noise is not None:
+            if noise.shape[0] != rows:
+                raise ValueError(
+                    f"with slots, noise must be slot-aligned: expected "
+                    f"({rows}, {d}), got {noise.shape} — materialize it for "
+                    "the gathered global indices, not the full cohort")
+            xs["noise"] = noise.reshape(n_chunks, chunk_m, d)
 
     def body(acc, chunk):
+        if slots is None:
+            u = chunk["u"]
+        else:
+            u = jnp.take(updates, chunk["slots"], axis=0)
+            u = jnp.where(chunk["mask"][:, None] > 0, u, 0.0)
         s, sq_rel, sq_clip = _impl(
-            chunk["u"], chunk.get("noise"), clip, jnp.float32(0.0),
+            u, chunk.get("noise"), clip, jnp.float32(0.0),
             jnp.int32(0), use_ref, interpret, block_m, False)
         a_s, a_rel, a_clip = acc
         return (a_s + s, a_rel + sq_rel, a_clip + sq_clip), None

@@ -9,7 +9,7 @@ from __future__ import annotations
 import jax
 
 __all__ = ["make_production_mesh", "make_test_mesh", "make_client_mesh",
-           "auto_shard_count", "client_shard_spec"]
+           "auto_shard_count", "auto_chunk_clients", "client_shard_spec"]
 
 # Minimum clients per shard for the "auto" shard-count heuristic.  Measured
 # on the e7 quick geometry (M=96, 8 forced host devices): 8 shards put only
@@ -56,6 +56,59 @@ def auto_shard_count(num_clients: int, *, n_devices: int | None = None,
     """
     n_dev = n_devices if n_devices is not None else len(jax.devices())
     return max(1, min(n_dev, num_clients // min_clients_per_shard))
+
+
+def device_memory_budget(*, fraction: float = 0.25,
+                         fallback_bytes: int = 4 << 30) -> int:
+    """Bytes of device memory the streaming engine may spend on one chunk.
+
+    Reads the live device's ``memory_stats()["bytes_limit"]`` when the
+    backend exposes it (GPU/TPU) and budgets ``fraction`` of it — the rest
+    stays free for the model, optimizer state, moments, and XLA temporaries.
+    CPU backends report no limit; the documented fallback is 4 GiB, matching
+    the host-RAM assumption of the docs/scaling.md sizing table.
+    """
+    try:
+        stats = jax.devices()[0].memory_stats() or {}
+        limit = int(stats.get("bytes_limit", 0))
+    except Exception:
+        limit = 0
+    return int((limit if limit > 0 else fallback_bytes) * fraction)
+
+
+def auto_chunk_clients(dim: int, client_bytes: int = 0, *,
+                       n_shards: int = 1,
+                       budget_bytes: int | None = None) -> int:
+    """Chunk size for ``StreamSpec(chunk_clients="auto")`` (DESIGN.md §12/§14).
+
+    The docs/scaling.md sizing rule, inverted: a streamed chunk's peak device
+    footprint is ~``chunk * (2 * 4 * dim + client_bytes)`` — the (c, d)
+    update block, an equal-shape randomization block (the LDP noise
+    materialization doubles the update memory; clip-only mechanisms simply
+    leave headroom), and the chunk's staged client data — so the chunk is the
+    memory budget divided by that per-client cost.  Mirrors
+    ``auto_shard_count``: a heuristic with an explicit knob
+    (``budget_bytes``), not a guarantee.  With ``n_shards`` > 1 each shard
+    streams concurrently on its own device, so the budget is per-shard
+    already and no division applies.
+
+    Raises when even ``chunk_clients=1`` exceeds the budget — streaming
+    cannot help then, and silently returning 1 would OOM one client at a
+    time.
+    """
+    if dim < 1:
+        raise ValueError(f"dim must be >= 1, got {dim}")
+    per_client = 2 * 4 * int(dim) + max(0, int(client_bytes))
+    budget = budget_bytes if budget_bytes is not None else device_memory_budget()
+    chunk = budget // per_client
+    if chunk < 1:
+        raise ValueError(
+            f"chunk_clients='auto': one client costs ~{per_client} bytes "
+            f"(2 * 4 * dim={dim} update/noise rows + {client_bytes} data "
+            f"bytes) but the device budget is {budget} bytes — even "
+            "chunk_clients=1 cannot fit.  Shrink the model dimension, shard "
+            "clients over more devices, or pass a larger budget_bytes.")
+    return int(chunk)
 
 
 def client_shard_spec(n_shards: int | str | None = None, *,

@@ -1,0 +1,309 @@
+"""Sparse sampled cohorts: gather == dense parity (DESIGN.md §14).
+
+``CohortSpec(gather=True)`` replaces the all-M masked round with a gathered
+(cap, ...) block — O(q·M·d) work instead of O(M·d) — and must be the SAME
+release: per-client randomness keys by GLOBAL client index through the slot
+table, fault rows gather through the same slots, and the masked-moment
+protocol sees identical mask-weighted sums.  The contract pinned here:
+
+* gather == dense sampled at rtol 1e-5 for every registry algorithm and
+  every engine combination — scan, sharded, stream (the gather-stream inner
+  scan over the SLOT grid), faulted rounds, LocalSpec trainers, weighted
+  aggregation (the vector-start row_weights branch), and rounds whose
+  realized cohort is EMPTY;
+* ``gather_slots`` packs participants in index order, clamps padding slots
+  to 0 with zero slot mask, and reports overflow;
+* ``resolved_cap`` is exact for fixed-size cohorts, honors ``gather_cap``,
+  and gives Bernoulli sampling 6-sigma headroom;
+* the kernel layer's ``slots`` entry reduces gathered rows chunk-by-chunk
+  to the dense sums.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.compose import (
+    FedEXPStep,
+    GaussianLDP,
+    WeightedAggregation,
+    compose_algorithm,
+)
+from repro.core.fedexp import make_algorithm
+from repro.data.synthetic import linreg_loss, make_synthetic_linreg
+from repro.fedsim import (
+    CohortSpec,
+    EngineSpec,
+    FaultSpec,
+    FederatedSession,
+    LocalSpec,
+    ShardSpec,
+    StreamSpec,
+    TrainSpec,
+    gather_slots,
+)
+from repro.kernels.dp_aggregate.ops import dp_aggregate_sums_chunked
+from repro.launch.mesh import make_client_mesh
+
+M, D, TAU, ETA_L, ROUNDS, CHUNK = 44, 24, 2, 0.1, 4, 16
+
+ALG_KWARGS = {
+    "fedavg": {},
+    "fedexp": {},
+    "dp-fedavg-ldp-gauss": dict(clip_norm=0.3, sigma=0.21),
+    "ldp-fedexp-gauss": dict(clip_norm=0.3, sigma=0.21),
+    "dp-fedavg-privunit": dict(clip_norm=0.3, eps0=2.0, eps1=2.0, eps2=2.0, dim=D),
+    "ldp-fedexp-privunit": dict(clip_norm=0.3, eps0=2.0, eps1=2.0, eps2=2.0, dim=D),
+    "dp-fedavg-cdp": dict(clip_norm=0.3, sigma=0.2, num_clients=M),
+    "cdp-fedexp": dict(clip_norm=0.3, sigma=0.2, num_clients=M),
+    "dp-fedadam-cdp": dict(clip_norm=0.3, sigma=0.2, num_clients=M, server_lr=0.05),
+    "cdp-fedexp-adaptive-clip": dict(z_mult=0.5, num_clients=M, dim=D),
+    "ldp-gauss-fedadam": dict(clip_norm=0.3, sigma=0.21, server_lr=0.05),
+    "cdp-fedmom": dict(clip_norm=0.3, sigma=0.2, num_clients=M),
+    "privunit-fedexp-adaptive-clip": dict(eps0=2.0, eps1=2.0, eps2=2.0, dim=D,
+                                          c0=0.5),
+}
+
+KEY = jax.random.PRNGKey(11)
+Q = 0.4
+DENSE = CohortSpec(q=Q)
+SPARSE = CohortSpec(q=Q, gather=True)
+
+
+@pytest.fixture(scope="module")
+def problem():
+    data = make_synthetic_linreg(jax.random.PRNGKey(3), M, D)
+    return data.client_batches(), jnp.zeros(D)
+
+
+def _session(problem, name, *, cohort, rounds=ROUNDS, **kw):
+    batches, w0 = problem
+    alg = make_algorithm(name, **ALG_KWARGS[name])
+    return FederatedSession(alg, linreg_loss, w0, batches,
+                            train=TrainSpec(rounds=rounds, tau=TAU,
+                                            eta_l=ETA_L),
+                            cohort=cohort, **kw)
+
+
+def _stream_kw(chunk=CHUNK):
+    return dict(engine=EngineSpec(engine="stream"),
+                stream=StreamSpec(chunk_clients=chunk))
+
+
+def _assert_runs_close(a, b, rtol=1e-5, atol=1e-6):
+    np.testing.assert_allclose(np.asarray(a.final_w), np.asarray(b.final_w),
+                               rtol=rtol, atol=atol)
+    np.testing.assert_allclose(np.asarray(a.last_w), np.asarray(b.last_w),
+                               rtol=rtol, atol=atol)
+    np.testing.assert_allclose(np.asarray(a.eta_history),
+                               np.asarray(b.eta_history),
+                               rtol=rtol, atol=atol)
+
+
+class TestGatherSlots:
+    def test_packs_participants_in_index_order(self):
+        mask = jnp.asarray([0., 1., 0., 1., 1., 0.])
+        slots, slot_mask, overflow = gather_slots(mask, 4)
+        np.testing.assert_array_equal(np.asarray(slots), [1, 3, 4, 0])
+        np.testing.assert_array_equal(np.asarray(slot_mask), [1., 1., 1., 0.])
+        assert float(overflow) == 0.0
+
+    def test_padding_slots_are_zero_masked_client_zero(self):
+        """Padding slots clamp to index 0 (real, finite data) but carry zero
+        weight — the §9 zero-weight-row discipline."""
+        slots, slot_mask, _ = gather_slots(jnp.zeros((5,)), 3)
+        np.testing.assert_array_equal(np.asarray(slots), [0, 0, 0])
+        np.testing.assert_array_equal(np.asarray(slot_mask), [0., 0., 0.])
+
+    def test_overflow_reports_dropped_participants(self):
+        slots, slot_mask, overflow = gather_slots(jnp.ones((6,)), 4)
+        np.testing.assert_array_equal(np.asarray(slots), [0, 1, 2, 3])
+        assert float(overflow) == 2.0
+
+    def test_weighted_mask_values_ride_the_slot_mask(self):
+        """Multiplicity/weight values in the mask survive the gather."""
+        mask = jnp.asarray([0., 2., 0., 0.5])
+        _, slot_mask, _ = gather_slots(mask, 3)
+        np.testing.assert_array_equal(np.asarray(slot_mask), [2., 0.5, 0.])
+
+
+class TestCohortSpecGather:
+    def test_gather_requires_sampling(self):
+        with pytest.raises(ValueError, match="nothing to skip"):
+            CohortSpec(gather=True)
+
+    def test_gather_rejects_replacement(self):
+        with pytest.raises(ValueError, match="replace"):
+            CohortSpec(size=4, replace=True, gather=True)
+
+    def test_gather_cap_requires_gather(self):
+        with pytest.raises(ValueError, match="gather_cap"):
+            CohortSpec(q=0.1, gather_cap=8)
+        with pytest.raises(ValueError, match="gather_cap"):
+            CohortSpec(q=0.1, gather=True, gather_cap=0)
+
+    def test_resolved_cap(self):
+        assert CohortSpec(size=9, gather=True).resolved_cap(M) == 9
+        assert CohortSpec(size=99, gather=True).resolved_cap(64) == 64
+        assert CohortSpec(q=0.1, gather=True,
+                          gather_cap=12).resolved_cap(1000) == 12
+        # Bernoulli: qM + 6 sqrt(qM) + 16, never past M
+        cap = CohortSpec(q=0.001, gather=True).resolved_cap(10**6)
+        assert 1000 < cap < 1400
+        assert CohortSpec(q=0.9, gather=True).resolved_cap(10) == 10
+
+
+class TestGatherMatchesDense:
+    @pytest.mark.parametrize("name", sorted(ALG_KWARGS))
+    def test_scan_engine(self, problem, name):
+        """All 13 registry algorithms: gather == dense sampled, rtol 1e-5."""
+        dense = _session(problem, name, cohort=DENSE).run(KEY)
+        sparse = _session(problem, name, cohort=SPARSE).run(KEY)
+        _assert_runs_close(sparse, dense)
+
+    @pytest.mark.parametrize("name", sorted(ALG_KWARGS))
+    def test_gather_stream_engine(self, problem, name):
+        """All 13 registry algorithms through the gather-stream inner scan
+        (slot grid walked in chunks) against the dense sampled reference."""
+        dense = _session(problem, name, cohort=DENSE).run(KEY)
+        sparse = _session(problem, name, cohort=SPARSE,
+                          **_stream_kw(chunk=8)).run(KEY)
+        _assert_runs_close(sparse, dense)
+
+    def test_fixed_size_cohort_is_exact_cap(self, problem):
+        """size=k cohorts gather into exactly k slots — and stay bit-exact
+        with the dense sampled release when the cap covers one chunk (the
+        computation degenerates to the same masked-moments program shape)."""
+        dense = _session(problem, "ldp-fedexp-gauss",
+                         cohort=CohortSpec(size=9)).run(KEY)
+        sparse = _session(problem, "ldp-fedexp-gauss",
+                          cohort=CohortSpec(size=9, gather=True)).run(KEY)
+        _assert_runs_close(sparse, dense)
+
+    def test_sharded_gather(self, problem):
+        """Each shard packs its own slot table; one psum per round (§9 × §14).
+        Runs 1- and 8-device under the CI matrix."""
+        shard = ShardSpec(mesh=make_client_mesh(), client_axis="clients")
+        dense = _session(problem, "cdp-fedexp", cohort=DENSE).run(KEY)
+        sparse = _session(problem, "cdp-fedexp", cohort=SPARSE,
+                          shard=shard).run(KEY)
+        _assert_runs_close(sparse, dense)
+
+    def test_sharded_gather_stream(self, problem):
+        shard = ShardSpec(mesh=make_client_mesh(), client_axis="clients")
+        dense = _session(problem, "ldp-fedexp-gauss", cohort=DENSE).run(KEY)
+        sparse = _session(problem, "ldp-fedexp-gauss", cohort=SPARSE,
+                          shard=shard, **_stream_kw(chunk=8)).run(KEY)
+        _assert_runs_close(sparse, dense)
+
+    def test_faulted_gather(self, problem):
+        """Fault draws stay full-cohort and gather through the same slots:
+        a gathered faulty round degrades exactly as its dense reference."""
+        fault = FaultSpec(dropout=0.3, straggler=0.2, straggler_steps=1,
+                          corrupt=0.02)
+        dense = _session(problem, "ldp-fedexp-gauss", cohort=DENSE,
+                         fault=fault).run(KEY)
+        sparse = _session(problem, "ldp-fedexp-gauss", cohort=SPARSE,
+                          fault=fault).run(KEY)
+        _assert_runs_close(sparse, dense)
+
+    def test_faulted_gather_stream(self, problem):
+        fault = FaultSpec(dropout=0.3, straggler=0.2, straggler_steps=1,
+                          corrupt=0.02)
+        dense = _session(problem, "fedexp", cohort=DENSE, fault=fault).run(KEY)
+        sparse = _session(problem, "fedexp", cohort=SPARSE, fault=fault,
+                          **_stream_kw(chunk=8)).run(KEY)
+        _assert_runs_close(sparse, dense)
+
+    def test_localspec_trainer_gathers(self):
+        """Minibatch/momentum clients shuffle by GLOBAL client index through
+        the slot table, so spec trainers are gather-position-independent."""
+        samples = jax.random.normal(jax.random.PRNGKey(7), (M, 16, D))
+
+        def sample_loss(w, b):
+            return jnp.mean(jnp.square(b @ w - 1.0))
+
+        local = LocalSpec(batch_size=4, momentum=0.5)
+        train = TrainSpec(rounds=ROUNDS, tau=TAU, eta_l=ETA_L)
+        alg = make_algorithm("fedexp")
+        dense = FederatedSession(alg, sample_loss, jnp.zeros(D), samples,
+                                 train=train, local=local, cohort=DENSE).run(KEY)
+        sparse = FederatedSession(alg, sample_loss, jnp.zeros(D), samples,
+                                  train=train, local=local, cohort=SPARSE).run(KEY)
+        _assert_runs_close(sparse, dense)
+
+    def test_weighted_aggregation_gathers(self, problem):
+        """Per-client weights index by the slot vector (the vector-start
+        row_weights branch) — same weighted sums as the dense mask path."""
+        batches, w0 = problem
+        alg = compose_algorithm(
+            GaussianLDP(0.3, 0.21), FedEXPStep(),
+            WeightedAggregation(weights=tuple(float(i % 3 + 1)
+                                              for i in range(M))))
+        train = TrainSpec(rounds=ROUNDS, tau=TAU, eta_l=ETA_L)
+        dense = FederatedSession(alg, linreg_loss, w0, batches, train=train,
+                                 cohort=DENSE).run(KEY)
+        sparse = FederatedSession(alg, linreg_loss, w0, batches, train=train,
+                                  cohort=SPARSE).run(KEY)
+        _assert_runs_close(sparse, dense)
+
+    def test_empty_realized_cohort(self, problem):
+        """q small enough that some rounds sample NOBODY: the gathered round
+        must resolve to the same zero-update no-op as the dense empty round
+        (clamped counts — no NaN), across scan and gather-stream."""
+        cohort_d = CohortSpec(q=0.01)
+        cohort_s = CohortSpec(q=0.01, gather=True)
+        dense = _session(problem, "fedexp", cohort=cohort_d, rounds=6).run(KEY)
+        sparse = _session(problem, "fedexp", cohort=cohort_s, rounds=6).run(KEY)
+        assert np.all(np.isfinite(np.asarray(sparse.final_w)))
+        _assert_runs_close(sparse, dense)
+        streamed = _session(problem, "fedexp", cohort=cohort_s, rounds=6,
+                            **_stream_kw(chunk=8)).run(KEY)
+        _assert_runs_close(streamed, dense)
+
+    def test_gather_cap_overflow_drops_tail_participants(self, problem):
+        """An explicit gather_cap below the realized cohort truncates (the
+        documented failure mode the 6-sigma default headroom avoids): the run
+        stays finite but is NOT the dense release."""
+        tiny = CohortSpec(q=Q, gather=True, gather_cap=2)
+        out = _session(problem, "fedavg", cohort=tiny).run(KEY)
+        assert np.all(np.isfinite(np.asarray(out.final_w)))
+
+    def test_batched_runs_gather(self, problem):
+        """run_batched vmaps the same gathered round step."""
+        keys = jax.random.split(jax.random.PRNGKey(5), 3)
+        dense = _session(problem, "fedexp", cohort=DENSE).run_batched(keys)
+        sparse = _session(problem, "fedexp", cohort=SPARSE).run_batched(keys)
+        np.testing.assert_allclose(np.asarray(sparse.final_w),
+                                   np.asarray(dense.final_w),
+                                   rtol=1e-5, atol=1e-6)
+
+
+class TestKernelSlotsEntry:
+    def test_slots_match_dense_masked_sums(self):
+        u = jax.random.normal(jax.random.PRNGKey(0), (M, D))
+        mask = (jax.random.uniform(jax.random.PRNGKey(1), (M,)) < Q
+                ).astype(jnp.float32)
+        slots, slot_mask, _ = gather_slots(mask, 24)
+        s_sparse, rel_sparse, clip_sparse = dp_aggregate_sums_chunked(
+            u, 0.3, chunk_m=8, slots=slots, slot_mask=slot_mask, use_ref=True)
+        s_dense, rel_dense, clip_dense = dp_aggregate_sums_chunked(
+            u * mask[:, None], 0.3, chunk_m=4, use_ref=True)
+        np.testing.assert_allclose(np.asarray(s_sparse), np.asarray(s_dense),
+                                   rtol=1e-5, atol=1e-6)
+        np.testing.assert_allclose(float(clip_sparse), float(clip_dense),
+                                   rtol=1e-5)
+
+    def test_slots_require_slot_mask(self):
+        u = jnp.ones((8, 4))
+        with pytest.raises(ValueError, match="slot_mask"):
+            dp_aggregate_sums_chunked(u, 1.0, chunk_m=4,
+                                      slots=jnp.zeros((4,), jnp.int32))
+
+    def test_slot_aligned_noise_shape_enforced(self):
+        u = jnp.ones((8, 4))
+        slots = jnp.zeros((4,), jnp.int32)
+        with pytest.raises(ValueError, match="slot-aligned"):
+            dp_aggregate_sums_chunked(
+                u, 1.0, chunk_m=4, slots=slots,
+                slot_mask=jnp.ones((4,)), noise=jnp.zeros((8, 4)))

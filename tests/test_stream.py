@@ -303,14 +303,34 @@ class TestStreamSpecValidation:
                              train=TrainSpec(rounds=2, tau=1, eta_l=0.1),
                              stream=StreamSpec(chunk_clients=8))
 
-    def test_run_batched_rejects_stream(self, problem):
+    def test_run_batched_streams_seeds_sequentially(self, problem):
+        """The streamed seed sweep reuses ONE compiled stream program across
+        seeds and matches per-seed run() bit-for-bit, with every RunResult
+        field gaining the leading (S,) axis."""
+        batches, w0 = problem
+        alg = make_algorithm("fedexp")
+        session = FederatedSession(alg, linreg_loss, w0, batches,
+                                   train=TrainSpec(rounds=2, tau=1, eta_l=0.1),
+                                   **_stream_spec())
+        keys = jax.random.split(jax.random.PRNGKey(5), 3)
+        batched = session.run_batched(keys)
+        assert batched.final_w.shape == (3, D)
+        assert batched.eta_history.shape == (3, 2)
+        for i in range(3):
+            single = session.run(keys[i])
+            np.testing.assert_array_equal(np.asarray(batched.final_w[i]),
+                                          np.asarray(single.final_w))
+            np.testing.assert_array_equal(np.asarray(batched.eta_history[i]),
+                                          np.asarray(single.eta_history))
+
+    def test_run_batched_stream_rejects_batched_axes(self, problem):
         batches, w0 = problem
         alg = make_algorithm("fedavg")
         session = FederatedSession(alg, linreg_loss, w0, batches,
                                    train=TrainSpec(rounds=2, tau=1, eta_l=0.1),
                                    engine=EngineSpec(engine="stream"))
-        with pytest.raises(ValueError, match="run_batched"):
-            session.run_batched(jnp.stack([KEY, KEY]))
+        with pytest.raises(ValueError, match="per-seed"):
+            session.run_batched(jnp.stack([KEY, KEY]), batched_w0=True)
 
 
 class TestChunkedAggregation:
