@@ -5,12 +5,16 @@
 One table of per-algorithm rounds/sec (batched / scan / eager + speedups) and
 one line per client-shard count from the sharded scaling curve, so each
 (python x device-count) matrix leg publishes its throughput at a glance
-without downloading the artifact.
+without downloading the artifact.  When the e7 telemetry workload ran, its
+JSONL stream (``--telemetry-jsonl``, default the path e7 writes) also yields
+a round-time line — median/p95 wall-clock per round as measured by the §15
+tap, the live-run observability the benchmark exists to exercise.
 """
 from __future__ import annotations
 
 import argparse
 import json
+import statistics
 import sys
 
 
@@ -18,6 +22,7 @@ def main(argv=None) -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--json", default="BENCH_engine.json")
     ap.add_argument("--title", default="Engine throughput")
+    ap.add_argument("--telemetry-jsonl", default="results/bench/telemetry_e7.jsonl")
     args = ap.parse_args(argv)
     try:
         with open(args.json) as f:
@@ -74,6 +79,30 @@ def main(argv=None) -> int:
               f"{hr.get('rounds_per_sec', 0):.1f} r/s, modeled peak "
               f"{hr.get('modeled_peak_update_bytes', 0)/2**20:.1f} MiB, "
               f"measured RSS {hr.get('measured_peak_rss_bytes', 0)/2**20:.0f} MiB")
+
+    tl = rep.get("telemetry")
+    if tl:
+        ok = "ledger==report" if tl.get("ledger_matches_report") else \
+            "LEDGER MISMATCH"
+        line = (f"\n**Telemetry stream (e7)**: "
+                f"{tl.get('rounds_per_sec', 0):.0f} r/s with the tap "
+                f"compiled in, eps={tl.get('final_ledger_eps', 0):.3f} "
+                f"({ok})")
+        # per-round wall clock from the JSONL stream itself (tap-measured)
+        try:
+            with open(args.telemetry_jsonl) as f:
+                times = [o["round_time_s"] for o in map(json.loads, f)
+                         if "round_time_s" in o and "event" not in o]
+        except (OSError, json.JSONDecodeError):
+            times = []
+        # drop the first round: it absorbs dispatch/staging warmup
+        if len(times) > 2:
+            ts = sorted(times[1:])
+            med = statistics.median(ts)
+            p95 = ts[min(len(ts) - 1, int(0.95 * len(ts)))]
+            line += (f"; round time median {1e3*med:.1f} ms, "
+                     f"p95 {1e3*p95:.1f} ms over {len(times)} rounds")
+        print(line)
     return 0
 
 

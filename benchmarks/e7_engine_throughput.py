@@ -57,6 +57,13 @@ the simulation hot path.  Three comparisons (DESIGN.md §8):
      the cheap fault-injection smoke workload; the ratio is gated and the
      faulty run's final params are checked finite.
 
+  9. Telemetry (DESIGN.md §15): a timed CDP run streaming per-round JSONL
+     through ``run(tracker=JsonlTracker(...))`` — the engine tap rides the
+     compiled program, so this r/s number IS the tracker-on throughput.
+     The stream is cross-checked in-process: exactly T lines, and the
+     final cumulative-ledger epsilon must equal ``session.privacy_report``
+     to 1e-9 (``telemetry.ledger_matches_report``).
+
 Each comparison is a named WORKLOAD; ``--only <workload> ...`` (also
 ``main(only=[...])``) runs a subset, and the emitted BENCH_engine.json then
 carries only the sections that ran plus a ``partial`` marker —
@@ -81,6 +88,9 @@ import jax
 import jax.numpy as jnp
 
 from benchmarks.common import RESULTS_DIR, print_table, write_csv
+from benchmarks.harness import bench_best as _bench
+from benchmarks.harness import interleaved_best as _interleaved_best
+from benchmarks.harness import timed_rounds
 from repro.core.aggregation import fused_clip_aggregate
 from repro.core.fedexp import make_algorithm
 from repro.fedsim import (
@@ -93,13 +103,14 @@ from repro.fedsim import (
     TrainSpec,
 )
 from repro.launch.mesh import auto_shard_count, client_shard_spec
+from repro.telemetry import JsonlTracker
 
 FLOAT_BYTES = 4
 
 # --only selects a subset of these; the emitted BENCH_engine.json then only
 # carries the sections that ran and check_regression gates what is present
 WORKLOADS = ("engine", "backends", "sharded", "sampled", "local", "stream",
-             "faults")
+             "faults", "telemetry")
 
 
 def _quad_loss(w, b):
@@ -108,39 +119,40 @@ def _quad_loss(w, b):
     return 0.5 * jnp.sum(jnp.square(w - b))
 
 
-def _bench(fn, *, repeats: int, warm: bool):
-    if warm:
-        jax.block_until_ready(fn())
-    best = float("inf")
-    for _ in range(repeats):
-        t0 = time.perf_counter()
-        jax.block_until_ready(fn())
-        best = min(best, time.perf_counter() - t0)
-    return best
+def _telemetry_section(targets, w0, key, rounds):
+    """Stream per-round §15 telemetry from a timed private run.
 
-
-def _interleaved_best(sessions, key, *, repeats: int = 3):
-    """Best wall-clock per session, passes INTERLEAVED across sessions.
-
-    The shared-vCPU boxes this runs on swing between measurement windows;
-    interleaving keeps paired sessions in the same load regime, which is
-    what makes their r/s RATIO (the regression-gated overhead metric)
-    meaningful.  Warms every session first (compile), then takes the min of
-    ``repeats`` interleaved passes.
+    Runs a CDP session with a ``JsonlTracker`` through the shared
+    ``timed_rounds`` harness (the tap is PART of the measured program) and
+    cross-checks the stream: exactly ``rounds`` lines, and the final
+    cumulative-ledger entry must match ``session.privacy_report`` to 1e-9 —
+    the live ledger and the end-of-run accounting are the same composition.
     """
-    def one_run(session):
-        r = session.run(key)
-        return (r.last_w, r.eta_history)
-
-    for s in sessions:
-        jax.block_until_ready(one_run(s))
-    best = [float("inf")] * len(sessions)
-    for _ in range(repeats):
-        for i, s in enumerate(sessions):
-            t0 = time.perf_counter()
-            jax.block_until_ready(one_run(s))
-            best[i] = min(best[i], time.perf_counter() - t0)
-    return best
+    m = targets.shape[0]
+    alg = make_algorithm("dp-fedavg-cdp", clip_norm=0.3,
+                         sigma=5 * 0.3 / (m ** 0.5), num_clients=m)
+    session = FederatedSession(alg, _quad_loss, w0, targets,
+                               train=TrainSpec(rounds=rounds, tau=1,
+                                               eta_l=0.5),
+                               cohort=CohortSpec(q=0.25))
+    path = os.path.join(RESULTS_DIR, "telemetry_e7.jsonl")
+    # factory: every pass streams, only the final pass's file survives
+    rps, _ = timed_rounds(session, key, rounds,
+                          tracker=lambda: JsonlTracker(path))
+    with open(path) as f:
+        lines = [json.loads(line) for line in f]
+    report = session.privacy_report(delta=1e-5)
+    ledger_err = abs(lines[-1]["eps"] - report.eps_numerical)
+    return {
+        "rounds_per_sec": rps,
+        "algorithm": "dp-fedavg-cdp",
+        "jsonl": path,
+        "lines": len(lines),
+        "final_ledger_eps": lines[-1]["eps"],
+        "privacy_report_eps": report.eps_numerical,
+        "ledger_matches_report": bool(len(lines) == rounds
+                                      and ledger_err < 1e-9),
+    }
 
 
 def _engine_rows(targets, w0, key, rounds, seeds, algs):
@@ -544,6 +556,9 @@ def main(*, clients: int = 300, dim: int = 4096, rounds: int = 50,
         }
 
     os.makedirs(RESULTS_DIR, exist_ok=True)
+    if "telemetry" in sel:
+        report["telemetry"] = _telemetry_section(targets, w0, key, rounds)
+
     for path in (os.path.join(RESULTS_DIR, "BENCH_engine.json"),
                  "BENCH_engine.json"):
         with open(path, "w") as f:
@@ -591,6 +606,13 @@ def main(*, clients: int = 300, dim: int = 4096, rounds: int = 50,
               f"{fr['rounds_per_sec_clean']:.0f} r/s clean "
               f"({fr['relative_to_clean']:.2f}x); final params finite: "
               f"{fr['final_params_finite']}")
+    if "telemetry" in sel:
+        tl = report["telemetry"]
+        status = "OK " if tl["ledger_matches_report"] else "FAIL"
+        print(f"{status} telemetry stream ({tl['lines']} rounds -> "
+              f"{tl['jsonl']}): {tl['rounds_per_sec']:.0f} r/s with the tap "
+              f"compiled in; final ledger eps={tl['final_ledger_eps']:.4f} "
+              f"vs privacy_report {tl['privacy_report_eps']:.4f}")
     return engine_rows
 
 

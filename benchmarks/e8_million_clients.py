@@ -46,13 +46,13 @@ from __future__ import annotations
 import json
 import os
 import resource
-import time
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from benchmarks.common import RESULTS_DIR, print_table
+from benchmarks.harness import timed_rounds
 from repro.core.fedexp import make_algorithm
 from repro.fedsim import (
     CohortSpec,
@@ -88,18 +88,8 @@ def _make_source(clients: int, dim: int) -> SyntheticSource:
 
 
 def _time_run(session, key, rounds):
-    def one():
-        r = session.run(key)
-        return (r.last_w, r.eta_history)
-
-    jax.block_until_ready(one())          # compile + first staging
-    best = float("inf")
-    for _ in range(2):
-        t0 = time.perf_counter()
-        out = one()
-        jax.block_until_ready(out)
-        best = min(best, time.perf_counter() - t0)
-    return rounds / best, out
+    """Shared warm-then-best-of-2 harness (benchmarks/harness.py)."""
+    return timed_rounds(session, key, rounds, repeats=2)
 
 
 def _merge_report(sections: dict) -> None:

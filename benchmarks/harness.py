@@ -1,0 +1,94 @@
+"""Shared benchmark timing harness (factored from e7/e8, DESIGN.md §15).
+
+Three primitives every throughput benchmark in this suite builds on:
+
+* ``bench_best(fn)`` — best-of-N wall clock of a thunk, compile warmed
+  first.  The shared-vCPU CI boxes swing between measurement windows, so
+  the MIN over repeats is the stable statistic.
+* ``interleaved_best(sessions, key)`` — best wall-clock per session with
+  the timed passes INTERLEAVED across sessions, keeping paired A/B
+  comparisons in the same load regime; the r/s RATIO is the
+  machine-relative number ``check_regression.py`` gates.
+* ``timed_rounds(session, key, rounds)`` — rounds/sec of one session
+  (warm, then best of ``repeats``), returning the last run's outputs so
+  callers can sanity-check them.  Pass ``tracker=`` to stream §15
+  telemetry from the FINAL (timed) pass — the tap adds an io_callback to
+  the compiled program, so telemetry-on timings are reported as their own
+  number, never silently mixed into a tracker-off baseline.
+
+All timing uses ``jax.block_until_ready`` on the returned arrays, so
+asynchronous dispatch never flatters a measurement.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+
+__all__ = ["bench_best", "interleaved_best", "timed_rounds"]
+
+
+def bench_best(fn, *, repeats: int = 3, warm: bool = True) -> float:
+    """Best wall-clock seconds of ``fn()`` over ``repeats`` timed calls."""
+    if warm:
+        jax.block_until_ready(fn())
+    best = float("inf")
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn())
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def _default_run(session, key):
+    r = session.run(key)
+    return (r.last_w, r.eta_history)
+
+
+def interleaved_best(sessions, key, *, repeats: int = 3, run=_default_run):
+    """Best wall-clock per session, passes INTERLEAVED across sessions.
+
+    Warms every session first (compile), then takes the min of ``repeats``
+    interleaved passes so paired sessions see the same load regime.
+    ``run(session, key)`` must return device arrays to block on.
+    """
+    for s in sessions:
+        jax.block_until_ready(run(s, key))
+    best = [float("inf")] * len(sessions)
+    for _ in range(repeats):
+        for i, s in enumerate(sessions):
+            t0 = time.perf_counter()
+            jax.block_until_ready(run(s, key))
+            best[i] = min(best[i], time.perf_counter() - t0)
+    return best
+
+
+def timed_rounds(session, key, rounds: int, *, repeats: int = 2,
+                 tracker=None):
+    """(rounds/sec, last RunResult outputs) of ``session.run(key)``.
+
+    With ``tracker``, every pass (warm + timed) streams telemetry — the
+    tap is part of the compiled program being measured.  Pass a ZERO-ARG
+    FACTORY (e.g. ``lambda: JsonlTracker(path)``) when only the final
+    pass's stream should survive: each pass then gets a fresh sink, and an
+    overwriting ``JsonlTracker`` leaves exactly the last T-round stream on
+    disk.  A plain ``Tracker`` instance is reused across passes and
+    observes all of them.
+    """
+    def one():
+        if tracker is None:
+            r = session.run(key)
+        else:
+            r = session.run(key, tracker=tracker() if callable(tracker)
+                            else tracker)
+        return (r.last_w, r.eta_history)
+
+    jax.block_until_ready(one())          # compile + first staging
+    best = float("inf")
+    out = None
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        out = one()
+        jax.block_until_ready(out)
+        best = min(best, time.perf_counter() - t0)
+    return rounds / best, out

@@ -24,6 +24,10 @@ A run is a ``FederatedSession`` bound to four frozen specs:
 ``session.resume(dir)`` continues it bit-exactly.  Pass a parameter PYTREE
 (e.g. ``repro.models.cnn`` params) instead of a flat vector and the session
 ravels/unravels at the boundary — see README.md for the pytree quickstart.
+
+``--telemetry out.jsonl`` streams per-round events (eta, metric, cumulative
+privacy ledger, round wall-clock) to a JSONL file WHILE the compiled run
+executes — results stay bit-identical (DESIGN.md §15).
 """
 import argparse
 import math
@@ -37,17 +41,20 @@ import jax.numpy as jnp
 from repro.core.fedexp import make_algorithm
 from repro.data.synthetic import distance_to_opt, linreg_loss, make_synthetic_linreg
 from repro.fedsim import CohortSpec, FederatedSession, TrainSpec
+from repro.telemetry import JsonlTracker
 
 # grid-searched on this generation (EXPERIMENTS.md): (eta_l, C) per algorithm
 HPS = {"dp-fedavg-cdp": (0.3, 3.0), "cdp-fedexp": (0.1, 0.3)}
 
 
-def main(quick: bool = False, sampled_q: float | None = None):
+def main(quick: bool = False, sampled_q: float | None = None,
+         telemetry: str | None = None):
     m, d, rounds, tau = (120, 64, 8, 5) if quick else (1000, 500, 50, 20)
     data = make_synthetic_linreg(jax.random.PRNGKey(0), m, d)
     w0 = jnp.zeros(d)
     eval_fn = distance_to_opt(data.w_star)
     cohort = CohortSpec() if sampled_q is None else CohortSpec(q=sampled_q)
+    eval_every = 2 if quick else 10
 
     for name in ("dp-fedavg-cdp", "cdp-fedexp"):
         eta_l, clip = HPS[name]
@@ -55,15 +62,27 @@ def main(quick: bool = False, sampled_q: float | None = None):
                              sigma=5 * clip / math.sqrt(m), num_clients=m)
         session = FederatedSession(
             alg, linreg_loss, w0, data.client_batches(),
-            train=TrainSpec(rounds=rounds, tau=tau, eta_l=eta_l),
+            train=TrainSpec(rounds=rounds, tau=tau, eta_l=eta_l,
+                            eval_every=eval_every),
             cohort=cohort, eval_fn=eval_fn)
-        result = session.run(jax.random.PRNGKey(42))
+        # one tracker file per algorithm: quickstart.jsonl -> quickstart-<alg>.jsonl
+        tracker = None
+        if telemetry is not None:
+            stem, dot, ext = telemetry.rpartition(".")
+            path = f"{stem}-{name}.{ext}" if dot else f"{telemetry}-{name}"
+            tracker = JsonlTracker(path)
+        result = session.run(jax.random.PRNGKey(42), tracker=tracker)
         dist = float(eval_fn(result.final_w))
         etas = result.eta_history
         report = session.privacy_report(delta=1e-5)
         print(f"{name:16s}  final ||w - w*|| = {dist:8.4f}   "
               f"eta_g: first={float(etas[0]):.2f} last={float(etas[-1]):.2f}   "
               f"eps={report.eps_numerical:.2f}")
+        # eval runs on the eval_every cadence; eval_rounds() drops the
+        # NaN placeholder rows so only measured rounds print
+        trail = "  ".join(f"t={t}: {v:.3f}"
+                          for t, v in result.eval_rounds()[-3:])
+        print(f"{'':16s}  ||w - w*|| trail: {trail}")
 
     print("\nDP-FedEXP reaches a closer iterate at the SAME privacy budget —")
     print("the global step size is derived from already-privatized statistics.")
@@ -79,5 +98,8 @@ if __name__ == "__main__":
                     help="small geometry for CI smoke runs")
     ap.add_argument("--sampled-q", type=float, default=None,
                     help="per-round Bernoulli client sampling rate")
+    ap.add_argument("--telemetry", default=None, metavar="PATH",
+                    help="stream per-round JSONL telemetry to PATH "
+                         "(one file per algorithm; DESIGN.md §15)")
     args = ap.parse_args()
-    main(quick=args.quick, sampled_q=args.sampled_q)
+    main(quick=args.quick, sampled_q=args.sampled_q, telemetry=args.telemetry)

@@ -29,6 +29,7 @@ from repro.configs import ARCHS, FederatedConfig, reduced
 from repro.launch.rules import count_params
 from repro.launch.train import FederatedTrainer
 from repro.models.transformer import DecoderLM
+from repro.telemetry import CompositeTracker, JsonlTracker, StdoutTracker
 
 
 def make_client_stream(key, num_clients: int, vocab: int, *, order_states: int = 64):
@@ -68,6 +69,8 @@ def main():
     ap.add_argument("--seq", type=int, default=128)
     ap.add_argument("--algorithm", default="cdp-fedexp")
     ap.add_argument("--ckpt-dir", default="results/ckpt_lm")
+    ap.add_argument("--telemetry", default=None, metavar="PATH",
+                    help="also stream per-round JSONL telemetry to PATH")
     args = ap.parse_args()
 
     cfg = dataclasses.replace(
@@ -85,6 +88,13 @@ def main():
     params = model.init(jax.random.PRNGKey(0))
     sampler = make_client_stream(jax.random.PRNGKey(1), args.cohort, args.vocab)
 
+    # host-driven round loop: the tracker is fed directly (repro.telemetry,
+    # DESIGN.md §15) — StdoutTracker prints on the historical cadence and
+    # --telemetry adds a machine-readable JSONL stream of EVERY round
+    tracker = StdoutTracker(every=5, prefix="lm ")
+    if args.telemetry is not None:
+        tracker = CompositeTracker(tracker, JsonlTracker(args.telemetry))
+    tracker.start_phase("train", 0)
     for t in range(args.rounds):
         kd = jax.random.fold_in(jax.random.PRNGKey(2), t)
         toks = jnp.stack([
@@ -93,11 +103,11 @@ def main():
         batch = {"tokens": toks[..., :-1], "labels": toks[..., 1:]}
         t0 = time.time()
         params, metrics = step(params, batch, jax.random.fold_in(jax.random.PRNGKey(3), t))
-        if t % 5 == 0 or t == args.rounds - 1:
-            print(f"round {t:4d}  loss={float(metrics['loss']):.4f}  "
-                  f"eta_g={float(metrics['eta_g']):.3f}  "
-                  f"|update|={float(metrics['mean_update_norm']):.4f}  "
-                  f"({time.time()-t0:.2f}s)")
+        tracker.log(t, {"loss": float(metrics["loss"]),
+                        "eta": float(metrics["eta_g"]),
+                        "update_norm": float(metrics["mean_update_norm"]),
+                        "round_time_s": time.time() - t0})
+    tracker.finish()
     path = ckpt.save_checkpoint(args.ckpt_dir, args.rounds, params,
                                 extra={"algorithm": args.algorithm})
     print(f"checkpoint -> {path}")

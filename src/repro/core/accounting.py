@@ -63,9 +63,18 @@ def _phi(x: float) -> float:
 
 
 def _log_phi(x: float) -> float:
-    """log Phi(x), stable for very negative x (Mills-ratio asymptotic)."""
+    """log Phi(x), stable for very negative x (Mills-ratio asymptotic).
+
+    The underflow floor is applied WITHOUT constructing a denormal: XLA's
+    CPU compute threads run with flush-to-zero/denormals-are-zero, and the
+    telemetry ledger (§15) evaluates this inside an ``io_callback`` on such
+    a thread — there ``max(p, 5e-324)`` flushes to 0.0 and ``math.log``
+    raises.  The precomputed constant is ``log(5e-324)``, so results are
+    bit-identical to the historical expression on normal threads.
+    """
     if x > -30.0:
-        return math.log(max(_phi(x), 5e-324))
+        p = _phi(x)
+        return math.log(p) if p > 0.0 else -744.4400719213812
     a = -x
     return -0.5 * a * a - 0.5 * math.log(2.0 * math.pi) - math.log(a)
 

@@ -2,7 +2,7 @@
 
 Entry point: ``FederatedSession`` + the declarative specs (DESIGN.md §10):
 TrainSpec / LocalSpec / EngineSpec / StreamSpec / ShardSpec / CohortSpec /
-FaultSpec / DataSpec.  ``EngineSpec(engine="stream")`` +
+FaultSpec / DataSpec / TelemetrySpec.  ``EngineSpec(engine="stream")`` +
 ``StreamSpec(chunk_clients=c)`` run each round in client chunks with O(c·d)
 peak update memory (§12); ``CohortSpec(gather=True)`` skips non-participants
 entirely, making a q-sampled round cost O(q·M·d) (§14); a
@@ -39,6 +39,7 @@ from repro.fedsim.specs import (
     LocalSpec,
     ShardSpec,
     StreamSpec,
+    TelemetrySpec,
     TrainSpec,
 )
 
@@ -48,7 +49,7 @@ __all__ = [
     "gather_slots", "gather_rows",
     "FederatedSession", "RecoveryPolicy", "TrainSpec", "LocalSpec",
     "EngineSpec", "ShardSpec", "StreamSpec", "CohortSpec", "FaultSpec",
-    "DataSpec", "ClientDataSource", "ArraySource", "HostArraySource",
+    "DataSpec", "TelemetrySpec", "ClientDataSource", "ArraySource", "HostArraySource",
     "NpzSource", "SyntheticSource",
     "run_federated", "run_federated_batched", "RunResult",
     "DPScaffoldConfig", "run_dp_scaffold",

@@ -61,6 +61,7 @@ from typing import Any, Callable
 
 import jax
 import jax.numpy as jnp
+from jax.experimental import io_callback
 from jax.experimental.shard_map import shard_map
 from jax.sharding import PartitionSpec as P
 
@@ -84,6 +85,23 @@ class RunResult:
     eta_naive_history: jax.Array | None = None
     eta_target_history: jax.Array | None = None
     fault_round: int | None = None  # watchdog: first diverged round (§13)
+
+    def eval_rounds(self) -> list[tuple[int, float]]:
+        """(round, metric) pairs for the rounds the eval cadence actually
+        evaluated — the NaN sentinels that pad ``metric_history`` off the
+        ``eval_every`` grid (and past a watchdog trip) are dropped, so
+        consumers never NaN-filter by hand.  Batched results (leading seed
+        axis) have no single eval trace; index the history yourself there.
+        """
+        hist = jax.device_get(self.metric_history)
+        if hist.ndim != 1:
+            raise ValueError(
+                "eval_rounds() needs a single-run (T,) metric history; this "
+                f"result's is {hist.shape} — a run_batched result carries a "
+                "leading seed axis, slice it per seed instead")
+        import math
+        return [(t, float(v)) for t, v in enumerate(hist)
+                if math.isfinite(float(v))]
 
 
 def _eval_metric(eval_fn, eval_every: int, w_next, t):
@@ -461,16 +479,19 @@ def _build_stream_chunk_fn(algorithm: ServerAlgorithm, local_fn, eval_fn,
                            donate: bool, unroll: int, stream: StreamSpec,
                            m_true: int, m_pad: int,
                            eval_every: int, cohort: CohortSpec | None,
-                           fault: FaultSpec | None, tau: int):
+                           fault: FaultSpec | None, tau: int,
+                           tap: bool = False):
     step_round = _stream_round_step(algorithm, local_fn, eval_fn,
                                     m_true, m_pad, eval_every, cohort,
                                     fault=fault, tau=tau)
+    tap_ctx = ((m_true, cohort, fault, None, _tap_clip_fn(algorithm))
+               if tap else None)
 
     def chunk(carry, key, ts, chunk_batches, chunk_mask, eta_l):
         """Compiled scan over one chunk of rounds."""
         keys = _fold_round_keys(key, ts)
         body = _scan_body(step_round, (chunk_batches, chunk_mask), eta_l,
-                          fault)
+                          fault, tap_ctx)
         return jax.lax.scan(body, carry, (keys, ts), unroll=min(unroll, len(ts)))
 
     return jax.jit(chunk, donate_argnums=(0,) if donate else ())
@@ -483,18 +504,19 @@ def _stream_chunk_fn(algorithm: ServerAlgorithm, local_fn, eval_fn,
                      donate: bool, unroll: int, stream: StreamSpec,
                      m_true: int, m_pad: int, eval_every: int = 1,
                      cohort: CohortSpec | None = None,
-                     fault: FaultSpec | None = None, tau: int = 1):
+                     fault: FaultSpec | None = None, tau: int = 1,
+                     tap: bool = False):
     """Compiled streaming scan chunk, cached like ``_scan_chunk_fn`` (the
     StreamSpec and padded-cohort geometry join the key; same
     unhashable-algorithm fallback)."""
     try:
         return _cached_stream_chunk_fn(algorithm, local_fn, eval_fn, donate,
                                        unroll, stream, m_true, m_pad,
-                                       eval_every, cohort, fault, tau)
+                                       eval_every, cohort, fault, tau, tap)
     except TypeError:
         return _build_stream_chunk_fn(algorithm, local_fn, eval_fn, donate,
                                       unroll, stream, m_true, m_pad,
-                                      eval_every, cohort, fault, tau)
+                                      eval_every, cohort, fault, tau, tap)
 
 
 def _build_sharded_stream_chunk_fn(algorithm: ServerAlgorithm, local_fn,
@@ -503,7 +525,8 @@ def _build_sharded_stream_chunk_fn(algorithm: ServerAlgorithm, local_fn,
                                    batch_treedef, leaf_ndims,
                                    n_chunks: int, m_true: int, m_pad: int,
                                    eval_every: int, cohort: CohortSpec | None,
-                                   fault: FaultSpec | None, tau: int):
+                                   fault: FaultSpec | None, tau: int,
+                                   tap: bool = False):
     """Each shard streams its own slice of the chunk grid (DESIGN.md §12).
 
     The pre-chunked leaves are (n_chunks_total, c, ...) with chunks laid out
@@ -521,12 +544,14 @@ def _build_sharded_stream_chunk_fn(algorithm: ServerAlgorithm, local_fn,
     batch_specs = jax.tree_util.tree_unflatten(batch_treedef, specs)
     mask_spec = logical_to_pspec(("clients", None), rules,
                                  dims=(n_chunks, stream.chunk_clients))
+    tap_ctx = ((m_true, cohort, fault, axis, _tap_clip_fn(algorithm))
+               if tap else None)
 
     def chunk(carry, key, ts, chunk_batches, chunk_mask, eta_l):
         """Compiled scan over one chunk of rounds."""
         keys = _fold_round_keys(key, ts)
         body = _scan_body(step_round, (chunk_batches, chunk_mask), eta_l,
-                          fault)
+                          fault, tap_ctx)
         return jax.lax.scan(body, carry, (keys, ts), unroll=min(unroll, len(ts)))
 
     sharded = shard_map(
@@ -545,18 +570,19 @@ def _sharded_stream_chunk_fn(algorithm, local_fn, eval_fn, donate, unroll,
                              stream, mesh, axis, batch_treedef, leaf_ndims,
                              n_chunks, m_true, m_pad, eval_every: int = 1,
                              cohort: CohortSpec | None = None,
-                             fault: FaultSpec | None = None, tau: int = 1):
+                             fault: FaultSpec | None = None, tau: int = 1,
+                             tap: bool = False):
     """Compiled sharded+streamed scan chunk, cached like ``_scan_chunk_fn``."""
     try:
         return _cached_sharded_stream_chunk_fn(
             algorithm, local_fn, eval_fn, donate, unroll, stream, mesh, axis,
             batch_treedef, leaf_ndims, n_chunks, m_true, m_pad, eval_every,
-            cohort, fault, tau)
+            cohort, fault, tau, tap)
     except TypeError:
         return _build_sharded_stream_chunk_fn(
             algorithm, local_fn, eval_fn, donate, unroll, stream, mesh, axis,
             batch_treedef, leaf_ndims, n_chunks, m_true, m_pad, eval_every,
-            cohort, fault, tau)
+            cohort, fault, tau, tap)
 
 
 def _gather_stream_round_step(algorithm, local_fn, eval_fn,
@@ -672,16 +698,20 @@ def _build_gather_stream_chunk_fn(algorithm: ServerAlgorithm, local_fn,
                                   eval_fn, donate: bool, unroll: int,
                                   chunk_clients: int, m_true: int, m_pad: int,
                                   eval_every: int, cohort: CohortSpec | None,
-                                  fault: FaultSpec | None, tau: int):
+                                  fault: FaultSpec | None, tau: int,
+                                  tap: bool = False):
     step_round = _gather_stream_round_step(algorithm, local_fn, eval_fn,
                                            m_true, m_pad, chunk_clients,
                                            eval_every, cohort,
                                            fault=fault, tau=tau)
+    tap_ctx = ((m_true, cohort, fault, None, _tap_clip_fn(algorithm))
+               if tap else None)
 
     def chunk(carry, key, ts, local_batches, pad_mask, eta_l):
         """Compiled scan over one chunk of rounds."""
         keys = _fold_round_keys(key, ts)
-        body = _scan_body(step_round, (local_batches, pad_mask), eta_l, fault)
+        body = _scan_body(step_round, (local_batches, pad_mask), eta_l, fault,
+                          tap_ctx)
         return jax.lax.scan(body, carry, (keys, ts), unroll=min(unroll, len(ts)))
 
     return jax.jit(chunk, donate_argnums=(0,) if donate else ())
@@ -695,16 +725,17 @@ def _gather_stream_chunk_fn(algorithm: ServerAlgorithm, local_fn, eval_fn,
                             donate: bool, unroll: int, chunk_clients: int,
                             m_true: int, m_pad: int, eval_every: int = 1,
                             cohort: CohortSpec | None = None,
-                            fault: FaultSpec | None = None, tau: int = 1):
+                            fault: FaultSpec | None = None, tau: int = 1,
+                            tap: bool = False):
     """Compiled gather-stream scan chunk, cached like ``_scan_chunk_fn``."""
     try:
         return _cached_gather_stream_chunk_fn(
             algorithm, local_fn, eval_fn, donate, unroll, chunk_clients,
-            m_true, m_pad, eval_every, cohort, fault, tau)
+            m_true, m_pad, eval_every, cohort, fault, tau, tap)
     except TypeError:
         return _build_gather_stream_chunk_fn(
             algorithm, local_fn, eval_fn, donate, unroll, chunk_clients,
-            m_true, m_pad, eval_every, cohort, fault, tau)
+            m_true, m_pad, eval_every, cohort, fault, tau, tap)
 
 
 def _build_sharded_gather_stream_chunk_fn(algorithm: ServerAlgorithm,
@@ -715,7 +746,8 @@ def _build_sharded_gather_stream_chunk_fn(algorithm: ServerAlgorithm,
                                           m_true: int,
                                           eval_every: int,
                                           cohort: CohortSpec | None,
-                                          fault: FaultSpec | None, tau: int):
+                                          fault: FaultSpec | None, tau: int,
+                                          tap: bool = False):
     """Each shard gather-streams its own cohort slice (§9 × §14): the
     UN-chunked client leaves shard over the ``clients`` mesh exactly as the
     dense sharded engine's, each device packs its slice's slot table, and
@@ -727,11 +759,14 @@ def _build_sharded_gather_stream_chunk_fn(algorithm: ServerAlgorithm,
     rules = client_axis_rules(mesh, axis=axis)
     batch_specs, mask_spec = _client_batch_specs(batch_treedef, leaf_ndims,
                                                  mask_len, rules)
+    tap_ctx = ((m_true, cohort, fault, axis, _tap_clip_fn(algorithm))
+               if tap else None)
 
     def chunk(carry, key, ts, local_batches, pad_mask, eta_l):
         """Compiled scan over one chunk of rounds."""
         keys = _fold_round_keys(key, ts)
-        body = _scan_body(step_round, (local_batches, pad_mask), eta_l, fault)
+        body = _scan_body(step_round, (local_batches, pad_mask), eta_l, fault,
+                          tap_ctx)
         return jax.lax.scan(body, carry, (keys, ts), unroll=min(unroll, len(ts)))
 
     sharded = shard_map(
@@ -752,18 +787,18 @@ def _sharded_gather_stream_chunk_fn(algorithm, local_fn, eval_fn, donate,
                                     m_true, eval_every: int = 1,
                                     cohort: CohortSpec | None = None,
                                     fault: FaultSpec | None = None,
-                                    tau: int = 1):
+                                    tau: int = 1, tap: bool = False):
     """Compiled sharded gather-stream chunk, cached like ``_scan_chunk_fn``."""
     try:
         return _cached_sharded_gather_stream_chunk_fn(
             algorithm, local_fn, eval_fn, donate, unroll, chunk_clients, mesh,
             axis, batch_treedef, leaf_ndims, mask_len, m_true, eval_every,
-            cohort, fault, tau)
+            cohort, fault, tau, tap)
     except TypeError:
         return _build_sharded_gather_stream_chunk_fn(
             algorithm, local_fn, eval_fn, donate, unroll, chunk_clients, mesh,
             axis, batch_treedef, leaf_ndims, mask_len, m_true, eval_every,
-            cohort, fault, tau)
+            cohort, fault, tau, tap)
 
 
 def _build_host_moments_fn(algorithm: ServerAlgorithm, local_fn, data):
@@ -864,8 +899,95 @@ def _fold_round_keys(key, ts):
     return jax.vmap(lambda t: jax.random.fold_in(key, t))(ts)
 
 
+# ---------------------------------------------------------------------------
+# Engine tap (DESIGN.md §15): per-round diagnostics streamed to the host
+# ---------------------------------------------------------------------------
+
+def _tap_clip_fn(algorithm):
+    """Best-effort clip threshold C for the telemetry payload.
+
+    Resolution order mirrors where composed vs legacy algorithms keep the
+    threshold: the GlobalStep's ``clip_override`` (adaptive clipping carries
+    it in opt_state), a bare ``opt_state.clip`` (the legacy adaptive-clip
+    monolith), then the static ``clip_norm`` on the algorithm or its
+    mechanism.  NaN when the algorithm has no clipping at all — the host
+    omits the field.  Runs at TRACE time inside the tap, never on the
+    non-tap program.
+    """
+
+    def clip_of(opt_state):
+        step = getattr(algorithm, "step", None)
+        if step is not None:
+            try:
+                c = step.clip_override(opt_state)
+                if c is not None:
+                    return jnp.float32(c)
+            except Exception:
+                pass
+        c = getattr(opt_state, "clip", None)
+        if c is not None:
+            return jnp.float32(c)
+        for holder in (algorithm, getattr(algorithm, "mechanism", None)):
+            c = getattr(holder, "clip_norm", None)
+            if c is not None:
+                return jnp.float32(c)
+        return jnp.float32(jnp.nan)
+
+    return clip_of
+
+
+def _tap_emit(tap_ctx, round_key, t, opt_state, outs, fault_t):
+    """Emit one round's diagnostics to the host tracker (DESIGN.md §15).
+
+    Only ever traced when a tracker is attached (``tap=True`` builders) —
+    the default program contains no callback at all.  All diagnostics
+    derive from REPLICATED draws (the cohort mask and fault vectors come
+    from the replicated round key), so the tap needs nothing from the
+    engines' per-shard internals; duplicating the mask draw here costs one
+    extra O(M) bernoulli on tap runs only and keeps the emission math
+    read-only — the engine's own computation is untouched, which is what
+    makes tap-on results bit-identical to tap-off.
+
+    Ordering (§15): non-sharded engines emit ``ordered=True`` (the scan
+    delivers rounds in order); ``shard_map`` engines emit ``ordered=False``
+    — EVERY shard fires the callback, so the payload carries ``axis_index``
+    and the host drops shard != 0 and reorders by round index.  Ordered
+    callbacks inside shard_map are not used: they are unreliable on this
+    jax version (see DESIGN.md §15).
+    """
+    from repro.telemetry import tap as _tap
+
+    m_true, cohort, fault, axis, clip_fn = tap_ctx
+    eta, metric, naive, target = outs
+    sampled = cohort is not None and cohort.is_sampled
+    participants = (jnp.sum(cohort.round_mask(round_key, m_true))
+                    if sampled else jnp.float32(m_true))
+    if fault is not None and fault.injects:
+        alive, strag, corr = fault_masks(fault, round_key, m_true)
+        ones = jnp.ones((m_true,), jnp.float32)
+        zeros = jnp.zeros((m_true,), jnp.float32)
+        alive = ones if alive is None else alive
+        strag = zeros if strag is None else strag
+        corr = zeros if corr is None else corr
+        mask = (cohort.round_mask(round_key, m_true) if sampled else ones)
+        realized = jnp.sum(mask * alive * (1.0 - corr))
+        dropped = jnp.sum(mask * (1.0 - alive))
+        stragglers = jnp.sum(mask * alive * strag)
+        corrupt = jnp.sum(mask * alive * corr)
+    else:
+        realized = participants
+        dropped = stragglers = corrupt = jnp.float32(0.0)
+    payload = jnp.stack([
+        jnp.float32(eta), jnp.float32(naive), jnp.float32(target),
+        jnp.float32(metric), clip_fn(opt_state), participants, realized,
+        dropped, stragglers, corrupt, jnp.float32(fault_t)])
+    shard = jnp.int32(0) if axis is None else jax.lax.axis_index(axis)
+    io_callback(_tap.device_emit, None, t, shard, payload,
+                ordered=(axis is None))
+
+
 def _scan_body(step_round, client_batches, eta_l,
-               fault: FaultSpec | None = None):
+               fault: FaultSpec | None = None, tap_ctx=None):
     """The one scan body every engine compiles — the tail-carry and key
     semantics the bit-exactness tests pin down.  xs is (round_keys, ts): the
     round index rides along for eval cadence and diagnostics.
@@ -878,6 +1000,12 @@ def _scan_body(step_round, client_batches, eta_l,
     recovery resumes from the last healthy iterate), ``fault_t`` records the
     faulting GLOBAL round index, and every remaining round in the chunk is
     frozen behind ``lax.cond`` — no local training, NaN histories.
+
+    ``tap_ctx`` (DESIGN.md §15) arms the telemetry tap: one ``_tap_emit``
+    per round, placed AFTER the round's watchdog/rollback resolution so the
+    emitted fault state is the committed one.  The emission only reads —
+    every carry value flows through it untouched — so tap-on results stay
+    bit-identical to tap-off.
     """
     watchdog = fault is not None and fault.watchdog
 
@@ -886,10 +1014,13 @@ def _scan_body(step_round, client_batches, eta_l,
         round_key, t = key_t
         if not watchdog:
             w, opt_state, tail = carry
-            w_next, opt_state, outs = step_round(
+            w_next, opt_next, outs = step_round(
                 w, opt_state, round_key, t, client_batches, eta_l)
+            if tap_ctx is not None:
+                _tap_emit(tap_ctx, round_key, t, opt_state, outs,
+                          jnp.int32(-1))
             tail = jnp.concatenate([tail[1:], w_next[None]], axis=0)
-            return (w_next, opt_state, tail), outs
+            return (w_next, opt_next, tail), outs
 
         w, opt_state, tail, fault_t = carry
         tripped = fault_t >= 0
@@ -922,6 +1053,11 @@ def _scan_body(step_round, client_batches, eta_l,
             lambda a, b: jnp.where(bad, a, b), opt_state, opt_next)
         tail_next = jnp.where(bad, tail, tail_next)
         fault_t = jnp.where(bad, t, fault_t)
+        if tap_ctx is not None:
+            # post-resolution emission: the host sees the committed fault
+            # state — the tripping round reports fault_t == t (it executed,
+            # so it charges the ledger); frozen rounds report t > fault_t
+            _tap_emit(tap_ctx, round_key, t, opt_state, outs, fault_t)
         return (w_next, opt_next, tail_next, fault_t), outs
 
     return body
@@ -930,14 +1066,19 @@ def _scan_body(step_round, client_batches, eta_l,
 def _build_scan_chunk_fn(algorithm: ServerAlgorithm, local_fn, eval_fn,
                          donate: bool, unroll: int,
                          eval_every: int, cohort: CohortSpec | None,
-                         fault: FaultSpec | None, tau: int):
+                         fault: FaultSpec | None, tau: int,
+                         tap: bool = False):
     step_round = _round_step(algorithm, local_fn, eval_fn, eval_every, cohort,
                              fault, tau)
 
     def chunk(carry, key, ts, client_batches, eta_l):
         """Compiled scan over one chunk of rounds."""
         keys = _fold_round_keys(key, ts)
-        body = _scan_body(step_round, client_batches, eta_l, fault)
+        tap_ctx = None
+        if tap:
+            m = jax.tree_util.tree_leaves(client_batches)[0].shape[0]
+            tap_ctx = (m, cohort, fault, None, _tap_clip_fn(algorithm))
+        body = _scan_body(step_round, client_batches, eta_l, fault, tap_ctx)
         return jax.lax.scan(body, carry, (keys, ts), unroll=min(unroll, len(ts)))
 
     return jax.jit(chunk, donate_argnums=(0,) if donate else ())
@@ -949,11 +1090,13 @@ _cached_scan_chunk_fn = functools.lru_cache(maxsize=32)(_build_scan_chunk_fn)
 def _scan_chunk_fn(algorithm: ServerAlgorithm, local_fn, eval_fn,
                    donate: bool, unroll: int, eval_every: int = 1,
                    cohort: CohortSpec | None = None,
-                   fault: FaultSpec | None = None, tau: int = 1):
+                   fault: FaultSpec | None = None, tau: int = 1,
+                   tap: bool = False):
     """Compiled scan over a chunk of rounds, cached by configuration.
 
     The cache key is (algorithm config, local-trainer/eval *identity*,
-    donation, unroll, eval cadence, cohort spec); round count, eta_l, and all
+    donation, unroll, eval cadence, cohort spec, §15 tap on/off — the ONLY
+    telemetry bit that may enter any cache key); round count, eta_l, and all
     array shapes are traced, so any two calls with equal configuration share
     one compiled program per chunk length.  For the cache to hit, callers
     must hold onto their local/eval closures — a fresh closure per call
@@ -971,11 +1114,11 @@ def _scan_chunk_fn(algorithm: ServerAlgorithm, local_fn, eval_fn,
     try:
         return _cached_scan_chunk_fn(algorithm, local_fn, eval_fn,
                                      donate, unroll, eval_every, cohort,
-                                     fault, tau)
+                                     fault, tau, tap)
     except TypeError:
         return _build_scan_chunk_fn(algorithm, local_fn, eval_fn,
                                     donate, unroll, eval_every, cohort,
-                                    fault, tau)
+                                    fault, tau, tap)
 
 
 def _build_sharded_chunk_fn(algorithm: ServerAlgorithm, local_fn, eval_fn,
@@ -983,18 +1126,22 @@ def _build_sharded_chunk_fn(algorithm: ServerAlgorithm, local_fn, eval_fn,
                             mesh, axis: str, batch_treedef, leaf_ndims,
                             mask_len: int, m_true: int,
                             eval_every: int, cohort: CohortSpec | None,
-                            fault: FaultSpec | None, tau: int):
+                            fault: FaultSpec | None, tau: int,
+                            tap: bool = False):
     step_round = _sharded_round_step(algorithm, local_fn, eval_fn, axis,
                                      m_true, mask_len, eval_every, cohort,
                                      fault, tau)
     rules = client_axis_rules(mesh, axis=axis)
     batch_specs, mask_spec = _client_batch_specs(batch_treedef, leaf_ndims,
                                                  mask_len, rules)
+    tap_ctx = ((m_true, cohort, fault, axis, _tap_clip_fn(algorithm))
+               if tap else None)
 
     def chunk(carry, key, ts, local_batches, mask, eta_l):
         """Compiled scan over one chunk of rounds."""
         keys = _fold_round_keys(key, ts)
-        body = _scan_body(step_round, (local_batches, mask), eta_l, fault)
+        body = _scan_body(step_round, (local_batches, mask), eta_l, fault,
+                          tap_ctx)
         return jax.lax.scan(body, carry, (keys, ts), unroll=min(unroll, len(ts)))
 
     sharded = shard_map(
@@ -1011,7 +1158,8 @@ _cached_sharded_chunk_fn = functools.lru_cache(maxsize=32)(_build_sharded_chunk_
 def _sharded_chunk_fn(algorithm, local_fn, eval_fn, donate, unroll,
                       mesh, axis, batch_treedef, leaf_ndims, mask_len, m_true,
                       eval_every: int = 1, cohort: CohortSpec | None = None,
-                      fault: FaultSpec | None = None, tau: int = 1):
+                      fault: FaultSpec | None = None, tau: int = 1,
+                      tap: bool = False):
     """Compiled shard_mapped scan chunk, cached like `_scan_chunk_fn` (the
     mesh, client-batch treedef and leaf ranks join the key; same unhashable-
     algorithm fallback)."""
@@ -1020,13 +1168,13 @@ def _sharded_chunk_fn(algorithm, local_fn, eval_fn, donate, unroll,
                                         donate, unroll, mesh, axis,
                                         batch_treedef, leaf_ndims, mask_len,
                                         m_true, eval_every, cohort,
-                                        fault, tau)
+                                        fault, tau, tap)
     except TypeError:
         return _build_sharded_chunk_fn(algorithm, local_fn, eval_fn,
                                        donate, unroll, mesh, axis,
                                        batch_treedef, leaf_ndims, mask_len,
                                        m_true, eval_every, cohort,
-                                       fault, tau)
+                                       fault, tau, tap)
 
 
 def _build_batched_run_fn(algorithm: ServerAlgorithm, local_fn, eval_fn,
@@ -1132,7 +1280,8 @@ def _sharded_batched_fn(algorithm, local_fn, eval_fn, tail_n, batched_w0,
 def _run_eager(algorithm, local_fn, w0, client_batches, *, rounds, eta_l,
                key, eval_fn, avg_last, eval_every: int = 1,
                cohort: CohortSpec | None = None,
-               fault: FaultSpec | None = None, tau: int = 1):
+               fault: FaultSpec | None = None, tau: int = 1,
+               tap: bool = False):
     """Legacy engine: one jitted XLA program per round, dispatched from a
     Python loop (re-traced per call — kept as the e7 throughput baseline).
 
@@ -1141,14 +1290,28 @@ def _run_eager(algorithm, local_fn, w0, client_batches, *, rounds, eta_l,
     skipped with NaN histories, and ``RunResult.fault_round`` records the
     faulting round — the same semantics the compiled scan's in-carry
     watchdog produces (DESIGN.md §13).
+
+    The §15 tap emits from inside the jitted round (ordered io_callback —
+    one program per round, dispatched in order).  The host-side watchdog
+    runs AFTER the emission, so the tripping round is reported (it executed)
+    and skipped rounds are simply never emitted — no frozen-round events,
+    unlike the in-scan watchdog whose frozen rounds still flow through the
+    scan body.
     """
     step_round = _round_step(algorithm, local_fn, eval_fn, eval_every, cohort,
                              fault, tau)
     watchdog = fault is not None and fault.watchdog
+    tap_ctx = None
+    if tap:
+        m = jax.tree_util.tree_leaves(client_batches)[0].shape[0]
+        tap_ctx = (m, cohort, fault, None, _tap_clip_fn(algorithm))
 
     def one_round(w, opt_state, round_key, t):
         """One jitted round dispatched from the Python loop."""
-        return step_round(w, opt_state, round_key, t, client_batches, eta_l)
+        out = step_round(w, opt_state, round_key, t, client_batches, eta_l)
+        if tap_ctx is not None:
+            _tap_emit(tap_ctx, round_key, t, opt_state, out[2], jnp.int32(-1))
+        return out
 
     round_jit = jax.jit(one_round)
 

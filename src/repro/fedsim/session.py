@@ -68,8 +68,11 @@ from repro.fedsim.specs import (
     LocalSpec,
     ShardSpec,
     StreamSpec,
+    TelemetrySpec,
     TrainSpec,
 )
+from repro.telemetry import NullTracker, Tracker
+from repro.telemetry import tap as _tap_mod
 
 __all__ = ["FederatedSession", "RecoveryPolicy"]
 
@@ -122,6 +125,7 @@ class FederatedSession:
                  stream: StreamSpec = StreamSpec(),
                  fault: FaultSpec = FaultSpec(),
                  data: DataSpec | None = None,
+                 telemetry: TelemetrySpec = TelemetrySpec(),
                  eval_fn: Callable | None = None,
                  num_clients: int | None = None):
         """Bind (algorithm, loss, model, client data) to declarative specs.
@@ -154,6 +158,10 @@ class FederatedSession:
             from ``client_batches`` when omitted (the eighth spec — joins the
             compile-cache key); passing one whose ``kind`` contradicts the
             actual input raises rather than silently mis-staging.
+          telemetry: how the run is observed (§15): ledger δ and profiler
+            window.  Deliberately NOT part of any compile-cache key — only
+            the presence of a non-null ``run(tracker=...)`` flips the
+            single on/off tap flag the engines compile against.
           eval_fn: optional metric closure ``eval_fn(params) -> scalar``.
           num_clients: explicit cohort size, required only when the client
             axis is not leaf axis 0 (``run_batched(batched_data=True)``).
@@ -164,6 +172,7 @@ class FederatedSession:
         self.engine = engine
         self.shard = shard
         self.stream = stream
+        self.telemetry = telemetry
         if engine.engine != "stream" and stream != StreamSpec():
             raise ValueError(
                 "a non-default StreamSpec requires engine='stream' "
@@ -313,8 +322,12 @@ class FederatedSession:
     def _restore_batched(self, w):
         return w if self._unravel is None else jax.vmap(self._unravel)(w)
 
-    def _chunk_callable(self, donate: bool):
-        """The compiled chunk program + the extra positional args it takes."""
+    def _chunk_callable(self, donate: bool, tap: bool = False):
+        """The compiled chunk program + the extra positional args it takes.
+
+        ``tap`` is the §15 on/off engine-tap flag — the ONLY telemetry bit
+        that reaches the builders (and hence the compile-cache keys).
+        """
         t, e, s = self.train, self.engine, self.shard
         if e.engine == "stream":
             n_shards = 1 if s.mesh is None else s.mesh.shape[s.client_axis]
@@ -328,7 +341,8 @@ class FederatedSession:
                 # host-resident driver (§14): chunk-staged fetch + prefetch,
                 # one compiled chunk program — the source rides the batches
                 # slot of the fn(carry, key, ts, batches, eta_l) contract
-                return (self._host_chunk_callable(stream.chunk_clients),
+                return (self._host_chunk_callable(stream.chunk_clients,
+                                                  tap=tap),
                         self._source, ())
             if self.cohort is not None and self.cohort.gather:
                 # gather-stream (§14): the cohort stays UN-chunked; the
@@ -340,7 +354,7 @@ class FederatedSession:
                         self.algorithm, self._local_fn, self.eval_fn, donate,
                         e.scan_unroll, stream.chunk_clients,
                         self.num_clients, m_pad, t.eval_every, self.cohort,
-                        self.fault, int(t.tau))
+                        self.fault, int(t.tau), tap)
                     return fn, batches, (mask,)
                 leaves, treedef = jax.tree_util.tree_flatten(batches)
                 fn = _srv._sharded_gather_stream_chunk_fn(
@@ -348,7 +362,7 @@ class FederatedSession:
                     e.scan_unroll, stream.chunk_clients, s.mesh,
                     s.client_axis, treedef, tuple(x.ndim for x in leaves),
                     m_pad, self.num_clients, t.eval_every, self.cohort,
-                    self.fault, int(t.tau))
+                    self.fault, int(t.tau), tap)
                 return fn, batches, (mask,)
             batches, mask = chunk_cohort(self.client_batches,
                                          stream.chunk_clients,
@@ -359,14 +373,14 @@ class FederatedSession:
                 fn = _srv._stream_chunk_fn(
                     self.algorithm, self._local_fn, self.eval_fn, donate,
                     e.scan_unroll, stream, self.num_clients, m_pad,
-                    t.eval_every, self.cohort, self.fault, int(t.tau))
+                    t.eval_every, self.cohort, self.fault, int(t.tau), tap)
                 return fn, batches, (mask,)
             leaves, treedef = jax.tree_util.tree_flatten(batches)
             fn = _srv._sharded_stream_chunk_fn(
                 self.algorithm, self._local_fn, self.eval_fn, donate,
                 e.scan_unroll, stream, s.mesh, s.client_axis, treedef,
                 tuple(x.ndim for x in leaves), n_chunks, self.num_clients,
-                m_pad, t.eval_every, self.cohort, self.fault, int(t.tau))
+                m_pad, t.eval_every, self.cohort, self.fault, int(t.tau), tap)
             return fn, batches, (mask,)
         if s.mesh is not None:
             m_true = self.num_clients
@@ -377,15 +391,15 @@ class FederatedSession:
                 self.algorithm, self._local_fn, self.eval_fn, donate,
                 e.scan_unroll, s.mesh, s.client_axis, treedef,
                 tuple(x.ndim for x in leaves), mask.shape[0], m_true,
-                t.eval_every, self.cohort, self.fault, int(t.tau))
+                t.eval_every, self.cohort, self.fault, int(t.tau), tap)
             return fn, batches, (mask,)
         fn = _srv._scan_chunk_fn(self.algorithm, self._local_fn, self.eval_fn,
                                  donate, e.scan_unroll,
                                  t.eval_every, self.cohort, self.fault,
-                                 int(t.tau))
+                                 int(t.tau), tap)
         return fn, self.client_batches, ()
 
-    def _host_chunk_callable(self, chunk_clients: int):
+    def _host_chunk_callable(self, chunk_clients: int, tap: bool = False):
         """The host-resident stream driver (DESIGN.md §14).
 
         Returns a callable with the engine contract ``fn(carry, key, ts,
@@ -399,6 +413,13 @@ class FederatedSession:
         program.  Chunks accumulate in the device-resident stream engine's
         exact order and arithmetic, so host-staged results are bit-exact
         with device-resident ones.
+
+        With ``tap`` the driver emits each round's §15 telemetry payload
+        directly from the Python loop (no io_callback needed — the loop IS
+        on the host), through the same ``TapSession.emit`` funnel the
+        compiled engines reach, so sinks cannot tell the paths apart.  The
+        host path never injects faults (the session forbids the combination),
+        so the fault slots are inert.
         """
         m = self.num_clients
         cohort = self.cohort
@@ -427,6 +448,8 @@ class FederatedSession:
                          for g in (np.arange(j * c, (j + 1) * c)
                                    for j in range(n_chunks))]
 
+        clip_fn = _srv._tap_clip_fn(self.algorithm) if tap else None
+
         def run_rounds(carry, key, ts, src, eta_l):
             """Python round loop with prefetch-staged chunk programs."""
             del src  # the engine contract's batches slot; == self._source
@@ -436,18 +459,19 @@ class FederatedSession:
                 t = jnp.int32(int(t_host))
                 rk = jax.random.fold_in(key, t)
                 if gathering:
-                    slots, slot_mask, _ = gather_slots(
-                        cohort.round_mask(rk, m), grid)
+                    round_mask = cohort.round_mask(rk, m)
+                    slots, slot_mask, _ = gather_slots(round_mask, grid)
                     slots_np = np.asarray(jax.device_get(slots))
                     sgrid = slots.reshape(n_chunks, c)
                     mgrid = slot_mask.reshape(n_chunks, c)
                     plan = ((slots_np[j * c:(j + 1) * c], mgrid[j], sgrid[j])
                             for j in range(n_chunks))
                 else:
-                    full = (cohort.round_mask(rk, m) if cohort is not None
-                            else jnp.ones((m,), jnp.float32))
+                    round_mask = (cohort.round_mask(rk, m)
+                                  if cohort is not None
+                                  else jnp.ones((m,), jnp.float32))
                     full = jnp.concatenate(
-                        [full, jnp.zeros((grid - m,), jnp.float32)])
+                        [round_mask, jnp.zeros((grid - m,), jnp.float32)])
                     mgrid = full.reshape(n_chunks, c)
                     plan = ((dense_idx[j], mgrid[j], dense_gidx[j])
                             for j in range(n_chunks))
@@ -475,10 +499,23 @@ class FederatedSession:
                     stage()
                     moments = (mom if moments is None
                                else _srv._host_add_moments(moments, mom))
+                clip_val = clip_fn(opt_state) if tap else None
                 w, opt_state, tail, outs = finalize(w, opt_state, tail,
                                                     rk, t, moments)
                 for col, v in zip(cols, outs):
                     col.append(v)
+                if tap:
+                    sess = _tap_mod.active()
+                    if sess is not None:
+                        eta, metric, naive, target = outs
+                        part = jnp.sum(round_mask)
+                        payload = np.asarray(jax.device_get(jnp.stack([
+                            jnp.float32(eta), jnp.float32(naive),
+                            jnp.float32(target), jnp.float32(metric),
+                            jnp.float32(clip_val), part, part,
+                            jnp.float32(0.0), jnp.float32(0.0),
+                            jnp.float32(0.0), jnp.float32(-1.0)])))
+                        sess.emit(int(t_host), 0, payload)
             hist = tuple(jnp.stack(col) if col
                          else jnp.zeros((0,), jnp.float32) for col in cols)
             return (w, opt_state, tail), hist
@@ -487,16 +524,23 @@ class FederatedSession:
 
     @staticmethod
     def _chunk_bounds(start: int, rounds: int, chunk_rounds: int | None,
-                      checkpoint_every: int | None = None):
+                      checkpoint_every: int | None = None,
+                      profile: tuple[int, int] | None = None):
         """[start, rounds) split at the chunk grid (anchored at ``start``,
         matching the historical one-shot behavior) union the checkpoint grid
-        (anchored at round 0, so checkpoints land on stable global rounds)."""
+        (anchored at round 0, so checkpoints land on stable global rounds)
+        union the §15 profiler-window edges (so ``TelemetrySpec.
+        profile_rounds=(a, b)`` traces exactly rounds [a, b) — the trace
+        starts/stops at chunk boundaries)."""
         stops = set()
         chunk = (rounds - start) if not chunk_rounds else max(1, int(chunk_rounds))
         stops.update(range(start + chunk, rounds, chunk))
         if checkpoint_every:
             stops.update(b for b in range(checkpoint_every, rounds,
                                           checkpoint_every) if b > start)
+        if profile is not None:
+            stops.update(edge for edge in (profile[0], min(profile[1], rounds))
+                         if start < edge < rounds)
         stops.add(rounds)
         edges = [start] + sorted(stops)
         return list(zip(edges[:-1], edges[1:]))
@@ -544,12 +588,48 @@ class FederatedSession:
                 f"this session runs {self.algorithm.name!r}")
         return step, key, carry, hist
 
+    # -- telemetry plumbing (§15) -----------------------------------------
+
+    @staticmethod
+    def _tap_on(tracker) -> bool:
+        """The one telemetry bit that reaches the engines: a NullTracker (or
+        no tracker) compiles the tap OUT entirely — the historical program."""
+        return tracker is not None and not isinstance(tracker, NullTracker)
+
+    def _ledger_fn(self):
+        """Per-round cumulative privacy callable for ledger events, or None.
+
+        Probing once at round count 1 classifies the session: non-private
+        algorithms raise and get no ledger (the run proceeds untracked
+        rather than erroring — observability must never kill a run).
+        """
+        delta = self.telemetry.ledger_delta
+        if delta is None:
+            return None
+        try:
+            self._budget_at(delta, 1)
+        except (ValueError, AttributeError, TypeError):
+            return None
+        return lambda executed: self._budget_at(delta, executed)
+
+    def _tap_session(self, tracker, start_round: int) -> "_tap_mod.TapSession":
+        return _tap_mod.TapSession(
+            tracker, start_round=start_round, ledger_fn=self._ledger_fn(),
+            faults_active=self.fault is not None and self.fault.injects)
+
     # -- entry points ------------------------------------------------------
 
-    def run(self, key: jax.Array, *, checkpoint_dir: str | None = None,
+    def run(self, key: jax.Array, *, tracker: Tracker | None = None,
+            checkpoint_dir: str | None = None,
             checkpoint_every: int | None = None,
             on_divergence: RecoveryPolicy | None = None) -> RunResult:
         """Run all ``train.rounds`` rounds from round 0.
+
+        ``tracker`` streams per-round §15 telemetry (η, metric on cadence,
+        clip, realized cohort, fault totals, wall-clock, cumulative privacy
+        ledger) to the sink while the compiled engines run.  Results are
+        bit-identical to the untracked run; ``None`` or a ``NullTracker``
+        compiles the tap out entirely.
 
         ``checkpoint_dir`` saves the full resumable state (carry + histories
         + RNG key + round counter) every ``checkpoint_every`` rounds (plus
@@ -559,7 +639,8 @@ class FederatedSession:
         ``FaultSpec(watchdog=True)``) auto-recovers a watchdog-tripped run:
         roll back to the newest intact checkpoint, back off, re-run — see
         ``RecoveryPolicy`` and DESIGN.md §13.  Retried rounds join the
-        privacy composition reported by ``privacy_report``.
+        privacy composition reported by ``privacy_report`` (and charge the
+        live ledger), and each rollback is logged as a tracker event.
         """
         self._validate_cohort(self.num_clients)
         if checkpoint_every is not None and checkpoint_dir is None:
@@ -573,6 +654,24 @@ class FederatedSession:
             if checkpoint_dir is None:
                 raise ValueError("on_divergence requires checkpoint_dir "
                                  "(rollback needs a checkpoint target)")
+        if not self._tap_on(tracker):
+            return self._run_dispatch(key, checkpoint_dir, checkpoint_every,
+                                      on_divergence, tap=False)
+        _tap_mod.install(self._tap_session(tracker, 0))
+        tracker.start_phase("run", 0)
+        try:
+            return self._run_dispatch(key, checkpoint_dir, checkpoint_every,
+                                      on_divergence, tap=True)
+        finally:
+            # flush every in-flight io_callback BEFORE detaching the session,
+            # so no emission lands after finish()
+            jax.effects_barrier()
+            _tap_mod.uninstall()
+            tracker.finish()
+
+    def _run_dispatch(self, key, checkpoint_dir, checkpoint_every,
+                      on_divergence, *, tap: bool) -> RunResult:
+        """Engine dispatch shared by tracked and untracked ``run``."""
         if self.engine.engine == "eager":
             if self.shard.mesh is not None:
                 raise ValueError("client sharding requires engine='scan'")
@@ -584,21 +683,28 @@ class FederatedSession:
                 rounds=t.rounds, eta_l=t.eta_l, key=key,
                 eval_fn=self.eval_fn, avg_last=t.avg_last,
                 eval_every=t.eval_every, cohort=self.cohort,
-                fault=self.fault, tau=int(t.tau))
+                fault=self.fault, tau=int(t.tau), tap=tap)
             out.final_w = self._restore_params(out.final_w)
             out.last_w = self._restore_params(out.last_w)
             return out
         return self._run_scan(key, start=0, carry=None, hist=[],
                               checkpoint_dir=checkpoint_dir,
                               checkpoint_every=checkpoint_every,
-                              on_divergence=on_divergence)
+                              on_divergence=on_divergence, tap=tap)
 
     def resume(self, checkpoint_dir: str, *,
-               checkpoint_every: int | None = None) -> RunResult:
+               checkpoint_every: int | None = None,
+               tracker: Tracker | None = None) -> RunResult:
         """Continue the latest checkpoint in ``checkpoint_dir`` up to
         ``train.rounds`` and return the FULL RunResult (pre-checkpoint
         histories included) — bit-exactly what the uninterrupted run with the
-        same chunk boundaries returns."""
+        same chunk boundaries returns.
+
+        A ``tracker`` is told the resume round (``start_phase('resume',
+        step)``) and receives events for the RESUMED rounds only — never a
+        duplicate of a round the checkpointed run already emitted; the
+        cumulative ledger still counts from round 0.
+        """
         self._validate_cohort(self.num_clients)
         step, key, carry, hist = self._load(checkpoint_dir)
         if step > self.train.rounds:
@@ -606,12 +712,24 @@ class FederatedSession:
                              f"session's train.rounds={self.train.rounds}")
         if step == self.train.rounds:
             return self._assemble(carry, [hist])
-        return self._run_scan(key, start=step, carry=carry, hist=[hist],
-                              checkpoint_dir=checkpoint_dir,
-                              checkpoint_every=checkpoint_every)
+        if not self._tap_on(tracker):
+            return self._run_scan(key, start=step, carry=carry, hist=[hist],
+                                  checkpoint_dir=checkpoint_dir,
+                                  checkpoint_every=checkpoint_every)
+        _tap_mod.install(self._tap_session(tracker, step))
+        tracker.start_phase("resume", step)
+        try:
+            return self._run_scan(key, start=step, carry=carry, hist=[hist],
+                                  checkpoint_dir=checkpoint_dir,
+                                  checkpoint_every=checkpoint_every, tap=True)
+        finally:
+            jax.effects_barrier()
+            _tap_mod.uninstall()
+            tracker.finish()
 
     def run_batched(self, keys: jax.Array, *, batched_w0: bool = False,
-                    batched_data: bool = False) -> RunResult:
+                    batched_data: bool = False,
+                    tracker: Tracker | None = None) -> RunResult:
         """One batched program over S seeds (``keys`` is (S,)-stacked PRNG
         keys); set ``batched_w0`` / ``batched_data`` when w0 / client_batches
         carry a matching leading seed axis.  Every RunResult field gains a
@@ -619,6 +737,13 @@ class FederatedSession:
         ``run`` (seeds stay vmapped inside each shard).  The batched engine
         is always one full-length scan program (``chunk_rounds`` /
         ``scan_unroll`` do not apply); it has no eager counterpart.
+
+        A ``tracker`` fans out to per-seed sub-trackers (events gain a
+        ``"seed"`` field).  The stream path streams live per seed; the
+        vmapped scan path has no per-round host hook (a tap inside vmap
+        would serialize the seed axis), so its events are REPLAYED from the
+        returned histories after the program finishes — same schema, minus
+        wall-clock timing and fault fields.
         """
         if self.fault is not None:
             raise ValueError(
@@ -636,7 +761,10 @@ class FederatedSession:
                     "run_batched(engine='stream') sweeps seeds through one "
                     "compiled stream program; per-seed w0/data axes are not "
                     "supported — loop run() with per-seed sessions instead")
-            results = [self.run(k) for k in keys]
+            results = [
+                self.run(k, tracker=tracker.sub(i) if self._tap_on(tracker)
+                         else None)
+                for i, k in enumerate(keys)]
 
             def stack(field: str):
                 vals = [getattr(r, field) for r in results]
@@ -687,10 +815,64 @@ class FederatedSession:
                 bool(batched_w0), bool(batched_data), t.eval_every, self.cohort)
             final_w, last_w, etas, metrics, naives, targets = fn(
                 self._w0, keys, self.client_batches, eta_l, ts)
-        return RunResult(final_w=self._restore_batched(final_w),
-                         last_w=self._restore_batched(last_w),
-                         eta_history=etas, metric_history=metrics,
-                         eta_naive_history=naives, eta_target_history=targets)
+        result = RunResult(final_w=self._restore_batched(final_w),
+                           last_w=self._restore_batched(last_w),
+                           eta_history=etas, metric_history=metrics,
+                           eta_naive_history=naives,
+                           eta_target_history=targets)
+        if self._tap_on(tracker):
+            self._replay_batched(tracker, result)
+        return result
+
+    def _replay_batched(self, tracker: "Tracker", result: RunResult) -> None:
+        """Post-hoc per-seed event replay for the vmapped scan path (§15)."""
+        import math as _math
+        ledger = self._ledger_fn()
+        etas = np.asarray(jax.device_get(result.eta_history))
+        metrics = np.asarray(jax.device_get(result.metric_history))
+        naives = np.asarray(jax.device_get(result.eta_naive_history))
+        targets = np.asarray(jax.device_get(result.eta_target_history))
+        for i in range(etas.shape[0]):
+            sub = tracker.sub(i)
+            sub.start_phase("replay", 0)
+            for t in range(etas.shape[1]):
+                event = {"eta": float(etas[i, t]),
+                         "eta_naive": float(naives[i, t]),
+                         "eta_target": float(targets[i, t])}
+                if _math.isfinite(float(metrics[i, t])):
+                    event["metric"] = float(metrics[i, t])
+                if ledger is not None:
+                    rep = ledger(t + 1)
+                    event.update(ledger_rounds=t + 1, mu=float(rep.mu),
+                                 eps=float(rep.eps_numerical),
+                                 eps_rdp=float(rep.eps_rdp))
+                sub.log(t, event)
+        tracker.finish()
+
+    def spec_identity(self) -> str:
+        """One-line frozen-spec identity string for run manifests (§15).
+
+        Deterministic across processes for one configuration: the frozen
+        specs repr their fields; the mesh contributes only its axis shape
+        (device objects are process-local).  ``launch/dryrun`` records this
+        so a launched run is attributable to its exact spec set.
+        """
+        s = self.shard
+        mesh = ("none" if s.mesh is None else ",".join(
+            f"{k}={v}" for k, v in sorted(dict(s.mesh.shape).items())))
+        parts = [
+            f"algorithm={self.algorithm.name}",
+            f"train={self.train!r}",
+            f"local={self.local!r}",
+            f"engine={self.engine!r}",
+            f"stream={self.stream!r}",
+            f"cohort={(self.cohort if self.cohort is not None else CohortSpec())!r}",
+            f"fault={(self.fault if self.fault is not None else FaultSpec())!r}",
+            f"data={self.data!r}",
+            f"telemetry={self.telemetry!r}",
+            f"shard=mesh[{mesh}] axis={s.client_axis}",
+        ]
+        return " | ".join(parts)
 
     def privacy_report(self, delta: float) -> accounting.PrivacyReport:
         """Privacy budget of this session's full run, amplification-aware.
@@ -711,12 +893,21 @@ class FederatedSession:
         re-executed by ``run(on_divergence=...)`` recovery joins the
         composition — call after ``run`` to fold that run's retries in.
         """
+        return self._budget_at(delta, self.train.rounds + self._rounds_retried)
+
+    def _budget_at(self, delta: float, rounds: int) -> accounting.PrivacyReport:
+        """``privacy_report`` at an explicit executed-round count.
+
+        The live telemetry ledger (§15) calls this every round with the
+        rounds executed SO FAR (retries included), so the streamed ε/μ
+        curve composes exactly like the end-of-run report — the final
+        ledger entry equals ``privacy_report(delta)`` by construction.
+        """
         alg = self.algorithm
         q = 1.0 if self.cohort is None else self.cohort.sampling_rate(self.num_clients)
         dropout = (self.fault.dropout
                    if self.fault is not None and self.fault.injects else 0.0)
         q = accounting.realized_participation(q, dropout)
-        rounds = self.train.rounds + self._rounds_retried
         if hasattr(alg, "budget"):
             # composed algorithms (DESIGN.md §11): the mechanism owns its
             # accounting; the hook reproduces the name-dispatch below exactly
@@ -780,7 +971,8 @@ class FederatedSession:
     def _run_scan(self, key, *, start: int, carry, hist,
                   checkpoint_dir: str | None,
                   checkpoint_every: int | None,
-                  on_divergence: RecoveryPolicy | None = None) -> RunResult:
+                  on_divergence: RecoveryPolicy | None = None,
+                  tap: bool = False) -> RunResult:
         t = self.train
         policy = on_divergence
         watchdog = self._watchdog
@@ -793,15 +985,32 @@ class FederatedSession:
                      jnp.zeros((self._tail_n(),) + w.shape, w.dtype))
         if watchdog and len(carry) == 3:
             carry = carry + (jnp.int32(-1),)
-        fn, batches, extra = self._chunk_callable(donate)
+        fn, batches, extra = self._chunk_callable(donate, tap=tap)
         eta_l = jnp.float32(t.eta_l)
+
+        # §15 profiler window: (a, b) splits chunks at a and b so the traced
+        # region covers exactly rounds [a, b) of the compiled program
+        profile = self.telemetry.profile_rounds
+        prof_dir = self.telemetry.profile_dir
+        prof_active = False
+
+        def _prof_stop(round_edge: int) -> None:
+            nonlocal prof_active
+            if not prof_active:
+                return
+            jax.block_until_ready(carry)
+            jax.profiler.stop_trace()
+            prof_active = False
+            sess = _tap_mod.active()
+            if tap and sess is not None:
+                sess.profile_event("stop", round_edge, prof_dir)
 
         outs = list(hist)  # resumed histories (if any) lead the concat
         if policy is not None and ckpt.latest_step(checkpoint_dir) is None:
             # a rollback target must exist before any round runs
             self._save(checkpoint_dir, start, key, carry, self._cat_hist(outs))
         bounds = self._chunk_bounds(start, t.rounds, self.engine.chunk_rounds,
-                                    checkpoint_every)
+                                    checkpoint_every, profile)
         retries = 0
         inject_pending = self._inject_divergence is not None
         idx = 0
@@ -810,26 +1019,43 @@ class FederatedSession:
             if inject_pending:
                 carry = self._inject_divergence(carry, retries)
                 inject_pending = False
+            if profile is not None and s == profile[0] and not prof_active:
+                jax.profiler.start_trace(prof_dir)
+                prof_active = True
+                sess = _tap_mod.active()
+                if tap and sess is not None:
+                    sess.profile_event("start", s, prof_dir)
             carry, chunk_outs = fn(carry, key,
                                    jnp.arange(s, e, dtype=jnp.int32),
                                    batches, *extra, eta_l)
             fault_t = int(jax.device_get(carry[3])) if watchdog else -1
+            if prof_active and e >= min(profile[1], t.rounds):
+                _prof_stop(e)
             if fault_t >= 0 and policy is not None \
                     and retries < policy.max_retries:
                 # rollback: newest intact checkpoint, backoff, re-run.  The
                 # rounds past the rollback step were EXECUTED (their releases
                 # happened) and will re-run — they join the privacy
                 # composition (privacy_report)
+                _prof_stop(e)  # never leave a trace spanning a rollback
                 retries += 1
                 if policy.backoff > 0.0:
                     time.sleep(policy.backoff * retries)
                 step, key, carry, restored = self._load(
                     checkpoint_dir, retries=2, backoff=policy.backoff)
                 self._rounds_retried += fault_t + 1 - step
+                if tap:
+                    # flush the doomed chunk's emissions, then rewind the
+                    # reorder buffer so re-run rounds deliver again; the
+                    # executed count keeps the rolled-back rounds (§13)
+                    jax.effects_barrier()
+                    sess = _tap_mod.active()
+                    if sess is not None:
+                        sess.rollback(step, fault_t, retries)
                 outs = [restored]
                 bounds = self._chunk_bounds(step, t.rounds,
                                             self.engine.chunk_rounds,
-                                            checkpoint_every)
+                                            checkpoint_every, profile)
                 idx = 0
                 inject_pending = self._inject_divergence is not None
                 continue

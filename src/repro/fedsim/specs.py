@@ -19,6 +19,9 @@ axis of a run:
                 §14 sparse gather fast path
     DataSpec    where client data lives and how it is staged to the device
                 (derived from ``batches`` automatically; DESIGN.md §14)
+    TelemetrySpec  how the run is observed: privacy-ledger δ and profiler
+                window (DESIGN.md §15; never enters the compile-cache key
+                beyond the on/off tap flag)
 
 All specs are FROZEN and HASHABLE, so a spec tuple slots directly into the
 engine's cross-call compile cache (``functools.lru_cache`` over the builder
@@ -47,8 +50,8 @@ import jax
 import jax.numpy as jnp
 
 __all__ = ["TrainSpec", "LocalSpec", "EngineSpec", "StreamSpec", "ShardSpec",
-           "CohortSpec", "FaultSpec", "DataSpec", "SAMPLING_TAG",
-           "LOCAL_TRAIN_TAG", "FAULT_TAG"]
+           "CohortSpec", "FaultSpec", "DataSpec", "TelemetrySpec",
+           "SAMPLING_TAG", "LOCAL_TRAIN_TAG", "FAULT_TAG"]
 
 # fold_in tag deriving the per-round sampling key from the round key.  Client
 # randomization folds the GLOBAL CLIENT INDEX (0..M-1) into the same round
@@ -391,6 +394,46 @@ class FaultSpec:
         """True when the engine must deviate from the unfaulted program
         (injection or watchdog); ``FaultSpec()`` normalizes to None."""
         return self.injects or self.watchdog
+
+
+@dataclasses.dataclass(frozen=True)
+class TelemetrySpec:
+    """How a run is observed: the §15 telemetry knobs.
+
+    The ninth spec.  Unlike every other spec, telemetry config must NOT
+    change the compiled program beyond the single on/off tap flag — the
+    engine builders receive only ``tap: bool`` (tracker attached or not),
+    never this spec, so changing the ledger delta or a profile window can
+    never force a recompile or (worse) silently fork the compile cache.
+    The tracker itself is a runtime argument (``run(tracker=...)``), not
+    spec state: trackers hold open files and are not hashable.
+
+    Attributes:
+      ledger_delta: δ at which the per-round cumulative privacy ledger is
+        evaluated (``session._budget_at(ledger_delta, rounds_executed)``
+        appended to every round event).  ``None`` disables ledger events.
+        Sessions whose algorithm has no accounting hook skip the ledger
+        automatically — the probe failure is per-run, not an error.
+      profile_rounds: optional ``(a, b)`` half-open round window wrapped in
+        a ``jax.profiler`` trace (scan engine: chunk boundaries are split at
+        a and b so the trace covers exactly those rounds).  ``None`` = off.
+      profile_dir: where the profiler writes its artifact; recorded in the
+        profile_start/profile_stop tracker events.
+    """
+
+    ledger_delta: float | None = 1e-5
+    profile_rounds: tuple[int, int] | None = None
+    profile_dir: str = "results/profile"
+
+    def __post_init__(self):
+        if self.ledger_delta is not None and not (0.0 < self.ledger_delta < 1.0):
+            raise ValueError(
+                f"ledger_delta must be in (0, 1) or None, got {self.ledger_delta}")
+        if self.profile_rounds is not None:
+            a, b = self.profile_rounds
+            if not (0 <= a < b):
+                raise ValueError("profile_rounds must be (a, b) with "
+                                 f"0 <= a < b, got {self.profile_rounds}")
 
 
 @dataclasses.dataclass(frozen=True)

@@ -97,9 +97,19 @@ def lower_one(arch: str, shape_name: str, *, multi_pod: bool,
             # resolve through the fedsim registry up front: an unsupported
             # algorithm fails here with a clear message, not deep in lowering
             alg = trainer.server_algorithm(k * fed.virtual_clients)
+            # full frozen-spec identity (§15): the same deterministic string
+            # FederatedSession.spec_identity() renders, so a dry-run artifact
+            # is attributable to the exact spec set a launched run binds
+            spec_identity = " | ".join([
+                f"algorithm={alg.name}",
+                f"train={trainer.train!r}",
+                f"fed={fed!r}",
+                f"mesh[{','.join(f'{a}={n}' for a, n in sorted(dict(mesh.shape).items()))}]",
+                f"cohort_k={k}", f"virtual_clients={fed.virtual_clients}"])
             fed_info = {"algorithm": alg.name, "is_private": alg.is_private,
                         "cohort_k": k, "tau": trainer.train.tau,
-                        "eta_l": trainer.train.eta_l}
+                        "eta_l": trainer.train.eta_l,
+                        "spec_identity": spec_identity}
             step = trainer.make_train_step(cohort_k=k)
             jitted = jax.jit(step, in_shardings=(pshard, bshard, kshard),
                              out_shardings=(pshard, None))

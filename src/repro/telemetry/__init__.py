@@ -1,0 +1,18 @@
+"""repro.telemetry — streaming round trackers for long runs (DESIGN.md §15).
+
+Public surface: the ``Tracker`` protocol and its concrete sinks.  The engine
+tap internals live in ``repro.telemetry.tap`` and are wired by
+``fedsim/session.py``; user code only ever constructs a tracker and passes
+it to ``FederatedSession.run(tracker=...)``.
+"""
+from repro.telemetry.trackers import (
+    CompositeTracker,
+    JsonlTracker,
+    NullTracker,
+    StdoutTracker,
+    Tracker,
+    WandbTracker,
+)
+
+__all__ = ["Tracker", "NullTracker", "StdoutTracker", "JsonlTracker",
+           "CompositeTracker", "WandbTracker"]

@@ -1,0 +1,446 @@
+"""Telemetry subsystem (DESIGN.md §15): trackers, engine tap, ledger.
+
+The §15 contract this file pins:
+
+  1. **Observation changes nothing.**  A run with a tracker attached is
+     BIT-IDENTICAL to the same run without one, on every engine path —
+     the tap adds an ``io_callback`` to the compiled program but never a
+     float.  ``NullTracker`` (and no tracker) compile the tap out.
+  2. **Exactly-T streaming.**  A T-round run delivers exactly T round
+     events, in round order, each carrying the per-round schema
+     (η / η_naive / η_target, metric on the eval cadence, participants,
+     fault totals when faults are armed, cumulative ledger).
+  3. **The ledger is the report.**  The per-round cumulative privacy
+     ledger is monotone and its final entry equals
+     ``session.privacy_report(δ)`` to 1e-9 — including retried rounds
+     after a §13 rollback, which charge the ledger.
+  4. **Resume and rollback replay cleanly.**  A resumed run emits only
+     the resumed rounds (no duplicates), a recovery rollback emits a
+     ``rollback`` control event and rewinds the stream, and
+     ``tools/check_telemetry.py`` accepts every stream the session emits.
+"""
+import importlib.util
+import json
+import math
+import os
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.fedexp import make_algorithm
+from repro.data.synthetic import distance_to_opt, linreg_loss, make_synthetic_linreg
+from repro.fedsim import (
+    CohortSpec,
+    EngineSpec,
+    FaultSpec,
+    FederatedSession,
+    ShardSpec,
+    StreamSpec,
+    TelemetrySpec,
+    TrainSpec,
+)
+from repro.fedsim.session import RecoveryPolicy
+from repro.launch.mesh import make_client_mesh
+from repro.telemetry import (
+    CompositeTracker,
+    JsonlTracker,
+    NullTracker,
+    StdoutTracker,
+    Tracker,
+    WandbTracker,
+)
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "tools"))
+from check_telemetry import check_stream  # noqa: E402
+
+M, D, TAU, ETA_L, ROUNDS = 32, 16, 2, 0.1, 6
+DELTA = 1e-5  # == TelemetrySpec().ledger_delta, so ledger lines match reports
+KEY = jax.random.PRNGKey(11)
+
+ALG_KWARGS = {
+    "fedavg": {},
+    "cdp-fedexp": dict(clip_norm=0.3, sigma=0.2, num_clients=M),
+    "dp-fedavg-cdp": dict(clip_norm=0.3, sigma=0.2, num_clients=M),
+}
+
+FAULT = FaultSpec(dropout=0.3, straggler=0.2, straggler_steps=1, corrupt=0.02)
+
+
+@pytest.fixture(scope="module")
+def problem():
+    data = make_synthetic_linreg(jax.random.PRNGKey(3), M, D)
+    return data, jnp.zeros(D)
+
+
+def _session(problem, name="cdp-fedexp", *, rounds=ROUNDS, **spec_kw):
+    data, w0 = problem
+    alg = make_algorithm(name, **ALG_KWARGS[name])
+    return FederatedSession(
+        alg, linreg_loss, w0, data.client_batches(),
+        train=spec_kw.pop("train", TrainSpec(rounds=rounds, tau=TAU, eta_l=ETA_L)),
+        eval_fn=spec_kw.pop("eval_fn", distance_to_opt(data.w_star)), **spec_kw)
+
+
+def _lines(path):
+    with open(path) as f:
+        return [json.loads(line) for line in f]
+
+
+def _round_lines(path):
+    return [o for o in _lines(path) if "event" not in o]
+
+
+class _ListTracker(Tracker):
+    """In-memory sink for unit tests."""
+
+    def __init__(self):
+        self.events, self.phases, self.finished = [], [], 0
+
+    def log(self, step, event):
+        self.events.append((step, dict(event)))
+
+    def start_phase(self, name, step=0):
+        self.phases.append((name, step))
+
+    def finish(self):
+        self.finished += 1
+
+
+# engine-path configs for the bit-identity sweep; "sharded" builds its mesh
+# lazily (device count is a property of the CI leg, see conftest.py)
+ENGINE_CONFIGS = {
+    "scan": lambda: {},
+    "chunked": lambda: dict(engine=EngineSpec(chunk_rounds=2)),
+    "eager": lambda: dict(engine=EngineSpec(engine="eager")),
+    "sampled": lambda: dict(cohort=CohortSpec(q=0.5)),
+    "stream": lambda: dict(engine=EngineSpec(engine="stream"),
+                           stream=StreamSpec(chunk_clients=16)),
+    "gather": lambda: dict(engine=EngineSpec(engine="stream"),
+                           stream=StreamSpec(chunk_clients=16),
+                           cohort=CohortSpec(q=0.5, gather=True)),
+    "sharded": lambda: dict(shard=ShardSpec(mesh=make_client_mesh())),
+    "faults": lambda: dict(fault=FAULT),
+}
+
+
+class TestBitIdentity:
+    """§15 acceptance: the tap observes, it never perturbs."""
+
+    @pytest.mark.parametrize("path_name", sorted(ENGINE_CONFIGS))
+    def test_tracker_on_matches_off(self, problem, tmp_path, path_name):
+        cfg = ENGINE_CONFIGS[path_name]()
+        r_off = _session(problem, **cfg).run(KEY)
+        out = tmp_path / f"{path_name}.jsonl"
+        r_on = _session(problem, **cfg).run(KEY, tracker=JsonlTracker(str(out)))
+        for field in ("final_w", "last_w", "eta_history", "metric_history"):
+            np.testing.assert_array_equal(
+                np.asarray(getattr(r_off, field)),
+                np.asarray(getattr(r_on, field)),
+                err_msg=f"{path_name}.{field}")
+        # exactly-T invariant: one round line per round, in order
+        assert [o["round"] for o in _round_lines(out)] == list(range(ROUNDS))
+        text = out.read_text().splitlines()
+        assert check_stream(text, rounds=ROUNDS, label=path_name) == []
+
+    def test_null_tracker_is_the_off_path(self, problem):
+        sess = _session(problem)
+        assert not sess._tap_on(None)
+        assert not sess._tap_on(NullTracker())
+        assert sess._tap_on(_ListTracker())
+        r_null = _session(problem).run(KEY, tracker=NullTracker())
+        r_off = _session(problem).run(KEY)
+        np.testing.assert_array_equal(np.asarray(r_off.final_w),
+                                      np.asarray(r_null.final_w))
+
+    def test_host_driver_tracker_on_matches_off(self, problem, tmp_path):
+        """§14 host-resident driver: the Python round loop feeds the same
+        tap funnel directly (no io_callback)."""
+        from repro.fedsim import HostArraySource
+        data, w0 = problem
+        host = jax.tree.map(np.asarray, data.client_batches())
+
+        def sess():
+            return FederatedSession(
+                make_algorithm("cdp-fedexp", **ALG_KWARGS["cdp-fedexp"]),
+                linreg_loss, w0, HostArraySource(host),
+                train=TrainSpec(rounds=ROUNDS, tau=TAU, eta_l=ETA_L),
+                eval_fn=distance_to_opt(data.w_star),
+                engine=EngineSpec(engine="stream"),
+                stream=StreamSpec(chunk_clients=16))
+
+        r_off = sess().run(KEY)
+        out = tmp_path / "host.jsonl"
+        r_on = sess().run(KEY, tracker=JsonlTracker(str(out)))
+        np.testing.assert_array_equal(np.asarray(r_off.final_w),
+                                      np.asarray(r_on.final_w))
+        np.testing.assert_array_equal(np.asarray(r_off.eta_history),
+                                      np.asarray(r_on.eta_history))
+        assert [o["round"] for o in _round_lines(out)] == list(range(ROUNDS))
+        text = out.read_text().splitlines()
+        assert check_stream(text, rounds=ROUNDS, label="host") == []
+
+    def test_fault_totals_in_stream(self, problem, tmp_path):
+        out = tmp_path / "faults.jsonl"
+        _session(problem, fault=FAULT).run(KEY, tracker=JsonlTracker(str(out)))
+        for o in _round_lines(out):
+            for k in ("realized_clients", "dropped", "stragglers", "corrupt"):
+                assert isinstance(o[k], int), (o["round"], k)
+            assert 0 <= o["realized_clients"] <= M
+            assert o["dropped"] + o["stragglers"] <= M
+
+
+class TestLedger:
+    """Per-round cumulative privacy ledger == the end-of-run report."""
+
+    def test_ledger_monotone_and_matches_report(self, problem, tmp_path):
+        out = tmp_path / "ledger.jsonl"
+        sess = _session(problem, "dp-fedavg-cdp")
+        sess.run(KEY, tracker=JsonlTracker(str(out)))
+        rounds = _round_lines(out)
+        assert [o["ledger_rounds"] for o in rounds] == list(range(1, ROUNDS + 1))
+        eps = [o["eps"] for o in rounds]
+        assert eps == sorted(eps)
+        rep = sess.privacy_report(DELTA)
+        assert abs(rounds[-1]["eps"] - rep.eps_numerical) < 1e-9
+        assert abs(rounds[-1]["mu"] - rep.mu) < 1e-9
+        assert abs(rounds[-1]["eps_rdp"] - rep.eps_rdp) < 1e-9
+
+    def test_non_dp_algorithm_has_no_ledger(self, problem, tmp_path):
+        out = tmp_path / "fedavg.jsonl"
+        _session(problem, "fedavg").run(KEY, tracker=JsonlTracker(str(out)))
+        rounds = _round_lines(out)
+        assert len(rounds) == ROUNDS
+        assert all("eps" not in o and "ledger_rounds" not in o for o in rounds)
+
+    def test_ledger_delta_none_disables(self, problem, tmp_path):
+        out = tmp_path / "nodelta.jsonl"
+        _session(problem, telemetry=TelemetrySpec(ledger_delta=None)).run(
+            KEY, tracker=JsonlTracker(str(out)))
+        assert all("eps" not in o for o in _round_lines(out))
+
+    def test_spec_validation(self):
+        with pytest.raises(ValueError, match="ledger_delta"):
+            TelemetrySpec(ledger_delta=0.0)
+        with pytest.raises(ValueError, match="profile_rounds"):
+            TelemetrySpec(profile_rounds=(4, 2))
+
+
+class TestResumeAndRecovery:
+    def test_resume_emits_only_new_rounds(self, problem, tmp_path):
+        ck = str(tmp_path / "ck")
+        _session(problem, rounds=3).run(KEY, checkpoint_dir=ck)
+        out = tmp_path / "resume.jsonl"
+        sess = _session(problem)
+        sess.resume(ck, tracker=JsonlTracker(str(out)))
+        rounds = _round_lines(out)
+        assert [o["round"] for o in rounds] == [3, 4, 5]
+        # the cumulative ledger counts from round 0, not from the checkpoint
+        assert [o["ledger_rounds"] for o in rounds] == [4, 5, 6]
+        rep = sess.privacy_report(DELTA)
+        assert abs(rounds[-1]["eps"] - rep.eps_numerical) < 1e-9
+
+    def test_recovery_rollback_stream(self, problem, tmp_path):
+        sess = _session(problem, fault=FaultSpec(watchdog=True),
+                        engine=EngineSpec(chunk_rounds=2))
+
+        def poison_first_attempt(carry, attempt):
+            if attempt >= 1:
+                return carry
+            w = carry[0].at[0].set(jnp.nan)
+            return (w,) + tuple(carry[1:])
+
+        sess._inject_divergence = poison_first_attempt
+        out = tmp_path / "recovery.jsonl"
+        r = sess.run(KEY, checkpoint_dir=str(tmp_path / "ck"),
+                     checkpoint_every=2,
+                     on_divergence=RecoveryPolicy(max_retries=2),
+                     tracker=JsonlTracker(str(out)))
+        assert r.fault_round is None
+
+        lines = _lines(out)
+        rollbacks = [o for o in lines if o.get("event") == "rollback"]
+        assert len(rollbacks) == 1
+        assert rollbacks[0]["to_round"] == 0 and rollbacks[0]["attempt"] == 1
+        # the poisoned attempt surfaces the fault round before the rewind
+        assert any(o.get("watchdog_fault_round") == 0 for o in lines)
+        # validator accepts the rewind; 6 distinct rounds despite the retry
+        text = out.read_text().splitlines()
+        assert check_stream(text, rounds=ROUNDS, label="recovery") == []
+        # retried rounds charge the ledger: final stream entry == report
+        last = _round_lines(out)[-1]
+        assert last["ledger_rounds"] == ROUNDS + 1  # one round re-run
+        rep = sess.privacy_report(DELTA)
+        assert abs(last["eps"] - rep.eps_numerical) < 1e-9
+        # and the recovered run matches an unkilled one bit-for-bit
+        r_ref = _session(problem, fault=FaultSpec(watchdog=True),
+                         engine=EngineSpec(chunk_rounds=2)).run(KEY)
+        np.testing.assert_array_equal(np.asarray(r_ref.final_w),
+                                      np.asarray(r.final_w))
+
+
+class TestProfiler:
+    def test_profile_window_events(self, problem, tmp_path):
+        prof = str(tmp_path / "trace")
+        out = tmp_path / "prof.jsonl"
+        _session(problem, telemetry=TelemetrySpec(
+            profile_rounds=(2, 4), profile_dir=prof)).run(
+            KEY, tracker=JsonlTracker(str(out)))
+        events = [(o["event"], o["round"]) for o in _lines(out) if "event" in o]
+        assert events == [("profile_start", 2), ("profile_stop", 4)]
+        assert os.path.isdir(prof) and os.listdir(prof)
+        # the round stream around the window is untouched
+        assert [o["round"] for o in _round_lines(out)] == list(range(ROUNDS))
+
+
+class TestBatched:
+    def test_run_batched_replay_per_seed(self, problem, tmp_path):
+        keys = jax.random.split(KEY, 3)
+        out = tmp_path / "batched.jsonl"
+        sess = _session(problem)
+        r_on = sess.run_batched(keys, tracker=JsonlTracker(str(out)))
+        r_off = _session(problem).run_batched(keys)
+        np.testing.assert_array_equal(np.asarray(r_off.eta_history),
+                                      np.asarray(r_on.eta_history))
+        lines = _lines(out)
+        assert len(lines) == 3 * ROUNDS
+        for seed in range(3):
+            mine = [o for o in lines if o["seed"] == seed]
+            assert [o["round"] for o in mine] == list(range(ROUNDS))
+            assert [o["ledger_rounds"] for o in mine] == \
+                list(range(1, ROUNDS + 1))
+            assert all("eta" in o and "metric" in o for o in mine)
+
+
+class TestSinks:
+    def test_jsonl_sanitizes_non_finite(self, tmp_path):
+        out = tmp_path / "nan.jsonl"
+        t = JsonlTracker(str(out))
+        t.log(0, {"eta": float("nan"), "metric": float("inf"), "clip": 0.5})
+        [o] = _lines(out)
+        assert o == {"round": 0, "eta": None, "metric": None, "clip": 0.5}
+
+    def test_jsonl_overwrite_vs_append(self, tmp_path):
+        out = tmp_path / "mode.jsonl"
+        JsonlTracker(str(out)).log(0, {"eta": 1.0})
+        JsonlTracker(str(out)).log(1, {"eta": 2.0})  # default: overwrite
+        assert [o["round"] for o in _lines(out)] == [1]
+        JsonlTracker(str(out), append=True).log(2, {"eta": 3.0})
+        assert [o["round"] for o in _lines(out)] == [1, 2]
+
+    def test_stdout_tracker_cadence(self, capsys):
+        t = StdoutTracker(every=2, prefix="x ")
+        for step in range(4):
+            t.log(step, {"eta": 1.0})
+        t.log(9, {"event": "rollback", "to_round": 0})  # control: always
+        lines = capsys.readouterr().out.splitlines()
+        assert len(lines) == 3  # rounds 0, 2 + the control event
+        assert lines[0].startswith("x [round")
+        with pytest.raises(ValueError, match="every"):
+            StdoutTracker(every=0)
+
+    def test_composite_fans_out(self):
+        a, b = _ListTracker(), _ListTracker()
+        t = CompositeTracker(a, b)
+        t.start_phase("run", 0)
+        t.log(0, {"eta": 1.0})
+        t.finish()
+        for sink in (a, b):
+            assert sink.events == [(0, {"eta": 1.0})]
+            assert sink.phases == [("run", 0)]
+            assert sink.finished == 1
+
+    def test_sub_tracker_stamps_seed(self):
+        parent = _ListTracker()
+        sub = parent.sub(2)
+        sub.log(0, {"eta": 1.0})
+        sub.finish()  # no-op: must not close the parent
+        assert parent.events == [(0, {"seed": 2, "eta": 1.0})]
+        assert parent.finished == 0
+
+    def test_wandb_tracker_gated_on_import(self):
+        if importlib.util.find_spec("wandb") is None:
+            with pytest.raises(ImportError):
+                WandbTracker(run=object())
+            return
+
+        class FakeRun:
+            def __init__(self):
+                self.logged, self.finished = [], False
+
+            def log(self, event, step=None):
+                self.logged.append((step, event))
+
+            def finish(self):
+                self.finished = True
+
+        run = FakeRun()
+        t = WandbTracker(run=run)
+        t.log(3, {"eta": 1.0})
+        t.finish()
+        assert run.logged == [(3, {"eta": 1.0})] and run.finished
+
+
+class TestValidator:
+    """tools/check_telemetry.py catches the drift it exists to catch."""
+
+    GOOD = [
+        '{"round": 0, "eta": 0.5, "ledger_rounds": 1, "eps": 0.1, "mu": 0.05}',
+        '{"round": 1, "eta": 0.4, "ledger_rounds": 2, "eps": 0.2, "mu": 0.07}',
+    ]
+
+    def test_good_stream(self):
+        assert check_stream(self.GOOD, rounds=2) == []
+
+    def test_unknown_key_fails(self):
+        bad = ['{"round": 0, "eta": 0.5, "banana": 1}']
+        assert any("banana" in e for e in check_stream(bad))
+
+    def test_contiguity_gap_fails(self):
+        bad = ['{"round": 0, "eta": 0.5}', '{"round": 2, "eta": 0.5}']
+        assert any("contiguity" in e for e in check_stream(bad))
+
+    def test_rollback_rewinds_expectation(self):
+        stream = ['{"round": 0, "eta": 0.5}',
+                  '{"round": 0, "event": "rollback", "to_round": 0, "attempt": 1}',
+                  '{"round": 0, "eta": 0.5}', '{"round": 1, "eta": 0.4}']
+        assert check_stream(stream, rounds=2) == []
+
+    def test_ledger_regression_fails(self):
+        bad = ['{"round": 0, "eta": 0.5, "ledger_rounds": 1, "eps": 0.3}',
+               '{"round": 1, "eta": 0.5, "ledger_rounds": 2, "eps": 0.1}']
+        assert any("decreased" in e for e in check_stream(bad))
+
+    def test_round_count_pinned(self):
+        assert any("distinct" in e for e in
+                   check_stream(self.GOOD, rounds=5))
+
+    def test_frozen_rounds_exempt(self):
+        stream = ['{"round": 0, "eta": 0.5, "watchdog_fault_round": 0}',
+                  '{"round": 1, "frozen": true, "watchdog_fault_round": 0, '
+                  '"round_time_s": 0.1}']
+        assert check_stream(stream, rounds=1) == []
+
+    def test_garbage_line_fails(self):
+        assert any("JSON" in e for e in check_stream(["not json"]))
+
+
+class TestResultHelpers:
+    def test_eval_rounds_follows_cadence(self, problem):
+        r = _session(problem, train=TrainSpec(
+            rounds=ROUNDS, tau=TAU, eta_l=ETA_L, eval_every=2)).run(KEY)
+        pairs = r.eval_rounds()
+        assert [t for t, _ in pairs] == [1, 3, 5]
+        assert all(math.isfinite(v) for _, v in pairs)
+
+    def test_eval_rounds_no_eval_fn(self, problem):
+        r = _session(problem, eval_fn=None).run(KEY)
+        assert r.eval_rounds() == []
+
+    def test_spec_identity_includes_telemetry(self, problem):
+        ident = _session(problem).spec_identity()
+        assert "cdp-fedexp" in ident
+        assert "telemetry=TelemetrySpec" in ident
+        assert "shard=mesh[none]" in ident

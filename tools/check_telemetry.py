@@ -1,0 +1,159 @@
+"""Telemetry JSONL validator: schema + invariants of a §15 tracker stream.
+
+    python tools/check_telemetry.py out.jsonl [more.jsonl ...]
+    python tools/check_telemetry.py --rounds 50 out.jsonl   # pin round count
+
+Validates the stream a ``JsonlTracker`` writes (one JSON object per line):
+
+* every line parses as a JSON object;
+* ROUND lines carry an integer ``"round"`` plus the per-round schema
+  (``eta`` / ``eta_naive`` / ``eta_target`` floats-or-null, optional
+  ``metric`` / ``clip`` / ``participants`` / fault totals / ledger fields)
+  — unknown keys fail, so schema drift is caught in CI, not by a consumer;
+* CONTROL lines carry ``"event"`` (rollback / profile_start / profile_stop
+  and their documented fields) and are exempt from the round schema;
+* round indices are contiguous from the first round seen, except across a
+  ``rollback`` event, which rewinds the expectation to its ``to_round``;
+* the cumulative ledger is monotone: ``ledger_rounds`` strictly increases
+  and ``eps`` / ``mu`` never decrease over executed rounds;
+* with ``--rounds T``: exactly T distinct non-frozen round lines (retried
+  rounds may deliver a round index more than once — the LAST delivery
+  counts, matching the resumable-run semantics).
+
+Pure stdlib so it runs in every CI leg with zero extra dependencies.
+Exit 0 = valid, exit 1 = violations (each printed with its line number).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import numbers
+import sys
+
+# per-round payload keys the engine tap can emit (fedsim/server.py ->
+# repro.telemetry.tap); "seed" joins via run_batched sub-trackers
+ROUND_KEYS = {
+    "round", "seed", "round_time_s", "frozen",
+    "eta", "eta_naive", "eta_target", "metric", "clip", "participants",
+    "realized_clients", "dropped", "stragglers", "corrupt",
+    "watchdog_fault_round",
+    "ledger_rounds", "mu", "eps", "eps_rdp", "ledger_error",
+}
+EVENT_KEYS = {
+    "rollback": {"event", "round", "to_round", "attempt", "seed"},
+    "profile_start": {"event", "round", "trace_dir", "seed"},
+    "profile_stop": {"event", "round", "trace_dir", "seed"},
+}
+
+
+def _num_or_null(v) -> bool:
+    return v is None or (isinstance(v, numbers.Real)
+                         and not isinstance(v, bool))
+
+
+def check_stream(lines, *, rounds: int | None = None,
+                 label: str = "<stream>") -> list[str]:
+    """Return a list of violations (empty = valid)."""
+    errors: list[str] = []
+    expected: int | None = None
+    last_ledger_rounds = 0
+    last_eps = last_mu = float("-inf")
+    delivered: dict[int, dict] = {}
+
+    for n, raw in enumerate(lines, start=1):
+        raw = raw.strip()
+        if not raw:
+            continue
+        try:
+            obj = json.loads(raw)
+        except json.JSONDecodeError as e:
+            errors.append(f"{label}:{n}: not valid JSON ({e})")
+            continue
+        if not isinstance(obj, dict):
+            errors.append(f"{label}:{n}: not a JSON object")
+            continue
+
+        if "event" in obj:
+            kind = obj["event"]
+            allowed = EVENT_KEYS.get(kind)
+            if allowed is None:
+                errors.append(f"{label}:{n}: unknown event {kind!r}")
+                continue
+            extra = set(obj) - allowed
+            if extra:
+                errors.append(f"{label}:{n}: event {kind!r} has unexpected "
+                              f"keys {sorted(extra)}")
+            if kind == "rollback":
+                to = obj.get("to_round")
+                if not isinstance(to, int):
+                    errors.append(f"{label}:{n}: rollback without integer "
+                                  "to_round")
+                else:
+                    expected = to
+            continue
+
+        t = obj.get("round")
+        if not isinstance(t, int) or isinstance(t, bool):
+            errors.append(f"{label}:{n}: round line without integer 'round'")
+            continue
+        extra = set(obj) - ROUND_KEYS
+        if extra:
+            errors.append(f"{label}:{n}: unexpected round keys "
+                          f"{sorted(extra)}")
+        if expected is not None and t != expected:
+            errors.append(f"{label}:{n}: round {t} breaks contiguity "
+                          f"(expected {expected})")
+        expected = t + 1
+
+        if obj.get("frozen"):
+            continue  # watchdog-frozen placeholder: no eta, no ledger
+        for k in ("eta", "eta_naive", "eta_target", "metric", "clip",
+                  "round_time_s", "mu", "eps", "eps_rdp", "loss"):
+            if k in obj and not _num_or_null(obj[k]):
+                errors.append(f"{label}:{n}: {k} is not a number or null")
+        if "eta" not in obj:
+            errors.append(f"{label}:{n}: executed round without 'eta'")
+        delivered[t] = obj
+        if "ledger_rounds" in obj:
+            lr = obj["ledger_rounds"]
+            if not isinstance(lr, int) or lr <= last_ledger_rounds:
+                errors.append(f"{label}:{n}: ledger_rounds {lr!r} not "
+                              f"strictly increasing (last "
+                              f"{last_ledger_rounds})")
+            else:
+                last_ledger_rounds = lr
+            for k, last in (("eps", last_eps), ("mu", last_mu)):
+                v = obj.get(k)
+                if isinstance(v, numbers.Real) and v < last:
+                    errors.append(f"{label}:{n}: ledger {k} decreased "
+                                  f"({v} < {last})")
+            last_eps = max(last_eps, obj.get("eps", last_eps) or last_eps)
+            last_mu = max(last_mu, obj.get("mu", last_mu) or last_mu)
+
+    if rounds is not None and len(delivered) != rounds:
+        errors.append(f"{label}: expected {rounds} distinct executed rounds, "
+                      f"saw {len(delivered)}")
+    return errors
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("paths", nargs="+", help="JSONL telemetry files")
+    ap.add_argument("--rounds", type=int, default=None,
+                    help="require exactly this many distinct executed rounds")
+    args = ap.parse_args()
+
+    failures: list[str] = []
+    for path in args.paths:
+        with open(path) as f:
+            failures += check_stream(f, rounds=args.rounds, label=path)
+    if failures:
+        print(f"{len(failures)} telemetry violations:")
+        for f in failures:
+            print(" ", f)
+        sys.exit(1)
+    print(f"telemetry OK: {len(args.paths)} file(s) validated")
+
+
+if __name__ == "__main__":
+    main()
