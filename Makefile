@@ -16,8 +16,8 @@ bench-quick:               ## reduced-size benchmarks + JSON (CI, CPU interpret)
 bench:                     ## full benchmark suite + JSON
 	$(PYTHON) -m benchmarks.run --json
 
-bench-check:               ## e7+e8 quick run + regression gate vs committed BENCH_engine.json
-	$(PYTHON) -m benchmarks.run --quick --json --only e7 e8
+bench-check:               ## e7+e8+e9 quick run + regression gate vs committed BENCH_engine.json
+	$(PYTHON) -m benchmarks.run --quick --json --only e7 e8 e9
 	$(PYTHON) benchmarks/check_regression.py
 
 docs-check:                ## verify README/DESIGN/docs cross-references resolve

@@ -4,10 +4,11 @@
     make bench-check                                              # bench-quick + gate
 
 Compares the rounds/sec headline metrics of a fresh ``BENCH_engine.json``
-(written by ``make bench-quick`` / ``benchmarks.run --only e7``; ``e8``
-MERGES its ``sparse_cohort`` / ``host_resident`` sections into the same
-file) against the committed baseline and exits non-zero when any gated
-metric regressed by more than ``--threshold`` (default 30%).
+(written by ``make bench-quick`` / ``benchmarks.run --only e7``; ``e8`` and
+``e9`` MERGE their ``sparse_cohort`` / ``host_resident`` / ``compression``
+sections into the same file) against the committed baseline and exits
+non-zero when any gated metric regressed by more than ``--threshold``
+(default 30%).
 
 Because ``bench-quick`` OVERWRITES the repo-root ``BENCH_engine.json``, the
 baseline defaults to ``git show HEAD:BENCH_engine.json`` — the file as
@@ -53,6 +54,11 @@ RATIO_KEYS = (
     # e8 §14: sparse gather vs dense sampled at q=1e-3 — the acceptance
     # headline (>= 5x by construction; the gate watches for erosion)
     ("sparse_cohort", "relative_to_dense"),
+    # e9 §16: rand-k vs dense rounds/sec, and the modeled bytes reduction
+    # (deterministic in (d, k) but gated so a silent comm_floats regression
+    # — e.g. a compressor that stops shrinking the payload — fails loudly)
+    ("compression", "randk_relative_to_dense"),
+    ("compression", "bytes_reduction_randk"),
 )
 # gated only when the run configs match: absolute throughputs
 ABS_KEYS = (
@@ -64,6 +70,7 @@ ABS_KEYS = (
     ("faults", "rounds_per_sec"),
     ("sparse_cohort", "rounds_per_sec"),
     ("host_resident", "rounds_per_sec"),
+    ("compression", "rounds_per_sec"),
 )
 
 
@@ -111,10 +118,11 @@ def main(argv=None) -> int:
               "gate passes vacuously (first benchmarked commit)")
         return 0
 
-    # e8 merges its sections + "e8_config" into e7's file; both identities
-    # must match before absolute numbers gate (the auto-resolved chunk size
-    # is part of e8_config — an auto pick that moves is a config change)
-    mismatched = [k for k in ("config", "e8_config")
+    # e8/e9 merge their sections + "e8_config"/"e9_config" into e7's file;
+    # every identity present must match before absolute numbers gate (the
+    # auto-resolved chunk size is part of e8_config — an auto pick that
+    # moves is a config change; e9_config pins the compression geometry)
+    mismatched = [k for k in ("config", "e8_config", "e9_config")
                   if base.get(k) != fresh.get(k)]
     configs_match = not mismatched
     ratio_threshold = args.threshold if configs_match else 2.0 * args.threshold

@@ -80,6 +80,23 @@ def main(argv=None) -> int:
               f"{hr.get('modeled_peak_update_bytes', 0)/2**20:.1f} MiB, "
               f"measured RSS {hr.get('measured_peak_rss_bytes', 0)/2**20:.0f} MiB")
 
+    cp = rep.get("compression")
+    if cp:
+        parity = "parity ok" if cp.get("convergence_parity") else "PARITY FAIL"
+        line = (f"\n**Compressed communication (e9)** (M={cp.get('clients')}, "
+                f"d={cp.get('dim')}, k={cp.get('k')}): rand-k "
+                f"{cp.get('rounds_per_sec', 0):.2f} r/s vs "
+                f"{cp.get('rounds_per_sec_dense', 0):.2f} dense "
+                f"({cp.get('randk_relative_to_dense', 0):.2f}x), bytes "
+                f"{cp.get('bytes_reduction_randk', 0):.0f}x / "
+                f"{cp.get('bytes_reduction_sketch', 0):.0f}x smaller "
+                f"(rand-k / sketch), lossless-leg {parity}")
+        sh = cp.get("sharded")
+        if sh:
+            line += (f"; sharded ({sh.get('shards')} shards) rand-k "
+                     f"{sh.get('randk_relative_to_dense', 0):.2f}x dense")
+        print(line)
+
     tl = rep.get("telemetry")
     if tl:
         ok = "ledger==report" if tl.get("ledger_matches_report") else \

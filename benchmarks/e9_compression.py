@@ -1,0 +1,253 @@
+"""E9 — §16 compressed communication: rand-k + count-sketch vs dense.
+
+The communication benchmark for the DESIGN.md §16 compression layer at a
+paper-scale model dimension: d >= 2**20 as a MEASURED number (the --quick CI
+floor — shrinking d below that would benchmark a regime where compression is
+pointless).  Three variants of the same cdp-fedexp spec on identical
+geometry, timed interleaved so the ratios are machine-relative:
+
+  dense   — the uncompressed baseline: O(d) reduced state per round.
+  rand-k  — ``RandKAggregation(k=d//64)``: the round collective carries a
+            (k,) coordinate sample; clip-scale commutation means the clipped
+            (M, d) matrix is never materialized (~1 O(M*d) pass vs the dense
+            path's ~3), which is where the >= 2x rounds/sec headline comes
+            from.
+  sketch  — ``CountSketchAggregation(width=d//256, depth=3)``: O(width*depth)
+            reduced state; the depth scatter-adds cost more compute than
+            rand-k, so its headline is bytes, not speed.
+
+Reported per variant: rounds/sec, the MODELED bytes-per-round
+(``4 * algorithm.comm_floats(d)`` — the §16 communication model the
+telemetry tap streams as ``bytes_per_round``) and the reduction vs dense.
+
+Convergence parity is checked on the LOSSLESS rand-k leg (k = d): it runs
+the entire compressed pipeline — per-round plan from the COMPRESS_TAG key,
+compressed-domain CDP noise, decompress, FedEXP eta from the uncompressed
+scalar moments — while keeping the map invertible, so its loss decrease
+must match dense within a few percent (noise realization differs; the math
+must not).  The LOSSY legs trade per-round progress for bytes by
+construction: with FedEXP's eta >= 1 floor, the unbiased d/k amplification
+moves k coordinates per round at dense step size, so equal-ROUND loss
+decrease is k/d of dense — their decrease ratios are recorded as
+informational fields, not gated (equal-BYTES parity is the regime the
+compression literature claims, and it needs d/k more rounds than a CI
+benchmark can afford).
+
+When more than one device is visible, a second leg times dense vs rand-k
+under ``shard=client_shard_spec(n)``: the §16 point is that the per-round
+collective (the psum payload) drops from O(d) to O(k) with NO engine
+change, so the sharded ratio is recorded too.
+
+Like e8, e9 MERGES its ``compression`` + ``e9_config`` sections into
+BENCH_engine.json (e7 owns the file and overwrites it wholesale), so one
+committed baseline carries all three benchmarks and ``check_regression.py``
+gates whatever is present.
+"""
+from __future__ import annotations
+
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import RESULTS_DIR, print_table
+from benchmarks.harness import interleaved_best
+from repro.core.compose import (
+    CountSketchAggregation,
+    RandKAggregation,
+    with_compression,
+)
+from repro.core.fedexp import make_algorithm
+from repro.fedsim import FederatedSession, TrainSpec
+from repro.launch.mesh import auto_shard_count, client_shard_spec
+
+FLOAT_BYTES = 4
+DIM_FLOOR = 1 << 20   # the CI floor: d never drops below 2**20
+CLIP = 1.0
+# keeps the CDP noise VECTOR norm (sigma/sqrt(M) per coordinate over d
+# coordinates) well under the unit-norm signal at d = 2**20 — a paper-scale
+# sigma would have every variant random-walking and nothing to compare
+SIGMA = 5e-4
+K_DIV = 64            # rand-k keeps d/64 coordinates
+W_DIV = 256           # sketch width d/256, depth 3
+DEPTH = 3
+
+
+def _quad_loss(w, b):
+    return 0.5 * jnp.sum(jnp.square(w - b["t"]))
+
+
+def _targets(m: int, d: int) -> np.ndarray:
+    """(m, d) client targets = shared signal + 30% heterogeneity, both at
+    O(1) norm so clip=1 binds the way a trained model's update does.  A
+    pure-noise target set has mean ~0 == w0 and nothing to learn."""
+    rng = np.random.default_rng(0)
+    shared = (rng.standard_normal(d) * d**-0.5).astype(np.float32)
+    het = (rng.standard_normal((m, d)) * d**-0.5).astype(np.float32)
+    return shared[None, :] + 0.3 * het
+
+
+def _mean_loss(w, targets: np.ndarray) -> float:
+    w = np.asarray(w)
+    return float(np.mean(0.5 * np.sum(np.square(w[None, :] - targets), -1)))
+
+
+def _algorithm(m: int, aggregation=None):
+    alg = make_algorithm("cdp-fedexp", clip_norm=CLIP, sigma=SIGMA,
+                         num_clients=m)
+    return alg if aggregation is None else with_compression(alg, aggregation)
+
+
+def _merge_report(sections: dict) -> None:
+    """Read-modify-write BENCH_engine.json (same discipline as e8: e7 owns
+    the file, later benchmarks fold their sections in)."""
+    os.makedirs(RESULTS_DIR, exist_ok=True)
+    for path in (os.path.join(RESULTS_DIR, "BENCH_engine.json"),
+                 "BENCH_engine.json"):
+        try:
+            with open(path) as f:
+                report = json.load(f)
+        except (OSError, json.JSONDecodeError):
+            report = {}
+        report.update(sections)
+        with open(path, "w") as f:
+            json.dump(report, f, indent=2)
+
+
+def main(*, dim: int = DIM_FLOOR, clients: int = 256, rounds: int = 10,
+         quick: bool = False):
+    if quick:
+        clients, rounds = 64, 4
+    dim = max(dim, DIM_FLOOR)
+    k = dim // K_DIV
+    width = dim // W_DIV
+
+    key = jax.random.PRNGKey(0)
+    w0 = jnp.zeros((dim,))
+    targets = _targets(clients, dim)
+    batches = {"t": jax.device_put(targets)}
+    train = TrainSpec(rounds=rounds, tau=1, eta_l=0.5)
+
+    def session(aggregation=None, *, shard=None, n_rounds=rounds):
+        kw = {} if shard is None else {"shard": shard}
+        return FederatedSession(
+            _algorithm(clients, aggregation), _quad_loss, w0, batches,
+            train=TrainSpec(rounds=n_rounds, tau=1, eta_l=0.5), **kw)
+
+    variants = [
+        ("dense", None),
+        (f"rand-k (k=d/{K_DIV})", RandKAggregation(k=k)),
+        (f"sketch ({W_DIV}:1 x{DEPTH})",
+         CountSketchAggregation(width=width, depth=DEPTH)),
+    ]
+    sessions = [session(agg) for _, agg in variants]
+    bytes_pr = [FLOAT_BYTES * s.algorithm.comm_floats(dim) for s in sessions]
+    repeats = 2 if quick else 3
+    best = interleaved_best(sessions, key, repeats=repeats)
+    rps = [rounds / b for b in best]
+
+    rows = [[name, r, bpr / 2**20, bytes_pr[0] / bpr]
+            for (name, _), r, bpr in zip(variants, rps, bytes_pr)]
+    print_table(
+        f"E9 compressed communication (M={clients}, d={dim}, T={rounds})",
+        ["variant", "rounds/sec", "bytes/round MiB", "bytes reduction"],
+        rows)
+
+    # convergence: lossless rand-k (k=d) must match dense; lossy decreases
+    # are informational (see module docstring)
+    parity_rounds = min(rounds, 4)
+    L0 = _mean_loss(w0, targets)
+    finals = {}
+    for tag, agg in [("dense", None), ("lossless", RandKAggregation(k=dim)),
+                     ("randk", RandKAggregation(k=k)),
+                     ("sketch", CountSketchAggregation(width=width,
+                                                       depth=DEPTH))]:
+        r = session(agg, n_rounds=parity_rounds).run(key)
+        finals[tag] = _mean_loss(r.last_w, targets)
+    dense_dec = L0 - finals["dense"]
+    parity_err = abs(finals["lossless"] - finals["dense"]) / max(dense_dec,
+                                                                 1e-12)
+    parity_ok = dense_dec > 0 and parity_err < 0.05
+
+    section = {
+        "clients": clients, "dim": dim, "rounds": rounds,
+        "k": k, "width": width, "depth": DEPTH,
+        "algorithm": "cdp-fedexp",
+        "rounds_per_sec": rps[1],                 # the rand-k headline
+        "rounds_per_sec_dense": rps[0],
+        "rounds_per_sec_sketch": rps[2],
+        "randk_relative_to_dense": rps[1] / rps[0],
+        "sketch_relative_to_dense": rps[2] / rps[0],
+        "bytes_per_round_dense": bytes_pr[0],
+        "bytes_per_round_randk": bytes_pr[1],
+        "bytes_per_round_sketch": bytes_pr[2],
+        "bytes_reduction_randk": bytes_pr[0] / bytes_pr[1],
+        "bytes_reduction_sketch": bytes_pr[0] / bytes_pr[2],
+        "parity_rounds": parity_rounds,
+        "parity_rel_err": parity_err,
+        "convergence_parity": bool(parity_ok),
+        "lossy_decrease_ratio_randk": (L0 - finals["randk"]) / max(dense_dec,
+                                                                   1e-12),
+        "lossy_decrease_ratio_sketch": (L0 - finals["sketch"]) / max(dense_dec,
+                                                                     1e-12),
+        "final_params_finite": bool(all(np.isfinite(v) for v in
+                                        finals.values())),
+    }
+
+    n_dev = len(jax.devices())
+    if n_dev > 1:
+        # the sharded leg: the collective payload is the compressed pytree,
+        # so the psum itself shrinks from O(d) to O(k) — no engine change
+        n = auto_shard_count(clients, n_devices=n_dev)
+        sh_sessions = [session(None, shard=client_shard_spec(n)),
+                       session(RandKAggregation(k=k),
+                               shard=client_shard_spec(n))]
+        sh_best = interleaved_best(sh_sessions, key, repeats=repeats)
+        sh_rps = [rounds / b for b in sh_best]
+        print_table(
+            f"E9 sharded leg ({n} client shards)",
+            ["variant", "rounds/sec"],
+            [["dense", sh_rps[0]], ["rand-k", sh_rps[1]]])
+        section["sharded"] = {
+            "shards": n, "devices": n_dev,
+            "rounds_per_sec_dense": sh_rps[0],
+            "rounds_per_sec_randk": sh_rps[1],
+            "randk_relative_to_dense": sh_rps[1] / sh_rps[0],
+        }
+
+    sections = {
+        "compression": section,
+        "e9_config": {
+            "clients": clients, "dim": dim, "rounds": rounds, "quick": quick,
+            "k": k, "width": width, "depth": DEPTH,
+            "backend": jax.default_backend(), "devices": n_dev,
+            "host_cpus": os.cpu_count(),
+        },
+    }
+    _merge_report(sections)
+
+    speed_ok = section["randk_relative_to_dense"] >= 2.0
+    bytes_ok = section["bytes_reduction_randk"] >= 10.0
+    tag = "OK " if (speed_ok and bytes_ok and parity_ok) else "WARN"
+    print(f"{tag} rand-k k=d/{K_DIV}: "
+          f"{section['randk_relative_to_dense']:.2f}x dense rounds/sec "
+          f"(floor 2x), {section['bytes_reduction_randk']:.0f}x fewer bytes "
+          f"(floor 10x); lossless-leg parity err "
+          f"{section['parity_rel_err']:.1%} (floor 5%); lossy equal-round "
+          f"decrease {section['lossy_decrease_ratio_randk']:+.3f}x dense "
+          f"(informational — progress traded for bytes)")
+    return [[key_, val] for key_, val in section.items()]
+
+
+if __name__ == "__main__":
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--dim", type=int, default=DIM_FLOOR)
+    ap.add_argument("--clients", type=int, default=256)
+    ap.add_argument("--rounds", type=int, default=10)
+    args = ap.parse_args()
+    main(dim=args.dim, clients=args.clients, rounds=args.rounds,
+         quick=args.quick)

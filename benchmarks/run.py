@@ -16,6 +16,8 @@ Benchmarks:
         BENCH_engine.json (results/bench/ + repo root) for trajectory tracking
     e8  million-client rounds — sparse sampled cohorts + host-resident data
         (DESIGN.md §14); merges its sections into BENCH_engine.json
+    e9  compressed communication — rand-k + count-sketch vs dense at d >= 2**20
+        (DESIGN.md §16); merges its sections into BENCH_engine.json
     roofline          — §Roofline tables (baseline + optimized) from dry-runs
 """
 from __future__ import annotations
@@ -23,7 +25,7 @@ from __future__ import annotations
 import argparse
 import time
 
-ALL = ("e1", "e2", "e3", "e4", "e5", "e6", "e7", "e8", "roofline")
+ALL = ("e1", "e2", "e3", "e4", "e5", "e6", "e7", "e8", "e9", "roofline")
 
 
 def main() -> None:
@@ -93,6 +95,10 @@ def main() -> None:
         # AFTER e7: e7 overwrites BENCH_engine.json wholesale, e8 merges
         from benchmarks import e8_million_clients
         record("e8_million_clients", e8_million_clients.main(quick=args.quick))
+    if "e9" in which:
+        # also after e7 (merge, don't overwrite) — see e8 comment above
+        from benchmarks import e9_compression
+        record("e9_compression", e9_compression.main(quick=args.quick))
     if "roofline" in which:
         import os as _os
         from benchmarks import roofline_table

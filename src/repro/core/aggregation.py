@@ -265,6 +265,8 @@ def partial_clip_moments(
     backend: str = "auto",
     interpret: bool | None = None,
     block_m: int | None = None,
+    compress_fn=None,
+    compress_row_bound=None,
 ) -> RoundMoments:
     """Shard-local clip -> (optional noise) -> PARTIAL SUMS over the rows.
 
@@ -295,11 +297,34 @@ def partial_clip_moments(
     untouched; ``None`` is bit-identical to the historical unweighted path.
     Weighted reductions always use the jnp path (the kernel's fixed sums
     don't take per-row weights).
+
+    ``compress_fn`` (optional, DESIGN.md §16) is a LINEAR per-row map
+    (..., d) -> (..., kc) — rand-k selection or count-sketch — applied to the
+    released rows so ``sum_c`` becomes the (kc,) compressed partial sum while
+    the three SCALAR sums stay the dense values (FedEXP's step-size inputs
+    are exact under compression).  Linearity lets the clip scales commute:
+    the raw rows are compressed once and the per-row scale multiplies the
+    (m, kc) compressed block, so the clipped (M, d) matrix never
+    materializes — one O(M·d) pass (the row norms) instead of the dense
+    path's three.  Per-row ``noise`` is rejected (an LDP release is a full
+    R^d vector; compression composes with CENTRAL noise added after the
+    reduction) and the kernel backend is bypassed (its fixed sums are
+    dense).  ``compress_row_bound`` re-clips each COMPRESSED row to that L2
+    bound — the count-sketch sensitivity enforcement (worst-case row growth
+    sqrt(depth); the bound is a no-op for rows the sketch didn't inflate).
     """
     m = raw_updates.shape[0]
     backend = resolve_backend(backend)
     if backend == "kernel-fused":   # no key routed here; see docstring
         backend = "kernel"
+    if compress_fn is not None:
+        if noise is not None:
+            raise ValueError(
+                "compress_fn cannot combine with per-row (LDP) noise: each "
+                "client's release is a full R^d vector, so there is nothing "
+                "sound to compress.  Use central noise (added to the "
+                "compressed aggregate) or drop the compression layer.")
+        backend = "jnp"   # the kernel's fixed dense sums cannot compress
     if row_weights is not None:
         backend = "jnp"
     if weight_mask is not None:
@@ -327,6 +352,25 @@ def partial_clip_moments(
 
     sq_norms = jnp.sum(jnp.square(raw_updates), axis=-1)
     scale = jnp.minimum(1.0, clip_norm / jnp.maximum(jnp.sqrt(sq_norms), _EPS))
+    if compress_fn is not None:
+        # clip commutes with the linear compressor: compress the raw rows,
+        # then scale the (m, kc) block — never the (m, d) clipped matrix
+        comp = compress_fn(raw_updates) * scale[:, None]
+        if compress_row_bound is not None:
+            comp_sq = jnp.sum(jnp.square(comp), axis=-1)
+            comp = comp * jnp.minimum(
+                1.0, compress_row_bound / jnp.maximum(jnp.sqrt(comp_sq),
+                                                      _EPS))[:, None]
+        # scalar sums are the DENSE clipped values (exact step-size inputs)
+        if row_weights is not None:
+            v = gate * row_weights
+            sum_sq_clipped = v @ (sq_norms * jnp.square(scale))
+            return RoundMoments(sum_c=v @ comp, sum_sq=sum_sq_clipped,
+                                sum_sq_clipped=sum_sq_clipped, count=count)
+        sum_sq_clipped = jnp.sum(sq_norms * jnp.square(scale))
+        ones = jnp.ones((m,), jnp.float32)
+        return RoundMoments(sum_c=ones @ comp, sum_sq=sum_sq_clipped,
+                            sum_sq_clipped=sum_sq_clipped, count=count)
     clipped = raw_updates * scale[:, None]
     released = clipped if noise is None else clipped + noise
     if row_weights is not None:
@@ -355,6 +399,8 @@ def streamed_clip_moments(
     backend: str = "auto",
     interpret: bool | None = None,
     block_m: int | None = None,
+    compress_fn=None,
+    compress_row_bound=None,
 ) -> RoundMoments:
     """``partial_clip_moments`` streamed over row chunks (DESIGN.md §12).
 
@@ -378,6 +424,10 @@ def streamed_clip_moments(
       row_weights: optional (M,) per-client aggregation weights (§11).
       backend: per-chunk reduction backend, as ``partial_clip_moments``.
       interpret / block_m: kernel knobs, forwarded per chunk.
+      compress_fn / compress_row_bound: optional §16 per-row compressor,
+        forwarded per chunk; the scan carry's ``sum_c`` takes the COMPRESSED
+        width (from ``jax.eval_shape``), so chunk partial sums stay additive
+        in the compressed domain — the stream form of the §16 invariant.
 
     Returns:
       The cohort's ``RoundMoments`` partial SUMS, count included —
@@ -413,10 +463,18 @@ def streamed_clip_moments(
         mom = partial_clip_moments(
             chunk["u"], clip_norm, chunk.get("noise"),
             weight_mask=chunk["mask"], row_weights=chunk.get("w"),
-            backend=backend, interpret=interpret, block_m=block_m)
+            backend=backend, interpret=interpret, block_m=block_m,
+            compress_fn=compress_fn, compress_row_bound=compress_row_bound)
         return jax.tree_util.tree_map(jnp.add, acc, mom), None
 
-    zero = RoundMoments(sum_c=jnp.zeros(raw_updates.shape[1:], jnp.float32),
+    if compress_fn is None:
+        sum_c_zero = jnp.zeros(raw_updates.shape[1:], jnp.float32)
+    else:   # the carry accumulates COMPRESSED partial sums
+        kc = jax.eval_shape(
+            compress_fn, jax.ShapeDtypeStruct((1,) + raw_updates.shape[1:],
+                                              jnp.float32)).shape[-1]
+        sum_c_zero = jnp.zeros((kc,), jnp.float32)
+    zero = RoundMoments(sum_c=sum_c_zero,
                         sum_sq=jnp.float32(0.0),
                         sum_sq_clipped=jnp.float32(0.0),
                         count=jnp.float32(0.0))
@@ -428,9 +486,16 @@ def streamed_clip_moments(
     return moments
 
 
-def raw_moments(deltas: jax.Array, mask: jax.Array,
-                row_weights: jax.Array | None = None) -> RoundMoments:
+def raw_moments(deltas: jax.Array, mask: jax.Array | None,
+                row_weights: jax.Array | None = None, *,
+                compress_fn=None) -> RoundMoments:
     """Unclipped per-shard sums (non-private algorithms); mask-weighted.
+
+    ``compress_fn`` (optional, DESIGN.md §16): a linear per-row compressor
+    applied to the rows feeding ``sum_c`` only — the scalar sums stay the
+    dense values, exactly as in ``partial_clip_moments``.  Where-zeroed
+    masked rows compress to zero rows (linearity), so padding clients
+    contribute nothing to the compressed sum either.
 
     Every masked scalar sum is a dot with the mask: on XLA:CPU a fused
     ``sum(mask * x)`` accumulates in a different order than the plain
@@ -443,9 +508,21 @@ def raw_moments(deltas: jax.Array, mask: jax.Array,
     the source (so this is a numeric no-op on that path), but a direct
     caller's garbage row must not leak as ``0 * inf = NaN`` through the
     mask dot — masked clients contribute exactly zero, always.
+
+    ``mask=None`` means full participation with no gate at all: the where
+    pass and the traced count are skipped (an all-ones dot is kept so the
+    reduction order — hence bitwise value — matches the masked path).
     """
-    deltas = jnp.where(mask[:, None] > 0, deltas, 0.0)
-    v = mask if row_weights is None else mask * row_weights
+    if mask is None:
+        v = (jnp.ones((deltas.shape[0],), jnp.float32) if row_weights is None
+             else row_weights)
+        count = (jnp.float32(deltas.shape[0]) if row_weights is None
+                 else jnp.sum(row_weights))
+    else:
+        deltas = jnp.where(mask[:, None] > 0, deltas, 0.0)
+        v = mask if row_weights is None else mask * row_weights
+        count = jnp.sum(v)
     sum_sq = v @ jnp.sum(jnp.square(deltas), axis=-1)
-    return RoundMoments(sum_c=v @ deltas, sum_sq=sum_sq,
-                        sum_sq_clipped=sum_sq, count=jnp.sum(v))
+    rows = deltas if compress_fn is None else compress_fn(deltas)
+    return RoundMoments(sum_c=v @ rows, sum_sq=sum_sq,
+                        sum_sq_clipped=sum_sq, count=count)

@@ -134,6 +134,15 @@ class ServerAlgorithm:
         """One dense server round: ``(key, w, (M, d) raw deltas) -> (w_next, RoundAux)``."""
         raise NotImplementedError
 
+    def comm_floats(self, d: int) -> int:
+        """Floats of per-round reduced state (the communication model,
+        DESIGN.md §16): what one client uploads and the round collective
+        moves — ``sum_c`` plus the three scalar moments by default.
+        Compressed compositions override this with their O(k) /
+        O(width·depth) payload; the telemetry tap reports
+        ``4 * comm_floats(d)`` as ``bytes_per_round``."""
+        return d + 3
+
     def init_state(self, w: jax.Array):
         """Initial optimizer/clip carry for a run starting from ``w``."""
         return ()

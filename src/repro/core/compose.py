@@ -54,11 +54,12 @@ of these compositions, pinned bit-for-bit against the monolithic classes by
 from __future__ import annotations
 
 import dataclasses
+import math
 
 import jax
 import jax.numpy as jnp
 
-from repro.core import accounting, stepsize
+from repro.core import accounting, compression, stepsize
 from repro.core import mechanisms as mech
 from repro.core.aggregation import (
     RoundMoments,
@@ -80,6 +81,10 @@ __all__ = [
     "Aggregation",
     "MeanAggregation",
     "WeightedAggregation",
+    "RandKAggregation",
+    "CountSketchAggregation",
+    "CompressionCarry",
+    "with_compression",
     "GlobalStep",
     "FixedEta",
     "FedEXPStep",
@@ -115,6 +120,15 @@ class PrivacyMechanism:
 
     is_private = True
     needs_xi_key = False            # CDP-style post-aggregation numerator noise
+    # compression (DESIGN.md §16): only mechanisms whose release randomness is
+    # drawn AFTER the aggregation (central noise) — or not at all — can ride a
+    # compressed sum.  An LDP release is a full R^d vector per client; there
+    # is no sound way to compress it server-side, so LDP mechanisms leave
+    # this False and ComposedAlgorithm rejects the composition at build time.
+    supports_compression = False
+    # scalar extras psummed alongside the moments (PrivUnit's sum_s_hat);
+    # counted by the §16 communication model
+    n_scalar_extras = 0
 
     @property
     def clip_independent_budget(self) -> bool:
@@ -141,6 +155,16 @@ class PrivacyMechanism:
         """Globally reduced moments -> the ``RoundStats`` the step layer consumes."""
         return mom.stats(), {}
 
+    def compressed_noise(self, key, shape, clip, m_eff, sens_factor):
+        """Release noise for a COMPRESSED aggregate mean of the given shape
+        (DESIGN.md §16), or None when this release adds no central noise.
+        ``sens_factor`` is the compressor's worst-case row-norm growth
+        (enforced pre-aggregation by the moment path's row re-clip), so the
+        per-cell noise std scales by it and the C/sigma ratio — all the
+        accounting sees — is unchanged from the dense release."""
+        raise NotImplementedError(
+            f"{type(self).__name__} does not support compressed aggregation")
+
     def extrapolation(self, k_xi, stats, extras, dim, clip, m_eff):
         """This mechanism's debiased step size: ``(eta_g, eta_naive, eta_target)``."""
         raise NotImplementedError
@@ -155,14 +179,21 @@ class NoPrivacy(PrivacyMechanism):
     """No clipping, no noise: the FedAvg/FedEXP reference release."""
 
     is_private = False
+    supports_compression = True     # nothing to privatize; compression is free
 
     def release(self, key, deltas, clip, m):
         """Dense release: clip + randomize + reduce M rows to ``(RoundStats, extras)``."""
         return aggregate_stats(deltas), {}
 
-    def moments(self, key, deltas, mask, start, clip, row_weights=None):
+    def moments(self, key, deltas, mask, start, clip, row_weights=None,
+                compress_fn=None, compress_row_bound=None):
         """Shard-local partial SUMS of the release over masked rows at global ``start``."""
-        return raw_moments(deltas, mask, row_weights), {}
+        return raw_moments(deltas, mask, row_weights,
+                           compress_fn=compress_fn), {}
+
+    def compressed_noise(self, key, shape, clip, m_eff, sens_factor):
+        """No release noise; the compressed aggregate passes through."""
+        return None
 
     def extrapolation(self, k_xi, stats, extras, dim, clip, m_eff):
         """This mechanism's debiased step size: ``(eta_g, eta_naive, eta_target)``."""
@@ -228,6 +259,8 @@ class PrivUnitLDP(PrivacyMechanism):
     eps1: float
     eps2: float
     dim: int
+
+    n_scalar_extras = 1      # sum_s_hat rides the psum next to the moments
 
     def __post_init__(self):
         object.__setattr__(self, "pu", mech.make_privunit_params(self.dim, self.eps0, self.eps1))
@@ -329,6 +362,7 @@ class CentralGaussian(PrivacyMechanism):
     backend: str = "auto"
 
     needs_xi_key = True
+    supports_compression = True     # noise is drawn POST-aggregation (§16)
 
     def __post_init__(self):
         if (self.sigma is None) == (self.z_mult is None):
@@ -371,11 +405,14 @@ class CentralGaussian(PrivacyMechanism):
                           agg_sq=jnp.sum(jnp.square(cbar)),
                           mean_sq_clipped=stats.mean_sq_clipped), {}
 
-    def moments(self, key, deltas, mask, start, clip, row_weights=None):
+    def moments(self, key, deltas, mask, start, clip, row_weights=None,
+                compress_fn=None, compress_row_bound=None):
         """Shard-local partial SUMS of the release over masked rows at global ``start``."""
         return partial_clip_moments(deltas, self._clip(clip), None,
                                     weight_mask=mask, row_weights=row_weights,
-                                    backend=self.backend), {}
+                                    backend=self.backend,
+                                    compress_fn=compress_fn,
+                                    compress_row_bound=compress_row_bound), {}
 
     def finalize(self, key, mom, extras, clip, m_eff):
         """Globally reduced moments -> the ``RoundStats`` the step layer consumes."""
@@ -383,6 +420,18 @@ class CentralGaussian(PrivacyMechanism):
         return RoundStats(cbar=cbar, mean_sq=mom.sum_sq / mom.count,
                           agg_sq=jnp.sum(jnp.square(cbar)),
                           mean_sq_clipped=mom.sum_sq_clipped / mom.count), {}
+
+    def compressed_noise(self, key, shape, clip, m_eff, sens_factor):
+        """Gaussian noise on the compressed aggregate mean (DESIGN.md §16).
+
+        Per-client sensitivity of the compressed SUM is ``sens_factor * C``
+        (rand-k is a contraction, sens_factor 1; count-sketch rows are
+        re-clipped to ``sqrt(depth) * C`` by the moment path), so the mean's
+        noise std is the dense release's ``sigma(C) / sqrt(m)`` scaled by the
+        same factor — the C/sigma ratio, hence ``budget()``, is unchanged."""
+        return (sens_factor * self._sigma(clip)
+                / jnp.sqrt(self._m_noise(m_eff))) \
+            * jax.random.normal(key, shape)
 
     def extrapolation(self, k_xi, stats, extras, dim, clip, m_eff):
         """This mechanism's debiased step size: ``(eta_g, eta_naive, eta_target)``."""
@@ -423,13 +472,57 @@ class CentralGaussian(PrivacyMechanism):
 # ---------------------------------------------------------------------------
 
 class Aggregation:
-    """How released client updates combine into the round's moments."""
+    """How released client updates combine into the round's moments.
+
+    Two orthogonal capabilities ride this layer: per-client WEIGHTS
+    (``is_weighted``; public reweighting after each DP release) and
+    per-round COMPRESSION (``is_compressed``, DESIGN.md §16; a linear
+    per-row map shrinking the O(d) round collective to the compressed
+    width).  A compressed layer's plan is re-derived each round from
+    ``fold_in(round_key, COMPRESS_TAG)`` — replicated, so every shard and
+    stream chunk compresses with the identical plan and the compressed
+    partial sums stay additive (§12).
+    """
 
     is_weighted: bool = False
+    is_compressed = False
+    # worst-case L2 growth of a compressed row vs its dense norm; the moment
+    # path re-clips compressed rows to sens_factor * C so central noise can
+    # scale by exactly this factor (§16)
+    sens_factor = 1.0
+    uses_error_feedback = False
 
     def row_weights(self, start, m_local):
         """Per-client aggregation weights for the rows [start, start + m_local)."""
         return None
+
+    def comm_floats(self, d: int) -> int:
+        """Floats in one client's released update / the round's vector sum."""
+        return d
+
+    # -- compression API (no-ops for dense layers) --------------------------
+
+    def plan(self, plan_key, d):
+        """Per-round shared-randomness tables (indices / hashes); None = dense."""
+        return None
+
+    def compress_fn(self, plan):
+        """The linear per-row compressor ``(..., d) -> (..., kc)`` for this plan."""
+        return None
+
+    def decompress(self, comp, plan, d):
+        """(kc,) compressed aggregate -> (d,) estimate (identity when dense)."""
+        return comp
+
+    def select(self, g):
+        """Post-decompression support selection (top-k); identity by default."""
+        return g
+
+
+def _as_int(name: str, v) -> int:
+    if not isinstance(v, int) or isinstance(v, bool) or v < 1:
+        raise ValueError(f"{name} must be a positive int, got {v!r}")
+    return v
 
 
 @dataclasses.dataclass(frozen=True)
@@ -481,6 +574,116 @@ class WeightedAggregation(Aggregation):
         # clients past M slice zeros
         padded = jnp.concatenate([w, jnp.zeros((m_local,), jnp.float32)])
         return jax.lax.dynamic_slice(padded, (start,), (m_local,))
+
+
+@dataclasses.dataclass(frozen=True)
+class RandKAggregation(Aggregation):
+    """Unbiased random-k coordinate aggregation (DESIGN.md §16).
+
+    Each round draws k distinct coordinates (shared plan from the round
+    key — no per-client state, so it composes with §14 sampling); clients'
+    clipped updates are projected onto them, the round reduces a (k,) sum,
+    and the server's d/k-scaled scatter is an UNBIASED estimate of the dense
+    mean: ``E[decompress(compress(x))] = x`` over the index draw.  A
+    coordinate projection is an L2 contraction, so the compressed release
+    keeps sensitivity C exactly (sens_factor 1) and central noise is the
+    dense std per compressed coordinate.  Unbiased => no error feedback.
+    """
+
+    k: int
+
+    is_compressed = True
+
+    def __post_init__(self):
+        _as_int("k", self.k)
+
+    def comm_floats(self, d: int) -> int:
+        """Floats in one client's released update / the round's vector sum."""
+        return min(self.k, d)
+
+    def plan(self, plan_key, d):
+        """(k,) distinct coordinate indices drawn for this round."""
+        return compression.randk_plan(plan_key, d, min(self.k, d))
+
+    def compress_fn(self, plan):
+        """The linear per-row compressor ``(..., d) -> (..., k)``."""
+        return lambda u: compression.randk_compress(u, plan)
+
+    def decompress(self, comp, plan, d):
+        """Unbiased (d,) estimate: scatter the (k,) sum back, scaled by d/k."""
+        return compression.randk_decompress(comp, plan, d)
+
+
+@dataclasses.dataclass(frozen=True)
+class CountSketchAggregation(Aggregation):
+    """Count-sketch aggregation with heavy-hitter recovery (DESIGN.md §16).
+
+    Clients sketch their clipped update into a (depth, width) bucket table
+    (shared per-round hashes from the round key), the round reduces the
+    (depth * width,) flattened sketch, and the server unsketches by
+    median-of-depth, optionally keeping only the ``top_k`` largest-|.|
+    coordinates (heavy hitters).  The sketch is BIASED once ``top_k``
+    truncates the support, so ``error_feedback=True`` carries the
+    truncation residual server-side (in the scan state) and re-injects it
+    next round — the EF accumulator restores convergence for the biased
+    variant.  Worst-case row growth: a (depth, d) sign-hash sketch of a
+    C-clipped row has L2 at most ``sqrt(depth) * C`` in expectation-exact
+    cases and up to ``sqrt(depth) * ||u||_1`` adversarially, so the moment
+    path RE-CLIPS each compressed row to ``sqrt(depth) * C`` (sens_factor)
+    before summing — sensitivity is enforced, not assumed, and central
+    noise scales by the same factor (the C/sigma accounting is unchanged).
+    """
+
+    width: int
+    depth: int = 3
+    top_k: int | None = None
+    error_feedback: bool = False
+
+    is_compressed = True
+
+    def __post_init__(self):
+        _as_int("width", self.width)
+        _as_int("depth", self.depth)
+        if self.top_k is not None:
+            _as_int("top_k", self.top_k)
+        if self.error_feedback and self.top_k is None:
+            raise ValueError(
+                "error_feedback without top_k has nothing to feed back: the "
+                "un-truncated median unsketch is already the best estimate "
+                "this sketch offers.  Set top_k=<support size> (the biased "
+                "variant EF exists to correct) or drop error_feedback.")
+
+    @property
+    def sens_factor(self):
+        """Worst-case compressed-row L2 growth: sqrt(depth) sign-hash tables."""
+        return math.sqrt(self.depth)
+
+    @property
+    def uses_error_feedback(self):
+        """Whether the carry grows a server-side EF residual (§16)."""
+        return self.error_feedback
+
+    def comm_floats(self, d: int) -> int:
+        """Floats in one client's released update / the round's vector sum."""
+        return self.width * self.depth
+
+    def plan(self, plan_key, d):
+        """This round's (depth, d) bucket ids + Rademacher signs."""
+        return compression.sketch_plan(plan_key, d, self.width, self.depth)
+
+    def compress_fn(self, plan):
+        """The linear per-row sketcher ``(..., d) -> (..., depth * width)``."""
+        return lambda u: compression.sketch_compress(u, plan, self.width)
+
+    def decompress(self, comp, plan, d):
+        """Median-of-depth unsketch to a dense (d,) estimate (no truncation
+        here — ``select`` applies top-k AFTER error feedback so the EF
+        residual sees the full estimate)."""
+        return compression.sketch_decompress(comp, plan, d)
+
+    def select(self, g):
+        """Keep the top_k largest-|.| coordinates (identity when top_k unset)."""
+        return g if self.top_k is None else compression.topk_select(g, self.top_k)
 
 
 # ---------------------------------------------------------------------------
@@ -651,6 +854,22 @@ class AdaptiveClipStep(GlobalStep):
 # The composed server algorithm
 # ---------------------------------------------------------------------------
 
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class CompressionCarry:
+    """Server carry of an error-feedback compressed composition (§16).
+
+    Wraps the step's own state with the (d,) EF residual so EF rides the
+    engines' existing scan/stream/checkpoint carry unchanged; every state
+    touchpoint in ComposedAlgorithm unwraps ``inner`` before the step sees
+    it.  Only built when the aggregation layer asks for error feedback —
+    every other composition's carry shape is untouched.
+    """
+
+    ef: jax.Array
+    inner: object
+
+
 @dataclasses.dataclass(frozen=True)
 class ComposedAlgorithm(ServerAlgorithm):
     """mechanism x aggregation x step as one engine-facing ServerAlgorithm.
@@ -667,6 +886,18 @@ class ComposedAlgorithm(ServerAlgorithm):
     aggregation: Aggregation = MeanAggregation()
     name: str = "composed"
 
+    def __post_init__(self):
+        if (self.aggregation.is_compressed
+                and not self.mechanism.supports_compression):
+            raise ValueError(
+                f"{self.name!r} composes {type(self.mechanism).__name__} with "
+                f"{type(self.aggregation).__name__}, but an LDP mechanism "
+                "releases a full R^d vector per client — its noise is drawn "
+                "BEFORE aggregation, so there is no sound compressed release "
+                "(DESIGN.md §16).  Use CentralGaussian (noise is added to the "
+                "compressed aggregate) or NoPrivacy, or drop the compression "
+                "layer.")
+
     @property
     def is_private(self):
         """Whether the composed release carries a DP guarantee (the mechanism's)."""
@@ -676,6 +907,20 @@ class ComposedAlgorithm(ServerAlgorithm):
     def supports_static_count(self):
         """False for weighted aggregation: the moment count is a weight sum, not M."""
         return not self.aggregation.is_weighted
+
+    def comm_floats(self, d: int) -> int:
+        """The §16 communication model: floats one client uploads / the round
+        collective reduces — the aggregation layer's vector payload (d dense,
+        k rand-k, width*depth sketch) + the three scalar moments + any
+        psummed scalar extras (PrivUnit's sum_s_hat, the clip-bit count,
+        weighted aggregation's client count)."""
+        n = self.aggregation.comm_floats(d) + 3
+        n += self.mechanism.n_scalar_extras
+        if self.step.needs_clip_bits:
+            n += 1                      # count_below rides the reduction
+        if self.aggregation.is_weighted:
+            n += 1                      # n_clients rides next to the weight sum
+        return n
 
     def __getattr__(self, item):
         if item.startswith("__"):
@@ -699,21 +944,56 @@ class ComposedAlgorithm(ServerAlgorithm):
         ks = jax.random.split(key, n + 1)
         return ks[0], tuple(ks[i] for i in range(1, n + 1))
 
+    # -- compression plumbing (DESIGN.md §16) -------------------------------
+
+    def _inner_state(self, state):
+        """The step's own carry, unwrapped from an EF CompressionCarry."""
+        return state.inner if isinstance(state, CompressionCarry) else state
+
+    def _round_plan(self, key, d):
+        """This round's shared compression plan: derived from the ROUND key
+        (fold_in with COMPRESS_TAG, outside every client-index stream), so
+        shards, stream chunks, and the replicated finalize all rebuild the
+        identical tables — the precondition for compressed additivity."""
+        return self.aggregation.plan(
+            jax.random.fold_in(key, compression.COMPRESS_TAG), d)
+
+    def _compress_row_bound(self, clip):
+        """L2 re-clip bound for compressed rows: sens_factor * C for private
+        mechanisms whose compressor can grow a row (count-sketch); None when
+        nothing binds (no clipping, or a contraction compressor)."""
+        if not self.mechanism.is_private:
+            return None
+        sf = self.aggregation.sens_factor
+        if sf <= 1.0:
+            return None
+        return sf * self.mechanism._clip(clip)
+
     # -- engine interface --------------------------------------------------
 
     def init_state(self, w):
         """Initial optimizer/clip carry for a run starting from ``w``."""
-        return self.step.init(w)
+        inner = self.step.init(w)
+        if self.aggregation.uses_error_feedback:
+            return CompressionCarry(ef=jnp.zeros_like(w), inner=inner)
+        return inner
 
     def apply_round_stateful(self, key, w, raw_deltas, state):
         """Stateful dense round: ``apply_round`` threading the optimizer/clip carry."""
-        clip = self.step.clip_override(state)
+        clip = self.step.clip_override(self._inner_state(state))
         k_mech, extra = self._split_keys(key)
         m = raw_deltas.shape[0]
-        if self.aggregation.is_weighted:
-            # weighted compositions route the dense round through the moment
-            # machinery (the weighting lives there); mask is all-ones
-            mask = jnp.ones((m,), jnp.float32)
+        if self.aggregation.is_weighted or self.aggregation.is_compressed:
+            # weighted and compressed compositions route the dense round
+            # through the moment machinery (the reweighting / the compressed
+            # partial sum live there).  The compressed route passes mask=None:
+            # full participation needs no gate, and the all-ones where pass
+            # is an O(M*d) tax the compressed path exists to shed (compression
+            # excludes weighted and LDP aggregations, so only the None-aware
+            # reductions ever see it); weighted aggregation keeps the ones
+            # mask — its mechanisms index the mask directly.
+            mask = (None if self.aggregation.is_compressed
+                    else jnp.ones((m,), jnp.float32))
             moments = self.local_moments(key, w, raw_deltas, mask, 0, state)
             return self.apply_from_moments(key, w, moments, state)
         stats, extras = self.mechanism.release(k_mech, raw_deltas, clip, float(m))
@@ -733,7 +1013,7 @@ class ComposedAlgorithm(ServerAlgorithm):
 
     def local_moments(self, key, w, deltas, mask, start, state):
         """Shard/chunk-local partial sums of this algorithm's release (SUMS, psum-able)."""
-        clip = self.step.clip_override(state)
+        clip = self.step.clip_override(self._inner_state(state))
         weights = self.aggregation.row_weights(start, deltas.shape[0])
         # split exactly as the dense path does, so per-client randomness
         # (LDP noise rows, PrivUnit keys) is identical on every engine even
@@ -741,35 +1021,87 @@ class ComposedAlgorithm(ServerAlgorithm):
         # clip).  For the monolithic-parity names this is the raw key
         # (no-split steps) or a key their mechanisms never read (CDP).
         k_mech, _ = self._split_keys(key)
-        mom, extras = self.mechanism.moments(k_mech, deltas, mask, start, clip,
-                                             weights)
+        if self.aggregation.is_compressed:
+            plan = self._round_plan(key, deltas.shape[-1])
+            mom, extras = self.mechanism.moments(
+                k_mech, deltas, mask, start, clip, weights,
+                compress_fn=self.aggregation.compress_fn(plan),
+                compress_row_bound=self._compress_row_bound(clip))
+        else:
+            mom, extras = self.mechanism.moments(k_mech, deltas, mask, start,
+                                                 clip, weights)
         if self.step.needs_clip_bits:
             norms = jnp.linalg.norm(deltas, axis=-1)
+            below = (norms <= clip).astype(jnp.float32)
             extras = dict(extras)
-            extras["count_below"] = mask @ (norms <= clip).astype(jnp.float32)
+            extras["count_below"] = (jnp.sum(below) if mask is None
+                                     else mask @ below)
         if self.aggregation.is_weighted:
             # under weighted aggregation mom.count is a weight SUM; the
             # clip-quantile update and any realized-cohort noise need the
             # true participating-CLIENT count (psums additively)
             extras = dict(extras)
-            extras["n_clients"] = jnp.sum(mask)
+            extras["n_clients"] = (jnp.float32(deltas.shape[0])
+                                   if mask is None else jnp.sum(mask))
         return mom, extras
 
     def apply_from_moments(self, key, w, moments, state):
         """Server update from the globally reduced moments (replicated math)."""
         mom, extras = moments
-        clip = self.step.clip_override(state)
+        inner = self._inner_state(state)
+        clip = self.step.clip_override(inner)
         k_mech, extra = self._split_keys(key)
         # realized cohort size for mechanism noise: the CLIENT count, which
         # weighted compositions carry in extras (mom.count is their weight
         # sum); everywhere else mom.count is exactly it
         m_eff = extras.get("n_clients", mom.count) if isinstance(extras, dict) \
             else mom.count
+        if self.aggregation.is_compressed:
+            return self._apply_compressed(key, k_mech, extra, w, mom, extras,
+                                          clip, m_eff, state)
         stats, more = self.mechanism.finalize(k_mech, mom, extras, clip, m_eff)
         if more:
             extras = {**extras, **more}
         return self.step.apply(extra, w, stats, extras, self.mechanism, clip,
                                mom.count, state)
+
+    def _apply_compressed(self, key, k_mech, extra, w, mom, extras, clip,
+                          m_eff, state):
+        """Compressed finalize (DESIGN.md §16): noise in the compressed
+        domain -> decompress -> error feedback -> support selection -> step.
+
+        The mechanism's dense ``finalize`` is bypassed — its noise shape is
+        (d,) and its agg_sq would be a compressed-domain norm.  Here the
+        scalar moments pass through UNCOMPRESSED (they are the dense clipped
+        values by construction of the moment path), central noise is added
+        per compressed cell with the sens_factor-scaled std, and ``agg_sq``
+        is the norm of the actually-applied (d,) estimate.
+        """
+        inner = self._inner_state(state)
+        d = w.shape[-1]
+        plan = self._round_plan(key, d)
+        comp_mean = mom.sum_c / mom.count
+        noise = self.mechanism.compressed_noise(
+            k_mech, comp_mean.shape, clip, m_eff, self.aggregation.sens_factor)
+        if noise is not None:
+            comp_mean = comp_mean + noise
+        g = self.aggregation.decompress(comp_mean, plan, d)
+        if self.aggregation.uses_error_feedback:
+            corrected = g + state.ef
+            applied = self.aggregation.select(corrected)
+            ef_next = corrected - applied
+        else:
+            applied = self.aggregation.select(g)
+            ef_next = None
+        stats = RoundStats(cbar=applied,
+                           mean_sq=mom.sum_sq / mom.count,
+                           agg_sq=jnp.sum(jnp.square(applied)),
+                           mean_sq_clipped=mom.sum_sq_clipped / mom.count)
+        w_next, aux, inner_next = self.step.apply(
+            extra, w, stats, extras, self.mechanism, clip, mom.count, inner)
+        if ef_next is not None:
+            return w_next, aux, CompressionCarry(ef=ef_next, inner=inner_next)
+        return w_next, aux, inner_next
 
     # -- accounting --------------------------------------------------------
 
@@ -794,6 +1126,39 @@ class ComposedAlgorithm(ServerAlgorithm):
         return self.mechanism.budget(delta, rounds=rounds, dim=dim,
                                      sampling_q=sampling_q,
                                      with_numerator=with_num)
+
+
+def with_compression(alg: ComposedAlgorithm,
+                     aggregation: Aggregation) -> ComposedAlgorithm:
+    """A compressed variant of an existing composition (DESIGN.md §16).
+
+    Swaps the aggregation layer and re-runs composition validation (LDP
+    mechanisms reject compression with an actionable error), deriving a
+    ``<name>+<layer>`` name so benchmark/telemetry output distinguishes the
+    variants.  The mechanism and step are untouched — clip thresholds, key
+    splits, and the budget accounting are exactly the base composition's.
+    """
+    if not isinstance(alg, ComposedAlgorithm):
+        raise TypeError(
+            f"with_compression needs a ComposedAlgorithm, got {type(alg).__name__}")
+    if alg.aggregation.is_weighted:
+        raise ValueError(
+            f"{alg.name!r} uses weighted aggregation; replacing it with "
+            f"{type(aggregation).__name__} would silently drop the per-client "
+            "weights.  Compose a weighted-and-compressed layer explicitly if "
+            "that is intended.")
+    if isinstance(aggregation, RandKAggregation):
+        tag = f"randk{aggregation.k}"
+    elif isinstance(aggregation, CountSketchAggregation):
+        tag = f"sketch{aggregation.width}x{aggregation.depth}"
+        if aggregation.top_k is not None:
+            tag += f"-top{aggregation.top_k}"
+        if aggregation.error_feedback:
+            tag += "-ef"
+    else:
+        tag = type(aggregation).__name__.lower()
+    return dataclasses.replace(alg, aggregation=aggregation,
+                               name=f"{alg.name}+{tag}")
 
 
 def compose_algorithm(mechanism: PrivacyMechanism, step: GlobalStep,

@@ -1,0 +1,156 @@
+"""Compressed-communication primitives: rand-k and count-sketch (DESIGN.md §16).
+
+Both compressors are LINEAR maps R^d -> R^kc applied per client row, which is
+the whole trick: linearity means ``sum_i compress(c_i) == compress(sum_i c_i)``,
+so a compressed partial sum satisfies the §12 additive-moment invariant
+verbatim — compressed moments add across clients, stream chunks, and shard
+psums, and every engine's O(d) round collective shrinks to O(kc) without any
+engine change.  Linearity also commutes with per-row scalar clipping
+(``compress(u * s) == compress(u) * s``), so the moment path can compress the
+RAW rows and apply the clip scales to the compressed rows — the clipped
+(M, d) matrix never materializes, which is where the rand-k speedup lives.
+
+Shared randomness: each round's compression plan (the rand-k index set / the
+sketch's bucket+sign tables) is derived from ``fold_in(round_key,
+COMPRESS_TAG)``.  The round key is replicated across shards and stream chunks,
+so every partition compresses with the IDENTICAL plan — the precondition for
+the partial sums to be summands of one linear map.  No per-client state, so
+both compose with million-client sampling (§14).
+
+All functions here are pure jnp math with no repro imports (``compose.py``
+builds the Aggregation layers on top; ``aggregation.py`` threads the
+``compress_fn`` closure through the moment reductions).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "COMPRESS_TAG",
+    "randk_plan",
+    "randk_compress",
+    "randk_decompress",
+    "sketch_plan",
+    "sketch_compress",
+    "sketch_decompress",
+    "topk_select",
+]
+
+# fold_in tag deriving the per-round COMPRESSION-PLAN key (rand-k index draw,
+# sketch bucket/sign tables) from the round key.  Sits next to the fedsim
+# tags (SAMPLING_TAG = 2**31 - 1, LOCAL_TRAIN_TAG = 2**31 - 2, FAULT_TAG =
+# 2**31 - 3), far outside any plausible client index, so the plan stream
+# never collides with sampling, local-training, fault, or client-randomizer
+# streams.  Defined HERE (not fedsim.specs) because core must not import
+# fedsim; specs re-exports it for spec-level callers.
+COMPRESS_TAG = 2**31 - 4
+
+
+# ---------------------------------------------------------------------------
+# Rand-k: unbiased random coordinate subsampling
+# ---------------------------------------------------------------------------
+
+def randk_plan(plan_key: jax.Array, d: int, k: int) -> jax.Array:
+    """(k,) distinct coordinate indices with inclusion probability k/d each.
+
+    Unbiasedness of the d/k decompression scale only needs the MARGINAL
+    ``P(i in S) = k/d`` (``E[(d/k) * x_i * 1[i in S]] = x_i``), so when
+    ``k | d`` the draw is STRATIFIED: the d coordinates split into k
+    contiguous blocks of d/k and one uniform offset is drawn per block —
+    every coordinate lands in exactly one block, giving the exact k/d
+    marginal with k independent O(1) draws.  A uniform d-choose-k subset
+    (``jax.random.permutation(d)[:k]``) has the same marginal but costs an
+    O(d log d) sort of the FULL dimension per round — measured ~1.2 s at
+    d = 2**20, several times the whole dense round it is meant to beat.
+    The permutation fallback remains for k that does not divide d.
+    """
+    if k >= d:
+        return jnp.arange(d, dtype=jnp.int32)  # lossless: S is everything
+    if d % k == 0:
+        stride = d // k
+        offs = jax.random.randint(plan_key, (k,), 0, stride, dtype=jnp.int32)
+        return jnp.arange(k, dtype=jnp.int32) * stride + offs
+    return jax.random.permutation(plan_key, d)[:k]
+
+
+def randk_compress(u: jax.Array, idx: jax.Array) -> jax.Array:
+    """Select the plan's coordinates of ``u`` (last axis): (..., d) -> (..., k).
+
+    A coordinate projection — linear, and an L2 CONTRACTION (operator norm
+    1), so a C-clipped row stays within sensitivity C in the compressed
+    domain (the §16 noise argument needs no re-clip here).
+    """
+    return jnp.take(u, idx, axis=-1)
+
+
+def randk_decompress(comp: jax.Array, idx: jax.Array, d: int) -> jax.Array:
+    """Unbiased (d,) estimate from the (k,) compressed sum: scatter * d/k."""
+    k = idx.shape[0]
+    scale = jnp.float32(d / k)
+    return jnp.zeros((d,), comp.dtype).at[idx].set(comp * scale)
+
+
+# ---------------------------------------------------------------------------
+# Count-sketch: bucket+sign hashing with median-of-depth recovery
+# ---------------------------------------------------------------------------
+
+def sketch_plan(plan_key: jax.Array, d: int, width: int,
+                depth: int) -> tuple[jax.Array, jax.Array]:
+    """Per-round sketch tables: ``(h, s)`` with ``h`` (depth, d) int32 bucket
+    ids in [0, width) and ``s`` (depth, d) float32 Rademacher signs.
+
+    Materializing the hash tables (instead of evaluating a hash function
+    per lookup) costs O(depth * d) memory once per round but keeps both
+    compress and decompress pure gathers/scatters — the jnp-friendly form.
+    """
+    kh, ks = jax.random.split(plan_key)
+    h = jax.random.randint(kh, (depth, d), 0, width, dtype=jnp.int32)
+    s = jax.random.rademacher(ks, (depth, d), dtype=jnp.float32)
+    return h, s
+
+
+def sketch_compress(u: jax.Array, plan: tuple[jax.Array, jax.Array],
+                    width: int) -> jax.Array:
+    """Count-sketch rows of ``u``: (..., d) -> (..., depth * width).
+
+    Row r of the result is depth stacked width-wide tables,
+    ``S[t, b] = sum_{j : h[t,j]=b} s[t,j] * u[r, j]`` — linear in ``u``, so
+    compressed rows sum exactly like raw rows (bit-for-bit on integer-valued
+    inputs; the sign multiply is exact and the scatter-add accumulates each
+    bucket in the same j-order either way).  ``width`` is the static table
+    width (the plan's arrays carry no static shape for it).  The depth loop
+    is a static Python loop (depth is a small config constant), keeping the
+    peak temporary at one (m, d) signed copy rather than (m, depth, d).
+    """
+    h, s = plan
+    depth, _ = h.shape
+    squeeze = u.ndim == 1
+    rows = u[None] if squeeze else u
+    m = rows.shape[0]
+    tables = []
+    for t in range(depth):
+        tab = jnp.zeros((m, width), rows.dtype).at[:, h[t]].add(rows * s[t])
+        tables.append(tab)
+    comp = jnp.concatenate(tables, axis=-1)
+    return comp[0] if squeeze else comp
+
+
+def sketch_decompress(comp: jax.Array, plan: tuple[jax.Array, jax.Array],
+                      d: int) -> jax.Array:
+    """Median-of-depth unsketch: (depth * width,) -> (d,) heavy-hitter
+    estimate ``median_t(s[t, j] * S[t, h[t, j]])``."""
+    h, s = plan
+    depth, _ = h.shape
+    tables = comp.reshape(depth, -1)
+    est = jax.vmap(lambda tab, ht, st: st * jnp.take(tab, ht))(tables, h, s)
+    return jnp.median(est, axis=0)
+
+
+def topk_select(x: jax.Array, k: int) -> jax.Array:
+    """Keep exactly the k largest-|x| coordinates of a (d,) vector, zero the
+    rest (scatter by top-k indices, so ties never keep more than k)."""
+    if k >= x.shape[-1]:
+        return x
+    _, idx = jax.lax.top_k(jnp.abs(x), k)
+    return jnp.zeros_like(x).at[idx].set(jnp.take(x, idx))

@@ -17,6 +17,7 @@ from __future__ import annotations
 
 import dataclasses
 import math
+import warnings
 from typing import Callable
 
 import jax
@@ -26,6 +27,11 @@ from repro.core.clipping import clip_batch
 from repro.fedsim.server import RunResult
 
 __all__ = ["DPScaffoldConfig", "run_dp_scaffold"]
+
+# one-shot deprecation flag: the warning fires on the FIRST run_dp_scaffold
+# call per process, not per round loop — sweeps that launch hundreds of
+# baseline runs would otherwise drown their logs in repeats
+_WARNED = False
 
 
 @dataclasses.dataclass(frozen=True)
@@ -55,7 +61,22 @@ def run_dp_scaffold(
     Same calling convention as the deprecated ``run_federated``: flat (d,)
     ``w0``, per-client batches on leaf axis 0, fold_in(key, t) round keys.
     Returns a ``RunResult`` with eta_history pinned to 1.
+
+    .. deprecated::
+        This standalone Python round loop predates the composable stack and
+        gets none of its engines, telemetry, or compression.  Build the
+        baseline with ``repro.fedsim.make_algorithm`` and run it under
+        ``FederatedSession`` instead; this entry point will be removed.
     """
+    global _WARNED
+    if not _WARNED:
+        _WARNED = True
+        warnings.warn(
+            "run_dp_scaffold is deprecated: it is a standalone Python round "
+            "loop outside the engine stack (no scan/stream/sharded engines, "
+            "no §15 telemetry, no §16 compression). Build the algorithm via "
+            "repro.fedsim.make_algorithm and run it with FederatedSession.",
+            DeprecationWarning, stacklevel=2)
     m = cfg.num_clients
     d = w0.shape[0]
     variate_scale = 1.0 / (tau * eta_l)

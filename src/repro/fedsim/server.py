@@ -49,6 +49,20 @@ derived from the replicated round key and sliced per chunk) and with §9
 sharding (each shard streams its own cohort slice; one O(d) psum per round,
 after the inner scan).
 
+Compressed communication (DESIGN.md §16): a compressed ``Aggregation`` layer
+(rand-k / count-sketch) shrinks ``RoundMoments.sum_c`` from (d,) to the
+compressed width at the source — inside ``algorithm.local_moments`` — and
+every engine path here inherits it with NO structural change, because each
+one only ever ADDS moments: the sharded psum is pytree-shaped by the local
+moments, the stream inner-scan carry is zero-initialized from
+``jax.eval_shape`` of the chunk program, the gather engine reduces the same
+moments over slots, and the count-resolution helpers
+(``set_moment_count`` / ``clamp_moment_counts`` / ``sanitize_moments``) are
+field-targeted tree_maps that never look at ``sum_c``'s shape.  The per-round
+collective is therefore O(k) / O(width·depth) on all four paths.  The shared
+per-round compression plan derives from the replicated round key
+(COMPRESS_TAG), so shard/chunk partial sums are summands of one linear map.
+
 Following §5 of the paper, the returned final model is the average of the
 last two iterates ("to mitigate the oscillating behaviour of DP-FedEXP").
 """
@@ -210,6 +224,11 @@ def _round_step(algorithm, local_fn, eval_fn, eval_every: int = 1,
     slot, local training runs on the gathered block only, and the moments are
     keyed by the slots' GLOBAL indices — the identical release in O(q·M·d)
     work.
+
+    Compressed aggregation layers (§16) ride both branches untouched: the
+    dense branch routes compressed compositions through the moment protocol
+    (``apply_round_stateful`` does internally), and the masked branch's
+    moments simply carry a compressed-width ``sum_c``.
     """
     sampled = cohort is not None and cohort.is_sampled
     gathering = sampled and cohort.gather
@@ -282,6 +301,11 @@ def _sharded_round_step(algorithm, local_fn, eval_fn, axis, m_true,
     shard's client count) and trains only the gathered rows; the moments key
     by ``shard_start + slot`` — the same global indices the dense engines
     use — and cross shards in the identical single psum.
+
+    With a compressed aggregation layer (§16) the psummed ``sum_c`` is the
+    compressed partial sum — every shard builds the identical plan from the
+    replicated round key, so the psum is a sum of one linear map's outputs
+    and the per-round collective drops from O(d) to the compressed width.
     """
     sampled = cohort is not None and cohort.is_sampled
     gathering = sampled and cohort.gather
@@ -369,6 +393,11 @@ def _stream_round_step(algorithm, local_fn, eval_fn,
     sampled rounds go through ``_resolve_sampled_count``, full-participation
     rounds substitute the static true client count (``set_moment_count``)
     exactly as ``apply_round_sharded`` does.
+
+    With a compressed aggregation layer (§16) the inner-scan carry is
+    compressed-width (its zero init comes from ``jax.eval_shape`` of the
+    chunk moments), so the streamed accumulation and the post-scan psum move
+    O(k) floats — every chunk compresses with the identical round-key plan.
     """
     sampled = cohort is not None and cohort.is_sampled
     injecting = fault is not None and fault.injects
@@ -606,6 +635,11 @@ def _gather_stream_round_step(algorithm, local_fn, eval_fn,
     rows gather through the same slots, and count resolution matches the
     dense sampled engines — so gather × stream × shard × fault all reproduce
     the dense sampled release at rtol 1e-5.
+
+    Compressed aggregation layers (§16) compose transparently: each gathered
+    chunk's moments carry a compressed-width ``sum_c`` (same round-key plan
+    on every chunk and shard), so a q-sampled round's collective is O(k)
+    while its local-training work stays O(cap·d).
     """
     injecting = fault is not None and fault.injects
     local_call = _local_caller(local_fn, fault, tau)
@@ -916,6 +950,9 @@ def _tap_clip_fn(algorithm):
     """
 
     def clip_of(opt_state):
+        # an error-feedback compressed composition (§16) wraps the step's
+        # carry in a CompressionCarry; the clip threshold lives on .inner
+        opt_state = getattr(opt_state, "inner", opt_state)
         step = getattr(algorithm, "step", None)
         if step is not None:
             try:

@@ -612,10 +612,25 @@ class FederatedSession:
             return None
         return lambda executed: self._budget_at(delta, executed)
 
+    def _bytes_per_round(self) -> float | None:
+        """§16 modeled communication footprint: ``4 * comm_floats(d)``.
+
+        Static per spec (the compression plan changes per round, its SIZE
+        does not), so it is computed once host-side and attached to every
+        executed round event — the device payload is untouched."""
+        comm = getattr(self.algorithm, "comm_floats", None)
+        if comm is None:
+            return None
+        try:
+            return 4.0 * float(comm(self.dim))
+        except (TypeError, ValueError):
+            return None
+
     def _tap_session(self, tracker, start_round: int) -> "_tap_mod.TapSession":
         return _tap_mod.TapSession(
             tracker, start_round=start_round, ledger_fn=self._ledger_fn(),
-            faults_active=self.fault is not None and self.fault.injects)
+            faults_active=self.fault is not None and self.fault.injects,
+            bytes_per_round=self._bytes_per_round())
 
     # -- entry points ------------------------------------------------------
 
@@ -828,6 +843,7 @@ class FederatedSession:
         """Post-hoc per-seed event replay for the vmapped scan path (§15)."""
         import math as _math
         ledger = self._ledger_fn()
+        bytes_pr = self._bytes_per_round()
         etas = np.asarray(jax.device_get(result.eta_history))
         metrics = np.asarray(jax.device_get(result.metric_history))
         naives = np.asarray(jax.device_get(result.eta_naive_history))
@@ -839,6 +855,8 @@ class FederatedSession:
                 event = {"eta": float(etas[i, t]),
                          "eta_naive": float(naives[i, t]),
                          "eta_target": float(targets[i, t])}
+                if bytes_pr is not None:
+                    event["bytes_per_round"] = bytes_pr
                 if _math.isfinite(float(metrics[i, t])):
                     event["metric"] = float(metrics[i, t])
                 if ledger is not None:

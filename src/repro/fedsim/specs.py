@@ -51,7 +51,7 @@ import jax.numpy as jnp
 
 __all__ = ["TrainSpec", "LocalSpec", "EngineSpec", "StreamSpec", "ShardSpec",
            "CohortSpec", "FaultSpec", "DataSpec", "TelemetrySpec",
-           "SAMPLING_TAG", "LOCAL_TRAIN_TAG", "FAULT_TAG"]
+           "SAMPLING_TAG", "LOCAL_TRAIN_TAG", "FAULT_TAG", "COMPRESS_TAG"]
 
 # fold_in tag deriving the per-round sampling key from the round key.  Client
 # randomization folds the GLOBAL CLIENT INDEX (0..M-1) into the same round
@@ -70,6 +70,12 @@ LOCAL_TRAIN_TAG = 2**31 - 2
 # next to the other tags, far outside any client index, so fault draws never
 # collide with sampling, local-training, or client-randomizer streams.
 FAULT_TAG = 2**31 - 3
+
+# fold_in tag deriving the per-round COMPRESSION-PLAN key (rand-k indices,
+# sketch hash tables — DESIGN.md §16).  Defined in repro.core.compression
+# (core must not import fedsim); re-exported here so spec-level callers see
+# the full tag family in one place.
+from repro.core.compression import COMPRESS_TAG  # noqa: E402  (tag family)
 
 
 @dataclasses.dataclass(frozen=True)

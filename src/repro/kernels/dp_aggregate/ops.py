@@ -174,6 +174,7 @@ def dp_aggregate_sums_chunked(
     use_ref: bool = False,
     interpret: bool | None = None,
     block_m: int | None = None,
+    compress_fn=None,
 ) -> tuple[jax.Array, jax.Array, jax.Array]:
     """``dp_aggregate_sums`` accumulated over row chunks (DESIGN.md §12/§14).
 
@@ -212,11 +213,25 @@ def dp_aggregate_sums_chunked(
       slot_mask: (cap,) float {0., 1.} validity of each slot; required with
         ``slots`` (without it a padding slot would double-count client 0).
       use_ref / interpret / block_m: forwarded to each chunk's reduction.
+      compress_fn: optional linear per-row map ``(chunk_m, d) -> (chunk_m,
+        kc)`` (DESIGN.md §16).  Each chunk's rows are clipped then compressed
+        before summation, so the carry holds a (kc,) vector instead of (d,);
+        linearity of the map makes the chunked sum equal the dense compressed
+        sum.  Incompatible with per-row ``noise`` — LDP noise lives in R^d and
+        compressing a noised row breaks its privacy accounting.
 
     Returns:
       ``(sum_c, sum_sq_released, sum_sq_clipped)`` raw SUMS over the reduced
       rows — the dense entry's values re-associated at chunk boundaries only.
+      With ``compress_fn``, ``sum_c`` is the (kc,) compressed-domain sum and
+      released == clipped (no per-row noise enters the compressed path).
     """
+    if compress_fn is not None and noise is not None:
+        raise ValueError(
+            "compress_fn cannot combine with per-row noise: LDP noise is a "
+            "full R^d vector per client, drawn BEFORE aggregation — "
+            "compressing it afterwards breaks the privacy accounting "
+            "(DESIGN.md §16)")
     m, d = updates.shape
     rows = m if slots is None else slots.shape[0]
     if chunk_m < 1:
@@ -257,13 +272,29 @@ def dp_aggregate_sums_chunked(
         else:
             u = jnp.take(updates, chunk["slots"], axis=0)
             u = jnp.where(chunk["mask"][:, None] > 0, u, 0.0)
-        s, sq_rel, sq_clip = _impl(
-            u, chunk.get("noise"), clip, jnp.float32(0.0),
-            jnp.int32(0), use_ref, interpret, block_m, False)
+        if compress_fn is not None:
+            # clip scale commutes with the linear map, so the compressed sum
+            # never materializes the clipped (chunk_m, d) block
+            sq = jnp.sum(jnp.square(u), axis=-1)
+            scale = jnp.minimum(1.0, clip / jnp.maximum(jnp.sqrt(sq), 1e-12))
+            s = jnp.sum(compress_fn(u) * scale[:, None], axis=0)
+            sq_clip = jnp.sum(sq * jnp.square(scale))
+            sq_rel = sq_clip
+        else:
+            s, sq_rel, sq_clip = _impl(
+                u, chunk.get("noise"), clip, jnp.float32(0.0),
+                jnp.int32(0), use_ref, interpret, block_m, False)
         a_s, a_rel, a_clip = acc
         return (a_s + s, a_rel + sq_rel, a_clip + sq_clip), None
 
-    zero = (jnp.zeros((d,), jnp.float32), jnp.float32(0.0), jnp.float32(0.0))
+    if compress_fn is None:
+        sum_c_zero = jnp.zeros((d,), jnp.float32)
+    else:
+        kc = jax.eval_shape(
+            compress_fn,
+            jax.ShapeDtypeStruct((chunk_m, d), jnp.float32)).shape[-1]
+        sum_c_zero = jnp.zeros((kc,), jnp.float32)
+    zero = (sum_c_zero, jnp.float32(0.0), jnp.float32(0.0))
     (s, sq_rel, sq_clip), _ = jax.lax.scan(body, zero, xs)
     return s, sq_rel, sq_clip
 

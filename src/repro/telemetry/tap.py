@@ -47,11 +47,17 @@ _ACTIVE: "TapSession | None" = None
 
 class TapSession:
     def __init__(self, tracker, *, start_round: int = 0, ledger_fn=None,
-                 faults_active: bool = False):
+                 faults_active: bool = False,
+                 bytes_per_round: float | None = None):
         self.tracker = tracker
         self.expected_t = int(start_round)
         self.ledger_fn = ledger_fn
         self.faults_active = faults_active
+        # §16 communication footprint: 4 * algorithm.comm_floats(d), STATIC
+        # per spec — attached host-side to every executed round event, so the
+        # device payload layout is untouched and tap-on stays bit-identical
+        self.bytes_per_round = (None if bytes_per_round is None
+                                else float(bytes_per_round))
         # rounds actually run (incl. later rolled back); a resume starts at
         # the checkpoint round so the cumulative ledger counts from round 0
         self.executed = int(start_round)
@@ -100,6 +106,8 @@ class TapSession:
         event.update(
             eta=float(v[_ETA]), eta_naive=float(v[_NAIVE]),
             eta_target=float(v[_TARGET]))
+        if self.bytes_per_round is not None:
+            event["bytes_per_round"] = self.bytes_per_round
         if math.isfinite(float(v[_METRIC])):
             event["metric"] = float(v[_METRIC])
         if math.isfinite(float(v[_CLIP])):

@@ -1,0 +1,348 @@
+"""Compressed-communication layer: rand-k + count-sketch (DESIGN.md §16).
+
+The §16 contract, pinned here:
+
+* SCALAR-moment parity — compression changes what ``sum_c`` carries, never
+  the scalar moments FedEXP's step-size rule consumes: for every
+  compression-legal registry composition, the compressed ``local_moments``
+  scalar sums (``sum_sq``, ``sum_sq_clipped``, ``count``, and every scalar
+  extra — clip bits, PrivUnit sums) match the dense ones at rtol 1e-5.
+* Cross-engine parity — a compressed composition is ONE algorithm on every
+  engine: scan == stream (ragged chunk grid) == sampled-gather ==
+  sharded (the §9 psum carries the (kc,) moments), at the engines' usual
+  rtol.
+* Lossless parity — ``RandKAggregation(k=d)`` keeps the map invertible, so
+  the full compressed pipeline (COMPRESS_TAG plan, compressed-domain
+  noise hook, decompress, η from the scalar moments) must reproduce the
+  dense run: final weights AND η history at rtol 1e-5 for the noiseless
+  compositions.
+* Privacy boundaries — LDP mechanisms reject compression at composition
+  time (their release is a full R^d vector per client; nothing sound to
+  compress), the chunked kernel entry rejects ``noise`` + ``compress_fn``,
+  and EF without top_k has nothing to feed back.
+* Error feedback — the biased top-k sketch variant carries its truncation
+  residual in a ``CompressionCarry`` that rides the engines' existing scan
+  state, and still makes round-over-round progress.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.aggregation import partial_clip_moments
+from repro.core.compose import (
+    CompressionCarry,
+    CountSketchAggregation,
+    FedEXPStep,
+    GaussianLDP,
+    RandKAggregation,
+    WeightedAggregation,
+    compose_algorithm,
+    with_compression,
+)
+from repro.core.fedexp import make_algorithm
+from repro.data.synthetic import linreg_loss, make_synthetic_linreg
+from repro.fedsim import (
+    CohortSpec,
+    EngineSpec,
+    FederatedSession,
+    ShardSpec,
+    StreamSpec,
+    TrainSpec,
+)
+from repro.kernels.dp_aggregate.ops import dp_aggregate_sums_chunked
+from repro.launch.mesh import make_client_mesh
+
+# same ragged geometry as test_stream: M not divisible by the chunk size
+M, D, TAU, ETA_L, ROUNDS, CHUNK = 44, 24, 2, 0.1, 4, 16
+K = 8                      # rand-k keeps 8 of 24 coordinates
+WIDTH, DEPTH = 6, 3        # sketch: 3 tables of width 6
+
+# compression-legal registry names: central noise (added to the compressed
+# aggregate, post-reduction) or no privacy at all
+COMPRESS_OK = {
+    "fedavg": {},
+    "fedexp": {},
+    "dp-fedavg-cdp": dict(clip_norm=0.3, sigma=0.2, num_clients=M),
+    "cdp-fedexp": dict(clip_norm=0.3, sigma=0.2, num_clients=M),
+    "dp-fedadam-cdp": dict(clip_norm=0.3, sigma=0.2, num_clients=M,
+                           server_lr=0.05),
+    "cdp-fedexp-adaptive-clip": dict(z_mult=0.5, num_clients=M, dim=D),
+    "cdp-fedmom": dict(clip_norm=0.3, sigma=0.2, num_clients=M),
+}
+# LDP names: per-client noise drawn BEFORE aggregation -> must reject
+LDP_NAMES = {
+    "dp-fedavg-ldp-gauss": dict(clip_norm=0.3, sigma=0.21),
+    "ldp-fedexp-gauss": dict(clip_norm=0.3, sigma=0.21),
+    "dp-fedavg-privunit": dict(clip_norm=0.3, eps0=2.0, eps1=2.0, eps2=2.0,
+                               dim=D),
+    "ldp-fedexp-privunit": dict(clip_norm=0.3, eps0=2.0, eps1=2.0, eps2=2.0,
+                                dim=D),
+    "ldp-gauss-fedadam": dict(clip_norm=0.3, sigma=0.21, server_lr=0.05),
+    "privunit-fedexp-adaptive-clip": dict(eps0=2.0, eps1=2.0, eps2=2.0,
+                                          dim=D, c0=0.5),
+}
+
+KEY = jax.random.PRNGKey(17)
+N_DEV = len(jax.devices())
+
+
+def _alg(name, aggregation=None):
+    alg = make_algorithm(name, **COMPRESS_OK[name])
+    return alg if aggregation is None else with_compression(alg, aggregation)
+
+
+AGGREGATIONS = [
+    ("randk", RandKAggregation(k=K)),
+    ("sketch", CountSketchAggregation(width=WIDTH, depth=DEPTH)),
+]
+
+
+@pytest.fixture(scope="module")
+def problem():
+    data = make_synthetic_linreg(jax.random.PRNGKey(3), M, D)
+    return data.client_batches(), jnp.zeros(D)
+
+
+def _session(problem, name, aggregation=None, *, engine=None, stream=None,
+             cohort=None, shard=None):
+    batches, w0 = problem
+    kw = {}
+    if engine is not None:
+        kw["engine"] = engine
+    if stream is not None:
+        kw["stream"] = stream
+    if cohort is not None:
+        kw["cohort"] = cohort
+    if shard is not None:
+        kw["shard"] = shard
+    return FederatedSession(_alg(name, aggregation), linreg_loss, w0, batches,
+                            train=TrainSpec(rounds=ROUNDS, tau=TAU,
+                                            eta_l=ETA_L), **kw)
+
+
+def _assert_runs_close(a, b, rtol=1e-5, atol=1e-6):
+    np.testing.assert_allclose(np.asarray(a.final_w), np.asarray(b.final_w),
+                               rtol=rtol, atol=atol)
+    np.testing.assert_allclose(np.asarray(a.eta_history),
+                               np.asarray(b.eta_history),
+                               rtol=rtol, atol=atol)
+
+
+class TestScalarMomentParity:
+    """Compression must not move any scalar the step-size rule reads."""
+
+    @pytest.mark.parametrize("name", sorted(COMPRESS_OK))
+    @pytest.mark.parametrize("agg_name,agg", AGGREGATIONS)
+    def test_scalar_moments_match_dense(self, name, agg_name, agg):
+        deltas = 0.3 * jax.random.normal(jax.random.PRNGKey(5), (M, D))
+        mask = jnp.ones((M,), jnp.float32)
+        w = jnp.zeros(D)
+
+        dense_alg = _alg(name)
+        comp_alg = _alg(name, agg)
+        mom_d, ex_d = dense_alg.local_moments(
+            KEY, w, deltas, mask, 0, dense_alg.init_state(w))
+        mom_c, ex_c = comp_alg.local_moments(
+            KEY, w, deltas, mask, 0, comp_alg.init_state(w))
+
+        assert mom_c.sum_c.shape == (comp_alg.aggregation.comm_floats(D),)
+        for field in ("sum_sq", "sum_sq_clipped", "count"):
+            np.testing.assert_allclose(
+                np.asarray(getattr(mom_c, field)),
+                np.asarray(getattr(mom_d, field)), rtol=1e-5,
+                err_msg=f"{name}+{agg_name}: scalar moment {field} moved")
+        assert set(ex_c) == set(ex_d)
+        for k, v in ex_d.items():
+            np.testing.assert_allclose(np.asarray(ex_c[k]), np.asarray(v),
+                                       rtol=1e-5,
+                                       err_msg=f"{name}+{agg_name}: extra {k}")
+
+    def test_comm_floats_model(self):
+        """The §16 communication model: payload + 3 scalar moments (+1
+        clip-bit count for adaptive-clip compositions)."""
+        assert _alg("cdp-fedexp").comm_floats(D) == D + 3
+        assert _alg("cdp-fedexp", RandKAggregation(k=K)).comm_floats(D) == K + 3
+        assert _alg("cdp-fedexp",
+                    CountSketchAggregation(width=WIDTH, depth=DEPTH)
+                    ).comm_floats(D) == WIDTH * DEPTH + 3
+        assert (_alg("cdp-fedexp-adaptive-clip",
+                     RandKAggregation(k=K)).comm_floats(D) == K + 3 + 1)
+        # k >= d never inflates the payload past dense
+        assert RandKAggregation(k=10 * D).comm_floats(D) == D
+
+
+class TestCrossEngineParity:
+    """One compressed algorithm, every engine (DESIGN.md §16 interaction
+    rules): the (kc,) moments accumulate/psum through the §12 machinery."""
+
+    @pytest.mark.parametrize("name", sorted(COMPRESS_OK))
+    def test_stream_matches_scan(self, problem, name):
+        agg = RandKAggregation(k=K)
+        scan = _session(problem, name, agg).run(KEY)
+        stream = _session(problem, name, agg,
+                          engine=EngineSpec(engine="stream"),
+                          stream=StreamSpec(chunk_clients=CHUNK)).run(KEY)
+        _assert_runs_close(stream, scan)
+
+    @pytest.mark.parametrize("name", sorted(COMPRESS_OK))
+    def test_gather_matches_dense_sampled(self, problem, name):
+        agg = RandKAggregation(k=K)
+        cohort = CohortSpec(size=12)
+        dense = _session(problem, name, agg, cohort=cohort).run(KEY)
+        gathered = _session(problem, name, agg,
+                            cohort=CohortSpec(size=12, gather=True)).run(KEY)
+        _assert_runs_close(gathered, dense)
+
+    def test_sketch_streams(self, problem):
+        agg = CountSketchAggregation(width=WIDTH, depth=DEPTH)
+        scan = _session(problem, "cdp-fedexp", agg).run(KEY)
+        stream = _session(problem, "cdp-fedexp", agg,
+                          engine=EngineSpec(engine="stream"),
+                          stream=StreamSpec(chunk_clients=CHUNK)).run(KEY)
+        _assert_runs_close(stream, scan)
+
+    @pytest.mark.skipif(N_DEV < 2, reason="needs >1 device (set XLA_FLAGS="
+                        "--xla_force_host_platform_device_count=8)")
+    @pytest.mark.parametrize("name", ["cdp-fedexp", "fedexp",
+                                      "cdp-fedexp-adaptive-clip"])
+    def test_sharded_matches_single(self, problem, name):
+        """The §9 psum payload IS the compressed moment pytree: every shard
+        rebuilds the identical COMPRESS_TAG plan from the replicated round
+        key, so the (kc,) partial sums are summands of one linear map."""
+        agg = RandKAggregation(k=K)
+        single = _session(problem, name, agg).run(KEY)
+        mesh = make_client_mesh(2)
+        sharded = _session(problem, name, agg,
+                           shard=ShardSpec(mesh=mesh)).run(KEY)
+        _assert_runs_close(sharded, single)
+
+
+class TestLosslessParity:
+    """k = d keeps the rand-k map invertible: the entire compressed pipeline
+    must reproduce the dense run, η history included — which also pins that
+    FedEXP's η comes from the UNCOMPRESSED scalar moments."""
+
+    @pytest.mark.parametrize("name", ["fedavg", "fedexp"])
+    def test_lossless_randk_matches_dense(self, problem, name):
+        dense = _session(problem, name).run(KEY)
+        lossless = _session(problem, name, RandKAggregation(k=D)).run(KEY)
+        _assert_runs_close(lossless, dense)
+
+    def test_lossless_cdp_eta_close(self, problem):
+        """With central noise the realization differs (compressed_noise draws
+        per compressed cell), but at sigma -> 0 the η trajectory must agree."""
+        batches, w0 = problem
+        train = TrainSpec(rounds=ROUNDS, tau=TAU, eta_l=ETA_L)
+        mk = lambda agg: with_compression(  # noqa: E731
+            make_algorithm("cdp-fedexp", clip_norm=0.3, sigma=1e-7,
+                           num_clients=M), agg) if agg else \
+            make_algorithm("cdp-fedexp", clip_norm=0.3, sigma=1e-7,
+                           num_clients=M)
+        dense = FederatedSession(mk(None), linreg_loss, w0, batches,
+                                 train=train).run(KEY)
+        lossless = FederatedSession(mk(RandKAggregation(k=D)), linreg_loss,
+                                    w0, batches, train=train).run(KEY)
+        _assert_runs_close(lossless, dense, rtol=1e-4, atol=1e-5)
+
+
+class TestPrivacyBoundaries:
+    @pytest.mark.parametrize("name", sorted(LDP_NAMES))
+    @pytest.mark.parametrize("agg", [RandKAggregation(k=K),
+                                     CountSketchAggregation(width=WIDTH)])
+    def test_ldp_rejects_compression(self, name, agg):
+        alg = make_algorithm(name, **LDP_NAMES[name])
+        with pytest.raises(ValueError, match="LDP mechanism releases a full"):
+            with_compression(alg, agg)
+
+    def test_weighted_rejects_silent_replacement(self):
+        alg = compose_algorithm(
+            GaussianLDP(0.3, 0.21), FedEXPStep(),
+            WeightedAggregation(weights=tuple(1.0 for _ in range(M))))
+        with pytest.raises(ValueError, match="weighted aggregation"):
+            with_compression(alg, RandKAggregation(k=K))
+
+    def test_chunked_kernel_rejects_noise_plus_compress(self):
+        u = jax.random.normal(jax.random.PRNGKey(0), (8, D))
+        noise = jnp.zeros((8, D))
+        with pytest.raises(ValueError, match="LDP noise"):
+            dp_aggregate_sums_chunked(u, 0.3, noise, chunk_m=4,
+                                      compress_fn=lambda x: x[..., :K])
+
+    def test_moments_reject_noise_plus_compress(self):
+        u = jax.random.normal(jax.random.PRNGKey(0), (8, D))
+        with pytest.raises(ValueError, match="compress_fn cannot combine"):
+            partial_clip_moments(u, 0.3, jnp.zeros((8, D)),
+                                 compress_fn=lambda x: x[..., :K])
+
+    def test_ef_without_topk_rejected(self):
+        with pytest.raises(ValueError, match="error_feedback without top_k"):
+            CountSketchAggregation(width=WIDTH, error_feedback=True)
+
+    def test_names_tag_the_variant(self):
+        assert _alg("cdp-fedexp", RandKAggregation(k=K)).name == \
+            f"cdp-fedexp+randk{K}"
+        assert _alg("fedavg", CountSketchAggregation(
+            width=WIDTH, depth=DEPTH, top_k=4, error_feedback=True)).name == \
+            f"fedavg+sketch{WIDTH}x{DEPTH}-top4-ef"
+
+
+class TestChunkedKernelCompression:
+    def test_chunked_compressed_sums_match_dense_compressed(self):
+        """Linearity makes the chunked compressed sum equal the dense one
+        (re-associated at chunk boundaries only)."""
+        u = 0.5 * jax.random.normal(jax.random.PRNGKey(2), (16, D))
+        idx = jnp.arange(K, dtype=jnp.int32) * (D // K)
+        compress = lambda x: jnp.take(x, idx, axis=-1)  # noqa: E731
+        sum_c, sum_sq, sum_sq_clip = dp_aggregate_sums_chunked(
+            u, 0.3, chunk_m=4, compress_fn=compress)
+        mom = partial_clip_moments(u, 0.3, compress_fn=compress)
+        assert sum_c.shape == (K,)
+        np.testing.assert_allclose(np.asarray(sum_c), np.asarray(mom.sum_c),
+                                   rtol=1e-5, atol=1e-7)
+        np.testing.assert_allclose(np.asarray(sum_sq_clip),
+                                   np.asarray(mom.sum_sq_clipped), rtol=1e-5)
+        np.testing.assert_allclose(np.asarray(sum_sq),
+                                   np.asarray(mom.sum_sq), rtol=1e-5)
+
+
+class TestErrorFeedback:
+    def _quad_problem(self):
+        rng = np.random.default_rng(1)
+        targets = jnp.asarray(rng.standard_normal((M, D)).astype(np.float32)
+                              * 0.2 + 0.5)
+
+        def loss(w, b):
+            return 0.5 * jnp.sum(jnp.square(w - b))
+
+        return loss, targets
+
+    def test_ef_carry_rides_the_scan_state(self):
+        alg = _alg("fedavg", CountSketchAggregation(
+            width=WIDTH, depth=DEPTH, top_k=4, error_feedback=True))
+        state = alg.init_state(jnp.zeros(D))
+        assert isinstance(state, CompressionCarry)
+        assert state.ef.shape == (D,)
+
+    def test_ef_sketch_converges(self):
+        """The biased top-k sketch with EF still makes progress on a
+        quadratic: the truncation residual re-injects instead of vanishing."""
+        loss, targets = self._quad_problem()
+        alg = _alg("fedavg", CountSketchAggregation(
+            width=WIDTH, depth=DEPTH, top_k=D // 2, error_feedback=True))
+        w0 = jnp.zeros(D)
+        res = FederatedSession(
+            alg, loss, w0, targets,
+            train=TrainSpec(rounds=12, tau=1, eta_l=0.5)).run(KEY)
+        mean_t = np.asarray(jnp.mean(targets, axis=0))
+
+        def mean_loss(w):
+            return float(np.mean(0.5 * np.sum(
+                np.square(np.asarray(w)[None, :] - np.asarray(targets)), -1)))
+
+        assert np.all(np.isfinite(np.asarray(res.final_w)))
+        # moved decisively toward the optimum (the cohort-mean target)
+        d0 = float(np.linalg.norm(mean_t))
+        d1 = float(np.linalg.norm(np.asarray(res.final_w) - mean_t))
+        assert d1 < 0.6 * d0
+        assert mean_loss(res.final_w) < mean_loss(w0)

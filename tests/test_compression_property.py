@@ -1,0 +1,139 @@
+"""Property tests for the §16 compression primitives (hypothesis).
+
+Three properties the example-based suite cannot pin as sharply:
+
+* Rand-k unbiasedness: ``E[decompress(compress(x))] = x`` reduces, by
+  linearity, to every coordinate's inclusion frequency being k/d — the
+  estimator is ``x_i * (d/k) * 1[i in S]``, so the plan DISTRIBUTION is
+  the whole proof obligation.  Checked over a fixed derandomized key
+  stream (deterministic — no statistical flake), together with the
+  structural half: exactly k distinct in-range indices for every key.
+* Sketch additivity, bit-for-bit: on integer-valued float inputs the
+  sign-multiply is exact and both sides scatter-add buckets in the same
+  j-order, so ``sketch(a) + sketch(b) == sketch(a + b)`` with NO
+  tolerance — the §12 additive-moment invariant at its strictest.
+* Zero-row masking: a mask-zeroed row contributes exactly zero to the
+  compressed moments (``compress(0) == 0`` by linearity), so padding
+  clients stay invisible under compression, bit-for-bit.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+hyp = pytest.importorskip("hypothesis")
+from hypothesis import given, settings  # noqa: E402
+from hypothesis import strategies as st  # noqa: E402
+
+from repro.core.aggregation import partial_clip_moments  # noqa: E402
+from repro.core.compression import (  # noqa: E402
+    randk_compress,
+    randk_decompress,
+    randk_plan,
+    sketch_compress,
+    sketch_plan,
+)
+
+MAX_EXAMPLES = 20
+
+
+@settings(max_examples=MAX_EXAMPLES, deadline=None)
+@given(st.sampled_from([(8, 2), (8, 4), (12, 3), (16, 16), (10, 4), (24, 8)]),
+       st.integers(min_value=0, max_value=2**31 - 1))
+def test_randk_plan_is_k_distinct_in_range(dk, seed):
+    """Every key yields exactly min(k, d) DISTINCT indices in [0, d)."""
+    d, k = dk
+    idx = np.asarray(randk_plan(jax.random.PRNGKey(seed), d, k))
+    assert idx.shape == (min(k, d),)
+    assert len(np.unique(idx)) == min(k, d)
+    assert idx.min() >= 0 and idx.max() < d
+
+
+@settings(max_examples=8, deadline=None)
+@given(st.sampled_from([(8, 2), (8, 4), (12, 3), (10, 4)]))
+def test_randk_inclusion_frequency_is_k_over_d(dk):
+    """The unbiasedness core: P(i in S) = k/d for EVERY coordinate, both on
+    the stratified (k | d) and the permutation-fallback draw.  Frequencies
+    are measured over a fixed derandomized key stream, so the tolerance is
+    a deterministic bound, not a flaky statistical one."""
+    d, k = dk
+    n = 600
+    counts = np.zeros(d)
+    keys = jax.random.split(jax.random.PRNGKey(0), n)
+    idx_all = jax.vmap(lambda kk: randk_plan(kk, d, k))(keys)
+    for row in np.asarray(idx_all):
+        counts[row] += 1
+    freq = counts / n
+    np.testing.assert_allclose(freq, k / d, atol=0.08)
+
+
+@settings(max_examples=MAX_EXAMPLES, deadline=None)
+@given(st.integers(min_value=0, max_value=2**31 - 1))
+def test_randk_roundtrip_is_unbiased_per_plan(seed):
+    """For any FIXED plan, decompress(compress(x)) equals (d/k)·x on the
+    selected support and 0 elsewhere — the per-plan identity from which
+    unbiasedness follows given the k/d inclusion marginal."""
+    d, k = 12, 3
+    x = np.arange(1.0, d + 1.0, dtype=np.float32)
+    idx = randk_plan(jax.random.PRNGKey(seed), d, k)
+    est = np.asarray(randk_decompress(randk_compress(jnp.asarray(x), idx),
+                                      idx, d))
+    expected = np.zeros(d, np.float32)
+    expected[np.asarray(idx)] = x[np.asarray(idx)] * (d / k)
+    np.testing.assert_array_equal(est, expected)
+
+
+@settings(max_examples=MAX_EXAMPLES, deadline=None)
+@given(st.integers(min_value=0, max_value=2**31 - 1),
+       st.lists(st.integers(min_value=-8, max_value=8),
+                min_size=24, max_size=24),
+       st.lists(st.integers(min_value=-8, max_value=8),
+                min_size=24, max_size=24))
+def test_sketch_additivity_bit_for_bit(seed, a_ints, b_ints):
+    """sketch(a) + sketch(b) == sketch(a + b), EXACTLY, on integer-valued
+    floats: the Rademacher multiply is exact and the bucket scatter-adds
+    accumulate small integers without rounding."""
+    d, width, depth = 12, 5, 3
+    a = jnp.asarray(np.asarray(a_ints[:d], np.float32))
+    b = jnp.asarray(np.asarray(b_ints[:d], np.float32))
+    plan = sketch_plan(jax.random.PRNGKey(seed), d, width, depth)
+    lhs = np.asarray(sketch_compress(a, plan, width)
+                     + sketch_compress(b, plan, width))
+    rhs = np.asarray(sketch_compress(a + b, plan, width))
+    np.testing.assert_array_equal(lhs, rhs)
+
+
+@settings(max_examples=MAX_EXAMPLES, deadline=None)
+@given(st.integers(min_value=0, max_value=2**31 - 1),
+       st.lists(st.booleans(), min_size=10, max_size=10))
+def test_zero_row_masking_compressed(seed, keep):
+    """Mask-zeroed rows contribute EXACTLY zero to compressed moments: the
+    masked reduction over all rows equals the unmasked reduction over the
+    kept rows alone (appending zero rows only re-associates the sum of
+    exact zeros, so the equality is bitwise)."""
+    if not any(keep):
+        keep = keep[:-1] + [True]
+    m, d, k = len(keep), 12, 4
+    rng = np.random.default_rng(seed % 2**32)
+    u = jnp.asarray(rng.standard_normal((m, d)).astype(np.float32))
+    mask = jnp.asarray(np.asarray(keep, np.float32))
+    idx = randk_plan(jax.random.PRNGKey(seed), d, k)
+    compress = lambda x: randk_compress(x, idx)  # noqa: E731
+
+    masked = partial_clip_moments(u, 0.5, weight_mask=mask,
+                                  compress_fn=compress)
+    kept_rows = u[np.asarray(keep, bool)]
+    kept = partial_clip_moments(kept_rows, 0.5, compress_fn=compress)
+
+    np.testing.assert_allclose(np.asarray(masked.sum_c),
+                               np.asarray(kept.sum_c), rtol=1e-6, atol=1e-7)
+    np.testing.assert_allclose(float(masked.sum_sq_clipped),
+                               float(kept.sum_sq_clipped), rtol=1e-6)
+    assert float(masked.count) == float(jnp.sum(mask))
+
+    # a poisoned masked row must not leak through the compressed sum
+    u_poisoned = u.at[np.argmin(np.asarray(keep))].set(jnp.nan) \
+        if not all(keep) else u
+    poisoned = partial_clip_moments(u_poisoned, 0.5, weight_mask=mask,
+                                    compress_fn=compress)
+    assert np.all(np.isfinite(np.asarray(poisoned.sum_c)))

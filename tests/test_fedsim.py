@@ -100,6 +100,26 @@ class TestScaffold:
                             eval_fn=distance_to_opt(data.w_star))
         assert np.all(np.isfinite(np.asarray(r.metric_history)))
 
+    def test_deprecation_warns_exactly_once(self, problem, monkeypatch):
+        """The scaffold loop is deprecated in favor of the session engines;
+        the warning fires on the FIRST call of a process only (a sweep over
+        rounds must not spam per call)."""
+        import warnings
+
+        from repro.fedsim import scaffold as scaffold_mod
+
+        monkeypatch.setattr(scaffold_mod, "_WARNED", False)
+        data, w0 = problem
+        cfg = DPScaffoldConfig(clip_norm=0.3, sigma=0.1, central=True,
+                               num_clients=M)
+        kw = dict(rounds=1, tau=1, eta_l=ETA_L, key=jax.random.PRNGKey(2))
+        with pytest.warns(DeprecationWarning, match="run_dp_scaffold is "
+                          "deprecated"):
+            run_dp_scaffold(cfg, linreg_loss, w0, data.client_batches(), **kw)
+        with warnings.catch_warnings():
+            warnings.simplefilter("error", DeprecationWarning)
+            run_dp_scaffold(cfg, linreg_loss, w0, data.client_batches(), **kw)
+
 
 class TestDeterminism:
     def test_same_seed_same_result(self, problem):

@@ -18,7 +18,11 @@ Validates the stream a ``JsonlTracker`` writes (one JSON object per line):
   and ``eps`` / ``mu`` never decrease over executed rounds;
 * with ``--rounds T``: exactly T distinct non-frozen round lines (retried
   rounds may deliver a round index more than once — the LAST delivery
-  counts, matching the resumable-run semantics).
+  counts, matching the resumable-run semantics);
+* ``bytes_per_round`` (the §16 communication footprint, 4 * comm_floats(d))
+  when present must be a finite positive number and CONSTANT across the
+  stream — it is static for a fixed spec; ``--require-bytes`` makes it
+  mandatory on every executed round.
 
 Pure stdlib so it runs in every CI leg with zero extra dependencies.
 Exit 0 = valid, exit 1 = violations (each printed with its line number).
@@ -27,6 +31,7 @@ from __future__ import annotations
 
 import argparse
 import json
+import math
 import numbers
 import sys
 
@@ -36,7 +41,7 @@ ROUND_KEYS = {
     "round", "seed", "round_time_s", "frozen",
     "eta", "eta_naive", "eta_target", "metric", "clip", "participants",
     "realized_clients", "dropped", "stragglers", "corrupt",
-    "watchdog_fault_round",
+    "watchdog_fault_round", "bytes_per_round",
     "ledger_rounds", "mu", "eps", "eps_rdp", "ledger_error",
 }
 EVENT_KEYS = {
@@ -52,6 +57,7 @@ def _num_or_null(v) -> bool:
 
 
 def check_stream(lines, *, rounds: int | None = None,
+                 require_bytes: bool = False,
                  label: str = "<stream>") -> list[str]:
     """Return a list of violations (empty = valid)."""
     errors: list[str] = []
@@ -59,6 +65,9 @@ def check_stream(lines, *, rounds: int | None = None,
     last_ledger_rounds = 0
     last_eps = last_mu = float("-inf")
     delivered: dict[int, dict] = {}
+    # §16: bytes_per_round is 4 * comm_floats(d), STATIC for a fixed spec —
+    # any variation within one stream means the tap recomputed it wrong
+    bytes_seen: float | None = None
 
     for n, raw in enumerate(lines, start=1):
         raw = raw.strip()
@@ -113,6 +122,21 @@ def check_stream(lines, *, rounds: int | None = None,
                 errors.append(f"{label}:{n}: {k} is not a number or null")
         if "eta" not in obj:
             errors.append(f"{label}:{n}: executed round without 'eta'")
+        if "bytes_per_round" in obj:
+            b = obj["bytes_per_round"]
+            if (not isinstance(b, numbers.Real) or isinstance(b, bool)
+                    or not math.isfinite(b) or b <= 0):
+                errors.append(f"{label}:{n}: bytes_per_round {b!r} is not a "
+                              "finite positive number")
+            elif bytes_seen is None:
+                bytes_seen = float(b)
+            elif float(b) != bytes_seen:
+                errors.append(f"{label}:{n}: bytes_per_round changed "
+                              f"({b} != {bytes_seen}) — it is static for a "
+                              "fixed spec")
+        elif require_bytes:
+            errors.append(f"{label}:{n}: executed round without "
+                          "'bytes_per_round' (--require-bytes)")
         delivered[t] = obj
         if "ledger_rounds" in obj:
             lr = obj["ledger_rounds"]
@@ -141,12 +165,17 @@ def main() -> None:
     ap.add_argument("paths", nargs="+", help="JSONL telemetry files")
     ap.add_argument("--rounds", type=int, default=None,
                     help="require exactly this many distinct executed rounds")
+    ap.add_argument("--require-bytes", action="store_true",
+                    help="require bytes_per_round on every executed round "
+                         "(§16 communication footprint)")
     args = ap.parse_args()
 
     failures: list[str] = []
     for path in args.paths:
         with open(path) as f:
-            failures += check_stream(f, rounds=args.rounds, label=path)
+            failures += check_stream(f, rounds=args.rounds,
+                                     require_bytes=args.require_bytes,
+                                     label=path)
     if failures:
         print(f"{len(failures)} telemetry violations:")
         for f in failures:
