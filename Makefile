@@ -4,11 +4,39 @@ export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 # LINT_STRICT=1 makes a missing ruff an ERROR instead of a soft skip (CI
 # always sets it; local runs without ruff keep working).
 LINT_STRICT ?=
+# COV_STRICT=1 makes a missing pytest-cov an ERROR (CI sets it); COV_FLOOR is
+# the committed line-coverage floor for the public-API packages repro.core +
+# repro.fedsim — a conservative ratchet, raise it as measured coverage allows.
+COV_STRICT ?=
+COV_FLOOR ?= 75
+# PYTEST_FLAGS passes extra flags through every pytest target, e.g.
+#     make test PYTEST_FLAGS="-n auto"     # pytest-xdist (1-device legs ONLY:
+# each xdist worker re-initializes jax under the leg's XLA_FLAGS, so on the
+# forced-8-host-device leg N workers x 8 devices oversubscribes the runner
+# and distorts the wall-clock/fault-timing assertions — keep that leg serial).
+PYTEST_FLAGS ?=
 
-.PHONY: test bench-quick bench bench-check lint docs-check
+.PHONY: test test-fast coverage bench-quick bench bench-check lint docs-check
 
-test:                      ## tier-1 test suite
-	$(PYTHON) -m pytest -x -q
+test:                      ## tier-1 test suite (full matrix, slow sweeps included)
+	$(PYTHON) -m pytest -x -q $(PYTEST_FLAGS)
+
+test-fast:                 ## tier-1 minus the `slow` cross-engine sweeps (local iteration)
+	$(PYTHON) -m pytest -x -q -m "not slow" $(PYTEST_FLAGS)
+
+coverage:                  ## tier-1 suite under pytest-cov with the committed floor
+	@if $(PYTHON) -c "import pytest_cov" 2>/dev/null; then \
+		$(PYTHON) -m pytest -x -q $(PYTEST_FLAGS) \
+			--cov=repro.core --cov=repro.fedsim \
+			--cov-report=term --cov-report=xml:coverage.xml \
+			--cov-fail-under=$(COV_FLOOR); \
+	elif [ -n "$(COV_STRICT)" ]; then \
+		echo "ERROR: pytest-cov not installed but COV_STRICT=1 (pip install pytest-cov)" >&2; \
+		exit 1; \
+	else \
+		echo "pytest-cov not installed; running plain tests (pip install pytest-cov; COV_STRICT=1 to fail instead)"; \
+		$(PYTHON) -m pytest -x -q $(PYTEST_FLAGS); \
+	fi
 
 bench-quick:               ## reduced-size benchmarks + JSON (CI, CPU interpret)
 	$(PYTHON) -m benchmarks.run --quick --json

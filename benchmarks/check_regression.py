@@ -59,6 +59,10 @@ RATIO_KEYS = (
     # — e.g. a compressor that stops shrinking the payload — fails loudly)
     ("compression", "randk_relative_to_dense"),
     ("compression", "bytes_reduction_randk"),
+    # e7 §17: decaying-sigma wrapper vs fixed sigma — the wrapper resolves
+    # sigma(t) at trace time, so its throughput ratio should sit at ~1.0;
+    # erosion means round-indexed noise grew real per-round cost
+    ("noise_schedule", "relative_to_fixed"),
 )
 # gated only when the run configs match: absolute throughputs
 ABS_KEYS = (
@@ -71,6 +75,7 @@ ABS_KEYS = (
     ("sparse_cohort", "rounds_per_sec"),
     ("host_resident", "rounds_per_sec"),
     ("compression", "rounds_per_sec"),
+    ("noise_schedule", "rounds_per_sec"),
 )
 
 

@@ -97,6 +97,17 @@ def main(argv=None) -> int:
                      f"{sh.get('randk_relative_to_dense', 0):.2f}x dense")
         print(line)
 
+    ns = rep.get("noise_schedule")
+    if ns:
+        conv = ("converges" if ns.get("final_dist_within_2x_fixed")
+                else "CONVERGENCE DRIFT")
+        print(f"\n**Noise schedule (e7, §17)** (decay={ns.get('decay')}): "
+              f"{ns.get('rounds_per_sec', 0):.0f} r/s vs "
+              f"{ns.get('rounds_per_sec_fixed', 0):.0f} fixed-sigma "
+              f"({ns.get('relative_to_fixed', 0):.2f}x); final dist "
+              f"{ns.get('final_dist', 0):.3f} vs "
+              f"{ns.get('final_dist_fixed', 0):.3f} fixed ({conv})")
+
     tl = rep.get("telemetry")
     if tl:
         ok = "ledger==report" if tl.get("ledger_matches_report") else \

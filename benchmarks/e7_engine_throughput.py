@@ -64,6 +64,16 @@ the simulation hot path.  Three comparisons (DESIGN.md §8):
      final cumulative-ledger epsilon must equal ``session.privacy_report``
      to 1e-9 (``telemetry.ledger_matches_report``).
 
+ 10. Noise schedule (DESIGN.md §17): rounds/sec of a decaying-sigma
+     DP-FedEXP run (``cdp-fedexp-schedule``, sigma(t) = sigma0 * decay^t
+     threaded through the scan carry's round index) vs the fixed-sigma twin
+     at the same geometry, interleaved like the other paired workloads.
+     The wrapper's per-round work is one scalar power + a
+     ``dataclasses.replace`` resolved at trace time, so the gated ratio
+     pins that round-indexed noise stays engine-cost-free; the section also
+     records the final distance to the optimum for both runs (the
+     decaying schedule should never be wildly worse on this quadratic).
+
 Each comparison is a named WORKLOAD; ``--only <workload> ...`` (also
 ``main(only=[...])``) runs a subset, and the emitted BENCH_engine.json then
 carries only the sections that ran plus a ``partial`` marker —
@@ -110,7 +120,7 @@ FLOAT_BYTES = 4
 # --only selects a subset of these; the emitted BENCH_engine.json then only
 # carries the sections that ran and check_regression gates what is present
 WORKLOADS = ("engine", "backends", "sharded", "sampled", "local", "stream",
-             "faults", "telemetry")
+             "faults", "schedule", "telemetry")
 
 
 def _quad_loss(w, b):
@@ -352,6 +362,36 @@ def _fault_rows(targets, w0, key, rounds, *, algorithm="ldp-fedexp-gauss",
              for (label, _), secs in zip(cases, best)], finite)
 
 
+def _schedule_rows(targets, w0, key, rounds, *, clients, decay=0.95):
+    """Rounds/sec of the §17 decaying-sigma engine vs its fixed-sigma twin.
+
+    ``cdp-fedexp-schedule`` threads the round index through the scan carry
+    and resolves sigma(t) = sigma0 * decay^t per round; the fixed-sigma
+    comparator is the identical composition minus the wrapper.  Interleaved
+    timing like the other paired workloads — the RATIO is the gated metric
+    (the wrapper should be engine-cost-free).  Also returns the final
+    distance to the quadratic optimum (the cohort-mean target) for both
+    runs: the decaying schedule spends the same rounds under shrinking
+    noise, so a wildly worse final iterate means the schedule is broken,
+    not just slow.
+    """
+    sigma0 = 5 * 0.3 / clients ** 0.5
+    kw = dict(clip_norm=0.3, sigma=sigma0, num_clients=clients)
+    cases = [("fixed sigma", make_algorithm("cdp-fedexp", **kw)),
+             (f"decay={decay}",
+              make_algorithm("cdp-fedexp-schedule", decay=decay, **kw))]
+    train = TrainSpec(rounds=rounds, tau=1, eta_l=0.5)
+    sessions = [FederatedSession(alg, _quad_loss, w0, targets, train=train)
+                for _, alg in cases]
+    best = _interleaved_best(sessions, key)
+    opt = jnp.mean(targets, axis=0)
+    dists = [float(jnp.linalg.norm(s.run(key).final_w - opt))
+             for s in sessions]
+    rows = [[label, rounds / secs, dist]
+            for (label, _), secs, dist in zip(cases, best, dists)]
+    return rows, sigma0
+
+
 def _backend_rows(m, d, key):
     u = jax.random.normal(key, (m, d))
     noise = 0.21 * jax.random.normal(jax.random.fold_in(key, 1), (m, d))
@@ -555,6 +595,29 @@ def main(*, clients: int = 300, dim: int = 4096, rounds: int = 50,
             "final_params_finite": fault_finite,
         }
 
+    if "schedule" in sel:
+        schedule_rows, schedule_sigma0 = _schedule_rows(
+            targets, w0, key, rounds, clients=clients)
+        print_table(f"E7 noise-schedule engine (M={clients}, d={dim})",
+                    ["noise", "rounds/sec", "final ||w - w*||"],
+                    schedule_rows)
+        # decaying-sigma wrapper (DESIGN.md §17) vs fixed sigma:
+        # relative_to_fixed is the machine-relative wrapper overhead the
+        # regression gate always watches; the final-distance pair pins that
+        # the schedule still converges on the quadratic probe
+        report["noise_schedule"] = {
+            "decay": 0.95,
+            "sigma0": schedule_sigma0,
+            "algorithm": "cdp-fedexp-schedule",
+            "rounds_per_sec": schedule_rows[1][1],
+            "rounds_per_sec_fixed": schedule_rows[0][1],
+            "relative_to_fixed": schedule_rows[1][1] / schedule_rows[0][1],
+            "final_dist": schedule_rows[1][2],
+            "final_dist_fixed": schedule_rows[0][2],
+            "final_dist_within_2x_fixed": bool(
+                schedule_rows[1][2] <= 2.0 * schedule_rows[0][2] + 1e-6),
+        }
+
     os.makedirs(RESULTS_DIR, exist_ok=True)
     if "telemetry" in sel:
         report["telemetry"] = _telemetry_section(targets, w0, key, rounds)
@@ -606,6 +669,14 @@ def main(*, clients: int = 300, dim: int = 4096, rounds: int = 50,
               f"{fr['rounds_per_sec_clean']:.0f} r/s clean "
               f"({fr['relative_to_clean']:.2f}x); final params finite: "
               f"{fr['final_params_finite']}")
+    if "schedule" in sel:
+        ns = report["noise_schedule"]
+        status = "OK " if ns["final_dist_within_2x_fixed"] else "WARN"
+        print(f"{status} noise-schedule engine (decay={ns['decay']}): "
+              f"{ns['rounds_per_sec']:.0f} r/s vs "
+              f"{ns['rounds_per_sec_fixed']:.0f} r/s fixed sigma "
+              f"({ns['relative_to_fixed']:.2f}x); final dist "
+              f"{ns['final_dist']:.3f} vs {ns['final_dist_fixed']:.3f} fixed")
     if "telemetry" in sel:
         tl = report["telemetry"]
         status = "OK " if tl["ledger_matches_report"] else "FAIL"

@@ -28,6 +28,12 @@ ravels/unravels at the boundary — see README.md for the pytree quickstart.
 ``--telemetry out.jsonl`` streams per-round events (eta, metric, cumulative
 privacy ledger, round wall-clock) to a JSONL file WHILE the compiled run
 executes — results stay bit-identical (DESIGN.md §15).
+
+``--schedule`` adds a third leg, ``cdp-fedexp-schedule``: the same CDP
+FedEXP run under a decaying noise schedule sigma(t) = sigma0 * 0.9**t
+(DESIGN.md §17).  Its telemetry stream carries the per-round ``sigma`` the
+device actually used, which ``tools/check_telemetry.py --sigma0 S
+--sigma-decay 0.9`` pins against the declared schedule in CI.
 """
 import argparse
 import math
@@ -44,11 +50,16 @@ from repro.fedsim import CohortSpec, FederatedSession, TrainSpec
 from repro.telemetry import JsonlTracker
 
 # grid-searched on this generation (EXPERIMENTS.md): (eta_l, C) per algorithm
-HPS = {"dp-fedavg-cdp": (0.3, 3.0), "cdp-fedexp": (0.1, 0.3)}
+HPS = {"dp-fedavg-cdp": (0.3, 3.0), "cdp-fedexp": (0.1, 0.3),
+       "cdp-fedexp-schedule": (0.1, 0.3)}
+
+# §17 demo schedule: sigma(t) = sigma0 * SCHEDULE_DECAY**t; CI pins the
+# telemetry stream against exactly this decay (check_telemetry --sigma-decay)
+SCHEDULE_DECAY = 0.9
 
 
 def main(quick: bool = False, sampled_q: float | None = None,
-         telemetry: str | None = None):
+         telemetry: str | None = None, schedule: bool = False):
     m, d, rounds, tau = (120, 64, 8, 5) if quick else (1000, 500, 50, 20)
     data = make_synthetic_linreg(jax.random.PRNGKey(0), m, d)
     w0 = jnp.zeros(d)
@@ -56,10 +67,16 @@ def main(quick: bool = False, sampled_q: float | None = None,
     cohort = CohortSpec() if sampled_q is None else CohortSpec(q=sampled_q)
     eval_every = 2 if quick else 10
 
-    for name in ("dp-fedavg-cdp", "cdp-fedexp"):
+    names = ["dp-fedavg-cdp", "cdp-fedexp"]
+    if schedule:
+        names.append("cdp-fedexp-schedule")
+    for name in names:
         eta_l, clip = HPS[name]
-        alg = make_algorithm(name, clip_norm=clip,
-                             sigma=5 * clip / math.sqrt(m), num_clients=m)
+        kw = dict(clip_norm=clip, sigma=5 * clip / math.sqrt(m),
+                  num_clients=m)
+        if name == "cdp-fedexp-schedule":
+            kw["decay"] = SCHEDULE_DECAY
+        alg = make_algorithm(name, **kw)
         session = FederatedSession(
             alg, linreg_loss, w0, data.client_batches(),
             train=TrainSpec(rounds=rounds, tau=tau, eta_l=eta_l,
@@ -101,5 +118,10 @@ if __name__ == "__main__":
     ap.add_argument("--telemetry", default=None, metavar="PATH",
                     help="stream per-round JSONL telemetry to PATH "
                          "(one file per algorithm; DESIGN.md §15)")
+    ap.add_argument("--schedule", action="store_true",
+                    help="also run cdp-fedexp under a decaying noise "
+                         f"schedule sigma(t) = sigma0 * {SCHEDULE_DECAY}**t "
+                         "(DESIGN.md §17)")
     args = ap.parse_args()
-    main(quick=args.quick, sampled_q=args.sampled_q, telemetry=args.telemetry)
+    main(quick=args.quick, sampled_q=args.sampled_q, telemetry=args.telemetry,
+         schedule=args.schedule)

@@ -31,10 +31,15 @@ __all__ = [
     "gaussian_rdp_epsilon",
     "gdp_epsilon",
     "gdp_delta",
+    "gdp_mu_for_epsilon",
+    "sigma_for_epsilon",
     "subsampled_gdp_mu",
+    "composed_gdp_mu",
     "realized_participation",
     "ldp_gaussian_budget",
     "cdp_budget",
+    "schedule_ldp_budget",
+    "schedule_cdp_budget",
     "privunit_budget",
     "PrivacyReport",
 ]
@@ -134,6 +139,48 @@ def gdp_epsilon(mu: float, delta: float) -> float:
     return 0.5 * (lo + hi)
 
 
+def gdp_mu_for_epsilon(eps: float, delta: float) -> float:
+    """Largest GDP parameter mu whose (eps, delta) curve meets the target.
+
+    The inverse of ``gdp_epsilon`` in mu: ``gdp_epsilon`` is increasing in mu
+    (more privacy loss per unit noise), so bisection on mu finds the largest
+    mechanism the budget admits.  This is how a per-client epsilon budget
+    turns into a per-client noise scale (``sigma_for_epsilon``).
+    """
+    if eps <= 0.0:
+        raise ValueError(f"eps must be > 0, got {eps}")
+    if not 0.0 < delta < 1.0:
+        raise ValueError(f"delta must be in (0, 1), got {delta}")
+    lo, hi = 0.0, 1.0
+    while gdp_epsilon(hi, delta) < eps:
+        lo = hi
+        hi *= 2.0
+        if hi > 1e8:  # pragma: no cover - astronomically loose budget
+            return hi
+    for _ in range(200):
+        mid = 0.5 * (lo + hi)
+        if gdp_epsilon(mid, delta) < eps:
+            lo = mid
+        else:
+            hi = mid
+    return 0.5 * (lo + hi)
+
+
+def sigma_for_epsilon(eps: float, delta: float,
+                      sensitivity: float = 1.0) -> float:
+    """Noise std giving a Gaussian release of ``sensitivity`` exactly
+    (eps, delta)-DP (via the tight GDP curve: sigma = sensitivity / mu).
+
+    This is the per-client calibration of the heterogeneous-privacy
+    mechanism (``PerClientGaussian``): client i's budget eps_i maps to
+    sigma_i = 2C / gdp_mu_for_epsilon(eps_i, delta) — larger budgets, less
+    noise.  Float64 Python, config time only.
+    """
+    if sensitivity <= 0.0:
+        raise ValueError(f"sensitivity must be > 0, got {sensitivity}")
+    return sensitivity / gdp_mu_for_epsilon(eps, delta)
+
+
 def subsampled_gdp_mu(mu_round: float, q: float, rounds: int) -> float:
     """Total GDP parameter of T q-subsampled rounds — amplification by
     subsampling (Bu, Dong, Long & Su 2020, "Deep learning with Gaussian
@@ -163,6 +210,46 @@ def subsampled_gdp_mu(mu_round: float, q: float, rounds: int) -> float:
         # crashing the report
         return float("inf")
     return q * math.sqrt(rounds * (math.exp(x) - 1.0))
+
+
+def composed_gdp_mu(mus, q: float = 1.0) -> float:
+    """Total GDP parameter of a NON-UNIFORM per-round sequence ``mus``.
+
+    The schedule generalization of ``subsampled_gdp_mu``: round t releases
+    through a mu_t-GDP Gaussian mechanism (a sigma(t) noise schedule gives a
+    different mu_t each round), and
+
+        q = 1:  mu_total = sqrt(sum_t mu_t^2)                 (exact — the
+                 PLD of a Gaussian composition is Gaussian regardless of
+                 whether the per-round scales match)
+        q < 1:  mu_total = q * sqrt(sum_t (e^{mu_t^2} - 1))   (the Bu et al.
+                 2020 CLT with the per-round Berry-Esseen terms summed
+                 instead of multiplied by T — uniform schedules reduce to
+                 ``subsampled_gdp_mu`` exactly)
+
+    A uniform sequence reproduces ``subsampled_gdp_mu(mu, q, T)`` bit-for-bit
+    in both regimes (pinned by tests/test_schedules.py).
+    """
+    mus = list(mus)
+    if not mus:
+        return 0.0
+    if any(m < 0.0 for m in mus):
+        raise ValueError("per-round mu must be >= 0")
+    if len(set(mus)) == 1:
+        # uniform schedules delegate to the uniform accountant so the
+        # homogeneous reduction is EXACT (same floats, not same-to-ulps)
+        return subsampled_gdp_mu(mus[0], q, len(mus))
+    if q >= 1.0:
+        return math.sqrt(sum(m * m for m in mus))
+    if q <= 0.0:
+        return 0.0
+    total = 0.0
+    for m in mus:
+        x = m * m
+        if x > 700.0:
+            return float("inf")  # same overflow contract as subsampled_gdp_mu
+        total += math.exp(x) - 1.0
+    return q * math.sqrt(total)
 
 
 # ---------------------------------------------------------------------------
@@ -233,6 +320,81 @@ def cdp_budget(clip_norm: float, sigma: float, num_clients: int, rounds: int,
         rho += rounds * clip_norm**4 / (2.0 * m**2 * sigma_xi**2) / q**2
     mu = subsampled_gdp_mu(math.sqrt(mu_round_sq), q, rounds)
     name = "CDP (FedEXP)" if sigma_xi else "CDP (FedAvg)"
+    if sampling_q < 1.0:
+        name += f", q={sampling_q:g} subsampled"
+    return PrivacyReport(name, gdp_epsilon(mu, delta),
+                         gaussian_rdp_epsilon(rho, delta), delta, mu)
+
+
+def schedule_ldp_budget(clip_norm: float, sigmas, delta: float) -> PrivacyReport:
+    """T-round LDP budget of a NON-UNIFORM noise schedule sigma(t).
+
+    Unlike the uniform ``ldp_gaussian_budget`` (per-release — every round's
+    release carries the same guarantee), a schedule's rounds differ, so the
+    honest client-level guarantee is the COMPOSITION over the executed
+    rounds: per-round mu_t = 2C / sigma_t summed in GDP (exact — Gaussian
+    PLDs compose in closed form), rho_t = 2 C^2 / sigma_t^2 summed for the
+    RDP upper bound.  No subsampling amplification is applied: local
+    guarantees hold against the client's own releases and do not amplify
+    under central sampling of who participates.
+
+    A length-1 schedule with sigma_0 == sigma reproduces
+    ``ldp_gaussian_budget(C, sigma, delta)``'s numbers exactly.
+    """
+    sigmas = list(sigmas)
+    if not sigmas:
+        raise ValueError("schedule_ldp_budget needs at least one round")
+    if any(s <= 0.0 for s in sigmas):
+        raise ValueError("every scheduled sigma must be > 0")
+    mu = composed_gdp_mu([2.0 * clip_norm / s for s in sigmas], q=1.0)
+    rho = sum(2.0 * clip_norm**2 / s**2 for s in sigmas)
+    return PrivacyReport(f"LDP (Gaussian, {len(sigmas)}-round schedule)",
+                         gdp_epsilon(mu, delta),
+                         gaussian_rdp_epsilon(rho, delta), delta, mu)
+
+
+def schedule_cdp_budget(clip_norm: float, sigmas, num_clients: int,
+                        delta: float, sigma_xis=None,
+                        sampling_q: float = 1.0) -> PrivacyReport:
+    """T-round central budget of a NON-UNIFORM noise schedule sigma(t).
+
+    The schedule generalization of ``cdp_budget``: round t's mean release
+    has mu_t = 2C/(sigma_t sqrt(M))/q (conditional-sensitivity inflation as
+    in ``cdp_budget``) and, when ``sigma_xis`` names per-round numerator
+    noise scales, the numerator release adds (C^2/(M sigma_xi_t)/q)^2 to
+    mu_t^2.  The per-round mus compose via ``composed_gdp_mu`` (exact
+    Gaussian composition at q=1, summed-CLT amplification at q<1); rho sums
+    per round for the RDP upper bound (composed unamplified — same
+    upper-bound caveat as ``cdp_budget``).
+
+    A uniform schedule reproduces ``cdp_budget(C, sigma, M, T, delta, ...)``
+    exactly (the composition helpers short-circuit uniform sequences to the
+    uniform accountants).
+    """
+    sigmas = list(sigmas)
+    if not sigmas:
+        raise ValueError("schedule_cdp_budget needs at least one round")
+    if any(s <= 0.0 for s in sigmas):
+        raise ValueError("every scheduled sigma must be > 0")
+    if sigma_xis is not None:
+        sigma_xis = list(sigma_xis)
+        if len(sigma_xis) != len(sigmas):
+            raise ValueError(
+                f"sigma_xis has {len(sigma_xis)} entries for a "
+                f"{len(sigmas)}-round schedule")
+    m = float(num_clients)
+    q = sampling_q if 0.0 < sampling_q < 1.0 else 1.0
+    mus, rho = [], 0.0
+    for t, s in enumerate(sigmas):
+        mu_sq = (2.0 * clip_norm / (s * math.sqrt(m)) / q) ** 2
+        rho += 2.0 * clip_norm**2 / (m * s**2) / q**2
+        if sigma_xis is not None and sigma_xis[t] > 0.0:
+            mu_sq += (clip_norm**2 / (m * sigma_xis[t]) / q) ** 2
+            rho += clip_norm**4 / (2.0 * m**2 * sigma_xis[t]**2) / q**2
+        mus.append(math.sqrt(mu_sq))
+    mu = composed_gdp_mu(mus, q)
+    name = ("CDP (FedEXP" if sigma_xis is not None else "CDP (FedAvg")
+    name += f", {len(sigmas)}-round schedule)"
     if sampling_q < 1.0:
         name += f", q={sampling_q:g} subsampled"
     return PrivacyReport(name, gdp_epsilon(mu, delta),

@@ -70,14 +70,21 @@ from repro.core.aggregation import (
     partial_clip_moments,
     raw_moments,
 )
-from repro.core.algorithm import RoundAux, ServerAlgorithm, client_keys
+from repro.core.algorithm import (
+    RoundAux,
+    ServerAlgorithm,
+    client_keys,
+    set_moment_count,
+)
 
 __all__ = [
     "PrivacyMechanism",
     "NoPrivacy",
     "GaussianLDP",
+    "PerClientGaussian",
     "PrivUnitLDP",
     "CentralGaussian",
+    "NoiseSchedule",
     "Aggregation",
     "MeanAggregation",
     "WeightedAggregation",
@@ -129,6 +136,14 @@ class PrivacyMechanism:
     # scalar extras psummed alongside the moments (PrivUnit's sum_s_hat);
     # counted by the §16 communication model
     n_scalar_extras = 0
+    # round-indexed mechanisms (NoiseSchedule) resolve to a per-round release
+    # via ``at_round(t)``; engines thread t only when this is True, so every
+    # fixed-noise composition keeps its exact pre-§17 trace
+    is_round_indexed = False
+
+    def at_round(self, t):
+        """The mechanism governing round ``t`` (self unless round-indexed)."""
+        return self
 
     @property
     def clip_independent_budget(self) -> bool:
@@ -241,6 +256,132 @@ class GaussianLDP(PrivacyMechanism):
         # already-released updates — and unamplified by central subsampling
         """Privacy budget of a ``rounds``-round run of this release (``PrivacyReport``)."""
         return accounting.ldp_gaussian_budget(self.clip_norm, self.sigma, delta)
+
+
+@dataclasses.dataclass(frozen=True)
+class PerClientGaussian(PrivacyMechanism):
+    """Heterogeneous-privacy Gaussian LDP: client i carries its OWN epsilon.
+
+    Each client's sigma_i is derived at build time from its (eps_i, delta)
+    budget by inverting the GDP single-release curve (``sigma_for_epsilon``
+    with sensitivity 2C), so the per-client guarantee is exact, not a shared
+    worst case.  sigma_i is indexed by GLOBAL client index — the same
+    contract as ``WeightedAggregation.weights`` — and the noise rows reuse
+    the globally-keyed ``materialize_ldp_noise`` stream scaled per row, so
+    shards/chunks reproduce the single-device randomization bit-for-bit.
+
+    The FedEXP bias correction under mixed noise subtracts
+    ``d * mean(sigma_i^2)`` over the realized cohort (``ldp_gaussian_mixed``);
+    the cohort's sum of sigma_i^2 rides the psum as a scalar extra, exactly
+    like PrivUnit's sum_s_hat.  When every epsilon is equal the whole path
+    short-circuits to ``GaussianLDP``'s expressions with the common sigma —
+    the degenerate composition is bit-identical, by construction.
+
+    ``inverse_variance_weights()`` exposes the public 1/sigma_i^2 weights the
+    registry pairs with ``WeightedAggregation`` (noisier clients count less;
+    the weights depend only on the PUBLIC epsilons, not the data).
+    """
+
+    clip_norm: float
+    epsilons: tuple[float, ...]
+    delta: float
+    backend: str = "auto"
+
+    def __post_init__(self):
+        eps = tuple(float(e) for e in self.epsilons)
+        if not eps:
+            raise ValueError("PerClientGaussian requires per-client epsilons")
+        object.__setattr__(self, "epsilons", eps)
+        sigmas = mech.per_client_sigmas(eps, self.delta, self.clip_norm)
+        object.__setattr__(self, "sigmas", sigmas)
+        object.__setattr__(self, "_uniform", len(set(sigmas)) == 1)
+
+    @property
+    def n_scalar_extras(self):
+        """sum_sigma_sq rides the psum only when sigmas actually differ."""
+        return 0 if self._uniform else 1
+
+    def inverse_variance_weights(self) -> tuple[float, ...]:
+        """Public 1/sigma_i^2 aggregation weights (for WeightedAggregation)."""
+        return tuple(1.0 / (s * s) for s in self.sigmas)
+
+    def _sigma_rows(self, start, m_local):
+        """(m_local,) per-row sigmas at global ``start`` — the exact slicing
+        contract of ``WeightedAggregation.row_weights`` (scalar start or a
+        gather-index vector; padding rows past M pick up sigma 0 => no noise,
+        and they are masked out of every reduction anyway)."""
+        s = jnp.asarray(self.sigmas, jnp.float32)
+        if getattr(start, "ndim", 0) == 1:
+            padded = jnp.concatenate([s, jnp.zeros((m_local,), jnp.float32)])
+            return jnp.take(padded, jnp.minimum(start, len(self.sigmas)),
+                            axis=0)
+        if isinstance(start, int) and start == 0 and m_local == len(self.sigmas):
+            return s
+        padded = jnp.concatenate([s, jnp.zeros((m_local,), jnp.float32)])
+        return jax.lax.dynamic_slice(padded, (start,), (m_local,))
+
+    def _noise(self, key, shape, dtype, start):
+        """Per-row noise: the unit-sigma globally-keyed stream scaled by
+        sigma_i — same draws as GaussianLDP, heterogeneous scale."""
+        rows = materialize_ldp_noise(key, *shape, 1.0, dtype, start=start)
+        return rows * self._sigma_rows(start, shape[0])[:, None]
+
+    def release(self, key, deltas, clip, m):
+        """Dense release: clip + randomize + reduce M rows to ``(RoundStats, extras)``."""
+        if self._uniform:
+            return fused_clip_aggregate(deltas, self._clip(clip), noise_key=key,
+                                        noise_sigma=self.sigmas[0],
+                                        backend=self.backend), {}
+        noise = self._noise(key, deltas.shape, deltas.dtype, 0)
+        stats = fused_clip_aggregate(deltas, self._clip(clip), noise,
+                                     backend=self.backend)
+        sig_sq = jnp.square(self._sigma_rows(0, deltas.shape[0]))
+        return stats, {"mean_sigma_sq": jnp.sum(sig_sq) / m}
+
+    def moments(self, key, deltas, mask, start, clip, row_weights=None):
+        """Shard-local partial SUMS of the release over masked rows at global ``start``."""
+        if self._uniform:
+            noise = materialize_ldp_noise(key, *deltas.shape, self.sigmas[0],
+                                          deltas.dtype, start=start)
+            return partial_clip_moments(deltas, self._clip(clip), noise,
+                                        weight_mask=mask,
+                                        row_weights=row_weights,
+                                        backend=self.backend), {}
+        noise = self._noise(key, deltas.shape, deltas.dtype, start)
+        mom = partial_clip_moments(deltas, self._clip(clip), noise,
+                                   weight_mask=mask, row_weights=row_weights,
+                                   backend=self.backend)
+        v = mask if row_weights is None else mask * row_weights
+        sig_sq = jnp.square(self._sigma_rows(start, deltas.shape[0]))
+        return mom, {"sum_sigma_sq": v @ sig_sq}
+
+    def finalize(self, key, mom, extras, clip, m_eff):
+        """Globally reduced moments -> the ``RoundStats`` the step layer consumes."""
+        if self._uniform:
+            return mom.stats(), {}
+        return mom.stats(), {"mean_sigma_sq": extras["sum_sigma_sq"] / mom.count}
+
+    def extrapolation(self, k_xi, stats, extras, dim, clip, m_eff):
+        """This mechanism's debiased step size: ``(eta_g, eta_naive, eta_target)``."""
+        if self._uniform:
+            eta = stepsize.ldp_gaussian(stats.mean_sq, stats.agg_sq, dim,
+                                        self.sigmas[0])
+        else:
+            eta = stepsize.ldp_gaussian_mixed(stats.mean_sq, stats.agg_sq, dim,
+                                              extras["mean_sigma_sq"])
+        return (eta,
+                stepsize.naive_noisy(stats.mean_sq, stats.agg_sq),
+                stepsize.target(stats.mean_sq_clipped, stats.agg_sq))
+
+    def budget(self, delta, *, rounds, dim, sampling_q, with_numerator):
+        """Worst-client budget: the report is the LDP guarantee of the
+        smallest-sigma (largest-epsilon) client; every other client's release
+        is strictly more private (its eps_i at the same delta is smaller)."""
+        rep = accounting.ldp_gaussian_budget(self.clip_norm, min(self.sigmas),
+                                             delta)
+        return dataclasses.replace(
+            rep, setting=f"LDP (Gaussian, per-client worst of "
+                         f"{len(self.epsilons)})")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -465,6 +606,158 @@ class CentralGaussian(PrivacyMechanism):
         return accounting.cdp_budget(self.clip_norm, self.sigma,
                                      self.num_clients, rounds, delta,
                                      sigma_xi=sigma_xi, sampling_q=q)
+
+
+@dataclasses.dataclass(frozen=True)
+class NoiseSchedule(PrivacyMechanism):
+    """Round-indexed noise schedule sigma(t) over a fixed-sigma mechanism.
+
+    A pure CONFIG wrapper (DESIGN.md §17): it never executes a release
+    itself.  Engines that see ``is_round_indexed`` thread the round index t
+    into the composition, and ``at_round(t)`` resolves the wrapper to its
+    inner mechanism with ``sigma = sigma(t)`` — a traced scalar riding the
+    existing clip/sigma plumbing, so no engine grows a schedule branch.
+
+        sigma(t) = sigma0 * decay**t * step_factor(t)
+
+    where ``step_factor`` is 1 before the first boundary and ``scales[i]``
+    from ``boundaries[i]`` on (Adap-DP-FL-style decay, plus step drops).
+    A CONSTANT schedule (decay 1, no boundaries) resolves to the inner
+    mechanism UNCHANGED — same object, same trace, bit-for-bit the fixed-
+    sigma run — which is the degenerate case the parity suite pins.
+
+    ``budget()`` composes the non-uniform sequence honestly: per-round
+    mu_t summed in GDP (``composed_gdp_mu``) with the RDP upper bound kept
+    (``schedule_ldp_budget`` / ``schedule_cdp_budget``); a constant schedule
+    delegates to the inner mechanism's own accounting for an exactly equal
+    report.
+    """
+
+    inner: PrivacyMechanism = None
+    decay: float = 1.0
+    boundaries: tuple[int, ...] = ()
+    scales: tuple[float, ...] = ()
+
+    def __post_init__(self):
+        if not isinstance(self.inner, (GaussianLDP, CentralGaussian)):
+            raise ValueError(
+                "NoiseSchedule wraps a fixed-sigma Gaussian mechanism "
+                "(GaussianLDP or CentralGaussian); got "
+                f"{type(self.inner).__name__}")
+        if isinstance(self.inner, CentralGaussian) and self.inner.sigma is None:
+            raise ValueError(
+                "NoiseSchedule needs a fixed-sigma CentralGaussian; the "
+                "z_mult (adaptive-clip) mode already rescales its noise per "
+                "round and has no static sigma to schedule")
+        if not (isinstance(self.decay, (int, float)) and self.decay > 0):
+            raise ValueError(f"decay must be positive, got {self.decay!r}")
+        bounds = tuple(int(b) for b in self.boundaries)
+        if any(b < 0 for b in bounds) or list(bounds) != sorted(set(bounds)):
+            raise ValueError(
+                "boundaries must be strictly increasing nonnegative rounds")
+        scales = tuple(float(s) for s in self.scales)
+        if len(scales) != len(bounds):
+            raise ValueError("scales must match boundaries one-to-one")
+        if any(s <= 0 for s in scales):
+            raise ValueError("scales must be positive")
+        object.__setattr__(self, "boundaries", bounds)
+        object.__setattr__(self, "scales", scales)
+
+    # -- schedule ----------------------------------------------------------
+
+    @property
+    def is_constant(self) -> bool:
+        """True when sigma(t) == sigma0 for every t (degenerate schedule)."""
+        return self.decay == 1.0 and not self.boundaries
+
+    @property
+    def is_round_indexed(self):
+        """Engines thread t only for genuinely varying schedules."""
+        return not self.is_constant
+
+    def at_round(self, t):
+        """The inner mechanism at round ``t`` (traced-sigma replace); the
+        inner object ITSELF for a constant schedule — same trace, bit-for-bit
+        the fixed-sigma composition."""
+        if self.is_constant:
+            return self.inner
+        return dataclasses.replace(self.inner, sigma=self._sigma_at(t))
+
+    def _sigma_at(self, t):
+        """sigma(t) as a traced f32 scalar (t is the traced round index)."""
+        tf = jnp.asarray(t, jnp.float32)
+        s = jnp.float32(self.inner.sigma) \
+            * jnp.power(jnp.float32(self.decay), tf)
+        if self.boundaries:
+            factors = jnp.asarray((1.0,) + self.scales, jnp.float32)
+            idx = jnp.sum((jnp.asarray(self.boundaries) <= t).astype(jnp.int32))
+            s = s * factors[idx]
+        return s
+
+    def sigma_value(self, t: int) -> float:
+        """sigma(t) as a Python float (accounting / telemetry validation).
+
+        f64 mirror of ``_sigma_at``; the traced release uses the f32 value,
+        so cross-checks against emitted telemetry compare at f32 rtol.
+        """
+        factor = 1.0
+        for b, sc in zip(self.boundaries, self.scales):
+            if t >= b:
+                factor = sc
+        return float(self.inner.sigma) * float(self.decay) ** int(t) * factor
+
+    # -- delegation to the inner mechanism ---------------------------------
+
+    @property
+    def needs_xi_key(self):
+        """The wrapper splits keys exactly as its inner mechanism would."""
+        return self.inner.needs_xi_key
+
+    @property
+    def supports_compression(self):
+        """Compression composes iff the inner release does (§16)."""
+        return self.inner.supports_compression
+
+    @property
+    def n_scalar_extras(self):
+        """The inner release's psummed scalar extras (none for Gaussians)."""
+        return self.inner.n_scalar_extras
+
+    def __getattr__(self, item):
+        if item.startswith("__") or item == "inner":
+            raise AttributeError(item)
+        d = object.__getattribute__(self, "__dict__")
+        inner = d.get("inner")
+        if inner is None:
+            raise AttributeError(item)
+        return getattr(inner, item)
+
+    # -- accounting --------------------------------------------------------
+
+    def budget(self, delta, *, rounds, dim, sampling_q, with_numerator):
+        """GDP composition of the non-uniform sigma sequence (DESIGN.md §17);
+        constant schedules delegate to the inner mechanism's own accounting
+        so the degenerate report is exactly the fixed-sigma one."""
+        if self.is_constant:
+            return self.inner.budget(delta, rounds=rounds, dim=dim,
+                                     sampling_q=sampling_q,
+                                     with_numerator=with_numerator)
+        sigmas = [self.sigma_value(t) for t in range(rounds)]
+        if isinstance(self.inner, GaussianLDP):
+            # local guarantee: unamplified by sampling, xi is server-side
+            return accounting.schedule_ldp_budget(self.inner.clip_norm,
+                                                  sigmas, delta)
+        sigma_xis = None
+        if with_numerator:
+            # mirror CentralGaussian.extrapolation: the hyperparameter-free
+            # numerator noise tracks the CURRENT sigma(t) unless pinned
+            sigma_xis = [self.inner.sigma_xi if self.inner.sigma_xi is not None
+                         else dim * s ** 2 / self.inner.num_clients
+                         for s in sigmas]
+        return accounting.schedule_cdp_budget(self.inner.clip_norm, sigmas,
+                                              self.inner.num_clients, delta,
+                                              sigma_xis=sigma_xis,
+                                              sampling_q=sampling_q)
 
 
 # ---------------------------------------------------------------------------
@@ -908,6 +1201,26 @@ class ComposedAlgorithm(ServerAlgorithm):
         """False for weighted aggregation: the moment count is a weight sum, not M."""
         return not self.aggregation.is_weighted
 
+    @property
+    def needs_round_index(self):
+        """True when the mechanism is a genuinely varying NoiseSchedule —
+        the engines thread the round index t into the round calls only then,
+        so every fixed-noise composition keeps its exact pre-§17 trace."""
+        return getattr(self.mechanism, "is_round_indexed", False)
+
+    def _mech_at(self, t):
+        """The mechanism executing this round: ``at_round(t)`` resolution for
+        round-indexed mechanisms (traced sigma(t)), the mechanism itself —
+        or a constant schedule's inner — otherwise."""
+        if self.needs_round_index:
+            if t is None:
+                raise ValueError(
+                    f"{self.name!r} carries a round-indexed noise schedule "
+                    "but the engine did not thread the round index t into "
+                    "this call")
+            return self.mechanism.at_round(t)
+        return self.mechanism.at_round(None)
+
     def comm_floats(self, d: int) -> int:
         """The §16 communication model: floats one client uploads / the round
         collective reduces — the aggregation layer's vector payload (d dense,
@@ -978,10 +1291,11 @@ class ComposedAlgorithm(ServerAlgorithm):
             return CompressionCarry(ef=jnp.zeros_like(w), inner=inner)
         return inner
 
-    def apply_round_stateful(self, key, w, raw_deltas, state):
+    def apply_round_stateful(self, key, w, raw_deltas, state, t=None):
         """Stateful dense round: ``apply_round`` threading the optimizer/clip carry."""
         clip = self.step.clip_override(self._inner_state(state))
         k_mech, extra = self._split_keys(key)
+        mech_t = self._mech_at(t)
         m = raw_deltas.shape[0]
         if self.aggregation.is_weighted or self.aggregation.is_compressed:
             # weighted and compressed compositions route the dense round
@@ -994,26 +1308,28 @@ class ComposedAlgorithm(ServerAlgorithm):
             # mask — its mechanisms index the mask directly.
             mask = (None if self.aggregation.is_compressed
                     else jnp.ones((m,), jnp.float32))
-            moments = self.local_moments(key, w, raw_deltas, mask, 0, state)
-            return self.apply_from_moments(key, w, moments, state)
-        stats, extras = self.mechanism.release(k_mech, raw_deltas, clip, float(m))
+            moments = self.local_moments(key, w, raw_deltas, mask, 0, state,
+                                         t=t)
+            return self.apply_from_moments(key, w, moments, state, t=t)
+        stats, extras = mech_t.release(k_mech, raw_deltas, clip, float(m))
         if self.step.needs_clip_bits:
             norms = jnp.linalg.norm(raw_deltas, axis=-1)
             extras = dict(extras)
             extras["count_below"] = jnp.sum((norms <= clip).astype(jnp.float32))
-        return self.step.apply(extra, w, stats, extras, self.mechanism, clip,
+        return self.step.apply(extra, w, stats, extras, mech_t, clip,
                                float(m), state)
 
-    def apply_round(self, key, w, raw_deltas):
+    def apply_round(self, key, w, raw_deltas, t=None):
         """One dense server round: ``(key, w, (M, d) raw deltas) -> (w_next, RoundAux)``."""
         if self.step.stateful:
             raise TypeError(f"{self.name} is stateful; use apply_round_stateful")
-        w_next, aux, _ = self.apply_round_stateful(key, w, raw_deltas, ())
+        w_next, aux, _ = self.apply_round_stateful(key, w, raw_deltas, (), t=t)
         return w_next, aux
 
-    def local_moments(self, key, w, deltas, mask, start, state):
+    def local_moments(self, key, w, deltas, mask, start, state, t=None):
         """Shard/chunk-local partial sums of this algorithm's release (SUMS, psum-able)."""
         clip = self.step.clip_override(self._inner_state(state))
+        mech_t = self._mech_at(t)
         weights = self.aggregation.row_weights(start, deltas.shape[0])
         # split exactly as the dense path does, so per-client randomness
         # (LDP noise rows, PrivUnit keys) is identical on every engine even
@@ -1023,13 +1339,13 @@ class ComposedAlgorithm(ServerAlgorithm):
         k_mech, _ = self._split_keys(key)
         if self.aggregation.is_compressed:
             plan = self._round_plan(key, deltas.shape[-1])
-            mom, extras = self.mechanism.moments(
+            mom, extras = mech_t.moments(
                 k_mech, deltas, mask, start, clip, weights,
                 compress_fn=self.aggregation.compress_fn(plan),
                 compress_row_bound=self._compress_row_bound(clip))
         else:
-            mom, extras = self.mechanism.moments(k_mech, deltas, mask, start,
-                                                 clip, weights)
+            mom, extras = mech_t.moments(k_mech, deltas, mask, start,
+                                         clip, weights)
         if self.step.needs_clip_bits:
             norms = jnp.linalg.norm(deltas, axis=-1)
             below = (norms <= clip).astype(jnp.float32)
@@ -1045,12 +1361,13 @@ class ComposedAlgorithm(ServerAlgorithm):
                                    if mask is None else jnp.sum(mask))
         return mom, extras
 
-    def apply_from_moments(self, key, w, moments, state):
+    def apply_from_moments(self, key, w, moments, state, t=None):
         """Server update from the globally reduced moments (replicated math)."""
         mom, extras = moments
         inner = self._inner_state(state)
         clip = self.step.clip_override(inner)
         k_mech, extra = self._split_keys(key)
+        mech_t = self._mech_at(t)
         # realized cohort size for mechanism noise: the CLIENT count, which
         # weighted compositions carry in extras (mom.count is their weight
         # sum); everywhere else mom.count is exactly it
@@ -1058,15 +1375,26 @@ class ComposedAlgorithm(ServerAlgorithm):
             else mom.count
         if self.aggregation.is_compressed:
             return self._apply_compressed(key, k_mech, extra, w, mom, extras,
-                                          clip, m_eff, state)
-        stats, more = self.mechanism.finalize(k_mech, mom, extras, clip, m_eff)
+                                          clip, m_eff, state, mech_t)
+        stats, more = mech_t.finalize(k_mech, mom, extras, clip, m_eff)
         if more:
             extras = {**extras, **more}
-        return self.step.apply(extra, w, stats, extras, self.mechanism, clip,
+        return self.step.apply(extra, w, stats, extras, mech_t, clip,
                                mom.count, state)
 
+    def apply_round_sharded(self, key, w, deltas, mask, state, axis_name,
+                            m_total=None, t=None):
+        """Sharded round with the round index threaded into both halves
+        (the base implementation is otherwise unchanged — DESIGN.md §9)."""
+        start = jax.lax.axis_index(axis_name) * deltas.shape[0]
+        moments = self.local_moments(key, w, deltas, mask, start, state, t=t)
+        moments = jax.lax.psum(moments, axis_name)
+        if m_total is not None and self.supports_static_count:
+            moments = set_moment_count(moments, m_total)
+        return self.apply_from_moments(key, w, moments, state, t=t)
+
     def _apply_compressed(self, key, k_mech, extra, w, mom, extras, clip,
-                          m_eff, state):
+                          m_eff, state, mech_t):
         """Compressed finalize (DESIGN.md §16): noise in the compressed
         domain -> decompress -> error feedback -> support selection -> step.
 
@@ -1081,7 +1409,7 @@ class ComposedAlgorithm(ServerAlgorithm):
         d = w.shape[-1]
         plan = self._round_plan(key, d)
         comp_mean = mom.sum_c / mom.count
-        noise = self.mechanism.compressed_noise(
+        noise = mech_t.compressed_noise(
             k_mech, comp_mean.shape, clip, m_eff, self.aggregation.sens_factor)
         if noise is not None:
             comp_mean = comp_mean + noise
@@ -1098,7 +1426,7 @@ class ComposedAlgorithm(ServerAlgorithm):
                            agg_sq=jnp.sum(jnp.square(applied)),
                            mean_sq_clipped=mom.sum_sq_clipped / mom.count)
         w_next, aux, inner_next = self.step.apply(
-            extra, w, stats, extras, self.mechanism, clip, mom.count, inner)
+            extra, w, stats, extras, mech_t, clip, mom.count, inner)
         if ef_next is not None:
             return w_next, aux, CompressionCarry(ef=ef_next, inner=inner_next)
         return w_next, aux, inner_next

@@ -544,6 +544,33 @@ def _composed(name: str, mechanism, step) -> _compose.ComposedAlgorithm:
     return _compose.ComposedAlgorithm(mechanism=mechanism, step=step, name=name)
 
 
+def _schedule(inner, kw) -> _compose.NoiseSchedule:
+    return _compose.NoiseSchedule(inner=inner, decay=kw.get("decay", 1.0),
+                                  boundaries=tuple(kw.get("boundaries", ())),
+                                  scales=tuple(kw.get("scales", ())))
+
+
+def _perclient_weighted(kw) -> _compose.ComposedAlgorithm:
+    # heterogeneous privacy (§17): per-client sigmas from the public epsilons
+    # + the matching public inverse-variance aggregation weights
+    mechanism = _compose.PerClientGaussian(kw["clip_norm"],
+                                           tuple(kw["epsilons"]), kw["delta"],
+                                           backend=_backend(kw))
+    return _compose.ComposedAlgorithm(
+        mechanism=mechanism, step=_compose.FedEXPStep(),
+        aggregation=_compose.WeightedAggregation(
+            mechanism.inverse_variance_weights()),
+        name="ldp-fedexp-perclient")
+
+
+def _scaffold(kw) -> ServerAlgorithm:
+    from repro.core.variance_reduction import DPScaffoldServer
+    return DPScaffoldServer(clip_norm=kw["clip_norm"], sigma=kw["sigma"],
+                            central=kw["central"],
+                            num_clients=kw["num_clients"],
+                            tau=kw["tau"], eta_l=kw["eta_l"])
+
+
 # Every registry name is a (mechanism, step) composition under the uniform
 # MeanAggregation — the first ten reproduce the monolithic classes above
 # bit-for-bit (tests/test_compose.py); the rest are cross-product names the
@@ -582,6 +609,15 @@ _FACTORIES: dict[str, Callable[..., ServerAlgorithm]] = {
         "privunit-fedexp-adaptive-clip",
         _privunit({**kw, "clip_norm": kw.get("clip_norm", kw.get("c0", 1.0))}),
         _adaptive_step(kw)),
+    # -- §17: heterogeneous privacy, noise schedules, control variates ------
+    "ldp-fedexp-perclient": lambda **kw: _perclient_weighted(kw),
+    "ldp-fedexp-schedule": lambda **kw: _composed(
+        "ldp-fedexp-schedule", _schedule(_gauss_ldp(kw), kw),
+        _compose.FedEXPStep()),
+    "cdp-fedexp-schedule": lambda **kw: _composed(
+        "cdp-fedexp-schedule", _schedule(_cdp(kw), kw),
+        _compose.FedEXPStep()),
+    "dp-scaffold": lambda **kw: _scaffold(kw),
 }
 
 

@@ -37,6 +37,8 @@ import jax.numpy as jnp
 __all__ = [
     "GaussianLDPConfig",
     "GaussianCDPConfig",
+    "PerClientGaussianConfig",
+    "per_client_sigmas",
     "gaussian_ldp_randomize",
     "gaussian_cdp_noise",
     "PrivUnitParams",
@@ -144,6 +146,50 @@ class GaussianCDPConfig:
     def sigma_xi(self, dim: int) -> float:
         """Hyperparameter-free numerator noise scale ``d sigma^2 / M`` (Eq. 8, §3.2 of the paper)."""
         return dim * self.sigma**2 / self.num_clients
+
+
+@dataclasses.dataclass(frozen=True)
+class PerClientGaussianConfig:
+    """Heterogeneous-privacy Gaussian LDP: client i carries its OWN
+    ``epsilons[i]`` budget at the shared ``delta`` (DESIGN.md §17).
+
+    ``sigmas`` (derived at config time, f64) inverts the single-release GDP
+    curve per client at sensitivity 2C — the same curve the uniform
+    ``GaussianLDPConfig`` accounting walks, so equal epsilons derive the
+    common sigma exactly.  ``repro.core.compose.PerClientGaussian`` is the
+    executable mechanism behind this config.
+    """
+
+    clip_norm: float
+    epsilons: tuple[float, ...]
+    delta: float
+
+    def __post_init__(self):
+        object.__setattr__(self, "epsilons",
+                           tuple(float(e) for e in self.epsilons))
+        object.__setattr__(
+            self, "sigmas",
+            per_client_sigmas(self.epsilons, self.delta, self.clip_norm))
+
+
+def per_client_sigmas(epsilons, delta: float,
+                      clip_norm: float) -> tuple[float, ...]:
+    """Per-client noise stds meeting each (eps_i, delta) at sensitivity 2C.
+
+    Inverts the Gaussian single-release GDP curve (``sigma_for_epsilon``)
+    independently per client; monotone in eps_i, so larger budgets get
+    strictly smaller sigmas and the 1/sigma_i^2 inverse-variance aggregation
+    weights favor the better-resourced clients.
+    """
+    from repro.core import accounting
+    eps = tuple(float(e) for e in epsilons)
+    if not eps:
+        raise ValueError("per_client_sigmas requires at least one epsilon")
+    if any(e <= 0 for e in eps):
+        raise ValueError("per-client epsilons must be positive")
+    return tuple(
+        accounting.sigma_for_epsilon(e, delta, sensitivity=2.0 * clip_norm)
+        for e in eps)
 
 
 def gaussian_ldp_randomize(key: jax.Array, delta: jax.Array, sigma: float) -> jax.Array:

@@ -25,6 +25,7 @@ __all__ = [
     "naive_noisy",
     "target",
     "ldp_gaussian",
+    "ldp_gaussian_mixed",
     "ldp_privunit",
     "cdp",
 ]
@@ -70,6 +71,19 @@ def ldp_gaussian(mean_sq_noisy_norm, agg_sq_norm, dim, sigma):
     ``mean ||Delta_i||^2``; max{1,.} guards the (rare, high-noise) negative case.
     """
     corrected = mean_sq_noisy_norm - dim * sigma**2
+    return jnp.maximum(1.0, _ratio(corrected, agg_sq_norm))
+
+
+def ldp_gaussian_mixed(mean_sq_noisy_norm, agg_sq_norm, dim, mean_sigma_sq):
+    """Eq. (6) under HETEROGENEOUS per-client noise (PerClientGaussian).
+
+    With client i noised at sigma_i, ``E[mean ||c_i||^2] = mean ||Delta_i||^2
+    + d * mean(sigma_i^2)`` over the realized cohort, so the bias correction
+    subtracts ``d * mean_sigma_sq`` — the (mask/weight-averaged) mean of the
+    participating clients' sigma_i^2, supplied by the mechanism's scalar
+    extras.  Uniform sigmas reduce to ``ldp_gaussian`` exactly.
+    """
+    corrected = mean_sq_noisy_norm - dim * mean_sigma_sq
     return jnp.maximum(1.0, _ratio(corrected, agg_sq_norm))
 
 

@@ -43,8 +43,10 @@ from repro.fedsim.specs import LOCAL_TRAIN_TAG, LocalSpec
 __all__ = [
     "local_update",
     "local_update_spec",
+    "local_update_scaffold",
     "cohort_updates",
     "cohort_updates_spec",
+    "cohort_updates_scaffold",
     "build_cohort_local_fn",
     "masked_cohort_updates",
     "mask_rows",
@@ -202,6 +204,52 @@ def cohort_updates(loss_fn: Callable, w: jax.Array, client_batches, tau: int,
     return jax.vmap(fn)(client_batches, steps)
 
 
+def local_update_scaffold(loss_fn: Callable, w0: jax.Array, client_batch,
+                          c_i: jax.Array, c: jax.Array, tau: int, eta_l: float,
+                          steps: jax.Array | None = None) -> jax.Array:
+    """tau SCAFFOLD control-variate steps on one client (DESIGN.md §17).
+
+    Each step moves by the drift-corrected direction ``g - c_i + c`` — the
+    exact op order (and rolled ``length=tau`` scan) of the retired
+    ``run_dp_scaffold`` local solve, so the migrated dense round is pinned
+    bit-for-bit against it.  ``steps`` is the §13 straggler cutoff, gated
+    exactly as ``local_update``.
+    """
+
+    def step(y, _):
+        """One control-variate-corrected gradient step."""
+        g = jax.grad(loss_fn)(y, client_batch)
+        return y - eta_l * (g - c_i + c), None
+
+    if steps is None:
+        y_tau, _ = jax.lax.scan(step, w0, None, length=tau)
+        return y_tau - w0
+
+    def gated(y, i):
+        """Step i, committed only while i < steps (straggler cutoff)."""
+        y_new, _ = step(y, None)
+        return jnp.where(i < steps, y_new, y), None
+
+    y_tau, _ = jax.lax.scan(gated, w0, jnp.arange(tau, dtype=jnp.int32))
+    return y_tau - w0
+
+
+def cohort_updates_scaffold(loss_fn: Callable, w: jax.Array, client_batches,
+                            tau: int, eta_l: float, ctx,
+                            steps: jax.Array | None = None) -> jax.Array:
+    """(m, d) control-variate cohort updates; ``ctx`` is the algorithm's
+    per-round local context ``(c_i rows, global c)`` sliced by the engine
+    (``DPScaffoldServer.local_context``), vmapped alongside the batches."""
+    c_is, c = ctx
+    if steps is None:
+        fn = lambda batch, ci: local_update_scaffold(loss_fn, w, batch, ci, c,
+                                                     tau, eta_l)
+        return jax.vmap(fn)(client_batches, c_is)
+    fn = lambda batch, ci, s: local_update_scaffold(loss_fn, w, batch, ci, c,
+                                                    tau, eta_l, steps=s)
+    return jax.vmap(fn)(client_batches, c_is, steps)
+
+
 def cohort_updates_spec(loss_fn: Callable, w, client_batches, spec: LocalSpec,
                         tau: int, eta_l, round_key: jax.Array,
                         start: int | jax.Array = 0,
@@ -229,6 +277,24 @@ def cohort_updates_spec(loss_fn: Callable, w, client_batches, spec: LocalSpec,
 
 def _build_cohort_local_fn(loss_fn: Callable, spec: LocalSpec | None, tau: int,
                            with_steps: bool = False):
+    if spec is not None and spec.control_variates:
+        # SCAFFOLD trainer (§17): one extra trailing arg — the algorithm's
+        # per-client context (c_i rows, c), appended by _local_caller when
+        # the algorithm declares uses_local_context
+        if with_steps:
+            def local_fn(w, client_batches, eta_l, round_key, start, steps,
+                         ctx):
+                """Control-variate closure with straggler cutoffs (§13/§17)."""
+                return cohort_updates_scaffold(loss_fn, w, client_batches,
+                                               tau, eta_l, ctx, steps=steps)
+            return local_fn
+
+        def local_fn(w, client_batches, eta_l, round_key, start, ctx):
+            """The engine's control-variate local-training closure (§17)."""
+            return cohort_updates_scaffold(loss_fn, w, client_batches, tau,
+                                           eta_l, ctx)
+        return local_fn
+
     if with_steps:
         if spec is None or spec.is_default:
             def local_fn(w, client_batches, eta_l, round_key, start, steps):

@@ -64,9 +64,11 @@ def run_dp_scaffold(
 
     .. deprecated::
         This standalone Python round loop predates the composable stack and
-        gets none of its engines, telemetry, or compression.  Build the
-        baseline with ``repro.fedsim.make_algorithm`` and run it under
-        ``FederatedSession`` instead; this entry point will be removed.
+        gets none of its engines, telemetry, or compression.  Its algorithm
+        is now ``make_algorithm("dp-scaffold", ...)`` run under
+        ``FederatedSession`` with ``LocalSpec(control_variates=True)`` —
+        pinned bit-for-bit against this loop by ``tests/test_schedules.py``;
+        this entry point will be removed.
     """
     global _WARNED
     if not _WARNED:
@@ -75,7 +77,8 @@ def run_dp_scaffold(
             "run_dp_scaffold is deprecated: it is a standalone Python round "
             "loop outside the engine stack (no scan/stream/sharded engines, "
             "no §15 telemetry, no §16 compression). Build the algorithm via "
-            "repro.fedsim.make_algorithm and run it with FederatedSession.",
+            "make_algorithm('dp-scaffold', ...) and run it under "
+            "FederatedSession with LocalSpec(control_variates=True).",
             DeprecationWarning, stacklevel=2)
     m = cfg.num_clients
     d = w0.shape[0]

@@ -167,21 +167,47 @@ def _resolve_realized_count(moments, algorithm):
     return clamp_moment_counts(moments, floor=1e-12)
 
 
-def _local_caller(local_fn, fault: FaultSpec | None, tau: int):
-    """Adapter calling the LocalTrainer with or without per-client steps.
+def _round_kwargs(algorithm, t):
+    """Round-index kwargs for the algorithm's round calls (DESIGN.md §17).
+
+    Round-indexed algorithms (a genuinely varying ``NoiseSchedule``) receive
+    ``t=t`` so the mechanism can resolve sigma(t); every other algorithm —
+    including the legacy monoliths, whose round methods have no ``t``
+    parameter at all — keeps its exact historical call, so fixed-noise
+    programs are untouched bit-for-bit.
+    """
+    if getattr(algorithm, "needs_round_index", False):
+        return {"t": t}
+    return {}
+
+
+def _local_caller(local_fn, fault: FaultSpec | None, tau: int,
+                  algorithm=None):
+    """Adapter calling the LocalTrainer with or without per-client steps
+    and/or per-client server context.
 
     When the fault model cuts stragglers short, the session built the
     ``with_steps`` LocalTrainer variant (arity +1) and every engine resolves
-    the per-client step counts from the straggler draw; otherwise the
-    historical closure is called untouched (bit-identical program).
+    the per-client step counts from the straggler draw.  When the algorithm
+    declares ``uses_local_context`` (DP-SCAFFOLD control variates, §17), the
+    trainer takes one more trailing argument — the algorithm's per-client
+    context rows sliced from the carry at the round's global start.  With
+    neither active, the historical closure is called untouched
+    (bit-identical program).
     """
     straggling = fault is not None and fault.straggler > 0.0
+    with_ctx = algorithm is not None and getattr(
+        algorithm, "uses_local_context", False)
 
-    def call(w, batches, eta_l, round_key, start, straggler_rows):
+    def call(w, batches, eta_l, round_key, start, straggler_rows=None,
+             opt_state=None):
+        args = (w, batches, eta_l, round_key, start)
         if straggling:
-            steps = resolve_steps(fault, straggler_rows, tau)
-            return local_fn(w, batches, eta_l, round_key, start, steps)
-        return local_fn(w, batches, eta_l, round_key, start)
+            args += (resolve_steps(fault, straggler_rows, tau),)
+        if with_ctx:
+            m_local = jax.tree_util.tree_leaves(batches)[0].shape[0]
+            args += (algorithm.local_context(opt_state, start, m_local),)
+        return local_fn(*args)
 
     return call
 
@@ -233,14 +259,16 @@ def _round_step(algorithm, local_fn, eval_fn, eval_every: int = 1,
     sampled = cohort is not None and cohort.is_sampled
     gathering = sampled and cohort.gather
     injecting = fault is not None and fault.injects
-    local = _local_caller(local_fn, fault, tau)
+    local = _local_caller(local_fn, fault, tau, algorithm)
 
     def step(w, opt_state, round_key, t, client_batches, eta_l):
         """One server round inside the compiled scan body."""
+        tkw = _round_kwargs(algorithm, t)
         if not sampled and not injecting:
-            deltas = local_fn(w, client_batches, eta_l, round_key, 0)
+            deltas = local(w, client_batches, eta_l, round_key, 0,
+                           None, opt_state)
             w_next, aux, opt_state = algorithm.apply_round_stateful(
-                round_key, w, deltas, opt_state)
+                round_key, w, deltas, opt_state, **tkw)
         else:
             m = jax.tree_util.tree_leaves(client_batches)[0].shape[0]
             mask = (cohort.round_mask(round_key, m) if sampled
@@ -257,20 +285,21 @@ def _round_step(algorithm, local_fn, eval_fn, eval_every: int = 1,
                     alive, straggler, corrupt = gather_fault_rows(
                         slots, alive, straggler, corrupt)
                 deltas = local(w, client_batches, eta_l, round_key, start,
-                               straggler)
+                               straggler, opt_state)
                 deltas, mask = apply_faults(deltas, mask, alive, corrupt)
             else:
                 deltas = mask_rows(
-                    local_fn(w, client_batches, eta_l, round_key, start), mask)
+                    local(w, client_batches, eta_l, round_key, start,
+                          None, opt_state), mask)
             moments = algorithm.local_moments(round_key, w, deltas, mask,
-                                              start, opt_state)
+                                              start, opt_state, **tkw)
             if injecting:
                 moments = sanitize_moments(moments)
                 moments = _resolve_realized_count(moments, algorithm)
             else:
                 moments = _resolve_sampled_count(moments, cohort, algorithm)
             w_next, aux, opt_state = algorithm.apply_from_moments(
-                round_key, w, moments, opt_state)
+                round_key, w, moments, opt_state, **tkw)
         metric = _eval_metric(eval_fn, eval_every, w_next, t)
         outs = (aux.eta_g, metric, aux.eta_naive, aux.eta_target)
         return w_next, opt_state, outs
@@ -310,18 +339,21 @@ def _sharded_round_step(algorithm, local_fn, eval_fn, axis, m_true,
     sampled = cohort is not None and cohort.is_sampled
     gathering = sampled and cohort.gather
     injecting = fault is not None and fault.injects
-    local = _local_caller(local_fn, fault, tau)
+    local = _local_caller(local_fn, fault, tau, algorithm)
 
     def step(w, opt_state, round_key, t, batches_and_mask, eta_l):
         """One server round inside the compiled scan body."""
+        tkw = _round_kwargs(algorithm, t)
         local_batches, pad_mask = batches_and_mask
         m_local = pad_mask.shape[0]
         start = jax.lax.axis_index(axis) * m_local
         if not sampled and not injecting:
             deltas = mask_rows(
-                local_fn(w, local_batches, eta_l, round_key, start), pad_mask)
+                local(w, local_batches, eta_l, round_key, start,
+                      None, opt_state), pad_mask)
             w_next, aux, opt_state = algorithm.apply_round_sharded(
-                round_key, w, deltas, pad_mask, opt_state, axis, m_total=m_true)
+                round_key, w, deltas, pad_mask, opt_state, axis,
+                m_total=m_true, **tkw)
         else:
             if sampled:
                 full = cohort.round_mask(round_key, m_true)
@@ -345,13 +377,14 @@ def _sharded_round_step(algorithm, local_fn, eval_fn, axis, m_true,
                     alive, straggler, corrupt = gather_fault_rows(
                         slots, alive, straggler, corrupt)
                 deltas = local(w, local_batches, eta_l, round_key, start,
-                               straggler)
+                               straggler, opt_state)
                 deltas, mask = apply_faults(deltas, mask, alive, corrupt)
             else:
                 deltas = mask_rows(
-                    local_fn(w, local_batches, eta_l, round_key, start), mask)
+                    local(w, local_batches, eta_l, round_key, start,
+                          None, opt_state), mask)
             moments = algorithm.local_moments(round_key, w, deltas, mask,
-                                              start, opt_state)
+                                              start, opt_state, **tkw)
             moments = jax.lax.psum(moments, axis)
             if injecting:
                 moments = sanitize_moments(moments)
@@ -359,7 +392,7 @@ def _sharded_round_step(algorithm, local_fn, eval_fn, axis, m_true,
             else:
                 moments = _resolve_sampled_count(moments, cohort, algorithm)
             w_next, aux, opt_state = algorithm.apply_from_moments(
-                round_key, w, moments, opt_state)
+                round_key, w, moments, opt_state, **tkw)
         metric = _eval_metric(eval_fn, eval_every, w_next, t)
         outs = (aux.eta_g, metric, aux.eta_naive, aux.eta_target)
         return w_next, opt_state, outs
@@ -401,10 +434,11 @@ def _stream_round_step(algorithm, local_fn, eval_fn,
     """
     sampled = cohort is not None and cohort.is_sampled
     injecting = fault is not None and fault.injects
-    local_call = _local_caller(local_fn, fault, tau)
+    local_call = _local_caller(local_fn, fault, tau, algorithm)
 
     def step(w, opt_state, round_key, t, batches_and_mask, eta_l):
         """One server round inside the compiled scan body."""
+        tkw = _round_kwargs(algorithm, t)
         chunk_batches, chunk_mask = batches_and_mask
         n_chunks, c = chunk_mask.shape
         if axis is None:
@@ -447,13 +481,14 @@ def _stream_round_step(algorithm, local_fn, eval_fn,
             if injecting:
                 alive_j, strag_j, corr_j = fault_j
                 deltas = local_call(w, batches_j, eta_l, round_key, start,
-                                    strag_j)
+                                    strag_j, opt_state)
                 deltas, mask_j = apply_faults(deltas, mask_j, alive_j, corr_j)
             else:
                 deltas = mask_rows(
-                    local_fn(w, batches_j, eta_l, round_key, start), mask_j)
+                    local_call(w, batches_j, eta_l, round_key, start,
+                               None, opt_state), mask_j)
             return algorithm.local_moments(round_key, w, deltas, mask_j,
-                                           start, opt_state)
+                                           start, opt_state, **tkw)
 
         # zero-initialize the running moments from the chunk computation's
         # abstract shape (no FLOPs traced): every field is an additive SUM,
@@ -496,7 +531,7 @@ def _stream_round_step(algorithm, local_fn, eval_fn,
             # zero count
             moments = clamp_moment_counts(moments, floor=1e-12)
         w_next, aux, opt_state = algorithm.apply_from_moments(
-            round_key, w, moments, opt_state)
+            round_key, w, moments, opt_state, **tkw)
         metric = _eval_metric(eval_fn, eval_every, w_next, t)
         outs = (aux.eta_g, metric, aux.eta_naive, aux.eta_target)
         return w_next, opt_state, outs
@@ -513,7 +548,8 @@ def _build_stream_chunk_fn(algorithm: ServerAlgorithm, local_fn, eval_fn,
     step_round = _stream_round_step(algorithm, local_fn, eval_fn,
                                     m_true, m_pad, eval_every, cohort,
                                     fault=fault, tau=tau)
-    tap_ctx = ((m_true, cohort, fault, None, _tap_clip_fn(algorithm))
+    tap_ctx = ((m_true, cohort, fault, None, _tap_clip_fn(algorithm),
+                _tap_sigma_fn(algorithm))
                if tap else None)
 
     def chunk(carry, key, ts, chunk_batches, chunk_mask, eta_l):
@@ -573,7 +609,8 @@ def _build_sharded_stream_chunk_fn(algorithm: ServerAlgorithm, local_fn,
     batch_specs = jax.tree_util.tree_unflatten(batch_treedef, specs)
     mask_spec = logical_to_pspec(("clients", None), rules,
                                  dims=(n_chunks, stream.chunk_clients))
-    tap_ctx = ((m_true, cohort, fault, axis, _tap_clip_fn(algorithm))
+    tap_ctx = ((m_true, cohort, fault, axis, _tap_clip_fn(algorithm),
+                _tap_sigma_fn(algorithm))
                if tap else None)
 
     def chunk(carry, key, ts, chunk_batches, chunk_mask, eta_l):
@@ -642,10 +679,11 @@ def _gather_stream_round_step(algorithm, local_fn, eval_fn,
     while its local-training work stays O(cap·d).
     """
     injecting = fault is not None and fault.injects
-    local_call = _local_caller(local_fn, fault, tau)
+    local_call = _local_caller(local_fn, fault, tau, algorithm)
 
     def step(w, opt_state, round_key, t, batches_and_mask, eta_l):
         """One server round inside the compiled scan body."""
+        tkw = _round_kwargs(algorithm, t)
         local_batches, pad_mask = batches_and_mask
         m_local = pad_mask.shape[0]
         shard_start = (0 if axis is None
@@ -688,13 +726,14 @@ def _gather_stream_round_step(algorithm, local_fn, eval_fn,
             if injecting:
                 alive_j, strag_j, corr_j = fault_j
                 deltas = local_call(w, batches_j, eta_l, round_key, gidx,
-                                    strag_j)
+                                    strag_j, opt_state)
                 deltas, mask_j = apply_faults(deltas, mask_j, alive_j, corr_j)
             else:
                 deltas = mask_rows(
-                    local_fn(w, batches_j, eta_l, round_key, gidx), mask_j)
+                    local_call(w, batches_j, eta_l, round_key, gidx,
+                               None, opt_state), mask_j)
             return algorithm.local_moments(round_key, w, deltas, mask_j,
-                                           gidx, opt_state)
+                                           gidx, opt_state, **tkw)
 
         row_sds = jax.ShapeDtypeStruct((c,), jnp.float32)
         shapes = jax.eval_shape(
@@ -720,7 +759,7 @@ def _gather_stream_round_step(algorithm, local_fn, eval_fn,
         else:
             moments = _resolve_sampled_count(moments, cohort, algorithm)
         w_next, aux, opt_state = algorithm.apply_from_moments(
-            round_key, w, moments, opt_state)
+            round_key, w, moments, opt_state, **tkw)
         metric = _eval_metric(eval_fn, eval_every, w_next, t)
         outs = (aux.eta_g, metric, aux.eta_naive, aux.eta_target)
         return w_next, opt_state, outs
@@ -738,7 +777,8 @@ def _build_gather_stream_chunk_fn(algorithm: ServerAlgorithm, local_fn,
                                            m_true, m_pad, chunk_clients,
                                            eval_every, cohort,
                                            fault=fault, tau=tau)
-    tap_ctx = ((m_true, cohort, fault, None, _tap_clip_fn(algorithm))
+    tap_ctx = ((m_true, cohort, fault, None, _tap_clip_fn(algorithm),
+                _tap_sigma_fn(algorithm))
                if tap else None)
 
     def chunk(carry, key, ts, local_batches, pad_mask, eta_l):
@@ -793,7 +833,8 @@ def _build_sharded_gather_stream_chunk_fn(algorithm: ServerAlgorithm,
     rules = client_axis_rules(mesh, axis=axis)
     batch_specs, mask_spec = _client_batch_specs(batch_treedef, leaf_ndims,
                                                  mask_len, rules)
-    tap_ctx = ((m_true, cohort, fault, axis, _tap_clip_fn(algorithm))
+    tap_ctx = ((m_true, cohort, fault, axis, _tap_clip_fn(algorithm),
+                _tap_sigma_fn(algorithm))
                if tap else None)
 
     def chunk(carry, key, ts, local_batches, pad_mask, eta_l):
@@ -847,14 +888,17 @@ def _build_host_moments_fn(algorithm: ServerAlgorithm, local_fn, data):
     part of the compile-cache key, as for every other spec.
     """
     del data  # cache key only: the compiled program is data-location blind
+    local = _local_caller(local_fn, None, 1, algorithm)
 
     def chunk_moments(w, opt_state, round_key, batches_j, mask_j, gidx_j,
-                      eta_l):
+                      eta_l, t):
         """Local training + release moments for one host-staged chunk."""
         deltas = mask_rows(
-            local_fn(w, batches_j, eta_l, round_key, gidx_j), mask_j)
+            local(w, batches_j, eta_l, round_key, gidx_j, None, opt_state),
+            mask_j)
         return algorithm.local_moments(round_key, w, deltas, mask_j,
-                                       gidx_j, opt_state)
+                                       gidx_j, opt_state,
+                                       **_round_kwargs(algorithm, t))
 
     return jax.jit(chunk_moments)
 
@@ -888,7 +932,8 @@ def _build_host_finalize_fn(algorithm: ServerAlgorithm, eval_fn,
         else:
             moments = clamp_moment_counts(moments, floor=1e-12)
         w_next, aux, opt_state = algorithm.apply_from_moments(
-            round_key, w, moments, opt_state)
+            round_key, w, moments, opt_state,
+            **_round_kwargs(algorithm, t))
         metric = _eval_metric(eval_fn, eval_every, w_next, t)
         tail = jnp.concatenate([tail[1:], w_next[None]], axis=0)
         outs = (aux.eta_g, metric, aux.eta_naive, aux.eta_target)
@@ -973,6 +1018,27 @@ def _tap_clip_fn(algorithm):
     return clip_of
 
 
+def _tap_sigma_fn(algorithm):
+    """Best-effort per-round noise std sigma(t) for the telemetry payload
+    (DESIGN.md §15/§17).
+
+    A round-indexed NoiseSchedule emits its traced sigma(t); a fixed-sigma
+    algorithm (monolith or composition — ``sigma`` forwards through the
+    composed ``__getattr__``, a constant schedule forwards to its inner
+    mechanism) emits the constant; NaN when the release has no shared noise
+    std at all (NoPrivacy, PrivUnit's pure-DP release, heterogeneous
+    per-client sigmas) — the host omits the field.  Trace-time only, like
+    ``_tap_clip_fn``.
+    """
+    mech = getattr(algorithm, "mechanism", None)
+    if mech is not None and getattr(mech, "is_round_indexed", False):
+        return lambda t: jnp.float32(mech._sigma_at(t))
+    sigma = getattr(algorithm, "sigma", None)
+    if isinstance(sigma, (int, float)):
+        return lambda t: jnp.float32(sigma)
+    return lambda t: jnp.float32(jnp.nan)
+
+
 def _tap_emit(tap_ctx, round_key, t, opt_state, outs, fault_t):
     """Emit one round's diagnostics to the host tracker (DESIGN.md §15).
 
@@ -994,7 +1060,7 @@ def _tap_emit(tap_ctx, round_key, t, opt_state, outs, fault_t):
     """
     from repro.telemetry import tap as _tap
 
-    m_true, cohort, fault, axis, clip_fn = tap_ctx
+    m_true, cohort, fault, axis, clip_fn, sigma_fn = tap_ctx
     eta, metric, naive, target = outs
     sampled = cohort is not None and cohort.is_sampled
     participants = (jnp.sum(cohort.round_mask(round_key, m_true))
@@ -1017,7 +1083,7 @@ def _tap_emit(tap_ctx, round_key, t, opt_state, outs, fault_t):
     payload = jnp.stack([
         jnp.float32(eta), jnp.float32(naive), jnp.float32(target),
         jnp.float32(metric), clip_fn(opt_state), participants, realized,
-        dropped, stragglers, corrupt, jnp.float32(fault_t)])
+        dropped, stragglers, corrupt, jnp.float32(fault_t), sigma_fn(t)])
     shard = jnp.int32(0) if axis is None else jax.lax.axis_index(axis)
     io_callback(_tap.device_emit, None, t, shard, payload,
                 ordered=(axis is None))
@@ -1114,7 +1180,8 @@ def _build_scan_chunk_fn(algorithm: ServerAlgorithm, local_fn, eval_fn,
         tap_ctx = None
         if tap:
             m = jax.tree_util.tree_leaves(client_batches)[0].shape[0]
-            tap_ctx = (m, cohort, fault, None, _tap_clip_fn(algorithm))
+            tap_ctx = (m, cohort, fault, None, _tap_clip_fn(algorithm),
+                       _tap_sigma_fn(algorithm))
         body = _scan_body(step_round, client_batches, eta_l, fault, tap_ctx)
         return jax.lax.scan(body, carry, (keys, ts), unroll=min(unroll, len(ts)))
 
@@ -1171,7 +1238,8 @@ def _build_sharded_chunk_fn(algorithm: ServerAlgorithm, local_fn, eval_fn,
     rules = client_axis_rules(mesh, axis=axis)
     batch_specs, mask_spec = _client_batch_specs(batch_treedef, leaf_ndims,
                                                  mask_len, rules)
-    tap_ctx = ((m_true, cohort, fault, axis, _tap_clip_fn(algorithm))
+    tap_ctx = ((m_true, cohort, fault, axis, _tap_clip_fn(algorithm),
+                _tap_sigma_fn(algorithm))
                if tap else None)
 
     def chunk(carry, key, ts, local_batches, mask, eta_l):
@@ -1341,7 +1409,8 @@ def _run_eager(algorithm, local_fn, w0, client_batches, *, rounds, eta_l,
     tap_ctx = None
     if tap:
         m = jax.tree_util.tree_leaves(client_batches)[0].shape[0]
-        tap_ctx = (m, cohort, fault, None, _tap_clip_fn(algorithm))
+        tap_ctx = (m, cohort, fault, None, _tap_clip_fn(algorithm),
+                       _tap_sigma_fn(algorithm))
 
     def one_round(w, opt_state, round_key, t):
         """One jitted round dispatched from the Python loop."""

@@ -266,6 +266,23 @@ class FederatedSession:
         # tau once — its identity keys the engine's compile cache, and the
         # default spec reproduces the pre-LocalSpec program bit-for-bit.
         # Straggler cutoffs need the with_steps variant (arity +1, §13).
+        # Context-consuming algorithms (DP-SCAFFOLD, §17) and the
+        # control-variate trainer come as a pair: the engine appends the
+        # algorithm's per-client context to the trainer call, so a mismatch
+        # would surface as an opaque arity error deep in the compiled round.
+        wants_ctx = bool(getattr(self.algorithm, "uses_local_context", False))
+        has_cv = self.local is not None and getattr(
+            self.local, "control_variates", False)
+        if wants_ctx != has_cv:
+            if wants_ctx:
+                raise ValueError(
+                    f"{self.algorithm.name!r} trains with per-client control "
+                    "variates; pass local=LocalSpec(control_variates=True) "
+                    "so the LocalTrainer consumes the (c_i, c) context")
+            raise ValueError(
+                "LocalSpec(control_variates=True) needs a control-variate "
+                f"algorithm (e.g. make_algorithm('dp-scaffold', ...)); "
+                f"{self.algorithm.name!r} supplies no local context")
         with_steps = self.fault is not None and self.fault.straggler > 0.0
         self._local_fn = build_cohort_local_fn(self.loss_fn, self.local,
                                                int(train.tau),
@@ -287,6 +304,13 @@ class FederatedSession:
                 f"a {m}-client cohort; weights are indexed by global client "
                 "index and must match exactly (a short tuple would silently "
                 "zero-weight the tail clients)")
+        alg_m = getattr(self.algorithm, "num_clients", None)
+        if getattr(self.algorithm, "uses_local_context", False) \
+                and alg_m is not None and alg_m != m:
+            raise ValueError(
+                f"{self.algorithm.name!r} carries a {alg_m}-client variate "
+                f"table for a {m}-client cohort; num_clients indexes the "
+                "per-client state by global client index and must match")
 
     @property
     def dim(self) -> int:
@@ -449,6 +473,7 @@ class FederatedSession:
                                    for j in range(n_chunks))]
 
         clip_fn = _srv._tap_clip_fn(self.algorithm) if tap else None
+        sigma_fn = _srv._tap_sigma_fn(self.algorithm) if tap else None
 
         def run_rounds(carry, key, ts, src, eta_l):
             """Python round loop with prefetch-staged chunk programs."""
@@ -493,7 +518,7 @@ class FederatedSession:
                 while buf:
                     batches_j, mask_j, gidx_j = buf.popleft()
                     mom = moments_fn(w, opt_state, rk, batches_j, mask_j,
-                                     gidx_j, eta_l)
+                                     gidx_j, eta_l, t)
                     # refill AFTER dispatch: the next fetch/transfer overlaps
                     # the asynchronously executing chunk program
                     stage()
@@ -514,7 +539,8 @@ class FederatedSession:
                             jnp.float32(target), jnp.float32(metric),
                             jnp.float32(clip_val), part, part,
                             jnp.float32(0.0), jnp.float32(0.0),
-                            jnp.float32(0.0), jnp.float32(-1.0)])))
+                            jnp.float32(0.0), jnp.float32(-1.0),
+                            sigma_fn(t)])))
                         sess.emit(int(t_host), 0, payload)
             hist = tuple(jnp.stack(col) if col
                          else jnp.zeros((0,), jnp.float32) for col in cols)

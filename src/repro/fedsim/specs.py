@@ -129,6 +129,7 @@ class LocalSpec:
     epochs: int = 1                 # local epochs when batch_size is set
     prox_mu: float = 0.0            # FedProx proximal coefficient
     momentum: float = 0.0           # client momentum over the local steps
+    control_variates: bool = False  # SCAFFOLD steps g - c_i + c (§17)
 
     def __post_init__(self):
         if self.batch_size is not None and self.batch_size < 1:
@@ -142,12 +143,21 @@ class LocalSpec:
             raise ValueError(f"prox_mu must be >= 0, got {self.prox_mu}")
         if not 0.0 <= self.momentum < 1.0:
             raise ValueError(f"momentum must be in [0, 1), got {self.momentum}")
+        if self.control_variates and not (
+                self.batch_size is None and self.epochs == 1
+                and self.prox_mu == 0.0 and self.momentum == 0.0):
+            raise ValueError(
+                "control_variates is the full-batch SCAFFOLD trainer "
+                "(tau steps of g - c_i + c, matching the option-II variate "
+                "refresh scale 1/(tau*eta_l)); it does not compose with "
+                "minibatch/prox/momentum fields")
 
     @property
     def is_default(self) -> bool:
         """True when this spec is exactly the historical full-batch GD."""
         return (self.batch_size is None and self.epochs == 1
-                and self.prox_mu == 0.0 and self.momentum == 0.0)
+                and self.prox_mu == 0.0 and self.momentum == 0.0
+                and not self.control_variates)
 
 
 @dataclasses.dataclass(frozen=True)

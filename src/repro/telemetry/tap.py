@@ -39,8 +39,8 @@ __all__ = ["TapSession", "install", "uninstall", "active", "device_emit",
 
 # float32 payload slots (device side builds this in _tap_payload)
 _ETA, _NAIVE, _TARGET, _METRIC, _CLIP, _PART, _REAL, _DROP, _STRAG, _CORR, \
-    _FAULT_T = range(11)
-PAYLOAD_LEN = 11
+    _FAULT_T, _SIGMA = range(12)
+PAYLOAD_LEN = 12
 
 _ACTIVE: "TapSession | None" = None
 
@@ -112,6 +112,12 @@ class TapSession:
             event["metric"] = float(v[_METRIC])
         if math.isfinite(float(v[_CLIP])):
             event["clip"] = float(v[_CLIP])
+        if len(v) > _SIGMA and math.isfinite(float(v[_SIGMA])):
+            # §17 per-round noise std: round-indexed schedules emit sigma(t);
+            # fixed-sigma releases emit the constant; mechanisms with no
+            # shared noise std (NoPrivacy, PrivUnit, heterogeneous
+            # per-client) emit NaN and the field is omitted
+            event["sigma"] = float(v[_SIGMA])
         event["participants"] = int(v[_PART])
         if self.faults_active:
             event.update(

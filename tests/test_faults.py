@@ -71,7 +71,25 @@ ALG_KWARGS = {
     "cdp-fedmom": dict(clip_norm=0.3, sigma=0.2, num_clients=M, server_lr=0.5),
     "privunit-fedexp-adaptive-clip": dict(eps0=2.0, eps1=2.0, eps2=2.0,
                                           z_mult=0.5, num_clients=M, dim=D),
+    # §17 heterogeneous-privacy tier (deep fault parity in test_schedules.py;
+    # here every name rides the FaultSpec() normalization pin)
+    "ldp-fedexp-perclient": dict(clip_norm=0.3,
+                                 epsilons=tuple(2.0 + 0.5 * (i % 4)
+                                                for i in range(M)),
+                                 delta=1e-5),
+    "ldp-fedexp-schedule": dict(clip_norm=0.3, sigma=0.21, decay=0.9),
+    "cdp-fedexp-schedule": dict(clip_norm=0.3, sigma=0.2, num_clients=M,
+                                decay=0.9),
+    "dp-scaffold": dict(clip_norm=0.3, sigma=0.2, num_clients=M,
+                        central=True, tau=TAU, eta_l=ETA_L),
 }
+
+
+def _local(name):
+    # dp-scaffold's pairing validation requires the control-variate LocalSpec
+    from repro.fedsim import LocalSpec
+    return (dict(local=LocalSpec(control_variates=True))
+            if name == "dp-scaffold" else {})
 
 # the acceptance fault model: 30% dropout + stragglers cut to 1 of TAU local
 # steps + 2% corrupted (NaN) updates, every class active at once
@@ -92,7 +110,7 @@ def _session(problem, name, *, fault=FAULT, rounds=ROUNDS, mesh=None,
         alg, linreg_loss, w0, data.client_batches(),
         train=spec_kw.pop("train", TrainSpec(rounds=rounds, tau=TAU, eta_l=ETA_L)),
         shard=ShardSpec(mesh=mesh), fault=fault,
-        eval_fn=distance_to_opt(data.w_star), **spec_kw)
+        eval_fn=distance_to_opt(data.w_star), **{**_local(name), **spec_kw})
 
 
 class TestSpecValidation:
@@ -150,7 +168,8 @@ class TestFaultFreeNormalization:
             make_algorithm(name, **ALG_KWARGS[name]), linreg_loss,
             problem[1], problem[0].client_batches(),
             train=TrainSpec(rounds=ROUNDS, tau=TAU, eta_l=ETA_L),
-            eval_fn=distance_to_opt(problem[0].w_star)).run(key)
+            eval_fn=distance_to_opt(problem[0].w_star),
+            **_local(name)).run(key)
         for field in ("final_w", "last_w", "eta_history", "metric_history",
                       "eta_naive_history", "eta_target_history"):
             np.testing.assert_array_equal(

@@ -22,6 +22,7 @@ from repro.fedsim import (
     EngineSpec,
     FaultSpec,
     FederatedSession,
+    LocalSpec,
     StreamSpec,
     TrainSpec,
 )
@@ -46,6 +47,16 @@ ALG_KWARGS = {
     "cdp-fedmom": dict(clip_norm=0.3, sigma=0.2, num_clients=M, server_lr=0.5),
     "privunit-fedexp-adaptive-clip": dict(eps0=2.0, eps1=2.0, eps2=2.0,
                                           z_mult=0.5, num_clients=M, dim=D),
+    # §17 tier (tau/eta_l mirror the TrainSpec below)
+    "ldp-fedexp-perclient": dict(clip_norm=0.3,
+                                 epsilons=tuple(2.0 + 0.5 * (i % 4)
+                                                for i in range(M)),
+                                 delta=1e-5),
+    "ldp-fedexp-schedule": dict(clip_norm=0.3, sigma=0.21, decay=0.9),
+    "cdp-fedexp-schedule": dict(clip_norm=0.3, sigma=0.2, num_clients=M,
+                                decay=0.9),
+    "dp-scaffold": dict(clip_norm=0.3, sigma=0.2, num_clients=M,
+                        central=True, tau=1, eta_l=ETA_L),
 }
 
 SETTINGS = dict(deadline=None, max_examples=25,
@@ -118,6 +129,8 @@ class TestGarbageRowProperties:
         kw = dict(engine=EngineSpec(engine="stream"),
                   stream=StreamSpec(chunk_clients=16)) if engine == "stream" \
             else {}
+        if name == "dp-scaffold":
+            kw["local"] = LocalSpec(control_variates=True)
         sess = FederatedSession(
             alg, linreg_loss, w0, data.client_batches(),
             train=TrainSpec(rounds=2, tau=1, eta_l=ETA_L),

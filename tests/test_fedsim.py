@@ -100,10 +100,23 @@ class TestScaffold:
                             eval_fn=distance_to_opt(data.w_star))
         assert np.all(np.isfinite(np.asarray(r.metric_history)))
 
+    def test_import_emits_no_warning(self):
+        """Deprecation is a CALL-time concern: merely importing (or
+        re-importing) the module — e.g. via ``from repro.fedsim import ...``
+        — must stay silent, so downstream imports don't trip -W error."""
+        import importlib
+        import warnings
+
+        from repro.fedsim import scaffold as scaffold_mod
+
+        with warnings.catch_warnings():
+            warnings.simplefilter("error", DeprecationWarning)
+            importlib.reload(scaffold_mod)
+
     def test_deprecation_warns_exactly_once(self, problem, monkeypatch):
         """The scaffold loop is deprecated in favor of the session engines;
         the warning fires on the FIRST call of a process only (a sweep over
-        rounds must not spam per call)."""
+        rounds must not spam per call) and names the migration target."""
         import warnings
 
         from repro.fedsim import scaffold as scaffold_mod

@@ -8,8 +8,12 @@ Validates the stream a ``JsonlTracker`` writes (one JSON object per line):
 * every line parses as a JSON object;
 * ROUND lines carry an integer ``"round"`` plus the per-round schema
   (``eta`` / ``eta_naive`` / ``eta_target`` floats-or-null, optional
-  ``metric`` / ``clip`` / ``participants`` / fault totals / ledger fields)
-  — unknown keys fail, so schema drift is caught in CI, not by a consumer;
+  ``metric`` / ``clip`` / ``sigma`` / ``participants`` / fault totals /
+  ledger fields) — unknown keys fail, so schema drift is caught in CI, not
+  by a consumer;
+* ``sigma`` (the §17 per-round noise std) when present must be finite and
+  nonnegative; ``--sigma0 S [--sigma-decay D]`` additionally pins it to the
+  declared schedule ``S * D**t`` (f32 tolerance) on EVERY executed round;
 * CONTROL lines carry ``"event"`` (rollback / profile_start / profile_stop
   and their documented fields) and are exempt from the round schema;
 * round indices are contiguous from the first round seen, except across a
@@ -39,7 +43,8 @@ import sys
 # repro.telemetry.tap); "seed" joins via run_batched sub-trackers
 ROUND_KEYS = {
     "round", "seed", "round_time_s", "frozen",
-    "eta", "eta_naive", "eta_target", "metric", "clip", "participants",
+    "eta", "eta_naive", "eta_target", "metric", "clip", "sigma",
+    "participants",
     "realized_clients", "dropped", "stragglers", "corrupt",
     "watchdog_fault_round", "bytes_per_round",
     "ledger_rounds", "mu", "eps", "eps_rdp", "ledger_error",
@@ -58,8 +63,16 @@ def _num_or_null(v) -> bool:
 
 def check_stream(lines, *, rounds: int | None = None,
                  require_bytes: bool = False,
+                 sigma0: float | None = None, sigma_decay: float = 1.0,
                  label: str = "<stream>") -> list[str]:
-    """Return a list of violations (empty = valid)."""
+    """Return a list of violations (empty = valid).
+
+    ``sigma0`` (with ``sigma_decay``) pins the §17 per-round noise-std field
+    against the declared schedule: every executed round must carry a
+    ``sigma`` within f32 tolerance of ``sigma0 * sigma_decay ** t``.  Without
+    it, any ``sigma`` present is only required to be finite and nonnegative
+    (the tap omits the field for mechanisms with no shared noise std).
+    """
     errors: list[str] = []
     expected: int | None = None
     last_ledger_rounds = 0
@@ -117,11 +130,30 @@ def check_stream(lines, *, rounds: int | None = None,
         if obj.get("frozen"):
             continue  # watchdog-frozen placeholder: no eta, no ledger
         for k in ("eta", "eta_naive", "eta_target", "metric", "clip",
-                  "round_time_s", "mu", "eps", "eps_rdp", "loss"):
+                  "sigma", "round_time_s", "mu", "eps", "eps_rdp", "loss"):
             if k in obj and not _num_or_null(obj[k]):
                 errors.append(f"{label}:{n}: {k} is not a number or null")
         if "eta" not in obj:
             errors.append(f"{label}:{n}: executed round without 'eta'")
+        # §17: the tap omits sigma for mechanisms with no shared noise std,
+        # so a delivered sigma must be a finite nonnegative number — and must
+        # track the declared schedule when one is pinned on the CLI
+        if "sigma" in obj:
+            s = obj["sigma"]
+            if (not isinstance(s, numbers.Real) or isinstance(s, bool)
+                    or not math.isfinite(s) or s < 0):
+                errors.append(f"{label}:{n}: sigma {s!r} is not a finite "
+                              "nonnegative number")
+            elif sigma0 is not None:
+                want = sigma0 * sigma_decay ** t
+                # the device computes sigma(t) in f32; compare at f32 rtol
+                if abs(float(s) - want) > 1e-5 * max(abs(want), 1e-12):
+                    errors.append(f"{label}:{n}: sigma {s} does not match "
+                                  f"the declared schedule "
+                                  f"{sigma0}*{sigma_decay}^{t} = {want}")
+        elif sigma0 is not None:
+            errors.append(f"{label}:{n}: executed round without 'sigma' "
+                          "(--sigma0 pins the schedule on every round)")
         if "bytes_per_round" in obj:
             b = obj["bytes_per_round"]
             if (not isinstance(b, numbers.Real) or isinstance(b, bool)
@@ -168,6 +200,12 @@ def main() -> None:
     ap.add_argument("--require-bytes", action="store_true",
                     help="require bytes_per_round on every executed round "
                          "(§16 communication footprint)")
+    ap.add_argument("--sigma0", type=float, default=None,
+                    help="require a per-round 'sigma' matching the declared "
+                         "schedule sigma0 * sigma-decay^t (§17)")
+    ap.add_argument("--sigma-decay", type=float, default=1.0,
+                    help="exponential decay of the declared sigma schedule "
+                         "(default 1.0 = constant)")
     args = ap.parse_args()
 
     failures: list[str] = []
@@ -175,6 +213,8 @@ def main() -> None:
         with open(path) as f:
             failures += check_stream(f, rounds=args.rounds,
                                      require_bytes=args.require_bytes,
+                                     sigma0=args.sigma0,
+                                     sigma_decay=args.sigma_decay,
                                      label=path)
     if failures:
         print(f"{len(failures)} telemetry violations:")
